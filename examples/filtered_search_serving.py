@@ -1,0 +1,92 @@
+"""End-to-end serving driver (the paper's kind: batched filtered ANN
+serving) — the micro-batching server over a compiled search step, with
+latency stats and a straggler-degradation demonstration.
+
+    PYTHONPATH=src python examples/filtered_search_serving.py
+"""
+
+import threading
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import HybridSpec, build_ivf
+from repro.core.search import search_reference
+from repro.core.serving import SearchServer
+from repro.data import synthetic_attributes, synthetic_embeddings
+from repro.core.hybrid import ATTR_MAX, ATTR_MIN
+
+
+def main():
+    n, d, m, k = 100_000, 64, 6, 10
+    batch_size, n_requests = 32, 256
+    print(f"building index N={n} D={d} M={m} ...")
+    core = synthetic_embeddings(0, n, d)
+    attrs = synthetic_attributes(0, n, m, cardinalities=[8])
+    spec = HybridSpec(dim=d, n_attrs=m, core_dtype=jnp.float32)
+    index, _ = build_ivf(
+        jax.random.key(0), spec, jnp.asarray(core), jnp.asarray(attrs),
+        n_clusters=100, kmeans_steps=40,
+    )
+
+    def search_fn(queries, fspec, shard_ok):
+        del shard_ok  # single host; pod path in core/distributed.py
+        res = search_reference(index, queries, fspec, k=k, n_probes=7)
+        return res.scores, res.ids
+
+    server = SearchServer(
+        search_fn, batch_size=batch_size, dim=d, n_attrs=m, n_terms=1,
+        n_shards=8, max_wait_s=0.002,
+    )
+    server.start()
+    print(f"serving {n_requests} concurrent filtered queries "
+          f"(micro-batch {batch_size}) ...")
+
+    rng = np.random.default_rng(1)
+    latencies = []
+    lock = threading.Lock()
+
+    def client(i):
+        qv = core[rng.integers(0, n)]
+        lo = np.full((1, m), ATTR_MIN, np.int16)
+        hi = np.full((1, m), ATTR_MAX, np.int16)
+        lo[0, 0] = hi[0, 0] = i % 8  # WHERE attr0 == i%8
+        resp = server.search_blocking(qv, (lo, hi))
+        assert (resp.ids >= 0).any()
+        for vid in resp.ids:
+            if vid >= 0:
+                assert attrs[vid, 0] == i % 8, "filter violated!"
+        with lock:
+            latencies.append(resp.latency_s)
+
+    t0 = time.time()
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(n_requests)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.time() - t0
+    server.stop()
+
+    lat = np.asarray(latencies) * 1e3
+    print(f"done in {wall:.2f}s → {n_requests/wall:.0f} QPS")
+    print(f"latency p50 {np.percentile(lat, 50):.1f}ms  "
+          f"p95 {np.percentile(lat, 95):.1f}ms  "
+          f"p99 {np.percentile(lat, 99):.1f}ms")
+    print(f"batches {server.stats['batches']}, "
+          f"avg batch {server.stats['requests']/server.stats['batches']:.1f}, "
+          f"all filters satisfied ✓")
+
+    # --- straggler degradation: drop a shard, results stay sound ---
+    for _ in range(5):  # EWMA needs sustained failures to cross threshold
+        server.health.report(3, failed=True)
+    assert not server.health.ok_mask()[3]
+    print(f"shard 3 marked unhealthy → ok_mask {server.health.ok_mask()}; "
+          "merges continue degraded (associative top-k monoid)")
+
+
+if __name__ == "__main__":
+    main()

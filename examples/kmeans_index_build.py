@@ -1,0 +1,62 @@
+"""Distributed-style index build: MiniBatchKMeans vs Lloyd quality/time
+trade-off (paper §5.2/§5.4) + sharded save / elastic restore.
+
+    PYTHONPATH=src python examples/kmeans_index_build.py
+"""
+
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import HybridSpec, build_ivf, match_all, recall_at_k, \
+    brute_force
+from repro.core import storage
+from repro.core.search import search_reference
+from repro.data import synthetic_attributes, synthetic_embeddings
+
+
+def eval_recall(index, core, attrs, q=32, k=10, t=7):
+    rng = np.random.default_rng(9)
+    queries = jnp.asarray(core[rng.integers(0, len(core), q)])
+    fspec = match_all(q, index.spec.n_attrs)
+    res = search_reference(index, queries, fspec, k=k, n_probes=t)
+    oracle = brute_force(jnp.asarray(core), jnp.asarray(attrs), queries,
+                         fspec, k=k)
+    return recall_at_k(res, oracle)
+
+
+def main():
+    n, d, m = 80_000, 64, 6
+    core = synthetic_embeddings(0, n, d)
+    attrs = synthetic_attributes(0, n, m, cardinalities=[8])
+    spec = HybridSpec(dim=d, n_attrs=m, core_dtype=jnp.float32)
+
+    print("paper §5.4: MiniBatchKMeans is faster to build, Lloyd recalls "
+          "better at equal T —")
+    for mode, steps in (("minibatch", 60), ("lloyd", 12)):
+        t0 = time.time()
+        index, stats = build_ivf(
+            jax.random.key(0), spec, jnp.asarray(core), jnp.asarray(attrs),
+            n_clusters=80, kmeans_mode=mode, kmeans_steps=steps,
+        )
+        dt = time.time() - t0
+        rec = eval_recall(index, core, attrs)
+        print(f"  {mode:10s}: build {dt:6.1f}s  recall@10(T=7) {rec:.3f}  "
+              f"max list {stats.max_list_len}")
+
+    # --- durability + elastic restore (DESIGN §4 fault tolerance) ---
+    with tempfile.TemporaryDirectory() as tmp:
+        storage.save_index(index, tmp, n_shards=4)
+        man = storage.load_manifest(tmp)
+        print(f"saved {man['n_shards']} shards, {man['n_live']} vectors")
+        restored = storage.load_index(tmp, target_shards=8)
+        rec2 = eval_recall(restored, core, attrs)
+        print(f"restored for 8 shards (K padded to "
+              f"{restored.n_clusters}): recall unchanged {rec2:.3f}")
+
+
+if __name__ == "__main__":
+    main()

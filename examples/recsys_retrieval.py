@@ -1,0 +1,82 @@
+"""Two-stage recsys retrieval: SASRec user encoder + the paper's hybrid IVF
+index as the candidate generator over 200k items with attribute filters —
+the `retrieval_cand` workload, where the paper's technique plugs directly
+into an assigned architecture (DESIGN.md §5).
+
+    PYTHONPATH=src python examples/recsys_retrieval.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import sasrec
+from repro.core import (
+    FilterBuilder,
+    HybridSpec,
+    brute_force,
+    build_ivf,
+    from_builders,
+    recall_at_k,
+)
+from repro.core.search import search_reference
+from repro.models.recsys import RecsysBatch, init_params, user_embedding
+from repro.core.hybrid import l2_normalize
+
+
+def main():
+    cfg = sasrec.smoke_config()
+    n_items, m = 200_000, 4
+    rng = np.random.default_rng(0)
+
+    # item embedding table = the model's own item space (normalized)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, vocab_items=n_items)
+    params = init_params(jax.random.key(0), cfg)
+    item_emb = l2_normalize(params["item_table"])
+    item_attrs = rng.integers(0, 8, (n_items, m)).astype(np.int16)
+    # attr0 = category, attr1 = price bucket, attr2 = in_stock, attr3 = region
+
+    print(f"building IVF index over {n_items} item embeddings ...")
+    spec = HybridSpec(dim=cfg.embed_dim, n_attrs=m, core_dtype=jnp.float32)
+    index, stats = build_ivf(
+        jax.random.key(1), spec, item_emb, jnp.asarray(item_attrs),
+        n_clusters=256, kmeans_steps=60,
+    )
+    print(f"  K={index.n_clusters}, mean list {stats.mean_list_len:.0f}")
+
+    # --- user towers from behavior histories ---
+    b = 8
+    hist = rng.integers(0, n_items, (b, cfg.seq_len)).astype(np.int32)
+    batch = RecsysBatch(
+        dense=jnp.zeros((b, cfg.n_dense), jnp.float32),
+        sparse=jnp.zeros((b, 1), jnp.int32),
+        hist=jnp.asarray(hist),
+        target=jnp.zeros((b,), jnp.int32),
+        label=jnp.zeros((b,), jnp.float32),
+    )
+    users = l2_normalize(user_embedding(params, cfg, batch))  # [B, D]
+
+    # --- filtered candidate generation via the paper's index ---
+    #   WHERE category == u%8 AND in_stock >= 1
+    builders = [FilterBuilder(m).eq(0, u % 8).ge(2, 1) for u in range(b)]
+    fspec = from_builders(builders)
+    res = search_reference(index, users, fspec, k=100, n_probes=16)
+    oracle = brute_force(item_emb, jnp.asarray(item_attrs), users, fspec,
+                         k=100)
+    rec = recall_at_k(res, oracle)
+    print(f"candidate-gen recall@100 vs exact filtered scan (T=16): {rec:.3f}")
+    for u in range(b):
+        ids = np.asarray(res.ids[u])
+        ids = ids[ids >= 0]
+        assert (item_attrs[ids, 0] == u % 8).all()
+        assert (item_attrs[ids, 2] >= 1).all()
+    n_cand = int(np.mean(np.sum(np.asarray(res.ids) >= 0, -1)))
+    print(f"all {n_cand} candidates/user satisfy their filters ✓")
+    print("stage-2 (rank candidates with the full SASRec scorer) would "
+          "score these ~100 candidates instead of 200k items: "
+          f"{n_items//100}x less ranking compute")
+
+
+if __name__ == "__main__":
+    main()

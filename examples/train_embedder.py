@@ -1,0 +1,97 @@
+"""Train a small two-tower embedder, then build the hybrid index from its
+embeddings and serve filtered queries — the paper's full pipeline (encoder →
+index → filtered search) end to end, with checkpoint/restart built in.
+
+    PYTHONPATH=src python examples/train_embedder.py
+"""
+
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import HybridSpec, build_ivf, match_all, recall_at_k, \
+    brute_force
+from repro.core.search import search_reference
+from repro.data import ShardedFeeder
+from repro.train.train_loop import Trainer, TrainLoopConfig
+
+
+def init_tower(key, d_in, d_out=32):
+    k1, k2 = jax.random.split(key)
+    g = jax.nn.initializers.glorot_normal()
+    return {"w1": g(k1, (d_in, 128)), "b1": jnp.zeros(128),
+            "w2": g(k2, (128, d_out)), "b2": jnp.zeros(d_out)}
+
+
+def tower(p, x):
+    h = jax.nn.relu(x @ p["w1"] + p["b1"])
+    z = h @ p["w2"] + p["b2"]
+    return z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-6)
+
+
+def loss_fn(params, batch):
+    """In-batch-softmax contrastive loss (two-tower retrieval standard)."""
+    za = tower(params["a"], batch["x"])
+    zb = tower(params["b"], batch["y"])
+    logits = za @ zb.T * 10.0
+    labels = jnp.arange(logits.shape[0])
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], 1)[:, 0]
+    loss = jnp.mean(lse - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"acc": acc}
+
+
+def gen(seed, step, d_in=48, batch=256):
+    rng = np.random.default_rng((seed, step))
+    base = rng.standard_normal((batch, d_in)).astype(np.float32)
+    return {
+        "x": base + 0.1 * rng.standard_normal((batch, d_in)).astype(np.float32),
+        "y": base + 0.1 * rng.standard_normal((batch, d_in)).astype(np.float32),
+    }
+
+
+def main():
+    d_in, d_emb, m = 48, 32, 4
+    params = {"a": init_tower(jax.random.key(0), d_in),
+              "b": init_tower(jax.random.key(1), d_in)}
+    ckpt_dir = tempfile.mkdtemp(prefix="embedder_ckpt_")
+    cfg = TrainLoopConfig(total_steps=300, ckpt_every=100, ckpt_dir=ckpt_dir,
+                          log_every=50, lr=3e-3, warmup=20)
+    trainer = Trainer(loss_fn, params, cfg)
+    feeder = ShardedFeeder(lambda s, i: gen(s, i), seed=0)
+    print("training two-tower embedder for 300 steps ...")
+    hist = trainer.run(feeder)
+    feeder.close()
+    print(f"loss {hist['loss'][0]:.3f} → {hist['loss'][-1]:.3f} "
+          f"(checkpoints in {ckpt_dir})")
+
+    # --- embed a corpus and build the paper's index over it ---
+    rng = np.random.default_rng(42)
+    corpus = rng.standard_normal((20_000, d_in)).astype(np.float32)
+    emb = np.asarray(tower(trainer.params["b"], jnp.asarray(corpus)))
+    attrs = rng.integers(0, 8, (len(corpus), m)).astype(np.int16)
+    spec = HybridSpec(dim=d_emb, n_attrs=m, core_dtype=jnp.float32)
+    index, stats = build_ivf(
+        jax.random.key(2), spec, jnp.asarray(emb), jnp.asarray(attrs),
+        n_clusters=32, kmeans_steps=30,
+    )
+    print(f"index built: K={index.n_clusters}, "
+          f"mean list {stats.mean_list_len:.0f}")
+
+    # --- query with the query tower ---
+    q_raw = corpus[:16] + 0.05 * rng.standard_normal((16, d_in)).astype(np.float32)
+    queries = tower(trainer.params["a"], jnp.asarray(q_raw))
+    fspec = match_all(16, m)
+    res = search_reference(index, queries, fspec, k=10, n_probes=5)
+    oracle = brute_force(jnp.asarray(emb), jnp.asarray(attrs), queries,
+                         fspec, k=10)
+    print(f"retrieval recall@10 (T=5): {recall_at_k(res, oracle):.3f}")
+    hit1 = float(np.mean(np.asarray(res.ids)[:, 0] == np.arange(16)))
+    print(f"self-retrieval hit@1: {hit1:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""The paper's primary contribution: hybrid IVF-Flat filtered similarity search.
+
+Public API surface (see DESIGN.md §3):
+
+  HybridSpec, make_hybrid, l2_normalize            — hybrid vector layout
+  FilterBuilder, FilterSpec, match_all, filter_mask — SQL-like filters
+  build_ivf, IVFFlatIndex                           — index construction
+  search_reference, brute_force, recall_at_k        — search paths + oracle
+  add_vectors, tombstone                            — online updates
+"""
+
+from repro.core.hybrid import (
+    ATTR_MAX,
+    ATTR_MIN,
+    HybridSpec,
+    concat_hybrid,
+    encode_categorical_attr,
+    encode_numeric_attr,
+    l2_normalize,
+    make_hybrid,
+    split_hybrid,
+)
+from repro.core.filters import (
+    FilterBuilder,
+    FilterSpec,
+    filter_mask,
+    from_builders,
+    match_all,
+    selectivity,
+)
+from repro.core.ivf import (
+    BuildStats,
+    IVFFlatIndex,
+    build_from_assignments,
+    build_ivf,
+    default_n_clusters,
+    validity_mask,
+)
+from repro.core.search import (
+    SearchResult,
+    brute_force,
+    recall_at_k,
+    search_centroids,
+    search_reference,
+)
+from repro.core.topk import masked_topk, merge_topk, topk_tree_merge
+from repro.core.update import add_vectors, compact_cluster, tombstone
+
+__all__ = [k for k in dir() if not k.startswith("_")]

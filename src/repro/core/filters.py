@@ -1,0 +1,196 @@
+"""Filter conditions F over attribute vectors (paper §3.4).
+
+The paper's filters are per-attribute relational constraints combined
+conjunctively ("vectors satisfying *all* specified conditions").  We compile
+every supported predicate to a closed int16 interval per attribute:
+
+  * exact match        a_m == v        →  [v, v]
+  * range              lo <= a_m <= hi →  [lo, hi]
+  * one-sided          a_m >= v        →  [v, ATTR_MAX]   (resp. <=)
+  * wildcard           —               →  [ATTR_MIN, ATTR_MAX]
+
+so a batched query filter is two int16 arrays ``lo, hi ∈ [Q, M]`` and the
+membership test is a branch-free VPU reduction::
+
+    mask[q, n] = AND_m ( lo[q, m] <= attrs[n, m] <= hi[q, m] )
+
+Disjunctions over *values of one attribute* (IN-sets) are supported by
+splitting a query into a small static number of interval rows (DNF terms)
+OR-combined at mask level — see ``FilterSpec.terms``.  This covers the paper's
+"SQL-like filter expressions" (conjunctions of range/equality/IN predicates)
+without any data-dependent shapes, which is what makes it fusable into the
+Pallas scan kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hybrid import ATTR_MAX, ATTR_MIN
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class FilterBuilder:
+    """Imperative builder for one query's filter condition F.
+
+    Example (conjunction with an IN-set)::
+
+        f = (FilterBuilder(n_attrs=10)
+             .eq(0, 5)            # attr0 == 5
+             .between(2, -10, 90) # -10 <= attr2 <= 90
+             .ge(3, 0)            # attr3 >= 0
+             .isin(4, [1, 7, 9])) # attr4 in {1, 7, 9}
+        lo, hi = f.intervals()    # [n_terms, M] each
+    """
+
+    n_attrs: int
+
+    def __post_init__(self):
+        # One DNF term = one (lo, hi) row.  isin() multiplies terms.
+        self._terms: List[Tuple[np.ndarray, np.ndarray]] = [
+            (
+                np.full(self.n_attrs, ATTR_MIN, np.int16),
+                np.full(self.n_attrs, ATTR_MAX, np.int16),
+            )
+        ]
+
+    def _clamp(self, v: int) -> int:
+        return int(np.clip(v, ATTR_MIN, ATTR_MAX))
+
+    def _narrow(self, attr: int, lo: int, hi: int) -> "FilterBuilder":
+        if not 0 <= attr < self.n_attrs:
+            raise ValueError(f"attribute index {attr} out of range [0,{self.n_attrs})")
+        for tlo, thi in self._terms:
+            tlo[attr] = max(tlo[attr], self._clamp(lo))
+            thi[attr] = min(thi[attr], self._clamp(hi))
+        return self
+
+    def eq(self, attr: int, value: int) -> "FilterBuilder":
+        return self._narrow(attr, value, value)
+
+    def between(self, attr: int, lo: int, hi: int) -> "FilterBuilder":
+        return self._narrow(attr, lo, hi)
+
+    def ge(self, attr: int, value: int) -> "FilterBuilder":
+        return self._narrow(attr, value, ATTR_MAX)
+
+    def le(self, attr: int, value: int) -> "FilterBuilder":
+        return self._narrow(attr, ATTR_MIN, value)
+
+    def isin(self, attr: int, values: Sequence[int]) -> "FilterBuilder":
+        """OR over values of one attribute: splits every term per value."""
+        if not values:
+            raise ValueError("isin() needs at least one value")
+        new_terms: List[Tuple[np.ndarray, np.ndarray]] = []
+        for tlo, thi in self._terms:
+            for v in values:
+                nlo, nhi = tlo.copy(), thi.copy()
+                v = self._clamp(v)
+                nlo[attr] = max(nlo[attr], v)
+                nhi[attr] = min(nhi[attr], v)
+                new_terms.append((nlo, nhi))
+        self._terms = new_terms
+        return self
+
+    def intervals(self) -> Tuple[np.ndarray, np.ndarray]:
+        lo = np.stack([t[0] for t in self._terms])
+        hi = np.stack([t[1] for t in self._terms])
+        return lo, hi
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FilterSpec:
+    """A batch of compiled filters, one per query.
+
+    lo, hi: [Q, n_terms, M] int16 — conjunctive interval bounds per DNF term.
+      ``n_terms`` is a static batch-wide maximum; unused terms are voided
+      (lo > hi everywhere → term matches nothing).  A vector passes if it
+      matches ANY term (OR), and matches a term iff it is inside the interval
+      of EVERY attribute (AND).
+    """
+
+    lo: Array
+    hi: Array
+
+    @property
+    def n_terms(self) -> int:
+        return self.lo.shape[-2]
+
+    @property
+    def n_attrs(self) -> int:
+        return self.lo.shape[-1]
+
+    def __len__(self) -> int:
+        return self.lo.shape[0]
+
+
+def match_all(n_queries: int, n_attrs: int, n_terms: int = 1) -> FilterSpec:
+    """The no-filter (wildcard) spec: every vector passes."""
+    lo = np.full((n_queries, n_terms, n_attrs), ATTR_MIN, np.int16)
+    hi = np.full((n_queries, n_terms, n_attrs), ATTR_MAX, np.int16)
+    if n_terms > 1:  # void the spare terms so counts stay exact
+        lo[:, 1:, :] = ATTR_MAX
+        hi[:, 1:, :] = ATTR_MIN
+    return FilterSpec(lo=jnp.asarray(lo), hi=jnp.asarray(hi))
+
+
+def from_builders(
+    builders: Sequence[FilterBuilder], n_terms: Optional[int] = None
+) -> FilterSpec:
+    """Pads a batch of per-query builders to a common static term count."""
+    per_query = [b.intervals() for b in builders]
+    max_terms = max(lo.shape[0] for lo, _ in per_query)
+    n_terms = max_terms if n_terms is None else n_terms
+    if n_terms < max_terms:
+        raise ValueError(f"n_terms={n_terms} < required {max_terms}")
+    M = builders[0].n_attrs
+    Q = len(builders)
+    lo = np.full((Q, n_terms, M), ATTR_MAX, np.int16)  # void by default
+    hi = np.full((Q, n_terms, M), ATTR_MIN, np.int16)
+    for q, (tlo, thi) in enumerate(per_query):
+        lo[q, : tlo.shape[0]] = tlo
+        hi[q, : thi.shape[0]] = thi
+    return FilterSpec(lo=jnp.asarray(lo), hi=jnp.asarray(hi))
+
+
+def filter_mask(spec: FilterSpec, attrs: Array, query_idx: Optional[Array] = None) -> Array:
+    """Evaluates the filter against attribute rows.
+
+    Args:
+      spec: FilterSpec with lo/hi [Q, n_terms, M].
+      attrs: [..., M] int16 attribute rows.
+      query_idx: if given, an int array broadcastable to ``attrs.shape[:-1]``
+        selecting which query's filter applies to each row.  If None, ``attrs``
+        must be [Q, ..., M] with the leading axis aligned to queries.
+
+    Returns:
+      bool mask of shape ``attrs.shape[:-1]``.
+    """
+    lo, hi = spec.lo, spec.hi
+    if query_idx is not None:
+        lo = jnp.take(lo, query_idx, axis=0)  # [..., n_terms, M]
+        hi = jnp.take(hi, query_idx, axis=0)
+    else:
+        extra = attrs.ndim - 2  # broadcast over middle axes
+        lo = lo.reshape(lo.shape[0], *([1] * extra), *lo.shape[1:])
+        hi = hi.reshape(hi.shape[0], *([1] * extra), *hi.shape[1:])
+    a = attrs[..., None, :]  # [..., 1, M]
+    inside = jnp.logical_and(a >= lo, a <= hi)  # [..., n_terms, M]
+    per_term = jnp.all(inside, axis=-1)  # AND over attributes
+    return jnp.any(per_term, axis=-1)  # OR over DNF terms
+
+
+def selectivity(spec: FilterSpec, attrs: Array) -> Array:
+    """Fraction of rows passing each query's filter — used by the planner
+    to pick T adaptively (paper §4.3 'filter selectivity')."""
+    q = spec.lo.shape[0]
+    mask = filter_mask(spec, jnp.broadcast_to(attrs, (q,) + attrs.shape))
+    return jnp.mean(mask.astype(jnp.float32), axis=tuple(range(1, mask.ndim)))

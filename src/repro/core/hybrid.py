@@ -1,0 +1,140 @@
+"""Hybrid vectors (paper §3.5, §4.1).
+
+A *hybrid vector* ``h_i = [x_i || a_i]`` concatenates a dense core embedding
+``x_i ∈ R^D`` with a discrete attribute row ``a_i ∈ Z^M``.  The paper stores
+both in one float row; on TPU we keep the two halves in their natural dtypes
+(core: bf16/f32 for the MXU, attributes: int16 for VREG compare ops) but treat
+them as one logical record throughout the index.  ``HybridSpec`` is the single
+source of truth for that layout.
+
+Attribute values follow the paper's encoding (§3.4, §5.1): fixed-size integers
+in [-32768, 32767] — categorical attributes are dictionary-encoded, numeric
+attributes are binned/rescaled into the int16 range by the caller (helpers
+below).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ATTR_MIN = -32768
+ATTR_MAX = 32767
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridSpec:
+    """Logical layout of a hybrid vector.
+
+    Attributes:
+      dim: D, dimensionality of the dense core embedding.
+      n_attrs: M, number of discrete filter attributes.
+      core_dtype: storage dtype of the core half (bf16 on TPU).
+      attr_dtype: storage dtype of the attribute half (int16 per the paper).
+      metric: "dot" (cosine on normalized inputs, maximized) or "l2"
+        (Euclidean, internally converted to a maximized score).
+    """
+
+    dim: int
+    n_attrs: int
+    core_dtype: jnp.dtype = jnp.bfloat16
+    attr_dtype: jnp.dtype = jnp.int16
+    metric: str = "dot"
+
+    def __post_init__(self):
+        if self.dim <= 0:
+            raise ValueError(f"dim must be positive, got {self.dim}")
+        if self.n_attrs < 0:
+            raise ValueError(f"n_attrs must be >= 0, got {self.n_attrs}")
+        if self.metric not in ("dot", "l2"):
+            raise ValueError(f"metric must be 'dot' or 'l2', got {self.metric!r}")
+
+    @property
+    def hybrid_dim(self) -> int:
+        """D + M, the paper's hybrid dimensionality (778 in the case study)."""
+        return self.dim + self.n_attrs
+
+
+def make_hybrid(
+    spec: HybridSpec, core: Array, attrs: Array
+) -> Tuple[Array, Array]:
+    """Validates and packs a batch of (core, attrs) into index storage dtypes.
+
+    This is the paper's Fig. 1 construction.  We do not physically concatenate
+    (mixed dtypes); the pair travels together through the index.
+    """
+    core = jnp.asarray(core)
+    attrs = jnp.asarray(attrs)
+    if core.ndim != 2 or core.shape[-1] != spec.dim:
+        raise ValueError(f"core must be [N, {spec.dim}], got {core.shape}")
+    if attrs.ndim != 2 or attrs.shape[-1] != spec.n_attrs:
+        raise ValueError(f"attrs must be [N, {spec.n_attrs}], got {attrs.shape}")
+    if core.shape[0] != attrs.shape[0]:
+        raise ValueError(
+            f"core and attrs disagree on N: {core.shape[0]} vs {attrs.shape[0]}"
+        )
+    return core.astype(spec.core_dtype), attrs.astype(spec.attr_dtype)
+
+
+def concat_hybrid(spec: HybridSpec, core: Array, attrs: Array) -> Array:
+    """Literal ``[x || a]`` concatenation (paper §4.1), for interop/debug.
+
+    Returns a float array [N, D+M]; the attribute half is cast to the core
+    dtype exactly as the paper stores it (float16 in §5.1).
+    """
+    core, attrs = make_hybrid(spec, core, attrs)
+    return jnp.concatenate(
+        [core, attrs.astype(spec.core_dtype)], axis=-1
+    )
+
+
+def split_hybrid(spec: HybridSpec, hybrid: Array) -> Tuple[Array, Array]:
+    """Inverse of :func:`concat_hybrid`."""
+    if hybrid.shape[-1] != spec.hybrid_dim:
+        raise ValueError(
+            f"hybrid must have trailing dim {spec.hybrid_dim}, got {hybrid.shape}"
+        )
+    core = hybrid[..., : spec.dim].astype(spec.core_dtype)
+    attrs = jnp.round(hybrid[..., spec.dim :].astype(jnp.float32)).astype(
+        spec.attr_dtype
+    )
+    return core, attrs
+
+
+def encode_numeric_attr(
+    values: np.ndarray, lo: float, hi: float
+) -> np.ndarray:
+    """Adaptive-binning helper (paper §3.4): rescale a numeric column into int16.
+
+    Linearly maps [lo, hi] onto [ATTR_MIN, ATTR_MAX]; out-of-range values are
+    clipped.  The same (lo, hi) must be used to encode query ranges.
+    """
+    if hi <= lo:
+        raise ValueError(f"need hi > lo, got [{lo}, {hi}]")
+    x = (np.asarray(values, dtype=np.float64) - lo) / (hi - lo)
+    x = np.clip(x, 0.0, 1.0)
+    return np.round(x * (ATTR_MAX - ATTR_MIN) + ATTR_MIN).astype(np.int16)
+
+
+def encode_categorical_attr(
+    values: np.ndarray, vocabulary: dict
+) -> np.ndarray:
+    """Dictionary-encode a categorical column into int16 codes."""
+    if len(vocabulary) > (ATTR_MAX - ATTR_MIN + 1):
+        raise ValueError("categorical vocabulary exceeds int16 code space")
+    out = np.empty(len(values), dtype=np.int16)
+    for i, v in enumerate(values):
+        out[i] = vocabulary[v] + ATTR_MIN
+    return out
+
+
+def l2_normalize(x: Array, eps: float = 1e-12) -> Array:
+    """Normalizes rows so dot == cosine (CLIP embeddings in the case study)."""
+    n = jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32)), -1, keepdims=True))
+    return (x / jnp.maximum(n, eps)).astype(x.dtype)

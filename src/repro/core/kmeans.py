@@ -1,0 +1,154 @@
+"""K-Means / MiniBatchKMeans for centroid computation (paper §4.2 step 1).
+
+The paper builds centroids with sklearn's MiniBatchKMeans on one CPU host.
+Here both Lloyd and the mini-batch variant are implemented in JAX so the build
+runs data-parallel on the pod: the assignment step is an argmin over
+``x @ C^T`` (MXU), the update step is ``segment_sum`` over assignments — both
+shard over the batch axis under pjit, with XLA inserting the cross-chip
+reductions.
+
+All functions are functional (state in, state out) so they jit/scan cleanly
+and checkpoint mid-build (fault tolerance for multi-hour billion-vector
+builds, paper §5.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KMeansState:
+    centroids: Array  # [K, D] f32
+    counts: Array  # [K] f32 — per-centroid sample counts (minibatch lr)
+    step: Array  # scalar int32
+
+
+def init_from_sample(key: Array, x: Array, n_clusters: int) -> KMeansState:
+    """Random-subset init (the sklearn default for MiniBatchKMeans at scale)."""
+    n = x.shape[0]
+    idx = jax.random.choice(key, n, (n_clusters,), replace=n < n_clusters)
+    return KMeansState(
+        centroids=x[idx].astype(jnp.float32),
+        counts=jnp.zeros((n_clusters,), jnp.float32),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def pairwise_neg_dist2(x: Array, c: Array) -> Array:
+    """-(||x - c||^2) up to a per-row constant: 2 x·c - ||c||^2. [B, K]."""
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    dots = x @ c.T
+    c2 = jnp.sum(c * c, axis=-1)
+    return 2.0 * dots - c2[None, :]
+
+
+def assign(
+    x: Array, centroids: Array, *, chunk: Optional[int] = None
+) -> Array:
+    """Nearest-centroid assignment (paper §4.2 step 2). Returns int32 [N].
+
+    ``chunk`` bounds the [chunk, K] score intermediate for large N·K.
+    """
+    if chunk is None or x.shape[0] <= chunk:
+        return jnp.argmax(pairwise_neg_dist2(x, centroids), axis=-1).astype(
+            jnp.int32
+        )
+    n = x.shape[0]
+    pad = (-n) % chunk
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    xc = xp.reshape(-1, chunk, x.shape[-1])
+    out = jax.lax.map(
+        lambda xb: jnp.argmax(pairwise_neg_dist2(xb, centroids), -1).astype(
+            jnp.int32
+        ),
+        xc,
+    )
+    return out.reshape(-1)[:n]
+
+
+def lloyd_step(state: KMeansState, x: Array) -> Tuple[KMeansState, Array]:
+    """One full-batch Lloyd iteration. Returns (state, inertia)."""
+    k = state.centroids.shape[0]
+    scores = pairwise_neg_dist2(x, state.centroids)
+    a = jnp.argmax(scores, axis=-1)
+    best = jnp.max(scores, axis=-1)
+    x32 = x.astype(jnp.float32)
+    sums = jax.ops.segment_sum(x32, a, num_segments=k)
+    cnts = jax.ops.segment_sum(jnp.ones_like(a, jnp.float32), a, num_segments=k)
+    new_c = jnp.where(
+        cnts[:, None] > 0, sums / jnp.maximum(cnts[:, None], 1.0), state.centroids
+    )
+    x2 = jnp.sum(x32 * x32, axis=-1)
+    inertia = jnp.sum(x2 - best)  # ||x-c||^2 = ||x||^2 - (2x·c - ||c||^2)
+    return (
+        KMeansState(new_c, state.counts + cnts, state.step + 1),
+        inertia,
+    )
+
+
+def minibatch_step(state: KMeansState, batch: Array) -> KMeansState:
+    """One MiniBatchKMeans step (Sculley 2010, as in sklearn [30]).
+
+    Per-center learning rate 1/count: c ← c + (1/cnt) Σ (x - c) over the
+    batch members assigned to c.  segment_sum keeps it scatter-based (no
+    one-hot matmuls), so HLO FLOPs stay honest.
+    """
+    k = state.centroids.shape[0]
+    a = assign(batch, state.centroids)
+    b32 = batch.astype(jnp.float32)
+    sums = jax.ops.segment_sum(b32, a, num_segments=k)
+    cnts = jax.ops.segment_sum(
+        jnp.ones_like(a, jnp.float32), a, num_segments=k
+    )
+    new_counts = state.counts + cnts
+    lr = jnp.where(new_counts > 0, 1.0 / jnp.maximum(new_counts, 1.0), 0.0)
+    # c_new = c + lr * (sum_x - cnt * c)
+    delta = sums - cnts[:, None] * state.centroids
+    new_c = state.centroids + lr[:, None] * delta
+    return KMeansState(new_c, new_counts, state.step + 1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_clusters", "n_steps", "batch_size"))
+def minibatch_kmeans(
+    key: Array,
+    x: Array,
+    *,
+    n_clusters: int,
+    n_steps: int,
+    batch_size: int,
+) -> KMeansState:
+    """Runs MiniBatchKMeans over random batches of ``x`` via lax.scan."""
+    ikey, skey = jax.random.split(key)
+    state = init_from_sample(ikey, x, n_clusters)
+
+    def body(carry, step_key):
+        idx = jax.random.choice(step_key, x.shape[0], (batch_size,))
+        return minibatch_step(carry, x[idx]), ()
+
+    state, _ = jax.lax.scan(body, state, jax.random.split(skey, n_steps))
+    return state
+
+
+@functools.partial(jax.jit, static_argnames=("n_clusters", "n_iters"))
+def kmeans_lloyd(
+    key: Array, x: Array, *, n_clusters: int, n_iters: int
+) -> Tuple[KMeansState, Array]:
+    """Full Lloyd K-Means; returns (state, inertia trace [n_iters])."""
+    state = init_from_sample(key, x, n_clusters)
+
+    def body(carry, _):
+        new, inertia = lloyd_step(carry, x)
+        return new, inertia
+
+    state, trace = jax.lax.scan(body, state, None, length=n_iters)
+    return state, trace

@@ -1,0 +1,196 @@
+"""Serving loop: request batching, deadlines, straggler policy (paper §5.4).
+
+The paper flags concurrent searches as a bottleneck for its single-host
+design and suggests asynchronous request–reply patterns; this layer is that
+pattern for the pod runtime:
+
+  * requests (query vector + FilterSpec row) accumulate in a queue;
+  * a micro-batcher drains up to ``max_batch`` requests or waits at most
+    ``max_wait_s`` (padding the tail batch to the compiled static Q so the
+    jitted search never recompiles);
+  * per-batch deadline: chips reported unhealthy by the health tracker are
+    excluded from the merge through ``shard_ok`` — the hierarchical top-k is
+    an associative monoid, so partial merges return sound (lower-recall)
+    results instead of timing out the whole batch;
+  * health tracking is EWMA-on-failure with probation, mirroring what a real
+    cluster's control plane feeds in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.filters import FilterSpec, match_all
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    query: np.ndarray  # [D]
+    lo: np.ndarray  # [F, M] int16
+    hi: np.ndarray  # [F, M]
+    future: "queue.Queue"  # delivery channel (size 1)
+    t_enqueue: float = 0.0
+
+
+@dataclasses.dataclass
+class Response:
+    scores: np.ndarray  # [k]
+    ids: np.ndarray  # [k]
+    latency_s: float
+    batched_with: int
+    degraded: bool  # True if any shard was dropped from the merge
+
+
+class ShardHealth:
+    """EWMA failure tracker per shard; drops a shard from merges while its
+    failure score exceeds the threshold, then lets it back in (probation)."""
+
+    def __init__(self, n_shards: int, threshold: float = 0.5,
+                 decay: float = 0.8):
+        self.n = n_shards
+        self.threshold = threshold
+        self.decay = decay
+        self.score = np.zeros(n_shards)
+
+    def report(self, shard: int, failed: bool):
+        self.score[shard] = self.decay * self.score[shard] + (
+            (1 - self.decay) if failed else 0.0
+        )
+
+    def ok_mask(self) -> np.ndarray:
+        return self.score <= self.threshold
+
+    @property
+    def degraded(self) -> bool:
+        return bool((~self.ok_mask()).any())
+
+
+class SearchServer:
+    """Micro-batching server around a compiled ``search_fn``.
+
+    search_fn(queries [Q, D], fspec, shard_ok [S]) -> (scores [Q,k], ids [Q,k])
+    with STATIC Q — the server pads tail batches.
+    """
+
+    def __init__(
+        self,
+        search_fn: Callable,
+        *,
+        batch_size: int,
+        dim: int,
+        n_attrs: int,
+        n_terms: int,
+        n_shards: int,
+        max_wait_s: float = 0.005,
+    ):
+        self.search_fn = search_fn
+        self.batch_size = batch_size
+        self.dim = dim
+        self.n_attrs = n_attrs
+        self.n_terms = n_terms
+        self.max_wait_s = max_wait_s
+        self.health = ShardHealth(n_shards)
+        self._q: "queue.Queue[Request]" = queue.Queue()
+        self._stop = threading.Event()
+        self._worker: Optional[threading.Thread] = None
+        self.stats = dict(batches=0, requests=0, degraded_batches=0,
+                          total_latency_s=0.0)
+
+    # ---- client side ----
+    def submit(self, query: np.ndarray, fspec_row: Optional[Tuple] = None
+               ) -> "queue.Queue":
+        if fspec_row is None:
+            wild = match_all(1, self.n_attrs, self.n_terms)
+            lo, hi = np.asarray(wild.lo[0]), np.asarray(wild.hi[0])
+        else:
+            lo, hi = fspec_row
+        fut: "queue.Queue" = queue.Queue(maxsize=1)
+        self._q.put(Request(np.asarray(query), np.asarray(lo),
+                            np.asarray(hi), fut, time.monotonic()))
+        return fut
+
+    def search_blocking(self, query, fspec_row=None, timeout=60.0) -> Response:
+        return self.submit(query, fspec_row).get(timeout=timeout)
+
+    # ---- server side ----
+    def start(self):
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+
+    def stop(self):
+        self._stop.set()
+        if self._worker:
+            self._worker.join(timeout=30)
+
+    def _drain(self) -> List[Request]:
+        batch: List[Request] = []
+        deadline = None
+        while len(batch) < self.batch_size and not self._stop.is_set():
+            timeout = (
+                self.max_wait_s if deadline is None
+                else max(0.0, deadline - time.monotonic())
+            )
+            try:
+                req = self._q.get(timeout=max(timeout, 1e-4))
+            except queue.Empty:
+                if batch:
+                    break
+                continue
+            batch.append(req)
+            if deadline is None:
+                deadline = time.monotonic() + self.max_wait_s
+            if deadline and time.monotonic() > deadline:
+                break
+        return batch
+
+    def _run(self):
+        while not self._stop.is_set():
+            batch = self._drain()
+            if not batch:
+                continue
+            self._serve(batch)
+
+    def _serve(self, batch: List[Request]):
+        b = len(batch)
+        qsz = self.batch_size
+        queries = np.zeros((qsz, self.dim), np.float32)
+        lo = np.zeros((qsz, self.n_terms, self.n_attrs), np.int16)
+        hi = np.zeros((qsz, self.n_terms, self.n_attrs), np.int16)
+        for i, r in enumerate(batch):
+            queries[i] = r.query
+            lo[i] = r.lo
+            hi[i] = r.hi
+        ok = self.health.ok_mask()
+        fspec = FilterSpec(lo=jnp.asarray(lo), hi=jnp.asarray(hi))
+        t0 = time.monotonic()
+        scores, ids = self.search_fn(
+            jnp.asarray(queries), fspec, jnp.asarray(ok)
+        )
+        scores = np.asarray(scores)
+        ids = np.asarray(ids)
+        t1 = time.monotonic()
+        degraded = self.health.degraded
+        self.stats["batches"] += 1
+        self.stats["requests"] += b
+        self.stats["degraded_batches"] += int(degraded)
+        self.stats["total_latency_s"] += t1 - t0
+        for i, r in enumerate(batch):
+            r.future.put(
+                Response(
+                    scores=scores[i],
+                    ids=ids[i],
+                    latency_s=t1 - r.t_enqueue,
+                    batched_with=b,
+                    degraded=degraded,
+                )
+            )

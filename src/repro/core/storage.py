@@ -1,0 +1,178 @@
+"""Disk persistence, sharded checkpointing, elastic re-sharding (DESIGN §4).
+
+The paper's index lives on disk and is paged in per query; ours lives in pod
+HBM and the disk tier is the durability/cold-start layer.  Layout:
+
+    <dir>/manifest.json                 — schema, shapes, shard map, metric
+    <dir>/centroids.npy                 — [K, D] f32 (replicated at load)
+    <dir>/shard_<i>_of_<n>.npz          — contiguous cluster range per shard
+                                          (vectors, attrs, ids, counts, norms)
+
+Because the runtime sharding is "contiguous cluster ranges over a flat chip
+list", a checkpoint written from S chips can be restored onto S' chips by
+re-slicing ranges — no rebuild, no reassignment (elastic scaling).  ``pad_k``
+pads with empty clusters so K divides any target chip count; empty clusters
+are never probed in practice (their centroids sit at +inf) and cost only
+centroid-table rows.
+
+Writes are atomic (tmp + rename) and the manifest carries a content version;
+``load_index`` verifies completeness before touching any array — a partially
+written checkpoint is never loaded (fault tolerance during save).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hybrid import HybridSpec
+from repro.core.ivf import IVFFlatIndex
+
+MANIFEST = "manifest.json"
+_FAR = 1.0e30  # centroid coordinate for padded (empty) clusters
+
+
+def _atomic_save(path: str, save_fn):
+    d = os.path.dirname(path)
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    os.close(fd)
+    try:
+        save_fn(tmp)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def pad_k(index: IVFFlatIndex, k_new: int) -> IVFFlatIndex:
+    """Pads the cluster axis to ``k_new`` with empty, unprobeable clusters."""
+    k = index.n_clusters
+    if k_new < k:
+        raise ValueError(f"cannot shrink K: {k} -> {k_new}")
+    if k_new == k:
+        return index
+    dk = k_new - k
+    far = np.full((dk, index.centroids.shape[1]), _FAR, np.float32)
+    pad = lambda a, fill: jnp.concatenate(
+        [a, jnp.full((dk,) + a.shape[1:], fill, a.dtype)], axis=0
+    )
+    return dataclasses.replace(
+        index,
+        centroids=jnp.concatenate([index.centroids, jnp.asarray(-far)], 0),
+        vectors=pad(index.vectors, 0),
+        attrs=pad(index.attrs, 0),
+        ids=pad(index.ids, -1),
+        counts=pad(index.counts, 0),
+        norms=None if index.norms is None else pad(index.norms, 0),
+    )
+
+
+def save_index(index: IVFFlatIndex, directory: str, *, n_shards: int = 1,
+               version: int = 0) -> None:
+    """Writes the index as ``n_shards`` contiguous cluster-range files."""
+    k = index.n_clusters
+    if k % n_shards:
+        raise ValueError(f"K={k} not divisible by n_shards={n_shards}; pad_k first")
+    os.makedirs(directory, exist_ok=True)
+    kl = k // n_shards
+    def _np_save(p, arr):
+        with open(p, "wb") as f:  # file handle: np.save must not append .npy
+            np.save(f, arr, allow_pickle=False)
+
+    _atomic_save(
+        os.path.join(directory, "centroids.npy"),
+        lambda p: _np_save(p, np.asarray(index.centroids)),
+    )
+    for s in range(n_shards):
+        lo, hi = s * kl, (s + 1) * kl
+        payload = dict(
+            vectors=np.asarray(index.vectors[lo:hi]),
+            attrs=np.asarray(index.attrs[lo:hi]),
+            ids=np.asarray(index.ids[lo:hi]),
+            counts=np.asarray(index.counts[lo:hi]),
+        )
+        if index.norms is not None:
+            payload["norms"] = np.asarray(index.norms[lo:hi])
+        def _npz_save(p, pl):
+            with open(p, "wb") as f:
+                np.savez(f, **pl)
+
+        _atomic_save(
+            os.path.join(directory, f"shard_{s}_of_{n_shards}.npz"),
+            lambda p, pl=payload: _npz_save(p, pl),
+        )
+    manifest = dict(
+        version=version,
+        n_clusters=k,
+        n_shards=n_shards,
+        vpad=index.vpad,
+        dim=index.spec.dim,
+        n_attrs=index.spec.n_attrs,
+        metric=index.spec.metric,
+        core_dtype=str(np.dtype(index.spec.core_dtype).name)
+        if index.spec.core_dtype != jnp.bfloat16 else "bfloat16",
+        has_norms=index.norms is not None,
+        n_live=int(jnp.sum(index.counts)),
+    )
+    _atomic_save(
+        os.path.join(directory, MANIFEST),
+        lambda p: open(p, "w").write(json.dumps(manifest, indent=2)),
+    )
+
+
+def load_manifest(directory: str) -> dict:
+    with open(os.path.join(directory, MANIFEST)) as f:
+        return json.load(f)
+
+
+def load_index(
+    directory: str, *, target_shards: Optional[int] = None
+) -> IVFFlatIndex:
+    """Restores an index; ``target_shards`` pads K for a new chip count.
+
+    Verifies every shard file exists before loading anything (a save that
+    died mid-write leaves no manifest or a manifest pointing at a complete
+    older set — either way no partial state is observable).
+    """
+    man = load_manifest(directory)
+    n_shards = man["n_shards"]
+    paths = [
+        os.path.join(directory, f"shard_{s}_of_{n_shards}.npz")
+        for s in range(n_shards)
+    ]
+    missing = [p for p in paths if not os.path.exists(p)]
+    if missing:
+        raise FileNotFoundError(f"incomplete checkpoint, missing: {missing}")
+
+    cents = np.load(os.path.join(directory, "centroids.npy"))
+    parts = [np.load(p) for p in paths]
+    cat = lambda k: jnp.asarray(np.concatenate([p[k] for p in parts], 0))
+    core_dtype = jnp.bfloat16 if man["core_dtype"] == "bfloat16" else jnp.dtype(
+        man["core_dtype"]
+    )
+    spec = HybridSpec(
+        dim=man["dim"], n_attrs=man["n_attrs"], core_dtype=core_dtype,
+        metric=man["metric"],
+    )
+    index = IVFFlatIndex(
+        spec=spec,
+        centroids=jnp.asarray(cents),
+        vectors=cat("vectors").astype(core_dtype),
+        attrs=cat("attrs"),
+        ids=cat("ids"),
+        counts=cat("counts"),
+        norms=cat("norms") if man["has_norms"] else None,
+    )
+    if target_shards and index.n_clusters % target_shards:
+        k_new = ((index.n_clusters + target_shards - 1) // target_shards
+                 ) * target_shards
+        index = pad_k(index, k_new)
+    return index

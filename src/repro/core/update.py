@@ -1,0 +1,123 @@
+"""Online index updates (paper §4.5) plus deletion/compaction extensions.
+
+The paper's add path: assign the new hybrid vector to its nearest centroid and
+append to that centroid's flat list.  Here the append is a batched, jittable
+scatter with capacity semantics: vectors that would overflow a full list are
+reported back (``n_dropped``) so the caller can trigger a split/rebuild —
+billion-scale indexes in production must surface capacity pressure rather than
+silently degrade.
+
+Deletion (beyond-paper, needed for real serving): tombstone the slot by
+negating its id.  Search masks tombstones via ``validity_mask``; the slot is
+reclaimed by :func:`compact_cluster` or a full rebuild.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmeans as kmeans_lib
+from repro.core.hybrid import make_hybrid
+from repro.core.ivf import IVFFlatIndex
+
+Array = jax.Array
+
+
+@jax.jit
+def add_vectors(
+    index: IVFFlatIndex,
+    core: Array,
+    attrs: Array,
+    new_ids: Array,
+) -> Tuple[IVFFlatIndex, Array]:
+    """Appends a batch of vectors (paper §4.5 steps 1-4, batched).
+
+    Returns (index', n_dropped).  Assignment uses the core part only, exactly
+    as the paper prescribes (step 2 'calculated from x_new part').
+    """
+    core, attrs = make_hybrid(index.spec, core, attrs)
+    b = core.shape[0]
+    a = kmeans_lib.assign(core.astype(jnp.float32), index.centroids)  # [B]
+
+    # Slot for each new row: current count of its cluster + its rank among
+    # batch rows that target the same cluster (stable within batch).
+    order = jnp.argsort(a)
+    a_sorted = jnp.take(a, order)
+    starts = jnp.searchsorted(a_sorted, jnp.arange(index.n_clusters), "left")
+    rank_sorted = jnp.arange(b) - jnp.take(starts, a_sorted)
+    rank = jnp.zeros((b,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    slot = jnp.take(index.counts, a) + rank  # [B]
+    ok = slot < index.vpad
+
+    if index.quantized:  # SQ8 index: quantize the incoming rows
+        c32 = core.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(c32), axis=-1)
+        new_scale = jnp.maximum(amax, 1e-12) / 127.0
+        core_store = jnp.clip(
+            jnp.round(c32 / new_scale[:, None]), -127, 127
+        )
+    else:
+        core_store = core
+    vec = index.vectors.at[a, slot].set(
+        core_store.astype(index.vectors.dtype), mode="drop"
+    )
+    att = index.attrs.at[a, slot].set(
+        attrs.astype(index.attrs.dtype), mode="drop"
+    )
+    ids = index.ids.at[a, slot].set(
+        jnp.where(ok, new_ids.astype(jnp.int32), -1), mode="drop"
+    )
+    norms = index.norms
+    if norms is not None:
+        norms = norms.at[a, slot].set(
+            jnp.sum(core.astype(jnp.float32) ** 2, -1), mode="drop"
+        )
+    scales = index.scales
+    if scales is not None:
+        scales = scales.at[a, slot].set(new_scale, mode="drop")
+    added = jax.ops.segment_sum(
+        ok.astype(jnp.int32), a, num_segments=index.n_clusters
+    )
+    counts = index.counts + added
+    n_dropped = b - jnp.sum(added)
+    return (
+        dataclasses.replace(
+            index, vectors=vec, attrs=att, ids=ids, counts=counts,
+            norms=norms, scales=scales,
+        ),
+        n_dropped,
+    )
+
+
+@jax.jit
+def tombstone(index: IVFFlatIndex, cluster: Array, slot: Array) -> IVFFlatIndex:
+    """Marks (cluster, slot) pairs deleted. Ids become -1; counts unchanged
+    (the high-water mark still bounds the scan)."""
+    ids = index.ids.at[cluster, slot].set(-1, mode="drop")
+    return dataclasses.replace(index, ids=ids)
+
+
+@jax.jit
+def compact_cluster(index: IVFFlatIndex, cluster: int) -> IVFFlatIndex:
+    """Reclaims tombstoned slots of one cluster by stable-compacting live rows."""
+    live = index.ids[cluster] >= 0  # [Vpad]
+    # stable order: live rows first, preserving slot order
+    key = jnp.where(live, jnp.arange(index.vpad), index.vpad + jnp.arange(index.vpad))
+    perm = jnp.argsort(key)
+    vec = index.vectors.at[cluster].set(jnp.take(index.vectors[cluster], perm, 0))
+    att = index.attrs.at[cluster].set(jnp.take(index.attrs[cluster], perm, 0))
+    ids_row = jnp.take(index.ids[cluster], perm, 0)
+    n_live = jnp.sum(live.astype(jnp.int32))
+    ids_row = jnp.where(jnp.arange(index.vpad) < n_live, ids_row, -1)
+    ids = index.ids.at[cluster].set(ids_row)
+    norms = index.norms
+    if norms is not None:
+        norms = norms.at[cluster].set(jnp.take(norms[cluster], perm, 0))
+    counts = index.counts.at[cluster].set(n_live)
+    return dataclasses.replace(
+        index, vectors=vec, attrs=att, ids=ids, counts=counts, norms=norms
+    )

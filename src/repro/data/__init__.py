@@ -1,0 +1,12 @@
+from repro.data.pipeline import (
+    ShardedFeeder,
+    lm_batch,
+    recsys_batch,
+    synthetic_attributes,
+    synthetic_embeddings,
+)
+
+__all__ = [
+    "ShardedFeeder", "lm_batch", "recsys_batch", "synthetic_attributes",
+    "synthetic_embeddings",
+]

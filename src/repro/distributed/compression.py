@@ -1,0 +1,81 @@
+"""Gradient compression for DP all-reduce: int8 quantization + error
+feedback (1-bit-Adam-style residual correction).
+
+At multi-pod scale the "pod" axis crosses DCN (slow links); compressing the
+cross-pod gradient all-reduce 4× (f32→int8 with per-tensor scale) trades a
+little optimizer noise for 4× less DCN traffic.  Error feedback keeps the
+quantization bias out of the training trajectory: the residual (g − Q(g)) is
+carried into the next step, so the *accumulated* applied gradient is unbiased.
+
+Usage inside a shard_map'd train step::
+
+    g_q, scale = quantize(g + err)
+    g_mean = psum(dequantize(g_q, scale), "pod") / n_pods   # int8 on the wire
+    err = (g + err) - dequantize(g_q, scale)
+
+(The psum here is on the dequantized value for jax-semantics simplicity; on
+real hardware the int8 payload rides the wire and dequantization happens
+post-reduce — the traffic accounting in §Roofline uses the int8 width.)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def quantize_int8(x: Array) -> Tuple[Array, Array]:
+    """Symmetric per-tensor int8. Returns (q int8, scale f32 scalar)."""
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: Array, scale: Array, dtype=jnp.float32) -> Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum_tree(
+    grads: Any,
+    err: Any,
+    axis_name: Optional[str],
+    n_replicas: int,
+) -> Tuple[Any, Any]:
+    """Quantize (grad + residual), all-reduce, return (mean grad, residual').
+
+    With axis_name=None (single replica) this degrades to the identity-plus-
+    quantization path so tests can check the error-feedback algebra exactly.
+    """
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(corrected)
+        deq = dequantize_int8(q, scale)
+        new_err = corrected - deq
+        if axis_name is not None:
+            deq = jax.lax.psum(deq, axis_name) / n_replicas
+        return deq.astype(g.dtype), new_err
+
+    out = jax.tree.map(one, grads, err)
+    g_out = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    e_out = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return g_out, e_out
+
+
+def compression_ratio(params) -> float:
+    """Wire-bytes ratio of int8+scale vs f32 for the given tree."""
+    f32 = sum(p.size * 4 for p in jax.tree.leaves(params))
+    i8 = sum(p.size * 1 + 4 for p in jax.tree.leaves(params))
+    return f32 / i8

@@ -1,0 +1,5 @@
+from repro.kernels.centroid_topk.centroid_topk import centroid_topk
+from repro.kernels.centroid_topk.ops import probe_centroids
+from repro.kernels.centroid_topk.ref import centroid_topk_ref
+
+__all__ = ["centroid_topk", "centroid_topk_ref", "probe_centroids"]

@@ -1,0 +1,59 @@
+"""Jit'd wrapper: pads Q/K to block multiples and dispatches kernel vs ref.
+
+On CPU (tests, examples) the XLA reference is faster than interpret mode, so
+``probe_centroids`` picks the path via ``use_kernel``; the launch layer sets
+it per backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.centroid_topk.centroid_topk import centroid_topk
+from repro.kernels.centroid_topk.ref import centroid_topk_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("t", "q_block", "k_block", "metric", "use_kernel",
+                     "interpret"),
+)
+def probe_centroids(
+    queries: jax.Array,
+    centroids: jax.Array,
+    *,
+    t: int,
+    q_block: int = 128,
+    k_block: int = 512,
+    metric: str = "dot",
+    use_kernel: bool = True,
+    interpret: bool = False,
+):
+    """Returns (values [Q, T] f32, probe_ids [Q, T] int32), padding-safe."""
+    q, _ = queries.shape
+    k = centroids.shape[0]
+    if not use_kernel:
+        return centroid_topk_ref(queries, centroids, t=t, metric=metric)
+
+    qb = min(q_block, q)
+    q_pad = (-q) % qb
+    k_pad = (-k) % k_block
+    qp = jnp.pad(queries, ((0, q_pad), (0, 0)))
+    cp = jnp.pad(centroids, ((0, k_pad), (0, 0)))
+    if k_pad and metric == "dot":
+        # padded centroids are zero ⇒ score 0 could win over negatives; push
+        # them out of reach instead.
+        cp = cp.at[k:].set(0.0)
+    vals, ids = centroid_topk(
+        qp, cp, t=t, q_block=qb, k_block=min(k_block, k + k_pad),
+        metric=metric, interpret=interpret,
+    )
+    if k_pad:
+        # mask any padded-centroid wins (score from zero rows)
+        bad = ids >= k
+        vals = jnp.where(bad, -3.0e38, vals)
+        ids = jnp.where(bad, -1, ids)
+    return vals[:q], ids[:q]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the streaming centroid top-T kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def centroid_topk_ref(
+    queries: jax.Array, centroids: jax.Array, *, t: int, metric: str = "dot"
+):
+    q32 = queries.astype(jnp.float32)
+    c32 = centroids.astype(jnp.float32)
+    scores = q32 @ c32.T
+    if metric == "l2":
+        scores = 2.0 * scores - jnp.sum(c32 * c32, -1)[None, :]
+    vals, ids = jax.lax.top_k(scores, t)
+    return vals, ids.astype(jnp.int32)

@@ -1,0 +1,5 @@
+from repro.kernels.filtered_scan.filtered_scan import filtered_scan
+from repro.kernels.filtered_scan.ops import search_fused
+from repro.kernels.filtered_scan.ref import filtered_scan_ref
+
+__all__ = ["filtered_scan", "filtered_scan_ref", "search_fused"]

@@ -1,0 +1,239 @@
+"""Fused filtered IVF scan — the paper's §4.4 steps 3+4 as one Pallas kernel.
+
+The paper's measured bottleneck is the *filtering pass* (1.09 s of 1.428 s):
+a separate sweep over the probed lists' attribute rows before any distance is
+computed.  On TPU we eliminate that pass instead of accelerating it: the
+attribute interval test runs in VREGs on the same VMEM-resident block that the
+MXU is scoring, so filtering adds zero extra HBM traffic.
+
+The paper's *dynamic memory loading* ("only the probed lists are loaded into
+RAM") maps onto scalar-prefetch block indexing: the probe table
+``slot_cluster [P]`` is prefetched into SMEM, and the ``index_map`` of the
+database operands selects which cluster's block the next grid step DMAs
+HBM→VMEM — the same indirection pattern paged attention uses for KV blocks.
+Only probed clusters are ever touched; everything else stays cold in HBM,
+exactly like the paper's cold lists stay on disk.
+
+Grid: ``(P, Vpad // v_block)`` — probe slots × intra-list blocks.
+Operands (scalar prefetch first, per PrefetchScalarGridSpec):
+  slot_cluster [P] int32   — cluster id each slot scans   (SMEM)
+  slot_query   [P] int32   — query row each slot serves   (SMEM)
+  queries  [Q, D]    f32/bf16
+  lo, hi   [Q, F, M] int16 — DNF interval bounds per query
+  vectors  [K, Vpad, D]    — flat lists (the big operand, block-streamed)
+  attrs    [K, Vpad, M] int16
+  ids      [K, Vpad] int32 — liveness: id < 0 ⇒ dead/padded slot
+Output:
+  scores [P, Vpad] f32 — masked to NEG_INF where the filter/liveness fails.
+
+A "l2" variant additionally streams ``norms [K, Vpad] f32`` and emits
+``2·q·v − ‖v‖²`` (the per-query −‖q‖² constant is rank-free and added by the
+wrapper for score fidelity).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -3.0e38
+
+
+def _mask_from_attrs(attrs_i32, lo_i32, hi_i32):
+    """[V, M] attrs vs [F, M] bounds → [V] bool (OR over F of AND over M)."""
+    a = attrs_i32[:, None, :]  # [V, 1, M]
+    inside = jnp.logical_and(a >= lo_i32[None], a <= hi_i32[None])  # [V, F, M]
+    return jnp.any(jnp.all(inside, axis=-1), axis=-1)  # [V]
+
+
+def _scan_kernel_dot(
+    slot_cluster_ref,  # scalar prefetch (unused in body; drives index_maps)
+    slot_query_ref,
+    q_ref,  # [1, D]
+    lo_ref,  # [1, F, M]
+    hi_ref,  # [1, F, M]
+    v_ref,  # [1, VB, D]
+    a_ref,  # [1, VB, M]
+    id_ref,  # [1, VB]
+    o_ref,  # [1, VB]
+):
+    del slot_cluster_ref, slot_query_ref
+    q = q_ref[0].astype(jnp.float32)  # [D]
+    v = v_ref[0].astype(jnp.float32)  # [VB, D]
+    # MXU: [VB, D] @ [D, 1] → [VB, 1]; fp32 accumulation.
+    dots = jax.lax.dot_general(
+        v, q[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]
+    a = a_ref[0].astype(jnp.int32)  # [VB, M] — int32 compares on the VPU
+    fmask = _mask_from_attrs(
+        a, lo_ref[0].astype(jnp.int32), hi_ref[0].astype(jnp.int32)
+    )
+    live = id_ref[0] >= 0
+    o_ref[0] = jnp.where(jnp.logical_and(fmask, live), dots, NEG_INF)
+
+
+def _scan_kernel_dot_q8(
+    slot_cluster_ref,
+    slot_query_ref,
+    q_ref,  # [1, D]
+    lo_ref,
+    hi_ref,
+    v_ref,  # [1, VB, D] int8
+    a_ref,
+    id_ref,
+    s_ref,  # [1, VB] f32 per-vector SQ8 scale
+    o_ref,
+):
+    """SQ8 variant: int8 rows stream from HBM (half the traffic of bf16);
+    the dequant is one VPU multiply on the [VB] dot-product column."""
+    del slot_cluster_ref, slot_query_ref
+    q = q_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)  # int8 → f32 in VREGs
+    dots = jax.lax.dot_general(
+        v, q[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0] * s_ref[0]
+    a = a_ref[0].astype(jnp.int32)
+    fmask = _mask_from_attrs(
+        a, lo_ref[0].astype(jnp.int32), hi_ref[0].astype(jnp.int32)
+    )
+    live = id_ref[0] >= 0
+    o_ref[0] = jnp.where(jnp.logical_and(fmask, live), dots, NEG_INF)
+
+
+def _scan_kernel_l2(
+    slot_cluster_ref,
+    slot_query_ref,
+    q_ref,
+    lo_ref,
+    hi_ref,
+    v_ref,
+    a_ref,
+    id_ref,
+    n_ref,  # [1, VB] f32 ‖v‖²
+    o_ref,
+):
+    del slot_cluster_ref, slot_query_ref
+    q = q_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    dots = jax.lax.dot_general(
+        v, q[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]
+    score = 2.0 * dots - n_ref[0]
+    a = a_ref[0].astype(jnp.int32)
+    fmask = _mask_from_attrs(
+        a, lo_ref[0].astype(jnp.int32), hi_ref[0].astype(jnp.int32)
+    )
+    live = id_ref[0] >= 0
+    o_ref[0] = jnp.where(jnp.logical_and(fmask, live), score, NEG_INF)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("v_block", "interpret", "metric"),
+)
+def filtered_scan(
+    slot_cluster: jax.Array,
+    slot_query: jax.Array,
+    queries: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    vectors: jax.Array,
+    attrs: jax.Array,
+    ids: jax.Array,
+    norms: Optional[jax.Array] = None,
+    scales: Optional[jax.Array] = None,
+    *,
+    metric: str = "dot",
+    v_block: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Runs the fused scan. Returns masked scores [P, Vpad] f32.
+
+    v_block: intra-list block length; VMEM working set per step is
+    ``v_block·(D·bytes(core) + M·2 + 8)`` — 256×768 bf16 ≈ 384 KiB, well
+    inside the ~16 MiB v5e VMEM budget, leaving room for double buffering.
+    """
+    p = slot_cluster.shape[0]
+    k, vpad, d = vectors.shape
+    m = attrs.shape[-1]
+    f = lo.shape[1]
+    v_block = min(v_block, vpad)
+    while vpad % v_block != 0 and v_block > 8:
+        v_block //= 2  # builds pad Vpad to ×128, so 128 always divides
+    if vpad % v_block != 0:
+        raise ValueError(f"vpad={vpad} has no usable v_block ≤ requested")
+    if metric not in ("dot", "l2"):
+        raise ValueError(metric)
+    if metric == "l2" and norms is None:
+        raise ValueError("metric='l2' requires norms")
+
+    nvb = vpad // v_block
+    grid = (p, nvb)
+
+    # index_maps receive (grid idxs..., *scalar_prefetch_refs)
+    def im_query(pi, vi, sc, sq):
+        del vi, sc
+        return (sq[pi], 0)
+
+    def im_bounds(pi, vi, sc, sq):
+        del vi, sc
+        return (sq[pi], 0, 0)
+
+    def im_vec(pi, vi, sc, sq):
+        del sq
+        return (sc[pi], vi, 0)
+
+    def im_rows(pi, vi, sc, sq):
+        del sq
+        return (sc[pi], vi)
+
+    def im_out(pi, vi, sc, sq):
+        del sc, sq
+        return (pi, vi)
+
+    in_specs = [
+        pl.BlockSpec((1, d), im_query),
+        pl.BlockSpec((1, f, m), im_bounds),
+        pl.BlockSpec((1, f, m), im_bounds),
+        pl.BlockSpec((1, v_block, d), im_vec),
+        pl.BlockSpec((1, v_block, m), im_vec),
+        pl.BlockSpec((1, v_block), im_rows),
+    ]
+    operands = [queries, lo, hi, vectors, attrs, ids]
+    if metric == "l2":
+        if scales is not None:
+            raise NotImplementedError("SQ8 + l2 not wired (norms suffice)")
+        in_specs.append(pl.BlockSpec((1, v_block), im_rows))
+        operands.append(norms)
+        kernel = _scan_kernel_l2
+    elif scales is not None:
+        in_specs.append(pl.BlockSpec((1, v_block), im_rows))
+        operands.append(scales)
+        kernel = _scan_kernel_dot_q8
+    else:
+        kernel = _scan_kernel_dot
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, v_block), im_out),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((p, vpad), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(slot_cluster.astype(jnp.int32), slot_query.astype(jnp.int32), *operands)
+    return out

@@ -1,0 +1,87 @@
+"""Jit'd wrapper: index-level fused filtered search built on the Pallas scan.
+
+``search_fused`` mirrors :func:`repro.core.search.search_reference` exactly
+(same SearchResult contract) but never materializes the [Q, T, Vpad, D]
+gather: probes are flattened to slots and streamed by the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topk as topk_lib
+from repro.core.filters import FilterSpec
+from repro.core.ivf import IVFFlatIndex
+from repro.core.search import SearchResult, search_centroids
+from repro.kernels.filtered_scan.filtered_scan import filtered_scan
+
+Array = jax.Array
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "n_probes", "v_block", "interpret")
+)
+def search_fused(
+    index: IVFFlatIndex,
+    queries: Array,
+    fspec: FilterSpec,
+    *,
+    k: int,
+    n_probes: int,
+    v_block: int = 256,
+    interpret: bool = True,
+) -> SearchResult:
+    """Single-device fused search (paper §4.4 via the Pallas kernel).
+
+    interpret=True by default: this repo runs on CPU; on TPU pass False.
+    """
+    q = queries.shape[0]
+    probe_ids, _ = search_centroids(index, queries, n_probes)  # [Q, T]
+
+    slot_cluster = probe_ids.reshape(-1)  # [Q*T]
+    slot_query = jnp.repeat(
+        jnp.arange(q, dtype=jnp.int32), n_probes
+    )  # [Q*T]
+
+    scores = filtered_scan(
+        slot_cluster,
+        slot_query,
+        queries.astype(jnp.float32 if index.quantized
+                       else index.vectors.dtype),
+        fspec.lo,
+        fspec.hi,
+        index.vectors,
+        index.attrs,
+        index.ids,
+        index.norms,
+        index.scales,
+        metric=index.spec.metric,
+        v_block=v_block,
+        interpret=interpret,
+    )  # [Q*T, Vpad]
+
+    if index.spec.metric == "l2":
+        # add back the per-query -||q||^2 so scores match the oracle
+        q2 = jnp.sum(queries.astype(jnp.float32) ** 2, -1)  # [Q]
+        scores = jnp.where(
+            scores > topk_lib.NEG_INF / 2,
+            scores - jnp.take(q2, slot_query)[:, None],
+            scores,
+        )
+
+    out_ids = jnp.take(index.ids, slot_cluster, axis=0)  # [Q*T, Vpad]
+    vpad = scores.shape[-1]
+    flat_scores = scores.reshape(q, n_probes * vpad)
+    flat_ids = out_ids.reshape(q, n_probes * vpad)
+    vals, ids = topk_lib.masked_topk(flat_scores, None, k, ids=flat_ids)
+
+    passed = scores > topk_lib.NEG_INF / 2  # [Q*T, Vpad]
+    n_passed = jnp.sum(
+        passed.reshape(q, -1).astype(jnp.int32), axis=-1
+    )
+    live = (out_ids >= 0).reshape(q, -1)
+    n_scanned = jnp.sum(live.astype(jnp.int32), axis=-1)
+    return SearchResult(vals, ids, n_scanned, n_passed)

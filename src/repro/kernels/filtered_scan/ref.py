@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the fused filtered scan kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -3.0e38
+
+
+def filtered_scan_ref(
+    slot_cluster: jax.Array,  # [P] int32
+    slot_query: jax.Array,  # [P] int32
+    queries: jax.Array,  # [Q, D]
+    lo: jax.Array,  # [Q, F, M] int16
+    hi: jax.Array,  # [Q, F, M] int16
+    vectors: jax.Array,  # [K, Vpad, D]
+    attrs: jax.Array,  # [K, Vpad, M] int16
+    ids: jax.Array,  # [K, Vpad] int32
+    norms: Optional[jax.Array] = None,  # [K, Vpad] f32
+    scales: Optional[jax.Array] = None,  # [K, Vpad] f32 (SQ8)
+    *,
+    metric: str = "dot",
+) -> jax.Array:
+    """Returns masked scores [P, Vpad] f32 — the kernel's contract."""
+    v = jnp.take(vectors, slot_cluster, axis=0).astype(jnp.float32)  # [P,V,D]
+    a = jnp.take(attrs, slot_cluster, axis=0).astype(jnp.int32)  # [P,V,M]
+    iv = jnp.take(ids, slot_cluster, axis=0)  # [P,V]
+    q = jnp.take(queries, slot_query, axis=0).astype(jnp.float32)  # [P,D]
+    qlo = jnp.take(lo, slot_query, axis=0).astype(jnp.int32)  # [P,F,M]
+    qhi = jnp.take(hi, slot_query, axis=0).astype(jnp.int32)
+
+    dots = jnp.einsum("pvd,pd->pv", v, q)
+    if scales is not None:
+        dots = dots * jnp.take(scales, slot_cluster, axis=0)
+    if metric == "dot":
+        score = dots
+    else:
+        nn = jnp.take(norms, slot_cluster, axis=0)
+        score = 2.0 * dots - nn
+
+    inside = jnp.logical_and(
+        a[:, :, None, :] >= qlo[:, None, :, :],
+        a[:, :, None, :] <= qhi[:, None, :, :],
+    )  # [P, V, F, M]
+    fmask = jnp.any(jnp.all(inside, -1), -1)  # [P, V]
+    live = iv >= 0
+    return jnp.where(jnp.logical_and(fmask, live), score, NEG_INF)

@@ -1,0 +1,47 @@
+"""Production mesh factory (DESIGN §4).
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods × 256 chips as (pod=2, data=16, model=16) — the "pod"
+axis carries data parallelism across the slower inter-pod links (DCN);
+"model" carries TP/EP over fast intra-pod ICI.
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (the dry-run pins the fake device count before first use).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — the "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_"
+            "count=512 before any jax import"
+        )
+    import numpy as np
+
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel axes of a production mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def n_chips(mesh) -> int:
+    n = 1
+    for a in mesh.axis_names:
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,86 @@
+"""Serving launcher: builds (or loads) a hybrid index and serves batched
+filtered queries through the micro-batching server.
+
+    PYTHONPATH=src python -m repro.launch.serve --n 100000 --requests 128
+    PYTHONPATH=src python -m repro.launch.serve --load <index_dir>
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--n-attrs", type=int, default=6)
+    ap.add_argument("--clusters", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=128)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--probes", type=int, default=7)
+    ap.add_argument("--load", default=None, help="index dir to restore")
+    ap.add_argument("--save", default=None, help="index dir to persist")
+    args = ap.parse_args()
+
+    from repro.core import HybridSpec, build_ivf, storage
+    from repro.core.search import search_reference
+    from repro.core.serving import SearchServer
+    from repro.data import synthetic_attributes, synthetic_embeddings
+
+    if args.load:
+        index = storage.load_index(args.load)
+        core = np.asarray(index.vectors).reshape(-1, index.spec.dim)
+        print(f"restored index: K={index.n_clusters}, "
+              f"{int(index.n_live)} vectors")
+    else:
+        core = synthetic_embeddings(0, args.n, args.dim)
+        attrs = synthetic_attributes(0, args.n, args.n_attrs,
+                                     cardinalities=[8])
+        spec = HybridSpec(dim=args.dim, n_attrs=args.n_attrs,
+                          core_dtype=jnp.float32)
+        index, stats = build_ivf(
+            jax.random.key(0), spec, jnp.asarray(core), jnp.asarray(attrs),
+            n_clusters=args.clusters, kmeans_steps=40,
+        )
+        print(f"built index: K={index.n_clusters}, "
+              f"mean list {stats.mean_list_len:.0f}")
+        if args.save:
+            storage.save_index(index, args.save, n_shards=4)
+            print(f"persisted to {args.save}")
+
+    def search_fn(queries, fspec, shard_ok):
+        del shard_ok
+        res = search_reference(index, queries, fspec, k=args.k,
+                               n_probes=args.probes)
+        return res.scores, res.ids
+
+    server = SearchServer(
+        search_fn, batch_size=args.batch, dim=index.spec.dim,
+        n_attrs=index.spec.n_attrs, n_terms=1, n_shards=8,
+    )
+    server.start()
+    rng = np.random.default_rng(1)
+    t0 = time.time()
+    futs = [
+        server.submit(core[rng.integers(0, len(core))])
+        for _ in range(args.requests)
+    ]
+    resps = [f.get(timeout=120) for f in futs]
+    wall = time.time() - t0
+    server.stop()
+    lat = np.asarray([r.latency_s for r in resps]) * 1e3
+    print(f"{args.requests} requests in {wall:.2f}s "
+          f"({args.requests/wall:.0f} QPS), p50 {np.percentile(lat,50):.1f}ms "
+          f"p99 {np.percentile(lat,99):.1f}ms, "
+          f"batches {server.stats['batches']}")
+
+
+if __name__ == "__main__":
+    main()

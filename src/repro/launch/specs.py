@@ -1,0 +1,669 @@
+"""Cell registry: every assigned (architecture × input-shape) as a lowerable
+step with abstract (ShapeDtypeStruct) inputs and production shardings.
+
+40 assigned cells + the paper's own search step (`paper-ivf × search_1b`).
+Skips (documented, DESIGN.md §6): long_500k for pure full-attention archs.
+
+Each cell builds in one of two variants:
+  exec — scanned layers / streamed slots: memory_analysis is the
+         "fits-in-HBM" proof (this is the program you would run);
+  cost — unrolled scans / single-block attention / vmapped slots: every op
+         appears once in the HLO so cost_analysis FLOPs/bytes and the
+         collective-bytes text parse are exact (XLA counts while-loop bodies
+         once — measured 8× undercount on an 8-layer scan).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    bst as bst_cfg,
+    chatglm3_6b,
+    deepseek_moe_16b,
+    deepseek_v3_671b,
+    dimenet as dimenet_cfg,
+    din as din_cfg,
+    gemma3_12b,
+    gemma3_27b,
+    sasrec as sasrec_cfg,
+    wide_deep as wide_deep_cfg,
+)
+from repro.launch.mesh import dp_axes as mesh_dp_axes, n_chips
+
+LM_ARCHS = {
+    "deepseek-v3-671b": deepseek_v3_671b,
+    "deepseek-moe-16b": deepseek_moe_16b,
+    "gemma3-12b": gemma3_12b,
+    "gemma3-27b": gemma3_27b,
+    "chatglm3-6b": chatglm3_6b,
+}
+RECSYS_ARCHS = {
+    "din": din_cfg,
+    "sasrec": sasrec_cfg,
+    "bst": bst_cfg,
+    "wide-deep": wide_deep_cfg,
+}
+
+LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+GNN_SHAPES = ("full_graph_sm", "minibatch_lg", "ogb_products", "molecule")
+RECSYS_SHAPES = ("train_batch", "serve_p99", "serve_bulk", "retrieval_cand")
+
+ALL_ARCHS = (
+    list(LM_ARCHS) + ["dimenet"] + list(RECSYS_ARCHS) + ["paper-ivf"]
+)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str  # train | prefill | decode | serve | search
+    fn: Callable
+    args: tuple  # abstract ShapeDtypeStructs with shardings
+    meta: Dict[str, Any]
+    donate: Tuple[int, ...] = ()
+    skip_reason: Optional[str] = None
+
+
+def list_cells() -> list:
+    """All (arch, shape) pairs, with skip markers."""
+    out = []
+    for a in LM_ARCHS:
+        for s in LM_SHAPES:
+            skip = None
+            if s == "long_500k" and not LM_ARCHS[a].config().sub_quadratic:
+                skip = ("pure full attention on every layer (no windowed/"
+                        "linear component) — long_500k skipped per DESIGN.md §6")
+            out.append((a, s, skip))
+    # §Perf hillclimb variants (EXPERIMENTS.md) — collective-bound MoE trains
+    out.append(("deepseek-v3-671b", "train_4k_moescatter", None))
+    out.append(("deepseek-moe-16b", "train_4k_moescatter", None))
+    for s in GNN_SHAPES:
+        out.append(("dimenet", s, None))
+    out.append(("dimenet", "ogb_products_bf16", None))  # §Perf variant
+    for a in RECSYS_ARCHS:
+        for s in RECSYS_SHAPES:
+            out.append((a, s, None))
+    out.append(("paper-ivf", "search_1b", None))
+    # §Perf hillclimb variants of the paper cell (EXPERIMENTS.md)
+    out.append(("paper-ivf", "search_1b_sq8", None))
+    out.append(("paper-ivf", "search_1b_sq8_tight", None))
+    return out
+
+
+def _abs(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=NamedSharding(mesh, spec)
+    )
+
+
+def _abs_tree(shapes_tree, specs_tree, mesh):
+    return jax.tree.map(
+        lambda sh, spec: _abs(sh.shape, sh.dtype, mesh, spec),
+        shapes_tree, specs_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+# =============================================================== LM cells ===
+def _lm_override(cfg, layers: Optional[Tuple[int, ...]]):
+    """Builds a reduced-depth probe config (same width, fewer layers).
+
+    MoE archs: layers=(n_dense, n_moe); dense archs: layers=(n_layers,).
+    Probes are compiled fully unrolled, so their cost_analysis is exact;
+    reported cost is linear in the layer counts (loop body once + per-layer
+    optimizer/grad terms), so 2–3 probes solve for per-layer costs and the
+    full-depth totals follow analytically (see dryrun.synthesize_lm_cost).
+    """
+    if layers is None:
+        return cfg
+    if cfg.moe is not None:
+        nd, nm = layers
+        return dataclasses.replace(
+            cfg, n_layers=nd + nm,
+            moe=dataclasses.replace(cfg.moe, first_dense_layers=nd),
+        )
+    (nl,) = layers
+    return dataclasses.replace(cfg, n_layers=nl)
+
+
+def _lm_train_cell(arch: str, mesh: Mesh, variant: str,
+                   layers: Optional[Tuple[int, ...]] = None,
+                   moe_combine: str = "psum") -> Cell:
+    from repro.models.transformer import init_params, lm_loss, param_pspecs
+    from repro.train.optimizer import (
+        OptimizerConfig, adafactor_state_pspecs, adamw_state_pspecs,
+        clip_by_global_norm, make_optimizer,
+    )
+
+    cfg = LM_ARCHS[arch].config()
+    b, s = 256, 4096
+    if variant == "cost":
+        cfg = dataclasses.replace(cfg, scan_unroll=True, attn_block_k=s,
+                                  remat=False)
+    cfg = dataclasses.replace(_lm_override(cfg, layers),
+                              moe_combine=moe_combine)
+    dp = mesh_dp_axes(mesh)
+    # 671B needs factored optimizer state to fit (see train/optimizer.py)
+    opt_name = "adafactor" if cfg.n_params() > 1e11 else "adamw"
+    opt_cfg = OptimizerConfig(name=opt_name, weight_decay=0.0)
+    opt_init, opt_update = make_optimizer(opt_cfg)
+
+    def train_step(params, opt_state, tokens, labels):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, tokens, labels, mesh=mesh, dp_axes=dp),
+            has_aux=True,
+        )(params)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        new_params, new_state = opt_update(grads, opt_state, params,
+                                           jnp.float32(1e-4))
+        return new_params, new_state, loss, gnorm
+
+    params_shape = jax.eval_shape(lambda k: init_params(k, cfg),
+                                  jax.random.key(0))
+    pspecs = param_pspecs(cfg)
+    opt_shape = jax.eval_shape(opt_init, params_shape)
+    opt_pspecs = (
+        adafactor_state_pspecs(pspecs, params_shape, opt_cfg)
+        if opt_name == "adafactor" else adamw_state_pspecs(pspecs)
+    )
+    params_abs = _abs_tree(params_shape, pspecs, mesh)
+    opt_abs = _abs_tree(opt_shape, opt_pspecs, mesh)
+    tok = _abs((b, s), jnp.int32, mesh, P(dp, None))
+
+    tokens_total = b * s
+    n_layer_flops = 6 * cfg.n_active_params() * tokens_total
+    return Cell(
+        arch, "train_4k", "train", train_step,
+        (params_abs, opt_abs, tok, tok),
+        meta=dict(
+            model_flops=float(n_layer_flops),
+            tokens=tokens_total,
+            loop_trip_counts={"dense": cfg.n_dense_layers,
+                              "moe": cfg.n_moe_layers},
+            optimizer=opt_name,
+        ),
+        donate=(0, 1),
+    )
+
+
+def _lm_prefill_cell(arch: str, mesh: Mesh, variant: str,
+                     layers: Optional[Tuple[int, ...]] = None) -> Cell:
+    from repro.models.decoding import prefill
+    from repro.models.transformer import init_params, param_pspecs
+
+    cfg = LM_ARCHS[arch].config()
+    b, s = 32, 32768
+    if variant == "cost":
+        cfg = dataclasses.replace(cfg, scan_unroll=True, attn_block_k=4096,
+                                  remat=False)
+    cfg = _lm_override(cfg, layers)
+    dp = mesh_dp_axes(mesh)
+
+    def prefill_step(params, tokens):
+        logits, cache = prefill(params, cfg, tokens, s_max=s, mesh=mesh,
+                                dp_axes=dp)
+        return logits[:, -1, :], cache  # last-token logits + decode cache
+
+    params_shape = jax.eval_shape(lambda k: init_params(k, cfg),
+                                  jax.random.key(0))
+    params_abs = _abs_tree(params_shape, param_pspecs(cfg), mesh)
+    tok = _abs((b, s), jnp.int32, mesh, P(dp, None))
+    return Cell(
+        arch, "prefill_32k", "prefill", prefill_step, (params_abs, tok),
+        meta=dict(
+            model_flops=float(2 * cfg.n_active_params() * b * s),
+            tokens=b * s,
+            loop_trip_counts={"layers": cfg.n_layers},
+        ),
+    )
+
+
+def _lm_decode_cell(arch: str, shape: str, mesh: Mesh, variant: str,
+                    layers: Optional[Tuple[int, ...]] = None) -> Cell:
+    from repro.models.decoding import cache_spec, decode_step
+    from repro.models.transformer import init_params, param_pspecs
+
+    cfg = LM_ARCHS[arch].config()
+    cfg = _lm_override(cfg, layers)
+    if shape == "decode_32k":
+        b, s_max = 128, 32768
+    else:  # long_500k
+        b, s_max = 1, 524288
+    dp = mesh_dp_axes(mesh)
+    # serving plan: no FSDP regather per token; 256-expert archs widen EP
+    ep = (("model", "data")
+          if (cfg.moe and cfg.moe.n_routed % (16 * 16) == 0)
+          else ("model",))
+    cfg = dataclasses.replace(cfg, fsdp_axis=None, moe_ep_axes=ep,
+                              remat=False)
+    if variant == "cost":
+        cfg = dataclasses.replace(cfg, scan_unroll=True)
+
+    pspecs = param_pspecs(cfg)
+    params_shape = jax.eval_shape(lambda k: init_params(k, cfg),
+                                  jax.random.key(0))
+    if cfg.sub_quadratic:  # decode layout re-lays the blocks
+        from repro.models.decoding import decode_layout
+
+        params_shape = jax.eval_shape(
+            lambda p: decode_layout(p, cfg), params_shape
+        )
+        blk = pspecs.pop("blocks")
+        pspecs["blocks_local"] = blk
+        pspecs["blocks_global"] = blk
+        if "blocks_tail" in params_shape:
+            pspecs["blocks_tail"] = blk
+    params_abs = _abs_tree(params_shape, pspecs, mesh)
+
+    # cache shardings: batch over dp when divisible, KV length over the rest
+    cspec = cache_spec(cfg, b, s_max)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    b_axes = dp if b % n_dp == 0 else None
+    s_axes = (
+        "model" if b_axes is not None
+        else tuple(mesh.axis_names)  # B=1: spread KV length over everything
+    )
+
+    def kv_spec(leaf):
+        # [n_stack, B, S_cache, ...] — shard S_cache only if divisible
+        s_cache = leaf.shape[2]
+        n_s = 1
+        for a in ((s_axes,) if isinstance(s_axes, str) else s_axes):
+            n_s *= mesh.shape[a]
+        s_ax = s_axes if s_cache % n_s == 0 else None
+        rest = (None,) * (len(leaf.shape) - 3)
+        return P(None, b_axes, s_ax, *rest)
+
+    cache_pspecs = jax.tree.map(
+        kv_spec, cspec, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)
+    )
+    cache_abs = _abs_tree(cspec, cache_pspecs, mesh)
+    tok = _abs((b,), jnp.int32, mesh, P(b_axes))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def step(params, cache, tokens, pos):
+        return decode_step(params, cfg, cache, tokens, pos, mesh=mesh,
+                           dp_axes=dp if b_axes is not None else ())
+
+    n_rounds = cfg.n_layers // cfg.global_every if cfg.sub_quadratic else 0
+    return Cell(
+        arch, shape, "decode", step, (params_abs, cache_abs, tok, pos),
+        meta=dict(
+            model_flops=float(2 * cfg.n_active_params() * b),
+            tokens=b,
+            loop_trip_counts=(
+                {"rounds": n_rounds} if cfg.sub_quadratic
+                else {"dense": cfg.n_dense_layers, "moe": cfg.n_moe_layers}
+            ),
+            ep_axes=ep,
+        ),
+        donate=(1,),
+    )
+
+
+# ============================================================== GNN cells ===
+GNN_SHAPE_DEFS = {
+    # n_nodes, n_edges, d_feat, trip_per_edge, readout, n_graphs, batch note
+    "full_graph_sm": dict(n=2816, e=11264, d_feat=1433, tpe=8,
+                          readout="node", n_graphs=1),
+    "minibatch_lg": dict(n=172032, e=172032, d_feat=602, tpe=12,
+                         readout="node", n_graphs=1),
+    "ogb_products": dict(n=2449408, e=61866496, d_feat=100, tpe=8,
+                         readout="node", n_graphs=1),
+    "molecule": dict(n=3840, e=8192, d_feat=16, tpe=8,
+                     readout="graph", n_graphs=128),
+    # §Perf iteration: bf16 messages halve the cross-shard gather traffic
+    # of the collective-bound ogb_products cell (EXPERIMENTS.md)
+    "ogb_products_bf16": dict(n=2449408, e=61866496, d_feat=100, tpe=8,
+                              readout="node", n_graphs=1,
+                              dtype=jnp.bfloat16),
+}
+
+
+def _gnn_cell(shape: str, mesh: Mesh, variant: str) -> Cell:
+    from repro.models.gnn.dimenet import (
+        DimeNetConfig, GraphBatch, init_params, loss_fn,
+    )
+    from repro.train.optimizer import OptimizerConfig, make_optimizer
+
+    sd = GNN_SHAPE_DEFS[shape]
+    cfg = dimenet_cfg.config(
+        d_feat=sd["d_feat"],
+        d_out=1 if sd["readout"] == "graph" else 47,
+        readout=sd["readout"],
+    )
+    if variant == "cost":
+        cfg = dataclasses.replace(cfg, scan_unroll=True)
+    if sd.get("dtype") is not None:  # §Perf: bf16 message variant
+        cfg = dataclasses.replace(cfg, dtype=sd["dtype"])
+    n, e, t = sd["n"], sd["e"], sd["e"] * sd["tpe"]
+    all_axes = tuple(mesh.axis_names)
+    shard1 = P(all_axes)  # 1-D arrays over every chip
+    rep = P()
+
+    opt_cfg = OptimizerConfig(name="adamw", weight_decay=0.0)
+    opt_init, opt_update = make_optimizer(opt_cfg)
+
+    def train_step(params, opt_state, g, labels):
+        (loss, m), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, g, labels), has_aux=True
+        )(params)
+        new_params, new_state = opt_update(grads, opt_state, params,
+                                           jnp.float32(1e-3))
+        return new_params, new_state, loss
+
+    params_shape = jax.eval_shape(lambda k: init_params(k, cfg),
+                                  jax.random.key(0))
+    rep_specs = jax.tree.map(lambda _: rep, params_shape)
+    params_abs = _abs_tree(params_shape, rep_specs, mesh)
+    opt_shape = jax.eval_shape(opt_init, params_shape)
+    opt_abs = _abs_tree(opt_shape, jax.tree.map(lambda _: rep, opt_shape),
+                        mesh)
+    g_abs = GraphBatch(
+        node_feat=_abs((n, sd["d_feat"]), jnp.float32, mesh, rep),
+        positions=_abs((n, 3), jnp.float32, mesh, rep),
+        edge_src=_abs((e,), jnp.int32, mesh, shard1),
+        edge_dst=_abs((e,), jnp.int32, mesh, shard1),
+        edge_mask=_abs((e,), jnp.bool_, mesh, shard1),
+        trip_in=_abs((t,), jnp.int32, mesh, shard1),
+        trip_out=_abs((t,), jnp.int32, mesh, shard1),
+        trip_mask=_abs((t,), jnp.bool_, mesh, shard1),
+        graph_id=_abs((n,), jnp.int32, mesh, rep),
+        n_graphs=sd["n_graphs"],
+    )
+    labels = _abs(
+        (sd["n_graphs"],) if sd["readout"] == "graph" else (n,),
+        jnp.float32 if sd["readout"] == "graph" else jnp.int32,
+        mesh, rep,
+    )
+    d = cfg.d_hidden
+    flops = 3 * 2 * (  # fwd(+bwd×2) matmul-dominant terms
+        e * 3 * d * d  # embedding block
+        + cfg.n_blocks * (
+            2 * e * d * d  # msg/src projections
+            + t * cfg.n_bilinear * d * d  # bilinear triplet interaction
+            + 2 * e * d * d  # residual MLP
+            + n * d * d  # output block
+        )
+    )
+    return Cell(
+        "dimenet", shape, "train", train_step,
+        (params_abs, opt_abs, g_abs, labels),
+        meta=dict(model_flops=float(flops), tokens=n,
+                  loop_trip_counts={"blocks": cfg.n_blocks}),
+        donate=(0, 1),
+    )
+
+
+# =========================================================== recsys cells ===
+RECSYS_SHAPE_DEFS = {
+    "train_batch": dict(batch=65536, kind="train"),
+    "serve_p99": dict(batch=512, kind="serve"),
+    "serve_bulk": dict(batch=262144, kind="serve"),
+    "retrieval_cand": dict(batch=1, n_cand=1_048_576, kind="retrieval"),
+}
+
+
+def _recsys_cell(arch: str, shape: str, mesh: Mesh, variant: str) -> Cell:
+    from repro.models.recsys.models import (
+        RecsysBatch, forward, init_params, loss_fn, retrieval_scores,
+    )
+    from repro.train.optimizer import OptimizerConfig, make_optimizer
+
+    cfg = RECSYS_ARCHS[arch].config()
+    sd = RECSYS_SHAPE_DEFS[shape]
+    b = sd["batch"]
+    dp = mesh_dp_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    b_axes = dp if b % n_dp == 0 else None
+    all_axes = tuple(mesh.axis_names)
+
+    params_shape = jax.eval_shape(lambda k: init_params(k, cfg),
+                                  jax.random.key(0))
+
+    def pspec(path_key, leaf):
+        if leaf.ndim == 2 and leaf.shape[0] >= 100_000:
+            return P(all_axes, None)  # huge tables: row-sharded everywhere
+        return P()
+
+    pspecs = {}
+    for key, leaf in params_shape.items():
+        pspecs[key] = (
+            jax.tree.map(lambda l: pspec(key, l), leaf,
+                         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            if not isinstance(leaf, jax.ShapeDtypeStruct)
+            else pspec(key, leaf)
+        )
+    params_abs = _abs_tree(params_shape, pspecs, mesh)
+
+    L = max(cfg.seq_len, 1)
+    batch_abs = RecsysBatch(
+        dense=_abs((b, cfg.n_dense), jnp.float32, mesh, P(b_axes, None)),
+        sparse=_abs((b, max(cfg.n_sparse, 1)), jnp.int32, mesh,
+                    P(b_axes, None)),
+        hist=_abs((b, L), jnp.int32, mesh, P(b_axes, None)),
+        target=_abs((b,), jnp.int32, mesh, P(b_axes)),
+        label=_abs((b,), jnp.float32, mesh, P(b_axes)),
+    )
+
+    mlp_flops = 0
+    prev = cfg.embed_dim * 4 + cfg.n_dense
+    for hdim in cfg.mlp_dims:
+        mlp_flops += 2 * prev * hdim
+        prev = hdim
+    attn_flops = (
+        2 * cfg.seq_len * cfg.seq_len * cfg.embed_dim * max(cfg.n_blocks, 1)
+        if cfg.arch in ("sasrec", "bst") else
+        2 * cfg.seq_len * 4 * cfg.embed_dim * sum(cfg.attn_mlp_dims or (1,))
+    )
+    per_ex = mlp_flops + attn_flops
+
+    if sd["kind"] == "train":
+        opt_cfg = OptimizerConfig(name="adamw", weight_decay=0.0)
+        opt_init, opt_update = make_optimizer(opt_cfg)
+
+        def step(params, opt_state, batch):
+            (loss, m), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch), has_aux=True
+            )(params)
+            new_params, new_state = opt_update(grads, opt_state, params,
+                                               jnp.float32(1e-3))
+            return new_params, new_state, loss
+
+        opt_shape = jax.eval_shape(opt_init, params_shape)
+        opt_abs = _abs_tree(
+            opt_shape,
+            jax.tree.map(
+                lambda l: (P(all_axes, None)
+                           if l.ndim == 2 and l.shape[0] >= 100_000 else P()),
+                opt_shape,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+            ),
+            mesh,
+        )
+        args = (params_abs, opt_abs, batch_abs)
+        flops = 3 * b * per_ex
+        donate = (0, 1)
+    elif sd["kind"] == "serve":
+        def step(params, batch):
+            return forward(params, cfg, batch)
+
+        args = (params_abs, batch_abs)
+        flops = b * per_ex
+        donate = ()
+    else:  # retrieval
+        n_cand = sd["n_cand"]
+        cands = _abs((n_cand, cfg.embed_dim), jnp.float32, mesh,
+                     P(all_axes, None))
+
+        def step(params, batch, candidates):
+            return retrieval_scores(params, cfg, batch, candidates, k=100)
+
+        args = (params_abs, batch_abs, cands)
+        flops = b * (per_ex + 2 * n_cand * cfg.embed_dim)
+        donate = ()
+
+    return Cell(
+        arch, shape, sd["kind"], step, args,
+        meta=dict(model_flops=float(flops), tokens=b, loop_trip_counts={}),
+        donate=donate,
+    )
+
+
+# =========================================================== paper-ivf =====
+def _ivf_cell(mesh: Mesh, variant: str, *, quantized: bool = False,
+              p_cap_slack: float = 2.0, shape_name: str = "search_1b"
+              ) -> Cell:
+    """The paper's §4.4 search over the 1B-vector index (Table 1 scale).
+
+    ``quantized``/``p_cap_slack`` are the §Perf hillclimb levers: SQ8 lists
+    halve the dominant HBM stream; tighter dispatch slack cuts the padded
+    probe slots each chip scans.
+    """
+    from repro.core.distributed import (
+        ShardedSearchConfig, make_sharded_search,
+    )
+    from repro.core.hybrid import HybridSpec
+
+    q, k_clusters, vpad, d, m, f = 1024, 32768, 36864, 768, 10, 2
+    chips = n_chips(mesh)
+    cfg = ShardedSearchConfig(
+        k=100, n_probes=7, v_block=256, p_cap_slack=p_cap_slack,
+        backend="xla_vmap" if variant == "cost" else "xla_map",
+        quantized=quantized,
+    )
+    search_fn, shardings, info = make_sharded_search(
+        mesh, "dot", q_total=q, n_clusters=k_clusters, cfg=cfg,
+    )
+    all_axes = tuple(mesh.axis_names)
+    sh = P(all_axes)
+
+    def step(centroids, vectors, attrs, ids, counts, scales, queries, lo,
+             hi, shard_ok):
+        from repro.core.ivf import IVFFlatIndex
+        from repro.core.filters import FilterSpec
+
+        spec = HybridSpec(dim=d, n_attrs=m)
+        index = IVFFlatIndex(
+            spec=spec, centroids=centroids, vectors=vectors, attrs=attrs,
+            ids=ids, counts=counts, norms=None,
+            scales=scales if quantized else None,
+        )
+        res = search_fn(index, queries, FilterSpec(lo=lo, hi=hi), shard_ok)
+        return res.scores, res.ids, res.n_scanned
+
+    vec_dtype = jnp.int8 if quantized else jnp.bfloat16
+    args = (
+        _abs((k_clusters, d), jnp.float32, mesh, P()),  # centroids
+        _abs((k_clusters, vpad, d), vec_dtype, mesh, P(all_axes)),
+        _abs((k_clusters, vpad, m), jnp.int16, mesh, P(all_axes)),
+        _abs((k_clusters, vpad), jnp.int32, mesh, P(all_axes)),
+        _abs((k_clusters,), jnp.int32, mesh, P(all_axes)),
+        _abs((k_clusters, vpad) if quantized else (k_clusters, 1),
+             jnp.float32, mesh, P(all_axes)),
+        _abs((q, d), jnp.float32, mesh, P()),  # queries (replicated)
+        _abs((q, f, m), jnp.int16, mesh, P()),
+        _abs((q, f, m), jnp.int16, mesh, P()),
+        _abs((info["n_shards"],), jnp.bool_, mesh, P()),
+    )
+    v_mean = 31250  # paper Table 1
+    flops = float(q * 7 * v_mean * d * 2 + q * k_clusters * d * 2)
+    return Cell(
+        "paper-ivf", shape_name, "search", step, args,
+        meta=dict(
+            model_flops=flops, tokens=q,
+            loop_trip_counts={"slots": info["p_cap"]},
+            p_cap=info["p_cap"], k_local=info["k_local"],
+            n_vectors=int(1e9), vpad=vpad, quantized=quantized,
+            p_cap_slack=p_cap_slack,
+        ),
+    )
+
+
+# ============================================================== dispatch ===
+def build_cell(arch: str, shape: str, mesh: Mesh, variant: str = "exec",
+               layers: Optional[Tuple[int, ...]] = None) -> Cell:
+    if arch in LM_ARCHS:
+        if shape == "train_4k":
+            return _lm_train_cell(arch, mesh, variant, layers)
+        if shape == "train_4k_moescatter":  # §Perf: rs-combine MoE output
+            return _lm_train_cell(arch, mesh, variant, layers,
+                                  moe_combine="scatter")
+        if shape == "prefill_32k":
+            return _lm_prefill_cell(arch, mesh, variant, layers)
+        if shape in ("decode_32k", "long_500k"):
+            return _lm_decode_cell(arch, shape, mesh, variant, layers)
+        raise ValueError(shape)
+    if arch == "dimenet":
+        return _gnn_cell(shape, mesh, variant)
+    if arch in RECSYS_ARCHS:
+        return _recsys_cell(arch, shape, mesh, variant)
+    if arch == "paper-ivf":
+        if shape == "search_1b":
+            return _ivf_cell(mesh, variant)
+        if shape == "search_1b_sq8":  # §Perf iteration 1: SQ8 lists
+            return _ivf_cell(mesh, variant, quantized=True,
+                             shape_name=shape)
+        if shape == "search_1b_sq8_tight":  # §Perf iter 2: + slack 1.25
+            return _ivf_cell(mesh, variant, quantized=True,
+                             p_cap_slack=1.25, shape_name=shape)
+        raise ValueError(shape)
+    raise ValueError(arch)
+
+
+def lm_probe_plan(arch: str, shape: str):
+    """Probe layer-counts and the linear synthesis for full-depth cost.
+
+    Returns (probes, solve) where probes is a list of layer tuples and
+    solve(costs: list[float-like dict-free vectors]) maps probe costs to the
+    full-depth value. Costs combine linearly because XLA counts while bodies
+    once and per-layer param ops (optimizer, grads) are elementwise in L.
+    """
+    cfg = LM_ARCHS[arch].config()
+    is_decode = shape in ("decode_32k", "long_500k")
+    if cfg.moe is not None:
+        nd, nm = cfg.n_dense_layers, cfg.n_moe_layers
+        probes = [(1, 1), (1, 3), (2, 1)]
+
+        def solve(f11, f13, f21):
+            bm = (f13 - f11) / 2.0
+            bd = f21 - f11
+            const = f11 - bd - bm
+            return const + bd * nd + bm * nm
+
+        return probes, solve
+    if cfg.sub_quadratic and is_decode:
+        g = cfg.global_every
+        rounds = cfg.n_layers // g
+        tail = cfg.n_layers - rounds * g
+        probes = [(g,), (2 * g,), (g + 2,)]
+
+        def solve(f6, f12, f8):
+            br = f12 - f6
+            const = f6 - br
+            bt = (f8 - f6) / 2.0
+            return const + br * rounds + bt * tail
+
+        return probes, solve
+    nl = cfg.n_layers
+    probes = [(2,), (4,)]
+
+    def solve(f2, f4):
+        bl = (f4 - f2) / 2.0
+        const = f2 - 2 * bl
+        return const + bl * nl
+
+    return probes, solve

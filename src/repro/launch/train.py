@@ -1,0 +1,151 @@
+"""Training launcher: ``--arch <id>`` selects any assigned architecture at
+its smoke scale (CPU container) or full scale (TPU pod, with the production
+mesh and the dry-run's shardings).
+
+    PYTHONPATH=src python -m repro.launch.train --arch chatglm3-6b --steps 20
+    PYTHONPATH=src python -m repro.launch.train --arch dimenet --steps 10
+    PYTHONPATH=src python -m repro.launch.train --arch din --steps 20
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def lm_runner(arch: str, args):
+    from repro.launch.specs import LM_ARCHS
+    from repro.models.transformer import init_params, lm_loss
+    from repro.data import lm_batch
+    from repro.train.train_loop import Trainer, TrainLoopConfig
+    from repro.data import ShardedFeeder
+
+    cfg = LM_ARCHS[arch].smoke_config() if args.smoke else \
+        LM_ARCHS[arch].config()
+    params = init_params(jax.random.key(args.seed), cfg)
+
+    def loss_fn(p, batch):
+        return lm_loss(p, cfg, batch["tokens"], batch["labels"])
+
+    tl = TrainLoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir, lr=args.lr,
+                         warmup=max(2, args.steps // 10),
+                         log_every=max(1, args.steps // 10))
+    trainer = Trainer(loss_fn, params, tl)
+    feeder = ShardedFeeder(
+        lambda s, i: lm_batch(s, i, args.batch, args.seq, cfg.vocab_size),
+        seed=args.seed,
+    )
+    hist = trainer.run(feeder)
+    feeder.close()
+    return hist
+
+
+def gnn_runner(arch: str, args):
+    from repro.configs import dimenet as dimenet_cfg
+    from repro.models.gnn import GraphBatch, init_params, loss_fn
+    from repro.models.gnn.sampler import (
+        make_graph_batch_arrays, random_graph, sample_subgraph,
+    )
+    from repro.train.train_loop import Trainer, TrainLoopConfig
+
+    cfg = dimenet_cfg.smoke_config()
+    rng = np.random.default_rng(args.seed)
+    g = random_graph(rng, 2000, 8, cfg.d_feat, cfg.d_out)
+    params = init_params(jax.random.key(args.seed), cfg)
+    n_pad, e_pad, t_pad = 2048, 4096, 16384
+
+    def gen(seed, step):
+        r = np.random.default_rng((seed, step))
+        seeds = r.choice(g.n_nodes, 64, replace=False).astype(np.int32)
+        nodes, esrc, edst = sample_subgraph(r, g, seeds, [6, 4])
+        return make_graph_batch_arrays(
+            g, nodes, esrc, edst, n_pad=n_pad, e_pad=e_pad, t_pad=t_pad,
+        )
+
+    def loss_wrap(p, arrs):
+        batch = GraphBatch(
+            node_feat=arrs["node_feat"], positions=arrs["positions"],
+            edge_src=arrs["edge_src"], edge_dst=arrs["edge_dst"],
+            edge_mask=arrs["edge_mask"], trip_in=arrs["trip_in"],
+            trip_out=arrs["trip_out"], trip_mask=arrs["trip_mask"],
+            graph_id=arrs["graph_id"], n_graphs=1,
+        )
+        return loss_fn(p, cfg, batch, arrs["labels"])
+
+    from repro.data import ShardedFeeder
+
+    tl = TrainLoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir, lr=args.lr,
+                         log_every=max(1, args.steps // 10))
+    trainer = Trainer(loss_wrap, params, tl)
+    feeder = ShardedFeeder(gen, seed=args.seed)
+    hist = trainer.run(feeder)
+    feeder.close()
+    return hist
+
+
+def recsys_runner(arch: str, args):
+    from repro.launch.specs import RECSYS_ARCHS
+    from repro.models.recsys import RecsysBatch, init_params, loss_fn
+    from repro.data import ShardedFeeder, recsys_batch
+    from repro.train.train_loop import Trainer, TrainLoopConfig
+
+    cfg = RECSYS_ARCHS[arch].smoke_config() if args.smoke else \
+        RECSYS_ARCHS[arch].config()
+    params = init_params(jax.random.key(args.seed), cfg)
+
+    def gen(seed, step):
+        return recsys_batch(seed, step, args.batch, cfg.seq_len,
+                            cfg.n_dense, cfg.n_sparse, cfg.vocab_items,
+                            cfg.vocab_sparse)
+
+    def loss_wrap(p, b):
+        batch = RecsysBatch(
+            dense=b["dense"], sparse=b["sparse"], hist=b["hist"],
+            target=b["target"], label=b["label"],
+        )
+        return loss_fn(p, cfg, batch)
+
+    tl = TrainLoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir, lr=args.lr,
+                         log_every=max(1, args.steps // 10))
+    trainer = Trainer(loss_wrap, params, tl)
+    feeder = ShardedFeeder(gen, seed=args.seed)
+    hist = trainer.run(feeder)
+    feeder.close()
+    return hist
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=1000)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    args = ap.parse_args()
+
+    from repro.launch.specs import LM_ARCHS, RECSYS_ARCHS
+
+    if args.arch in LM_ARCHS:
+        hist = lm_runner(args.arch, args)
+    elif args.arch == "dimenet":
+        hist = gnn_runner(args.arch, args)
+    elif args.arch in RECSYS_ARCHS:
+        hist = recsys_runner(args.arch, args)
+    else:
+        raise SystemExit(f"unknown arch {args.arch}")
+    print(f"final loss {hist['loss'][-1]:.4f} after {len(hist['loss'])} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo: LM family, GNN, recsys (see configs/)."""

@@ -1,0 +1,428 @@
+"""Serving paths: prefill, KV caches, single-token decode.
+
+Cache layouts (chosen for pod-scale decode, DESIGN §4):
+
+  * uniform mode (no sliding windows — deepseek/chatglm): caches stacked per
+    layer ``[L, B, S, ...]``; decode scans layers with the cache threaded as
+    scan xs→ys.  The KV-length axis S is sharded over the ``model`` mesh axis
+    (sequence-parallel decode) — plain einsum+softmax lets XLA SPMD turn the
+    S-reductions into all-reduces.
+  * gemma mode (window + global_every): layers are processed in *rounds* of
+    (G−1 local + 1 global).  Local layers keep **ring buffers of length W**
+    (window) — for long_500k this is the sub-quadratic memory story: 52 of 62
+    layers hold 1024 positions instead of 524 288.
+
+  * MLA decode uses the absorbed formulation: scores are taken directly
+    against the latent cache (``q̃ = q_nope·W_uk``), and the attention output
+    is computed in latent space then expanded through ``W_uv`` — the cache
+    stays [S, kv_lora + rope] wide (576 for deepseek-v3) instead of
+    [S, H·(dh+dv)] (32 768 wide): a 57× cache-bandwidth saving at decode.
+
+The decode step assumes a shared scalar position (synchronous batch decode,
+the standard throughput-benchmark setting); continuous batching would carry
+per-sequence positions and a paged cache — out of scope, noted in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import TransformerConfig
+from repro.models.layers import apply_rope, rms_norm, rope_tables, gated_mlp
+from repro.models.transformer import _moe_ffn, logits_from_hidden
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------ utilities ---
+def _rope_at(pos: Array, dim: int, theta: float) -> Tuple[Array, Array]:
+    """(sin, cos) [1, dim/2] at a scalar position (broadcasts over batch)."""
+    return rope_tables(pos[None], dim, theta)
+
+
+def _ring_positions(pos: Array, w: int) -> Tuple[Array, Array]:
+    """True positions stored in each ring slot + validity, at write-time pos."""
+    slots = jnp.arange(w)
+    delta = jnp.mod(pos - slots, w)
+    k_pos = pos - delta
+    return k_pos, k_pos >= 0
+
+
+def _attend_cache(q, k_cache, v_cache, k_pos, valid, scale):
+    """q [B,1,H,dh] vs cache [B,S,Hkv,dh(v)] with explicit key positions."""
+    b, _, h, dh = q.shape
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32) * scale
+    logits = jnp.einsum("bkgd,bjkd->bkgj", qg, k_cache.astype(jnp.float32))
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgj,bjkd->bkgd", p / jnp.maximum(l, 1e-30),
+                     v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, -1)
+
+
+# ----------------------------------------------------- per-layer decodes ---
+def _gqa_decode(x, p, cfg: TransformerConfig, kc, vc, pos, theta,
+                ring_w: int = 0):
+    """x [B,1,D]; kc/vc [B,S,Hkv,dh]. Returns (out, kc', vc')."""
+    b = x.shape[0]
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, 1, h, dh)
+    k = k.reshape(b, 1, hkv, dh)
+    v = v.reshape(b, 1, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    rd = int(dh * cfg.rotary_pct)
+    sin, cos = _rope_at(pos, rd, theta)
+    q = apply_rope(q, sin, cos, rd)
+    k = apply_rope(k, sin, cos, rd)
+
+    if ring_w:
+        slot = jnp.mod(pos, ring_w)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, slot, 0, 0))
+        k_pos, valid = _ring_positions(pos, ring_w)
+    else:
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, pos, 0, 0))
+        k_pos = jnp.arange(kc.shape[1])
+        valid = k_pos <= pos
+    out = _attend_cache(q, kc, vc, k_pos, valid, dh ** -0.5)
+    out = out.reshape(b, 1, h * dh).astype(x.dtype) @ p["wo"]
+    return out, kc, vc
+
+
+def _mla_decode(x, p, cfg: TransformerConfig, ckv_c, kr_c, pos, theta):
+    """Absorbed MLA decode. ckv_c [B,S,kvr], kr_c [B,S,rope]."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+
+    cq = rms_norm(x @ p["wq_a"], p["q_ln"], cfg.norm_eps)
+    q = (cq @ p["wq_b"]).reshape(b, 1, h, qk)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    sin, cos = _rope_at(pos, m.qk_rope_dim, theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+
+    ckv_full = x @ p["wkv_a"]  # [B,1,kvr+rope]
+    c_kv = rms_norm(ckv_full[..., : m.kv_lora_rank], p["kv_ln"], cfg.norm_eps)
+    k_rope = apply_rope(
+        ckv_full[..., m.kv_lora_rank :][:, :, None, :], sin, cos
+    )[:, :, 0, :]
+    ckv_c = jax.lax.dynamic_update_slice(
+        ckv_c, c_kv.astype(ckv_c.dtype), (0, pos, 0)
+    )
+    kr_c = jax.lax.dynamic_update_slice(
+        kr_c, k_rope.astype(kr_c.dtype), (0, pos, 0)
+    )
+
+    # absorbed scores: q̃_h = W_uk,hᵀ q_nope  →  [B,H,kvr]
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       p["wk_b"].astype(jnp.float32))
+    logits = (
+        jnp.einsum("bhr,bsr->bhs", q_abs, ckv_c.astype(jnp.float32))
+        + jnp.einsum("bhe,bse->bhs", q_rope[:, 0].astype(jnp.float32),
+                     kr_c.astype(jnp.float32))
+    ) * (qk ** -0.5)
+    valid = jnp.arange(ckv_c.shape[1]) <= pos
+    logits = jnp.where(valid[None, None, :], logits, -1e30)
+    mx = jnp.max(logits, axis=-1, keepdims=True)
+    pr = jnp.exp(logits - mx)
+    pr = pr / jnp.maximum(jnp.sum(pr, -1, keepdims=True), 1e-30)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pr, ckv_c.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhd->bhd", o_lat, p["wv_b"].astype(jnp.float32))
+    out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype) @ p["wo"]
+    return out, ckv_c, kr_c
+
+
+def _block_decode(h, blk, cfg: TransformerConfig, cache, pos, theta,
+                  is_moe, ring_w, mesh, dp_axes):
+    attn_in = rms_norm(h, blk["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        attn_out, c0, c1 = _mla_decode(attn_in, blk["attn"], cfg, cache[0],
+                                       cache[1], pos, theta)
+    else:
+        attn_out, c0, c1 = _gqa_decode(attn_in, blk["attn"], cfg, cache[0],
+                                       cache[1], pos, theta, ring_w)
+    if cfg.sandwich_norm:
+        attn_out = rms_norm(attn_out, blk["ln1_post"], cfg.norm_eps)
+    h = h + attn_out
+    mlp_in = rms_norm(h, blk["ln2"], cfg.norm_eps)
+    if is_moe:
+        mlp_out, _, _ = _moe_ffn(mlp_in, blk["moe"], cfg, mesh, dp_axes)
+    else:
+        mlp_out = gated_mlp(mlp_in, blk["mlp"]["wg"], blk["mlp"]["wu"],
+                            blk["mlp"]["wd"], cfg.act)
+    if cfg.sandwich_norm:
+        mlp_out = rms_norm(mlp_out, blk["ln2_post"], cfg.norm_eps)
+    return h + mlp_out, (c0, c1)
+
+
+# -------------------------------------------------------- cache factory ---
+def cache_spec(cfg: TransformerConfig, batch: int, s_max: int
+               ) -> Dict[str, Any]:
+    """Shapes/dtypes of the decode cache (ShapeDtypeStructs for the dry-run,
+    zeros for runtime via init_cache)."""
+    dt = cfg.dtype
+    m = cfg.mla
+
+    def kv_shapes(n, s):
+        if m is not None:
+            return (
+                jax.ShapeDtypeStruct((n, batch, s, m.kv_lora_rank), dt),
+                jax.ShapeDtypeStruct((n, batch, s, m.qk_rope_dim), dt),
+            )
+        return (
+            jax.ShapeDtypeStruct((n, batch, s, cfg.n_kv_heads, cfg.d_head), dt),
+            jax.ShapeDtypeStruct((n, batch, s, cfg.n_kv_heads, cfg.d_head), dt),
+        )
+
+    if not cfg.sub_quadratic:
+        spec: Dict[str, Any] = {}
+        if cfg.n_dense_layers:
+            spec["dense"] = kv_shapes(cfg.n_dense_layers, s_max)
+        if cfg.n_moe_layers:
+            spec["moe"] = kv_shapes(cfg.n_moe_layers, s_max)
+        return spec
+
+    g = cfg.global_every
+    n_rounds = cfg.n_layers // g
+    n_tail = cfg.n_layers - n_rounds * g  # trailing local layers
+    w = min(cfg.window, s_max)
+    spec = {
+        "local": kv_shapes(n_rounds * (g - 1), w),
+        "global": kv_shapes(n_rounds, s_max),
+    }
+    if n_tail:
+        spec["tail"] = kv_shapes(n_tail, w)
+    return spec
+
+
+def init_cache(cfg: TransformerConfig, batch: int, s_max: int
+               ) -> Dict[str, Any]:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        cache_spec(cfg, batch, s_max),
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def decode_layout(params: Dict[str, Any], cfg: TransformerConfig
+                  ) -> Dict[str, Any]:
+    """Re-lays stacked block params for decode.
+
+    Uniform archs: identity.  Gemma mode: blocks [L, ...] →
+    {"local": [R·(G−1), ...], "global": [R, ...], "tail": [L_rem, ...]}
+    in round-execution order.  A one-time host-side copy at server start —
+    never part of the lowered per-token step.
+    """
+    if not cfg.sub_quadratic:
+        return params
+    g = cfg.global_every
+    n_rounds = cfg.n_layers // g
+    local_idx = np.asarray(
+        [r * g + j for r in range(n_rounds) for j in range(g - 1)]
+    )
+    global_idx = np.asarray([r * g + (g - 1) for r in range(n_rounds)])
+    tail_idx = np.arange(n_rounds * g, cfg.n_layers)
+    blocks = params["blocks"]
+    take = lambda idx: jax.tree.map(lambda x: jnp.take(x, idx, axis=0), blocks)
+    out = dict(params)
+    out["blocks_local"] = take(local_idx)
+    out["blocks_global"] = take(global_idx)
+    if len(tail_idx):
+        out["blocks_tail"] = take(tail_idx)
+    del out["blocks"]
+    return out
+
+
+# ------------------------------------------------------------ the steps ---
+def decode_step(
+    params: Dict[str, Any],
+    cfg: TransformerConfig,
+    cache: Dict[str, Any],
+    tokens: Array,  # [B] int32
+    pos: Array,  # scalar int32 — current write position
+    *,
+    mesh=None,
+    dp_axes: Tuple[str, ...] = ("data",),
+) -> Tuple[Array, Dict[str, Any]]:
+    """One token for the whole batch. Returns (logits [B, V], cache')."""
+    h = jnp.take(params["embed"], tokens, axis=0)[:, None, :]  # [B,1,D]
+    if cfg.scale_embed:
+        h = h * jnp.asarray(np.sqrt(cfg.d_model), h.dtype)
+    theta_l = cfg.rope_theta
+    theta_g = cfg.rope_theta_global or cfg.rope_theta
+    new_cache: Dict[str, Any] = {}
+
+    def scan_uniform(h, stack, cache_pair, is_moe, theta):
+        def body(hc, xs):
+            blk, c0, c1 = xs
+            h2, (n0, n1) = _block_decode(hc, blk, cfg, (c0, c1), pos, theta,
+                                         is_moe, 0, mesh, dp_axes)
+            return h2, (n0, n1)
+
+        return jax.lax.scan(body, h, (stack, *cache_pair))
+
+    if not cfg.sub_quadratic:
+        if cfg.n_dense_layers:
+            h, new_cache["dense"] = scan_uniform(
+                h, params["blocks"], cache["dense"], False, theta_l
+            )
+        if cfg.n_moe_layers:
+            h, new_cache["moe"] = scan_uniform(
+                h, params["moe_blocks"], cache["moe"], True, theta_l
+            )
+    else:
+        g = cfg.global_every
+        n_rounds = cfg.n_layers // g
+        gm1 = g - 1
+        loc_stack = jax.tree.map(
+            lambda x: x.reshape((n_rounds, gm1) + x.shape[1:]),
+            params["blocks_local"],
+        )
+        loc_cache = jax.tree.map(
+            lambda x: x.reshape((n_rounds, gm1) + x.shape[1:]),
+            cache["local"],
+        )
+
+        def round_body(hc, xs):
+            lblk, lc0, lc1, gblk, gc0, gc1 = xs
+
+            def local_body(hh, ys):
+                blk, c0, c1 = ys
+                h2, (n0, n1) = _block_decode(
+                    hh, blk, cfg, (c0, c1), pos, theta_l, False,
+                    cfg.window, mesh, dp_axes,
+                )
+                return h2, (n0, n1)
+
+            hc, (nl0, nl1) = jax.lax.scan(local_body, hc, (lblk, lc0, lc1))
+            hc, (ng0, ng1) = _block_decode(
+                hc, gblk, cfg, (gc0, gc1), pos, theta_g, False, 0,
+                mesh, dp_axes,
+            )
+            return hc, (nl0, nl1, ng0, ng1)
+
+        h, (nl0, nl1, ng0, ng1) = jax.lax.scan(
+            round_body, h,
+            (loc_stack, *loc_cache, params["blocks_global"],
+             *cache["global"]),
+        )
+        new_cache["local"] = tuple(
+            x.reshape((n_rounds * gm1,) + x.shape[2:]) for x in (nl0, nl1)
+        )
+        new_cache["global"] = (ng0, ng1)
+        if "blocks_tail" in params:
+            def tail_body(hh, ys):
+                blk, c0, c1 = ys
+                h2, (n0, n1) = _block_decode(
+                    hh, blk, cfg, (c0, c1), pos, theta_l, False,
+                    cfg.window, mesh, dp_axes,
+                )
+                return h2, (n0, n1)
+
+            h, new_cache["tail"] = jax.lax.scan(
+                tail_body, h, (params["blocks_tail"], *cache["tail"])
+            )
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, h)[:, 0, :]  # [B, V]
+    return logits, new_cache
+
+
+def prefill(
+    params: Dict[str, Any],
+    cfg: TransformerConfig,
+    tokens: Array,  # [B, S]
+    s_max: int,
+    *,
+    mesh=None,
+    dp_axes: Tuple[str, ...] = ("data",),
+) -> Tuple[Array, Dict[str, Any]]:
+    """Full-prompt pass; returns (logits [B, S, V], decode cache @ s_max)."""
+    from repro.models.transformer import forward
+
+    b, s = tokens.shape
+    h, aux = forward(params, cfg, tokens, mesh=mesh, dp_axes=dp_axes,
+                     collect_kv=True)
+    logits = logits_from_hidden(params, cfg, h)
+    kv_stacks = aux["kv"]  # list per stack: (k|ckv [L,B,S,...], v|kr)
+
+    def to_cache(pair, s_cache):
+        def pad_or_ring(x):
+            if s_cache >= s:  # linear cache, pad tail
+                padding = [(0, 0)] * x.ndim
+                padding[2] = (0, s_cache - s)
+                return jnp.pad(x, padding)
+            # ring: keep the last s_cache positions at slot p % W
+            w = s_cache
+            keep = x[:, :, s - w :]
+            slots = jnp.mod(jnp.arange(s - w, s), w)
+            out = jnp.zeros(x.shape[:2] + (w,) + x.shape[3:], x.dtype)
+            return out.at[:, :, slots].set(keep)
+
+        return tuple(pad_or_ring(x) for x in pair)
+
+    cache: Dict[str, Any] = {}
+    if not cfg.sub_quadratic:
+        i = 0
+        if cfg.n_dense_layers:
+            cache["dense"] = to_cache(kv_stacks[i], s_max)
+            i += 1
+        if cfg.n_moe_layers:
+            cache["moe"] = to_cache(kv_stacks[i], s_max)
+    else:
+        g = cfg.window  # ring length
+        pair = kv_stacks[0]  # single dense stack [L, ...]
+        gi = cfg.global_every
+        n_rounds = cfg.n_layers // gi
+        local_idx = np.asarray(
+            [r * gi + j for r in range(n_rounds) for j in range(gi - 1)]
+        )
+        global_idx = np.asarray([r * gi + (gi - 1) for r in range(n_rounds)])
+        tail_idx = np.arange(n_rounds * gi, cfg.n_layers)
+        pick = lambda idx: tuple(jnp.take(x, idx, axis=0) for x in pair)
+        cache["local"] = to_cache(pick(local_idx), min(g, s_max))
+        cache["global"] = to_cache(pick(global_idx), s_max)
+        if len(tail_idx):
+            cache["tail"] = to_cache(pick(tail_idx), min(g, s_max))
+    return logits, cache
+
+
+def greedy_generate(params, cfg, prompt: Array, n_new: int, s_max: int,
+                    *, mesh=None) -> Array:
+    """Reference sampler for tests/examples (prefill + greedy decode loop)."""
+    b, s = prompt.shape
+    dparams = decode_layout(params, cfg)
+    logits, cache = prefill(params, cfg, prompt, s_max, mesh=mesh)
+    tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)
+    outs = [tok]
+    step = jax.jit(
+        functools.partial(decode_step, cfg=cfg, mesh=mesh)
+    ) if mesh is None else functools.partial(decode_step, cfg=cfg, mesh=mesh)
+    for i in range(n_new - 1):
+        logits_i, cache = step(dparams, cache=cache, tokens=tok,
+                               pos=jnp.int32(s + i))
+        tok = jnp.argmax(logits_i, -1).astype(jnp.int32)
+        outs.append(tok)
+    return jnp.stack(outs, axis=1)  # [B, n_new]

@@ -1,0 +1,13 @@
+from repro.models.gnn.dimenet import (
+    DimeNetConfig,
+    GraphBatch,
+    forward,
+    init_params,
+    loss_fn,
+    scaled_down_gnn,
+)
+
+__all__ = [
+    "DimeNetConfig", "GraphBatch", "forward", "init_params", "loss_fn",
+    "scaled_down_gnn",
+]

@@ -1,0 +1,180 @@
+"""Mixture-of-Experts FFN with sort-based dispatch and expert parallelism.
+
+Dispatch is the probe-dispatch pattern from ``core/distributed.py`` turned
+inward: (token, choice) pairs are sorted by expert, ranked within expert, and
+scattered into a static ``[E_local, C]`` slot table — no one-hot dispatch
+matmuls, so ``cost_analysis`` FLOPs stay ≈ active-parameter FLOPs × capacity
+factor rather than the GShard einsum blow-up.
+
+Expert parallelism: experts are sharded over the ``model`` mesh axis while
+activations enter replicated over it (the Megatron TP layout at the FFN
+boundary).  Each chip routes ALL its tokens, serves only its local experts,
+and a single psum over ``model`` combines expert outputs — same collective
+volume as the dense-TP FFN it replaces, zero all_to_alls on the critical
+path.  Capacity overflow drops (token, choice) pairs, never whole tokens
+(top-k>1 gives redundancy), and the drop count is returned for monitoring.
+
+Single-device path (smoke tests): identical math with E_local = E and the
+psum elided.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import MoEConfig
+from repro.models.layers import act_fn
+
+Array = jax.Array
+
+
+def init_moe_params(key: Array, d_model: int, cfg: MoEConfig, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    fe = cfg.d_ff_expert
+    e = cfg.n_routed
+    init = jax.nn.initializers.truncated_normal(stddev=0.02)
+    p = {
+        "router": init(ks[0], (d_model, e), jnp.float32),
+        "router_bias": jnp.zeros((e,), jnp.float32),
+        "wg": init(ks[1], (e, d_model, fe), dtype),
+        "wu": init(ks[2], (e, d_model, fe), dtype),
+        "wd": init(ks[3], (e, fe, d_model), dtype),
+    }
+    if cfg.n_shared:
+        fs = fe * cfg.n_shared
+        p["shared_wg"] = init(ks[4], (d_model, fs), dtype)
+        p["shared_wu"] = init(ks[5], (d_model, fs), dtype)
+        p["shared_wd"] = init(ks[6], (fs, d_model), dtype)
+    return p
+
+
+def router_scores(x: Array, router_w: Array, bias: Array, cfg: MoEConfig
+                  ) -> Tuple[Array, Array, Array]:
+    """Returns (top-k weights [N,k], top-k ids [N,k], full probs [N,E])."""
+    logits = x.astype(jnp.float32) @ router_w  # [N, E]
+    if cfg.router_score == "sigmoid_norm":  # DeepSeek-V3
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + (bias if cfg.use_routing_bias else 0.0)
+        _, ids = jax.lax.top_k(sel, cfg.top_k)
+        w = jnp.take_along_axis(scores, ids, axis=-1)
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+        probs = scores / jnp.maximum(jnp.sum(scores, -1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        sel = probs + (bias if cfg.use_routing_bias else 0.0)
+        w, ids = jax.lax.top_k(sel, cfg.top_k)
+        w = jnp.take_along_axis(probs, ids, axis=-1)
+    return w.astype(jnp.float32), ids.astype(jnp.int32), probs
+
+
+def aux_load_balance_loss(probs: Array, ids: Array, n_experts: int) -> Array:
+    """Switch-style load-balancing loss: E · Σ_e f_e · P_e."""
+    n, k = ids.shape
+    counts = jnp.zeros((n_experts,), jnp.float32)
+    counts = counts.at[ids.reshape(-1)].add(1.0)
+    f = counts / (n * k)
+    p = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(f * p)
+
+
+def _dispatch_table(
+    ids: Array,  # [N, k] global expert ids
+    weights: Array,  # [N, k]
+    *,
+    e_lo: Array,  # scalar: first local expert id
+    e_local: int,
+    capacity: int,
+) -> Tuple[Array, Array, Array, Array]:
+    """Builds [E_local, C] (token_idx, weight, valid) tables + drop count."""
+    n, k = ids.shape
+    flat_e = ids.reshape(-1)  # [N*k]
+    flat_w = weights.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    local_e = flat_e - e_lo
+    mine = jnp.logical_and(local_e >= 0, local_e < e_local)
+    sort_key = jnp.where(mine, local_e, e_local)  # foreign → tail bucket
+    order = jnp.argsort(sort_key)
+    key_s = jnp.take(sort_key, order)
+    starts = jnp.searchsorted(key_s, jnp.arange(e_local), side="left")
+    rank = jnp.arange(n * k) - jnp.take(starts, jnp.minimum(key_s, e_local - 1))
+    ok = jnp.logical_and(key_s < e_local, rank < capacity)
+
+    tok_tab = jnp.zeros((e_local, capacity), jnp.int32)
+    w_tab = jnp.zeros((e_local, capacity), jnp.float32)
+    v_tab = jnp.zeros((e_local, capacity), jnp.bool_)
+    # not-ok entries scatter OUT of range (mode="drop"), never to (0, 0) —
+    # they must not clobber a legitimate slot.
+    dst_e = jnp.where(ok, key_s, e_local)
+    dst_c = jnp.where(ok, rank, 0)
+    src_t = jnp.take(flat_t, order)
+    src_w = jnp.take(flat_w, order)
+    tok_tab = tok_tab.at[dst_e, dst_c].set(jnp.where(ok, src_t, 0), mode="drop")
+    w_tab = w_tab.at[dst_e, dst_c].set(jnp.where(ok, src_w, 0.0), mode="drop")
+    v_tab = v_tab.at[dst_e, dst_c].set(ok, mode="drop")
+    n_dropped = jnp.sum(
+        jnp.logical_and(key_s < e_local, rank >= capacity).astype(jnp.int32)
+    )
+    return tok_tab, w_tab, v_tab, n_dropped
+
+
+def moe_ffn_local(
+    x: Array,  # [N, D] local tokens (replicated over the EP axes)
+    params: dict,  # expert weights already LOCAL: wg/wu/wd [E_local, ...]
+    cfg: MoEConfig,
+    *,
+    ep_axes: Tuple[str, ...] = (),
+    act: str = "silu",
+    capacity: Optional[int] = None,
+    combine: bool = True,  # False: caller combines (e.g. reduce-scatter)
+) -> Tuple[Array, dict]:
+    """Routed-experts FFN. Caller adds the shared-expert branch.
+
+    Returns (out [N, D], metrics{aux_loss, n_dropped}).
+    """
+    n, d = x.shape
+    e = cfg.n_routed
+    e_local = params["wg"].shape[0]
+    if not ep_axes:
+        e_lo = jnp.int32(0)
+    else:
+        idx = jnp.int32(0)
+        for a in ep_axes:  # linearized shard index, major axis first
+            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        e_lo = idx * e_local
+    if capacity is None:
+        capacity = max(8, int(cfg.capacity_factor * n * cfg.top_k / e + 0.999))
+        capacity = ((capacity + 7) // 8) * 8
+
+    w, ids, probs = router_scores(
+        x, params["router"], params["router_bias"], cfg
+    )
+    tok_tab, w_tab, v_tab, n_dropped = _dispatch_table(
+        ids, w, e_lo=e_lo, e_local=e_local, capacity=capacity
+    )
+
+    xg = jnp.take(x, tok_tab.reshape(-1), axis=0).reshape(
+        e_local, capacity, d
+    )  # [E_local, C, D]
+    h = act_fn(act)(
+        jnp.einsum("ecd,edf->ecf", xg, params["wg"])
+    ) * jnp.einsum("ecd,edf->ecf", xg, params["wu"])
+    y = jnp.einsum("ecf,efd->ecd", h, params["wd"])  # [E_local, C, D]
+    y = y * jnp.where(v_tab, w_tab, 0.0)[..., None].astype(y.dtype)
+
+    out = jnp.zeros((n, d), y.dtype)
+    out = out.at[tok_tab.reshape(-1)].add(y.reshape(-1, d))
+    if ep_axes and combine:
+        out = jax.lax.psum(out, ep_axes)
+        n_dropped = jax.lax.psum(n_dropped, ep_axes)
+
+    aux = aux_load_balance_loss(probs, ids, e)
+    return out, dict(aux_loss=aux, n_dropped=n_dropped)
+
+
+def shared_expert_ffn(x: Array, params: dict, act: str = "silu") -> Array:
+    h = act_fn(act)(x @ params["shared_wg"]) * (x @ params["shared_wu"])
+    return h @ params["shared_wd"]

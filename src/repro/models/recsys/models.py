@@ -1,0 +1,284 @@
+"""The four assigned recsys architectures over shared embedding substrate.
+
+  din        [arXiv:1706.06978] — target-attention over user history
+  sasrec     [arXiv:1808.09781] — causal self-attention next-item model
+  bst        [arXiv:1905.06874] — transformer over [history ‖ target]
+  wide-deep  [arXiv:1606.07792] — linear wide path + deep MLP on embeddings
+
+All four share: huge vocab-sharded item/field tables (the hot path), an
+interaction module, a small MLP head.  ``user_embedding`` exposes each
+model's retrieval vector so `retrieval_cand` can score 1M candidates as a
+batched dot / via the paper's IVF index (two-stage retrieval; DESIGN.md §5).
+
+Batch contract (RecsysBatch):
+  dense [B, n_dense] f32 · sparse [B, n_sparse] int32 · hist [B, L] int32
+  (-1 pad) · target [B] int32 · label [B] f32
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.recsys.embedding import embedding_bag, init_table
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    arch: str  # "din" | "sasrec" | "bst" | "wide_deep"
+    embed_dim: int
+    seq_len: int = 0
+    n_dense: int = 13
+    n_sparse: int = 0
+    vocab_items: int = 1_000_000
+    vocab_sparse: int = 100_000
+    mlp_dims: Tuple[int, ...] = (200, 80)
+    attn_mlp_dims: Tuple[int, ...] = (80, 40)  # DIN attention MLP
+    n_blocks: int = 0
+    n_heads: int = 1
+    dtype: Any = jnp.float32
+
+    def n_params(self) -> int:
+        total = self.vocab_items * self.embed_dim
+        total += self.n_sparse * self.vocab_sparse * self.embed_dim
+        prev = self.embed_dim * 4 + self.n_dense  # rough head input
+        for h in self.mlp_dims:
+            total += prev * h
+            prev = h
+        return total
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RecsysBatch:
+    dense: Array
+    sparse: Array
+    hist: Array
+    target: Array
+    label: Array
+
+
+def _mlp(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {
+            "w": jax.nn.initializers.glorot_normal()(
+                ks[i], (dims[i], dims[i + 1]), dtype
+            ),
+            "b": jnp.zeros((dims[i + 1],), dtype),
+        }
+        for i in range(len(dims) - 1)
+    ]
+
+
+def _apply_mlp(layers, x, act=jax.nn.relu, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if final_act or i < len(layers) - 1:
+            x = act(x)
+    return x
+
+
+def _tiny_attn_params(key, d, n_heads, dtype):
+    ks = jax.random.split(key, 4)
+    ini = jax.nn.initializers.glorot_normal()
+    return {
+        "wqkv": ini(ks[0], (d, 3 * d), dtype),
+        "wo": ini(ks[1], (d, d), dtype),
+        "ln1": jnp.zeros((d,), dtype),
+        "ln2": jnp.zeros((d,), dtype),
+        "ff1": ini(ks[2], (d, 4 * d), dtype),
+        "ff2": ini(ks[3], (4 * d, d), dtype),
+    }
+
+
+def _tiny_block(p, x, n_heads, causal, mask=None):
+    """Minimal pre-LN transformer block for sasrec/bst."""
+    from repro.models.layers import rms_norm
+
+    b, s, d = x.shape
+    dh = d // n_heads
+    h = rms_norm(x, p["ln1"])
+    qkv = h @ p["wqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, n_heads, dh)
+    k = k.reshape(b, s, n_heads, dh)
+    v = v.reshape(b, s, n_heads, dh)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * (dh ** -0.5)
+    if causal:
+        cm = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(cm[None, None], logits, -1e30)
+    if mask is not None:  # [B, S] key validity
+        logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    a = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(b, s, d)
+    x = x + o @ p["wo"]
+    h = rms_norm(x, p["ln2"])
+    return x + jax.nn.relu(h @ p["ff1"]) @ p["ff2"]
+
+
+# ------------------------------------------------------------------ init ---
+def init_params(key: Array, cfg: RecsysConfig) -> Dict[str, Any]:
+    ks = iter(jax.random.split(key, 16))
+    d = cfg.embed_dim
+    p: Dict[str, Any] = {"item_table": init_table(next(ks), cfg.vocab_items,
+                                                  d, cfg.dtype)}
+    if cfg.n_sparse:
+        p["field_tables"] = init_table(
+            next(ks), cfg.n_sparse * cfg.vocab_sparse, d, cfg.dtype
+        )  # one fused [F·V, D] table (quotient indexing) — single big gather
+    if cfg.arch == "din":
+        p["attn_mlp"] = _mlp(
+            next(ks), (4 * d,) + tuple(cfg.attn_mlp_dims) + (1,), cfg.dtype
+        )
+        head_in = 3 * d + cfg.n_dense
+        p["head"] = _mlp(next(ks), (head_in,) + tuple(cfg.mlp_dims) + (1,),
+                         cfg.dtype)
+    elif cfg.arch == "sasrec":
+        p["pos_embed"] = init_table(next(ks), cfg.seq_len, d, cfg.dtype)
+        p["blocks"] = [
+            _tiny_attn_params(next(ks), d, cfg.n_heads, cfg.dtype)
+            for _ in range(cfg.n_blocks)
+        ]
+    elif cfg.arch == "bst":
+        p["pos_embed"] = init_table(next(ks), cfg.seq_len + 1, d, cfg.dtype)
+        p["blocks"] = [
+            _tiny_attn_params(next(ks), d, cfg.n_heads, cfg.dtype)
+            for _ in range(cfg.n_blocks)
+        ]
+        head_in = (cfg.seq_len + 1) * d + cfg.n_dense
+        p["head"] = _mlp(next(ks), (head_in,) + tuple(cfg.mlp_dims) + (1,),
+                         cfg.dtype)
+    elif cfg.arch == "wide_deep":
+        head_in = cfg.n_sparse * d + cfg.n_dense
+        p["head"] = _mlp(next(ks), (head_in,) + tuple(cfg.mlp_dims) + (1,),
+                         cfg.dtype)
+        p["wide"] = init_table(
+            next(ks), cfg.n_sparse * cfg.vocab_sparse, 1, cfg.dtype
+        )
+        p["wide_bias"] = jnp.zeros((), cfg.dtype)
+    else:
+        raise ValueError(cfg.arch)
+    return p
+
+
+# ------------------------------------------------------------- forwards ---
+def _field_lookup(p, cfg, sparse_ids):
+    """[B, F] ids → [B, F, D] via the fused field table (id + F·offset)."""
+    f = cfg.n_sparse
+    offs = jnp.arange(f, dtype=jnp.int32) * cfg.vocab_sparse
+    fused = jnp.where(sparse_ids >= 0, sparse_ids + offs[None, :], -1)
+    rows = embedding_bag(
+        p["field_tables"], fused[..., None], mode="sum"
+    )  # [B, F, D]
+    return rows
+
+
+def user_embedding(params, cfg: RecsysConfig, batch: RecsysBatch) -> Array:
+    """The retrieval vector (for `retrieval_cand` / IVF candidate gen)."""
+    if cfg.arch in ("din", "wide_deep"):
+        return embedding_bag(params["item_table"], batch.hist, mode="mean")
+    # sequence models: hidden state at the last valid position
+    h = _seq_hidden(params, cfg, batch)
+    last = jnp.maximum(jnp.sum((batch.hist >= 0).astype(jnp.int32), -1) - 1, 0)
+    return jnp.take_along_axis(
+        h, last[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0]
+
+
+def _seq_hidden(params, cfg, batch) -> Array:
+    e = embedding_bag(params["item_table"], batch.hist[..., None])  # [B,L,D]
+    s = e.shape[1]
+    e = e + params["pos_embed"][None, :s]
+    mask = batch.hist >= 0
+    for blk in params["blocks"]:
+        e = _tiny_block(blk, e, cfg.n_heads, causal=True, mask=mask)
+    return e
+
+
+def forward(params, cfg: RecsysConfig, batch: RecsysBatch) -> Array:
+    """Pointwise CTR logit [B] (din/bst/wide_deep) or next-item score [B]
+    against the batch target (sasrec)."""
+    b = batch.target.shape[0]
+    tgt = embedding_bag(params["item_table"], batch.target[:, None])  # [B,D]
+
+    if cfg.arch == "din":
+        hist = embedding_bag(params["item_table"], batch.hist[..., None])
+        mask = (batch.hist >= 0)[..., None]  # [B, L, 1]
+        tq = jnp.broadcast_to(tgt[:, None], hist.shape)
+        a_in = jnp.concatenate(
+            [hist, tq, hist - tq, hist * tq], axis=-1
+        )  # [B, L, 4D]
+        w = _apply_mlp(params["attn_mlp"], a_in, act=jax.nn.sigmoid)  # [B,L,1]
+        w = jnp.where(mask, w, 0.0)
+        interest = jnp.sum(hist * w, axis=1)  # [B, D] (no softmax, per paper)
+        x = jnp.concatenate([interest, tgt, interest * tgt,
+                             batch.dense.astype(tgt.dtype)], -1)
+        return _apply_mlp(params["head"], x)[:, 0]
+
+    if cfg.arch == "sasrec":
+        h = _seq_hidden(params, cfg, batch)
+        last = jnp.maximum(
+            jnp.sum((batch.hist >= 0).astype(jnp.int32), -1) - 1, 0
+        )
+        u = jnp.take_along_axis(
+            h, last[:, None, None].astype(jnp.int32), axis=1
+        )[:, 0]
+        return jnp.sum(u * tgt, -1)  # dot score
+
+    if cfg.arch == "bst":
+        e = embedding_bag(params["item_table"], batch.hist[..., None])
+        seq = jnp.concatenate([e, tgt[:, None]], axis=1)  # [B, L+1, D]
+        s = seq.shape[1]
+        seq = seq + params["pos_embed"][None, :s]
+        mask = jnp.concatenate(
+            [batch.hist >= 0, jnp.ones((b, 1), bool)], axis=1
+        )
+        for blk in params["blocks"]:
+            seq = _tiny_block(blk, seq, cfg.n_heads, causal=False, mask=mask)
+        x = jnp.concatenate(
+            [seq.reshape(b, -1), batch.dense.astype(seq.dtype)], -1
+        )
+        return _apply_mlp(params["head"], x)[:, 0]
+
+    if cfg.arch == "wide_deep":
+        fields = _field_lookup(params, cfg, batch.sparse)  # [B, F, D]
+        deep_in = jnp.concatenate(
+            [fields.reshape(b, -1), batch.dense.astype(fields.dtype)], -1
+        )
+        deep = _apply_mlp(params["head"], deep_in)[:, 0]
+        offs = jnp.arange(cfg.n_sparse, dtype=jnp.int32) * cfg.vocab_sparse
+        fused = jnp.where(batch.sparse >= 0, batch.sparse + offs[None], -1)
+        wide = embedding_bag(params["wide"], fused, mode="sum")[:, 0]
+        return deep + wide + params["wide_bias"]
+
+    raise ValueError(cfg.arch)
+
+
+def loss_fn(params, cfg: RecsysConfig, batch: RecsysBatch
+            ) -> Tuple[Array, Dict[str, Array]]:
+    logit = forward(params, cfg, batch).astype(jnp.float32)
+    y = batch.label.astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+    )
+    acc = jnp.mean(((logit > 0) == (y > 0.5)).astype(jnp.float32))
+    return loss, {"bce": loss, "acc": acc}
+
+
+def retrieval_scores(params, cfg: RecsysConfig, batch: RecsysBatch,
+                     candidates: Array, k: int = 100
+                     ) -> Tuple[Array, Array]:
+    """`retrieval_cand`: score user vs [N_cand, D] item rows — one batched
+    matmul + top-k, never a loop. The IVF-index path for the same operation
+    lives in examples/recsys_retrieval.py."""
+    u = user_embedding(params, cfg, batch)  # [B, D]
+    scores = u.astype(jnp.float32) @ candidates.astype(jnp.float32).T
+    vals, ids = jax.lax.top_k(scores, k)
+    return vals, ids

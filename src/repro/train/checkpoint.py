@@ -1,0 +1,115 @@
+"""Fault-tolerant training checkpoints.
+
+Same discipline as the index store (core/storage.py): atomic writes
+(tmp+rename), a manifest that is written LAST (a crash mid-save can never
+yield a loadable-but-partial checkpoint), monotonically numbered step
+directories, and automatic latest-step discovery on restore — the restart
+path after preemption is ``state = restore(dir) or fresh_init()``.
+
+Arrays are saved leaf-by-leaf with their tree paths as keys (npz); shardings
+are reapplied by the caller (restore returns host numpy; the train loop
+device_puts with its own NamedShardings, which also makes checkpoints
+portable across mesh sizes — elastic restart).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, state: Any,
+                    extra: Optional[dict] = None, keep: int = 3) -> str:
+    """Writes ``<dir>/step_<n>/`` atomically; prunes old steps to ``keep``."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        flat = _flatten_with_paths(state)
+        with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+            np.savez(f, **flat)
+        manifest = dict(step=step, n_arrays=len(flat),
+                        extra=extra or {})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=2)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    finally:
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+    # prune
+    steps = sorted(all_steps(directory))
+    for old in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{old}"),
+                      ignore_errors=True)
+    return final
+
+
+def all_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = STEP_RE.match(name)
+        if m and os.path.exists(
+            os.path.join(directory, name, "manifest.json")
+        ):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = all_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory: str, like: Any,
+                       step: Optional[int] = None
+                       ) -> Optional[Tuple[int, Any, dict]]:
+    """Restores into the structure of ``like``. Returns (step, state, extra)
+    or None if no complete checkpoint exists."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        return None
+    d = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    flat_like = _flatten_with_paths(like)
+    if set(data.files) != set(flat_like):
+        raise ValueError(
+            f"checkpoint/state structure mismatch: "
+            f"{set(data.files) ^ set(flat_like)}"
+        )
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path, leaf in leaves_paths:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        arr = data[key]
+        new_leaves.append(arr.astype(np.asarray(leaf).dtype))
+    state = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return step, state, manifest.get("extra", {})

@@ -1,0 +1,150 @@
+"""Training loop with checkpoint/restart, preemption handling, and metrics.
+
+The loop is deliberately boring: jitted step + feeder + periodic checkpoint.
+Fault tolerance is the point —
+  * restart: ``run()`` restores the newest complete checkpoint (params,
+    optimizer state, data cursor) and continues bit-exact (the feeder is a
+    deterministic function of (seed, step));
+  * preemption: SIGTERM-style ``request_stop()`` finishes the in-flight step,
+    checkpoints, and exits cleanly;
+  * divergence guard: non-finite loss restores the last checkpoint and
+    re-runs with a decayed LR (a standard large-run babysitter policy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train import checkpoint as ckpt_lib
+from repro.train.optimizer import (
+    OptimizerConfig,
+    clip_by_global_norm,
+    cosine_schedule,
+    make_optimizer,
+)
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    ckpt_keep: int = 3
+    log_every: int = 10
+    lr: float = 3e-4
+    warmup: int = 10
+    grad_clip: float = 1.0
+    optimizer: str = "adamw"
+    lr_decay_on_divergence: float = 0.5
+
+
+class Trainer:
+    """loss_fn(params, batch) -> (loss, metrics dict)."""
+
+    def __init__(self, loss_fn: Callable, params: Any, cfg: TrainLoopConfig,
+                 donate: bool = True):
+        self.cfg = cfg
+        self.loss_fn = loss_fn
+        opt_cfg = OptimizerConfig(name=cfg.optimizer, lr=cfg.lr,
+                                  grad_clip=cfg.grad_clip)
+        self.opt_init, self.opt_update = make_optimizer(opt_cfg)
+        self.schedule = cosine_schedule(cfg.lr, cfg.warmup, cfg.total_steps)
+        self.params = params
+        self.opt_state = self.opt_init(params)
+        self.step = 0
+        self._stop_requested = False
+        self._lr_scale = 1.0
+
+        def train_step(params, opt_state, batch, step, lr_scale):
+            (loss, metrics), grads = jax.value_and_grad(
+                self.loss_fn, has_aux=True
+            )(params, batch)
+            grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+            lr = self.schedule(step) * lr_scale
+            new_params, new_state = self.opt_update(
+                grads, opt_state, params, lr
+            )
+            metrics = dict(metrics)
+            metrics.update(loss=loss, grad_norm=gnorm, lr=lr)
+            return new_params, new_state, metrics
+
+        self._jit_step = jax.jit(
+            train_step, donate_argnums=(0, 1) if donate else ()
+        )
+
+    # ---- fault-tolerance API ----
+    def request_stop(self):
+        """Preemption hook: finish the current step, checkpoint, return."""
+        self._stop_requested = True
+
+    def save(self):
+        if not self.cfg.ckpt_dir:
+            return
+        ckpt_lib.save_checkpoint(
+            self.cfg.ckpt_dir, self.step,
+            {"params": self.params, "opt": self.opt_state},
+            extra={"lr_scale": self._lr_scale},
+            keep=self.cfg.ckpt_keep,
+        )
+
+    def maybe_restore(self) -> bool:
+        if not self.cfg.ckpt_dir:
+            return False
+        res = ckpt_lib.restore_checkpoint(
+            self.cfg.ckpt_dir, {"params": self.params, "opt": self.opt_state}
+        )
+        if res is None:
+            return False
+        step, state, extra = res
+        self.step = step
+        self.params = jax.tree.map(jnp.asarray, state["params"])
+        self.opt_state = jax.tree.map(jnp.asarray, state["opt"])
+        self._lr_scale = float(extra.get("lr_scale", 1.0))
+        return True
+
+    # ---- the loop ----
+    def run(self, feeder, max_steps: Optional[int] = None
+            ) -> Dict[str, list]:
+        self.maybe_restore()
+        history: Dict[str, list] = {"loss": [], "step": []}
+        target = min(
+            self.cfg.total_steps,
+            self.step + (max_steps or self.cfg.total_steps),
+        )
+        t0 = time.time()
+        while self.step < target and not self._stop_requested:
+            data_step, batch = next(feeder)
+            if data_step < self.step:  # skip ahead after restore
+                continue
+            batch = jax.tree.map(jnp.asarray, batch)
+            self.params, self.opt_state, metrics = self._jit_step(
+                self.params, self.opt_state, batch,
+                jnp.int32(self.step), jnp.float32(self._lr_scale),
+            )
+            loss = float(metrics["loss"])
+            if not np.isfinite(loss):
+                # divergence: restore last good state, decay LR, continue
+                restored = self.maybe_restore()
+                self._lr_scale *= self.cfg.lr_decay_on_divergence
+                if not restored:
+                    raise FloatingPointError(
+                        f"non-finite loss at step {self.step}, no checkpoint"
+                    )
+                continue
+            self.step += 1
+            history["loss"].append(loss)
+            history["step"].append(self.step)
+            if self.step % self.cfg.ckpt_every == 0:
+                self.save()
+            if self.step % self.cfg.log_every == 0:
+                rate = self.step / max(time.time() - t0, 1e-9)
+                print(f"step {self.step} loss {loss:.4f} "
+                      f"({rate:.2f} steps/s)")
+        self.save()
+        return history

@@ -1,0 +1,223 @@
+"""Core index behaviour: build invariants, filtered search vs oracle, updates."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    FilterBuilder,
+    HybridSpec,
+    brute_force,
+    build_ivf,
+    from_builders,
+    match_all,
+    recall_at_k,
+    search_reference,
+    add_vectors,
+    tombstone,
+    compact_cluster,
+    validity_mask,
+)
+
+
+def make_data(seed, n=512, d=16, m=4, n_attr_vals=8):
+    rng = np.random.default_rng(seed)
+    core = rng.standard_normal((n, d)).astype(np.float32)
+    core /= np.linalg.norm(core, axis=-1, keepdims=True)
+    attrs = rng.integers(0, n_attr_vals, size=(n, m)).astype(np.int16)
+    return core, attrs
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    core, attrs = make_data(0)
+    spec = HybridSpec(dim=16, n_attrs=4, core_dtype=jnp.float32)
+    key = jax.random.key(0)
+    index, stats = build_ivf(
+        key, spec, core, attrs, n_clusters=8, kmeans_mode="lloyd",
+        kmeans_steps=8,
+    )
+    return index, stats, core, attrs
+
+
+def test_build_partition_exact(small_index):
+    """Every input id appears in exactly one live slot (IVF partition, §3.1)."""
+    index, stats, core, attrs = small_index
+    assert stats.n_dropped == 0
+    ids = np.asarray(index.ids)
+    live = ids[np.asarray(validity_mask(index))]
+    assert sorted(live.tolist()) == list(range(core.shape[0]))
+    assert int(jnp.sum(index.counts)) == core.shape[0]
+
+
+def test_slot_contents_match_source(small_index):
+    """Vectors/attrs land in the slot holding their id."""
+    index, _, core, attrs = small_index
+    ids = np.asarray(index.ids)
+    vecs = np.asarray(index.vectors, dtype=np.float32)
+    atts = np.asarray(index.attrs)
+    k, vpad = ids.shape
+    for c in range(k):
+        for s in range(int(index.counts[c])):
+            i = ids[c, s]
+            assert i >= 0
+            np.testing.assert_allclose(vecs[c, s], core[i], rtol=1e-6)
+            np.testing.assert_array_equal(atts[c, s], attrs[i])
+
+
+def test_full_probe_no_filter_equals_brute_force(small_index):
+    """T=K and wildcard filter ⇒ IVF search IS exact search."""
+    index, _, core, attrs = small_index
+    queries = jnp.asarray(core[:7] + 0.01)
+    fspec = match_all(7, 4)
+    res = search_reference(index, queries, fspec, k=10, n_probes=index.n_clusters)
+    ref = brute_force(jnp.asarray(core), jnp.asarray(attrs), queries, fspec, k=10)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref.ids))
+    np.testing.assert_allclose(
+        np.asarray(res.scores), np.asarray(ref.scores), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_filtered_results_satisfy_filter(small_index):
+    """No returned id may violate its query's filter (soundness)."""
+    index, _, core, attrs = small_index
+    q = 5
+    queries = jnp.asarray(core[10 : 10 + q])
+    builders = [
+        FilterBuilder(4).eq(0, i % 3).between(1, 0, 5) for i in range(q)
+    ]
+    fspec = from_builders(builders)
+    res = search_reference(index, queries, fspec, k=8, n_probes=index.n_clusters)
+    ids = np.asarray(res.ids)
+    for qi in range(q):
+        for i in ids[qi]:
+            if i < 0:
+                continue
+            assert attrs[i, 0] == qi % 3
+            assert 0 <= attrs[i, 1] <= 5
+
+
+def test_filtered_equals_filtered_brute_force(small_index):
+    index, _, core, attrs = small_index
+    q = 4
+    queries = jnp.asarray(core[30 : 30 + q] + 0.02)
+    builders = [FilterBuilder(4).le(2, 4).ge(3, 2) for _ in range(q)]
+    fspec = from_builders(builders)
+    res = search_reference(index, queries, fspec, k=12, n_probes=index.n_clusters)
+    ref = brute_force(
+        jnp.asarray(core), jnp.asarray(attrs), queries, fspec, k=12
+    )
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref.ids))
+
+
+def test_recall_monotone_in_probes(small_index):
+    """Paper §4.3: larger T ⇒ recall must not get materially worse."""
+    index, _, core, attrs = small_index
+    rng = np.random.default_rng(3)
+    queries = jnp.asarray(
+        rng.standard_normal((16, 16)).astype(np.float32)
+    )
+    fspec = match_all(16, 4)
+    ref = brute_force(jnp.asarray(core), jnp.asarray(attrs), queries, fspec, k=10)
+    recalls = []
+    for t in (1, 2, 4, 8):
+        res = search_reference(index, queries, fspec, k=10, n_probes=t)
+        recalls.append(recall_at_k(res, ref))
+    assert recalls[-1] == 1.0  # T=K is exact
+    assert all(b >= a - 1e-9 for a, b in zip(recalls, recalls[1:]))
+
+
+def test_isin_filter_or_semantics(small_index):
+    index, _, core, attrs = small_index
+    queries = jnp.asarray(core[:3])
+    builders = [FilterBuilder(4).isin(0, [1, 3]) for _ in range(3)]
+    fspec = from_builders(builders)
+    res = search_reference(index, queries, fspec, k=8, n_probes=index.n_clusters)
+    ids = np.asarray(res.ids)
+    for row in ids:
+        for i in row:
+            if i >= 0:
+                assert attrs[i, 0] in (1, 3)
+
+
+def test_empty_filter_returns_no_hits(small_index):
+    index, _, core, attrs = small_index
+    queries = jnp.asarray(core[:2])
+    builders = [FilterBuilder(4).eq(0, 999) for _ in range(2)]  # impossible
+    fspec = from_builders(builders)
+    res = search_reference(index, queries, fspec, k=5, n_probes=index.n_clusters)
+    assert np.all(np.asarray(res.ids) == -1)
+    assert np.all(np.asarray(res.n_passed) == 0)
+
+
+def test_add_vector_then_search_finds_it(small_index):
+    """Paper §4.5: the appended vector becomes retrievable."""
+    index, _, core, attrs = small_index
+    rng = np.random.default_rng(7)
+    new_core = rng.standard_normal((3, 16)).astype(np.float32)
+    new_core /= np.linalg.norm(new_core, axis=-1, keepdims=True)
+    new_attrs = np.full((3, 4), 7, np.int16)
+    new_ids = jnp.asarray([1000, 1001, 1002], dtype=jnp.int32)
+    index2, dropped = add_vectors(
+        index, jnp.asarray(new_core), jnp.asarray(new_attrs), new_ids
+    )
+    assert int(dropped) == 0
+    assert int(index2.n_live) == int(index.n_live) + 3
+    queries = jnp.asarray(new_core)
+    fspec = match_all(3, 4)
+    res = search_reference(index2, queries, fspec, k=1, n_probes=index.n_clusters)
+    np.testing.assert_array_equal(
+        np.asarray(res.ids)[:, 0], [1000, 1001, 1002]
+    )
+
+
+def test_tombstone_hides_vector(small_index):
+    index, _, core, attrs = small_index
+    # find location of id 0
+    loc = np.argwhere(np.asarray(index.ids) == 0)[0]
+    index2 = tombstone(index, jnp.asarray([loc[0]]), jnp.asarray([loc[1]]))
+    queries = jnp.asarray(core[:1])
+    fspec = match_all(1, 4)
+    res = search_reference(index2, queries, fspec, k=5, n_probes=index.n_clusters)
+    assert 0 not in np.asarray(res.ids)[0].tolist()
+    # compaction keeps everything else intact
+    index3 = compact_cluster(index2, int(loc[0]))
+    assert int(index3.counts[loc[0]]) == int(index.counts[loc[0]]) - 1
+    res3 = search_reference(index3, queries, fspec, k=5, n_probes=index.n_clusters)
+    np.testing.assert_array_equal(np.asarray(res3.ids), np.asarray(res.ids))
+
+
+def test_l2_metric_matches_brute_force():
+    core, attrs = make_data(11, n=256, d=8)
+    spec = HybridSpec(dim=8, n_attrs=4, core_dtype=jnp.float32, metric="l2")
+    index, _ = build_ivf(
+        jax.random.key(1), spec, core, attrs, n_clusters=6,
+        kmeans_mode="lloyd", kmeans_steps=5,
+    )
+    queries = jnp.asarray(core[:4] * 1.5)
+    fspec = match_all(4, 4)
+    res = search_reference(index, queries, fspec, k=6, n_probes=6)
+    ref = brute_force(
+        jnp.asarray(core), jnp.asarray(attrs), queries, fspec, k=6, metric="l2"
+    )
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref.ids))
+    np.testing.assert_allclose(
+        np.asarray(res.scores), np.asarray(ref.scores), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_minibatch_kmeans_reduces_inertia():
+    from repro.core.kmeans import minibatch_kmeans, pairwise_neg_dist2, init_from_sample
+
+    core, _ = make_data(5, n=1024, d=8)
+    x = jnp.asarray(core)
+    key = jax.random.key(2)
+    st0 = init_from_sample(key, x, 16)
+    st = minibatch_kmeans(key, x, n_clusters=16, n_steps=50, batch_size=256)
+
+    def inertia(c):
+        s = pairwise_neg_dist2(x, c)
+        return float(jnp.sum(jnp.sum(x * x, -1) - jnp.max(s, -1)))
+
+    assert inertia(st.centroids) < inertia(st0.centroids) * 0.9

@@ -1,0 +1,33 @@
+"""Runs the multi-device selftests in subprocesses (8 fake CPU devices each,
+so the main pytest process keeps exactly one device)."""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+HERE = pathlib.Path(__file__).parent
+SRC = str(HERE.parent / "src")
+
+
+def run_script(name, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(HERE / name)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"{name} failed\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+        )
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_distributed_search_selftest():
+    out = run_script("dist_selftest.py")
+    assert "ALL DISTRIBUTED SELFTESTS PASSED" in out

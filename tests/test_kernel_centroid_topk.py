@@ -1,0 +1,81 @@
+"""centroid_topk kernel vs lax.top_k oracle (permutation-tolerant on ties)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.centroid_topk import (
+    centroid_topk,
+    centroid_topk_ref,
+    probe_centroids,
+)
+
+
+def check_topk_equiv(vals_a, ids_a, vals_b, ids_b, rtol=1e-5):
+    """Set-equivalence check robust to tie ordering: same score multiset,
+    and every id's score matches its rank's score."""
+    np.testing.assert_allclose(
+        np.sort(np.asarray(vals_a), -1), np.sort(np.asarray(vals_b), -1),
+        rtol=rtol, atol=1e-5,
+    )
+    # ids must agree where scores are strictly separated
+    va, vb = np.asarray(vals_a), np.asarray(vals_b)
+    ia, ib = np.asarray(ids_a), np.asarray(ids_b)
+    for r in range(va.shape[0]):
+        strict = np.abs(va[r][:, None] - va[r][None, :]) > 1e-6
+        unique = strict.sum(-1) == va.shape[1] - 1
+        np.testing.assert_array_equal(ia[r][unique], ib[r][unique])
+
+
+@pytest.mark.parametrize(
+    "q,k,d,t,qb,kb,metric",
+    [
+        (8, 64, 16, 4, 8, 32, "dot"),
+        (16, 128, 32, 7, 8, 64, "dot"),
+        (4, 256, 64, 3, 4, 128, "dot"),
+        (8, 64, 16, 4, 8, 32, "l2"),
+        (32, 512, 8, 16, 16, 128, "dot"),
+    ],
+)
+def test_kernel_matches_ref(q, k, d, t, qb, kb, metric):
+    rng = np.random.default_rng(q * k + t)
+    queries = jnp.asarray(rng.standard_normal((q, d)).astype(np.float32))
+    cents = jnp.asarray(rng.standard_normal((k, d)).astype(np.float32))
+    vals, ids = centroid_topk(
+        queries, cents, t=t, q_block=qb, k_block=kb, metric=metric,
+        interpret=True,
+    )
+    rvals, rids = centroid_topk_ref(queries, cents, t=t, metric=metric)
+    check_topk_equiv(vals, ids, rvals, rids)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**20),
+    q=st.sampled_from([4, 8]),
+    k=st.sampled_from([32, 96, 160]),
+    t=st.integers(1, 5),
+)
+def test_probe_centroids_padding_safe(seed, q, k, t):
+    """probe_centroids pads K to the block size; padded ids never surface."""
+    rng = np.random.default_rng(seed)
+    queries = jnp.asarray(rng.standard_normal((q, 8)).astype(np.float32))
+    cents = jnp.asarray(rng.standard_normal((k, 8)).astype(np.float32))
+    vals, ids = probe_centroids(
+        queries, cents, t=t, q_block=4, k_block=64, interpret=True
+    )
+    rvals, rids = centroid_topk_ref(queries, cents, t=t)
+    assert np.all(np.asarray(ids) < k)
+    check_topk_equiv(vals, ids, rvals, rids)
+
+
+def test_bf16_inputs():
+    rng = np.random.default_rng(0)
+    queries = jnp.asarray(rng.standard_normal((8, 32))).astype(jnp.bfloat16)
+    cents = jnp.asarray(rng.standard_normal((64, 32))).astype(jnp.bfloat16)
+    vals, ids = centroid_topk(
+        queries, cents, t=4, q_block=8, k_block=32, interpret=True
+    )
+    rvals, rids = centroid_topk_ref(queries, cents, t=4)
+    check_topk_equiv(vals, ids, rvals, rids, rtol=2e-2)

@@ -1,0 +1,187 @@
+"""Kernel vs oracle: shape/dtype sweeps + hypothesis properties (interpret mode)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FilterBuilder,
+    HybridSpec,
+    brute_force,
+    build_ivf,
+    from_builders,
+    match_all,
+)
+from repro.core.search import search_reference
+from repro.kernels.filtered_scan import (
+    filtered_scan,
+    filtered_scan_ref,
+    search_fused,
+)
+
+NEG_INF = -3.0e38
+
+
+def make_case(seed, *, p, q, k_clusters, vpad, d, m, f, core_dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    slot_cluster = rng.integers(0, k_clusters, p).astype(np.int32)
+    slot_query = rng.integers(0, q, p).astype(np.int32)
+    queries = rng.standard_normal((q, d)).astype(core_dtype)
+    lo = rng.integers(-20, 5, (q, f, m)).astype(np.int16)
+    hi = (lo + rng.integers(0, 30, (q, f, m))).astype(np.int16)
+    vectors = rng.standard_normal((k_clusters, vpad, d)).astype(core_dtype)
+    attrs = rng.integers(-25, 25, (k_clusters, vpad, m)).astype(np.int16)
+    ids = rng.integers(-1, 50, (k_clusters, vpad)).astype(np.int32)
+    norms = np.sum(vectors.astype(np.float32) ** 2, -1)
+    return dict(
+        slot_cluster=jnp.asarray(slot_cluster),
+        slot_query=jnp.asarray(slot_query),
+        queries=jnp.asarray(queries),
+        lo=jnp.asarray(lo),
+        hi=jnp.asarray(hi),
+        vectors=jnp.asarray(vectors),
+        attrs=jnp.asarray(attrs),
+        ids=jnp.asarray(ids),
+        norms=jnp.asarray(norms),
+    )
+
+
+SWEEP = [
+    # p, q, K, vpad, d, m, f, v_block, dtype
+    (4, 2, 3, 256, 32, 4, 1, 128, np.float32),
+    (8, 4, 6, 512, 64, 10, 2, 256, np.float32),
+    (3, 3, 3, 128, 16, 1, 1, 128, np.float32),
+    (16, 8, 8, 256, 128, 6, 3, 64, np.float32),
+    (5, 2, 4, 384, 48, 4, 2, 128, np.float32),
+    (4, 2, 3, 256, 32, 4, 1, 128, np.float16),
+]
+
+
+@pytest.mark.parametrize("p,q,K,vpad,d,m,f,vb,dt", SWEEP)
+def test_kernel_matches_ref_dot(p, q, K, vpad, d, m, f, vb, dt):
+    c = make_case(hash((p, q, K, vpad)) % 2**31, p=p, q=q, k_clusters=K,
+                  vpad=vpad, d=d, m=m, f=f, core_dtype=dt)
+    out = filtered_scan(
+        c["slot_cluster"], c["slot_query"], c["queries"], c["lo"], c["hi"],
+        c["vectors"], c["attrs"], c["ids"], metric="dot", v_block=vb,
+        interpret=True,
+    )
+    ref = filtered_scan_ref(
+        c["slot_cluster"], c["slot_query"], c["queries"], c["lo"], c["hi"],
+        c["vectors"], c["attrs"], c["ids"], metric="dot",
+    )
+    rtol = 1e-5 if dt == np.float32 else 5e-3
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=rtol, atol=1e-5)
+
+
+@pytest.mark.parametrize("p,q,K,vpad,d,m,f,vb,dt", SWEEP[:3])
+def test_kernel_matches_ref_l2(p, q, K, vpad, d, m, f, vb, dt):
+    c = make_case(7 + p, p=p, q=q, k_clusters=K, vpad=vpad, d=d, m=m, f=f,
+                  core_dtype=dt)
+    out = filtered_scan(
+        c["slot_cluster"], c["slot_query"], c["queries"], c["lo"], c["hi"],
+        c["vectors"], c["attrs"], c["ids"], c["norms"], metric="l2",
+        v_block=vb, interpret=True,
+    )
+    ref = filtered_scan_ref(
+        c["slot_cluster"], c["slot_query"], c["queries"], c["lo"], c["hi"],
+        c["vectors"], c["attrs"], c["ids"], c["norms"], metric="l2",
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**20),
+    p=st.integers(1, 6),
+    q=st.integers(1, 4),
+    K=st.integers(1, 5),
+    m=st.integers(1, 6),
+    f=st.integers(1, 3),
+)
+def test_kernel_property_mask_soundness(seed, p, q, K, m, f):
+    """Property: kernel score is NEG_INF exactly where the oracle masks."""
+    c = make_case(seed, p=p, q=q, k_clusters=K, vpad=128, d=16, m=m, f=f)
+    out = np.asarray(
+        filtered_scan(
+            c["slot_cluster"], c["slot_query"], c["queries"], c["lo"],
+            c["hi"], c["vectors"], c["attrs"], c["ids"], metric="dot",
+            v_block=64, interpret=True,
+        )
+    )
+    ref = np.asarray(
+        filtered_scan_ref(
+            c["slot_cluster"], c["slot_query"], c["queries"], c["lo"],
+            c["hi"], c["vectors"], c["attrs"], c["ids"], metric="dot",
+        )
+    )
+    np.testing.assert_array_equal(out <= NEG_INF / 2, ref <= NEG_INF / 2)
+    live = ref > NEG_INF / 2
+    np.testing.assert_allclose(out[live], ref[live], rtol=1e-5, atol=1e-5)
+
+
+@pytest.fixture(scope="module")
+def built():
+    rng = np.random.default_rng(0)
+    n, d, m = 1024, 32, 6
+    core = rng.standard_normal((n, d)).astype(np.float32)
+    core /= np.linalg.norm(core, axis=-1, keepdims=True)
+    attrs = rng.integers(0, 10, (n, m)).astype(np.int16)
+    spec = HybridSpec(dim=d, n_attrs=m, core_dtype=jnp.float32)
+    index, _ = build_ivf(
+        jax.random.key(0), spec, core, attrs, n_clusters=8,
+        kmeans_mode="lloyd", kmeans_steps=6,
+    )
+    return index, core, attrs
+
+
+def test_search_fused_equals_reference(built):
+    index, core, attrs = built
+    q = 6
+    queries = jnp.asarray(core[:q] + 0.01)
+    builders = [FilterBuilder(6).le(0, 6).ge(1, 2) for _ in range(q)]
+    fspec = from_builders(builders)
+    fused = search_fused(index, queries, fspec, k=10, n_probes=4,
+                         v_block=128, interpret=True)
+    ref = search_reference(index, queries, fspec, k=10, n_probes=4)
+    np.testing.assert_array_equal(np.asarray(fused.ids), np.asarray(ref.ids))
+    np.testing.assert_allclose(
+        np.asarray(fused.scores), np.asarray(ref.scores), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_array_equal(
+        np.asarray(fused.n_passed), np.asarray(ref.n_passed)
+    )
+
+
+def test_search_fused_full_probe_is_exact(built):
+    index, core, attrs = built
+    queries = jnp.asarray(core[50:54])
+    fspec = match_all(4, 6)
+    fused = search_fused(index, queries, fspec, k=8,
+                         n_probes=index.n_clusters, v_block=128,
+                         interpret=True)
+    oracle = brute_force(jnp.asarray(core), jnp.asarray(attrs), queries,
+                         fspec, k=8)
+    np.testing.assert_array_equal(np.asarray(fused.ids), np.asarray(oracle.ids))
+
+
+def test_search_fused_l2(built):
+    index, core, attrs = built
+    # rebuild with l2 metric
+    spec = HybridSpec(dim=32, n_attrs=6, core_dtype=jnp.float32, metric="l2")
+    index_l2, _ = build_ivf(
+        jax.random.key(1), spec, core, attrs, n_clusters=8,
+        kmeans_mode="lloyd", kmeans_steps=6,
+    )
+    queries = jnp.asarray(core[10:14] * 1.3)
+    fspec = match_all(4, 6)
+    fused = search_fused(index_l2, queries, fspec, k=6,
+                         n_probes=8, v_block=128, interpret=True)
+    oracle = brute_force(jnp.asarray(core), jnp.asarray(attrs), queries,
+                         fspec, k=6, metric="l2")
+    np.testing.assert_array_equal(np.asarray(fused.ids), np.asarray(oracle.ids))
+    np.testing.assert_allclose(
+        np.asarray(fused.scores), np.asarray(oracle.scores), rtol=1e-4, atol=1e-4
+    )
