@@ -1,0 +1,171 @@
+"""Search-path benchmark: reference vs old fused vs tiled fused.
+
+Models the serving workload the tiled path was built for — heavy concurrent
+traffic around a handful of hot topics, so a batch's probes overlap strongly
+(the batch-sharing observation in SIEVE / the filtered-ANNS study).  The
+tiled path deduplicates those probes per query tile and streams each unique
+cluster once; ``u_cap`` is sized from the observed per-tile unique count
+(rounded up to a multiple of 8, one recompile per bucket), so results stay
+exactly equal to ``search_reference``'s — the script asserts that.
+
+Emits ``BENCH_search.json`` at the repo root with QPS and p50 latency per
+(path, Q) cell, plus the dedup ratio.  Run with:
+
+    PYTHONPATH=src python benchmarks/bench_search.py
+
+The old fused path runs the Pallas kernel in interpret mode on CPU (it
+cannot lower to Mosaic without a TPU), so it is benchmarked with one
+measured iteration and full-list blocks; its numbers dominate wall time.
+Pass ``--skip-old-fused`` to drop it for quick reruns.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import HybridSpec, build_ivf, match_all
+from repro.core.ivf import round_up
+from repro.core.search import search_centroids, search_reference
+from repro.kernels.filtered_scan import search_fused, search_fused_tiled
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+N, D, M, KC = 60_000, 128, 6, 64
+T, K = 4, 10
+N_HOT = 8       # hot topics the traffic clusters around
+NOISE = 0.01    # per-query perturbation of its topic seed
+Q_SWEEP = (8, 64, 256)
+
+
+def _timeit(fn, *args, n_it=5):
+    jax.block_until_ready(fn(*args))  # compile + warm
+    ts = []
+    for _ in range(n_it):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def build():
+    rng = np.random.default_rng(0)
+    core = rng.standard_normal((N, D)).astype(np.float32)
+    core /= np.linalg.norm(core, axis=-1, keepdims=True)
+    attrs = rng.integers(0, 16, (N, M)).astype(np.int16)
+    spec = HybridSpec(dim=D, n_attrs=M, core_dtype=jnp.float32)
+    index, stats = build_ivf(
+        jax.random.key(0), spec, jnp.asarray(core), jnp.asarray(attrs),
+        n_clusters=KC, kmeans_steps=25,
+    )
+    return index, stats, core
+
+
+def hot_queries(core, q, rng):
+    hot = core[rng.integers(0, N, N_HOT)]
+    qs = hot[rng.integers(0, N_HOT, q)]
+    qs = qs + NOISE * rng.standard_normal((q, D)).astype(np.float32)
+    return jnp.asarray(qs)
+
+
+def pick_u_cap(index, queries, q_block):
+    """Size the unique-probe table from observed traffic (8-bucketed so jit
+    recompiles only when the overlap regime actually shifts)."""
+    probe_ids, _ = search_centroids(index, queries, T)
+    pids = np.asarray(probe_ids)
+    q = pids.shape[0]
+    pad = (-q) % q_block
+    if pad:
+        pids = np.concatenate([pids, np.repeat(pids[-1:], pad, axis=0)])
+    per_tile = pids.reshape(-1, q_block * T)
+    max_u = max(len(np.unique(row)) for row in per_tile)
+    return round_up(max_u, 8), max_u
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-old-fused", action="store_true")
+    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_search.json"))
+    args = ap.parse_args()
+
+    print(f"building index N={N} D={D} K={KC} ...")
+    index, stats, core = build()
+    rng = np.random.default_rng(1)
+    results = []
+    for q in Q_SWEEP:
+        queries = hot_queries(core, q, rng)
+        fspec = match_all(q, M)
+        qb = min(64, round_up(q, 8))
+        u_cap, max_u = pick_u_cap(index, queries, qb)
+        n_tiles = ((q + qb - 1) // qb)
+        dedup_ratio = (q * T) / (n_tiles * max_u)
+
+        cell = {}
+        t_ref = _timeit(
+            lambda qs: search_reference(index, qs, fspec, k=K, n_probes=T),
+            queries,
+        )
+        cell["reference"] = (t_ref, 5)
+
+        t_tiled = _timeit(
+            lambda qs: search_fused_tiled(
+                index, qs, fspec, k=K, n_probes=T, q_block=qb, u_cap=u_cap
+            ),
+            queries,
+        )
+        cell["tiled_fused"] = (t_tiled, 5)
+
+        # exactness gate: the speedup must not come from wrong answers
+        r_ref = search_reference(index, queries, fspec, k=K, n_probes=T)
+        r_tld = search_fused_tiled(
+            index, queries, fspec, k=K, n_probes=T, q_block=qb, u_cap=u_cap
+        )
+        assert (np.asarray(r_ref.ids) == np.asarray(r_tld.ids)).all(), \
+            "tiled != reference"
+
+        if not args.skip_old_fused:
+            # interpret-mode Pallas: one warmed iteration (minutes per call);
+            # iters=1 in the JSON flags this as a single sample, not a median
+            cell["old_fused"] = (_timeit(
+                lambda qs: search_fused(
+                    index, qs, fspec, k=K, n_probes=T, v_block=stats.vpad
+                ),
+                queries, n_it=1,
+            ), 1)
+
+        for path, (t, n_it) in cell.items():
+            results.append(dict(
+                path=path, q=q, p50_ms=round(t * 1e3, 3),
+                qps=round(q / t, 1), iters=n_it,
+            ))
+        line = "  ".join(
+            f"{p}: {t * 1e3:7.1f}ms ({q / t:7.1f} qps)"
+            for p, (t, _) in cell.items()
+        )
+        print(f"Q={q:4d} u_cap={u_cap:3d} dedup {dedup_ratio:.1f}x  {line}")
+
+    by = {(r["path"], r["q"]): r for r in results}
+    speedup = by[("tiled_fused", 64)]["qps"] / by[("reference", 64)]["qps"]
+    out = dict(
+        config=dict(
+            n=N, d=D, m=M, n_clusters=KC, n_probes=T, k=K, vpad=stats.vpad,
+            n_hot_topics=N_HOT, noise=NOISE, backend=jax.default_backend(),
+            workload="hot-topic traffic (batch probes overlap strongly)",
+        ),
+        results=results,
+        tiled_vs_reference_qps_at_q64=round(speedup, 2),
+        exact_vs_reference=True,
+    )
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"tiled vs reference @ Q=64: {speedup:.2f}x  → {args.out}")
+
+
+if __name__ == "__main__":
+    main()

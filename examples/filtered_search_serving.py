@@ -13,8 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import HybridSpec, build_ivf
-from repro.core.search import search_reference
-from repro.core.serving import SearchServer
+from repro.core.serving import SearchServer, make_fused_search_fn
 from repro.data import synthetic_attributes, synthetic_embeddings
 from repro.core.hybrid import ATTR_MAX, ATTR_MIN
 
@@ -31,10 +30,17 @@ def main():
         n_clusters=100, kmeans_steps=40,
     )
 
-    def search_fn(queries, fspec, shard_ok):
-        del shard_ok  # single host; pod path in core/distributed.py
-        res = search_reference(index, queries, fspec, k=k, n_probes=7)
-        return res.scores, res.ids
+    # Tiled fused path: the micro-batch's overlapping probes are deduped per
+    # query tile, so each hot cluster is streamed once per batch.
+    search_fn = make_fused_search_fn(index, k=k, n_probes=7,
+                                     q_block=batch_size)
+    # warm the jit cache at the server's static batch shape so the first
+    # real micro-batch doesn't pay compile latency
+    from repro.core import match_all
+    jax.block_until_ready(search_fn(
+        jnp.zeros((batch_size, d), jnp.float32), match_all(batch_size, m),
+        None,
+    ))
 
     server = SearchServer(
         search_fn, batch_size=batch_size, dim=d, n_attrs=m, n_terms=1,

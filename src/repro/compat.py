@@ -1,0 +1,47 @@
+"""Version tolerance for the handful of JAX APIs that moved between releases.
+
+The repo pins no JAX version; the container ships one.  Three APIs this
+codebase leans on were renamed across the 0.4 → 0.6 line:
+
+  * ``pltpu.TPUCompilerParams``  →  ``pltpu.CompilerParams``
+  * ``jax.experimental.shard_map.shard_map(check_rep=...)``
+                                 →  ``jax.shard_map(check_vma=...)``
+  * ``with mesh:``               →  ``with jax.set_mesh(mesh):``
+
+Every call site imports the spelling-stable wrappers below instead of
+guessing which JAX it is running under.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+# pltpu.CompilerParams (new) vs pltpu.TPUCompilerParams (old).
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check=True):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check,
+        )
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check=True):
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check,
+        )
+
+
+def use_mesh(mesh):
+    """Context manager making ``mesh`` ambient for PartitionSpec resolution."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # older JAX: Mesh is itself the context manager

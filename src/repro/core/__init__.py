@@ -43,7 +43,13 @@ from repro.core.search import (
     search_centroids,
     search_reference,
 )
-from repro.core.topk import masked_topk, merge_topk, topk_tree_merge
+from repro.core.probes import dedup_rows, plan_probe_tiles
+from repro.core.topk import (
+    masked_topk,
+    merge_topk,
+    merge_topk_many,
+    topk_tree_merge,
+)
 from repro.core.update import add_vectors, compact_cluster, tombstone
 
 __all__ = [k for k in dir() if not k.startswith("_")]

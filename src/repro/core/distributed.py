@@ -21,6 +21,13 @@ per-query top-k, then a tree merge over ``model → data → pod``.  Each merge
 stage moves only ``[axis, Q, k]`` — the collective term stays orders of
 magnitude below the scan term (EXPERIMENTS §Roofline).
 
+Tiled backends (``*_tiled``) additionally deduplicate each chip's probes per
+(query tile, local cluster) pair before scanning — see ``core/probes.py`` —
+so a popular cluster probed by many queries in the batch is streamed from the
+chip's HBM exactly once, and the scan runs the query-tiled kernel
+(``[QB, D] @ [D, VB]`` matmuls with in-kernel streaming top-k) instead of
+per-probe matvecs over a materialized ``[P_cap, Vpad]`` score matrix.
+
 Straggler mitigation: the merge is an associative monoid, so any chip's
 contribution can be dropped (deadline expiry, preemption) and the result
 remains a valid, slightly-lower-recall answer.  ``shard_ok`` implements the
@@ -36,12 +43,21 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+from repro.core import ivf as ivf_lib
+from repro.core import probes as probes_lib
 from repro.core import topk as topk_lib
 from repro.core.filters import FilterSpec
 from repro.core.ivf import IVFFlatIndex
 from repro.core.search import SearchResult
 from repro.kernels.centroid_topk.ops import probe_centroids
-from repro.kernels.filtered_scan.filtered_scan import filtered_scan
+from repro.kernels.filtered_scan.filtered_scan import (
+    filtered_scan,
+    filtered_scan_tiled,
+)
+from repro.kernels.filtered_scan.ops import tiled_scan_xla
+
+TILED_BACKENDS = ("pallas_tiled", "pallas_tiled_interpret", "xla_tiled")
 
 Array = jax.Array
 NEG_INF = topk_lib.NEG_INF
@@ -94,6 +110,37 @@ def dispatch_probes(
     sv = sv.at[owner_s, rank].set(True, mode="drop")
     n_overflowed = jnp.sum((rank >= p_cap).astype(jnp.int32))
     return sc, sq, sv, n_overflowed
+
+
+def dispatch_probes_tiled(
+    probe_ids: Array, *, n_shards: int, k_local: int, p_cap: int,
+    u_cap: int, q_block: int,
+):
+    """Probe dispatch + per-shard (query tile, cluster) deduplication.
+
+    Extends :func:`dispatch_probes` with the tiled kernel's slot tables:
+    per shard, the valid probes are deduplicated by ``(query_tile,
+    local_cluster)`` so a cluster probed by many queries of a tile is
+    scanned once on its owner chip.
+
+    Returns the four :func:`dispatch_probes` outputs plus:
+      u_cluster [S, u_cap] int32 — local cluster per unique slot (pads
+                repeat the last unique id → Pallas skips their re-DMA),
+      u_tile    [S, u_cap] int32 — query tile per unique slot,
+      slot_of   [S, P_cap] int32 — unique-slot index of each probe,
+      u_count   [S] int32 — live unique slots per shard.
+    """
+    sc, sq, sv, n_overflowed = dispatch_probes(
+        probe_ids, n_shards=n_shards, k_local=k_local, p_cap=p_cap
+    )
+    tile = sq // q_block
+    key = tile * k_local + sc  # [S, P_cap]
+    table, slot_of, u_count = probes_lib.dedup_rows(key, sv, u_cap)
+    # u_cap = min(p_cap, k_local·n_tiles) can never overflow; clip anyway.
+    slot_of = jnp.minimum(slot_of, u_cap - 1)
+    u_cluster = table % k_local
+    u_tile = table // k_local
+    return sc, sq, sv, n_overflowed, u_cluster, u_tile, slot_of, u_count
 
 
 def _rank_within_query(slot_query: Array, slot_valid: Array, t: int) -> Array:
@@ -150,33 +197,58 @@ def _local_shard_search(
     slot_cluster: Array,  # [P_cap]
     slot_query: Array,  # [P_cap]
     slot_valid: Array,  # [P_cap] bool (already gated by shard_ok)
+    u_cluster: Optional[Array] = None,  # [U] (tiled backends)
+    u_tile: Optional[Array] = None,  # [U]
+    slot_of: Optional[Array] = None,  # [P_cap] → index into U
     *,
     metric: str,
     k: int,
     t: int,
+    q_block: int,
     v_block: int,
     backend: str,
 ) -> Tuple[Array, Array]:
     """One chip's contribution: fused scan over its slots → per-query top-k."""
     q = queries.shape[0]
-    if backend in ("pallas", "pallas_interpret"):
-        scores = filtered_scan(
-            slot_cluster, slot_query, queries, lo, hi, vectors, attrs, ids,
-            norms, scales, metric=metric, v_block=v_block,
-            interpret=backend == "pallas_interpret",
-        )  # [P_cap, Vpad]
-    elif backend in ("xla_map", "xla_vmap"):
-        scores = _scan_slots_xla(
-            vectors, attrs, ids, norms, scales, queries, lo, hi,
-            slot_cluster, slot_query, metric=metric,
-            use_vmap=backend == "xla_vmap",
-        )
+    if backend in TILED_BACKENDS:
+        # deduped scan → per-slot [QB, k] fragments → per-probe gather
+        if backend == "xla_tiled":
+            uvals, uids, _ = tiled_scan_xla(
+                u_cluster, u_tile, queries, lo, hi, vectors, attrs, ids,
+                norms, scales, metric=metric, k=k, q_block=q_block,
+            )
+        else:
+            uvals, uids, _ = filtered_scan_tiled(
+                u_cluster, u_tile, queries, lo, hi, vectors, attrs, ids,
+                norms, scales, metric=metric, k=k, q_block=q_block,
+                v_block=v_block,
+                interpret=backend == "pallas_tiled_interpret",
+            )
+        row = slot_query % q_block  # [P_cap]
+        svals = uvals[slot_of, row]  # [P_cap, k]
+        sids = uids[slot_of, row]
+        svals = jnp.where(slot_valid[:, None], svals, NEG_INF)
+        sids = jnp.where(slot_valid[:, None], sids, -1)
+    elif backend in ("pallas", "pallas_interpret", "xla_map", "xla_vmap"):
+        if backend in ("pallas", "pallas_interpret"):
+            scores = filtered_scan(
+                slot_cluster, slot_query, queries, lo, hi, vectors, attrs,
+                ids, norms, scales, metric=metric, v_block=v_block,
+                interpret=backend == "pallas_interpret",
+            )  # [P_cap, Vpad]
+        else:
+            scores = _scan_slots_xla(
+                vectors, attrs, ids, norms, scales, queries, lo, hi,
+                slot_cluster, slot_query, metric=metric,
+                use_vmap=backend == "xla_vmap",
+            )
+        scores = jnp.where(slot_valid[:, None], scores, NEG_INF)
+        slot_ids = jnp.take(ids, slot_cluster, axis=0)  # [P_cap, Vpad]
+        svals, sids = topk_lib.masked_topk(
+            scores, None, k, ids=slot_ids
+        )  # [P,k]
     else:
         raise ValueError(backend)
-    scores = jnp.where(slot_valid[:, None], scores, NEG_INF)
-    slot_ids = jnp.take(ids, slot_cluster, axis=0)  # [P_cap, Vpad]
-
-    svals, sids = topk_lib.masked_topk(scores, None, k, ids=slot_ids)  # [P,k]
 
     rank = _rank_within_query(slot_query, slot_valid, t)
     qvals = jnp.full((q, t, k), NEG_INF, jnp.float32)
@@ -198,9 +270,12 @@ class ShardedSearchConfig:
     v_block: int = 256
     q_block: int = 128  # centroid-topk tiles
     k_block: int = 512
+    scan_q_block: int = 64  # query-tile height QB for the tiled backends
     use_centroid_kernel: bool = False  # XLA path on CPU; kernel on TPU
-    # "pallas" (TPU), "pallas_interpret" (CPU tests), "xla_map" (dry-run
-    # exec variant), "xla_vmap" (dry-run cost variant)
+    # Per-probe scans: "pallas" (TPU), "pallas_interpret" (CPU tests),
+    # "xla_map" (dry-run exec variant), "xla_vmap" (dry-run cost variant).
+    # Tiled, probe-deduplicated scans with streaming top-k: "pallas_tiled"
+    # (TPU), "pallas_tiled_interpret" (CPU tests), "xla_tiled" (fast CPU).
     backend: str = "pallas_interpret"
     quantized: bool = False  # SQ8 lists (see ivf.quantize_index)
 
@@ -233,36 +308,47 @@ def make_sharded_search(
     p_cap = probe_capacity(q_total, cfg.n_probes, n_shards, cfg.p_cap_slack)
     merge_axes = tuple(reversed(axes))  # model → data → pod
     needs_norms = metric == "l2"
+    tiled = cfg.backend in TILED_BACKENDS
+    scan_qb = min(cfg.scan_q_block, ivf_lib.round_up(q_total, 8))
+    q_pad_total = ivf_lib.round_up(q_total, scan_qb)
+    n_tiles = q_pad_total // scan_qb
+    u_cap = max(1, min(p_cap, k_local * n_tiles))
 
     shard_spec = P(axes)  # leading (cluster) axis split over all mesh axes
     repl = P()
 
-    def _local(vec, att, idl, nrm, scl, ok, sc, sq, sv, queries, lo, hi):
+    def _local(vec, att, idl, nrm, scl, ok, sc, sq, sv, uc, ut, uslot,
+               queries, lo, hi):
         sid = jnp.int32(0)
         for a in axes:
             sid = sid * mesh.shape[a] + jax.lax.axis_index(a)
         my_sc = jax.lax.dynamic_index_in_dim(sc, sid, keepdims=False)
         my_sq = jax.lax.dynamic_index_in_dim(sq, sid, keepdims=False)
         my_sv = jax.lax.dynamic_index_in_dim(sv, sid, keepdims=False)
+        my_uc = jax.lax.dynamic_index_in_dim(uc, sid, keepdims=False)
+        my_ut = jax.lax.dynamic_index_in_dim(ut, sid, keepdims=False)
+        my_us = jax.lax.dynamic_index_in_dim(uslot, sid, keepdims=False)
         my_sv = jnp.logical_and(my_sv, ok[0])
         vals, out_ids = _local_shard_search(
             vec, att, idl, nrm if needs_norms else None,
             scl if quantized else None, queries, lo, hi,
-            my_sc, my_sq, my_sv, metric=metric, k=cfg.k, t=cfg.n_probes,
+            my_sc, my_sq, my_sv, my_uc, my_ut, my_us,
+            metric=metric, k=cfg.k, t=cfg.n_probes, q_block=scan_qb,
             v_block=cfg.v_block, backend=cfg.backend,
         )
         return topk_lib.topk_tree_merge(vals, out_ids, cfg.k, merge_axes)
 
     quantized = cfg.quantized
-    sharded_local = jax.shard_map(
+    sharded_local = compat.shard_map(
         _local,
         mesh=mesh,
         in_specs=(shard_spec, shard_spec, shard_spec, shard_spec, shard_spec,
-                  shard_spec, repl, repl, repl, repl, repl, repl),
+                  shard_spec, repl, repl, repl, repl, repl, repl, repl, repl,
+                  repl),
         out_specs=(repl, repl),
         # pallas_call's out_shape carries no varying-mesh-axes annotation;
-        # VMA checking cannot see through it, so it is disabled here.
-        check_vma=False,
+        # VMA/replication checking cannot see through it, so it is disabled.
+        check=False,
     )
 
     def search_fn(index: IVFFlatIndex, queries: Array, fspec: FilterSpec,
@@ -275,12 +361,25 @@ def make_sharded_search(
             q_block=min(cfg.q_block, queries.shape[0]),
             k_block=min(cfg.k_block, n_clusters),
             metric=metric, use_kernel=cfg.use_centroid_kernel,
-            interpret=cfg.backend != "pallas",
+            interpret=cfg.backend not in ("pallas", "pallas_tiled"),
         )
         # ---- dispatch (replicated compute; each chip consumes its row) ----
-        sc, sq, sv, n_drop = dispatch_probes(
-            probe_ids, n_shards=n_shards, k_local=k_local, p_cap=p_cap
-        )
+        if tiled:
+            sc, sq, sv, n_drop, uc, ut, uslot, _ = dispatch_probes_tiled(
+                probe_ids, n_shards=n_shards, k_local=k_local, p_cap=p_cap,
+                u_cap=u_cap, q_block=scan_qb,
+            )
+            queries_in = probes_lib.pad_to_tiles(queries, scan_qb)
+            lo_in = probes_lib.pad_to_tiles(fspec.lo, scan_qb)
+            hi_in = probes_lib.pad_to_tiles(fspec.hi, scan_qb)
+        else:
+            sc, sq, sv, n_drop = dispatch_probes(
+                probe_ids, n_shards=n_shards, k_local=k_local, p_cap=p_cap
+            )
+            uc = jnp.zeros((n_shards, 1), jnp.int32)
+            ut = jnp.zeros((n_shards, 1), jnp.int32)
+            uslot = jnp.zeros((n_shards, p_cap), jnp.int32)
+            queries_in, lo_in, hi_in = queries, fspec.lo, fspec.hi
         norms = index.norms if needs_norms else jnp.zeros(
             (n_clusters, 1), jnp.float32
         )
@@ -289,12 +388,13 @@ def make_sharded_search(
         )
         vals, out_ids = sharded_local(
             index.vectors, index.attrs, index.ids, norms, scales, shard_ok,
-            sc, sq, sv, queries, fspec.lo, fspec.hi,
+            sc, sq, sv, uc, ut, uslot, queries_in, lo_in, hi_in,
         )
+        q = queries.shape[0]
+        vals, out_ids = vals[:q], out_ids[:q]
         if needs_norms:
             q2 = jnp.sum(queries.astype(jnp.float32) ** 2, -1, keepdims=True)
             vals = jnp.where(vals > NEG_INF / 2, vals - q2, vals)
-        q = queries.shape[0]
         zero = jnp.zeros((q,), jnp.int32)
         return SearchResult(vals, out_ids, zero + n_drop, zero)
 

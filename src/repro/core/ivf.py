@@ -70,8 +70,9 @@ class IVFFlatIndex:
         total = 0
         for f in (self.centroids, self.vectors, self.attrs, self.ids, self.counts):
             total += f.size * f.dtype.itemsize
-        if self.norms is not None:
-            total += self.norms.size * self.norms.dtype.itemsize
+        for opt in (self.norms, self.scales):
+            if opt is not None:
+                total += opt.size * opt.dtype.itemsize
         return total
 
 

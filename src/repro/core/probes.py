@@ -1,0 +1,139 @@
+"""Probe planning: query tiling and per-batch probe deduplication.
+
+Under real traffic a batch of Q queries probing T lists each hits far fewer
+than Q·T *distinct* lists — popular clusters are probed by many queries at
+once (the batch-sharing observation in SIEVE and the filtered-ANNS
+experimental study).  The per-(query, probe) slot layout the original fused
+scan used re-streams a duplicated cluster's blocks HBM→VMEM once per
+duplicate.  This module builds the slot tables that let the tiled kernel
+stream every (query-tile, cluster) pair exactly once:
+
+  * queries are grouped into static tiles of ``q_block`` rows;
+  * per tile, the Q·T probe ids are sorted and deduplicated into a
+    static-size table of ``u_cap`` unique-cluster slots (padded by repeating
+    the last unique id, so consecutive padded slots hit the Pallas
+    revisiting fast path and cost no extra HBM traffic);
+  * every original (query, t) probe keeps a pointer into the table so the
+    per-probe top-k candidates can be gathered back after the scan.
+
+All shapes are static (sort + cumsum + scatter, no data-dependent sizes), so
+the whole plan jits and shards.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# int32 max: sorts after every real key, so invalid entries sink to the end.
+_SENTINEL = jnp.int32(2**31 - 1)
+
+
+def dedup_rows(
+    keys: Array, valid: Optional[Array], cap: int
+) -> Tuple[Array, Array, Array]:
+    """Row-wise sorted dedup into a static-size unique table.
+
+    Args:
+      keys:  [R, L] int32 (each row deduped independently).
+      valid: [R, L] bool or None; invalid entries are excluded.
+      cap:   static table width; callers must size it so the true unique
+             count never exceeds it (e.g. ``min(L, key_space)``).
+
+    Returns:
+      table   [R, cap] int32 — unique keys, ascending; tail slots are padded
+              with the row's last unique key (0 for all-invalid rows).
+      slot_of [R, L] int32 — UNCAPPED unique index of each entry's key (junk,
+              but ≥ 0, where ``valid`` is False).  Values ≥ cap mark keys
+              that overflowed the table — callers must mask or clip them.
+      count   [R] int32 — number of unique valid keys per row.
+    """
+    r, l = keys.shape
+    k = keys if valid is None else jnp.where(valid, keys, _SENTINEL)
+    order = jnp.argsort(k, axis=1)
+    ks = jnp.take_along_axis(k, order, axis=1)  # [R, L] ascending
+    vs = ks != _SENTINEL
+    first = jnp.logical_and(
+        vs,
+        jnp.concatenate(
+            [jnp.ones((r, 1), bool), ks[:, 1:] != ks[:, :-1]], axis=1
+        ),
+    )
+    slot_sorted = jnp.maximum(
+        jnp.cumsum(first.astype(jnp.int32), axis=1) - 1, 0
+    )
+    count = jnp.sum(first.astype(jnp.int32), axis=1)
+
+    rows = jnp.arange(r)[:, None]
+    dest = jnp.where(first, slot_sorted, cap)  # ≥ cap ⇒ dropped
+    table = jnp.zeros((r, cap), jnp.int32).at[rows, dest].set(
+        ks.astype(jnp.int32), mode="drop"
+    )
+    capped = jnp.minimum(count, cap)
+    last = jnp.take_along_axis(table, jnp.maximum(capped - 1, 0)[:, None], 1)
+    table = jnp.where(
+        jnp.arange(cap)[None, :] < jnp.maximum(capped, 1)[:, None],
+        table, last,
+    )
+
+    slot_of = jnp.zeros((r, l), jnp.int32).at[rows, order].set(slot_sorted)
+    return table, slot_of, count
+
+
+def plan_probe_tiles(
+    probe_ids: Array, *, q_block: int, u_cap: int
+) -> Tuple[Array, Array, Array, Array, Array]:
+    """Builds the tiled kernel's slot tables for a single-host batch.
+
+    Args:
+      probe_ids: [Qpad, T] int32 cluster ids, Qpad a multiple of q_block.
+      q_block:   query-tile height QB.
+      u_cap:     static unique-probe capacity per tile.
+                 ``min(q_block·T, n_clusters)`` is always sufficient; smaller
+                 values trade recall for speed under overlap-heavy traffic —
+                 overflowed probes are reported via ``probe_ok`` and their
+                 candidates dropped (sound degradation, like the distributed
+                 dispatch's P_cap).
+
+    Returns:
+      slot_cluster  [n_tiles·u_cap] int32 — cluster scanned by each slot.
+      slot_tile     [n_tiles·u_cap] int32 — query tile each slot serves.
+      slot_of_probe [Qpad, T] int32 — flat slot index of each original probe
+                    (clipped in-range; check probe_ok).
+      probe_ok      [Qpad, T] bool — False where the probe overflowed u_cap.
+      n_unique      [n_tiles] int32 — live slots per tile (rest are pads).
+    """
+    qpad, t = probe_ids.shape
+    if qpad % q_block:
+        raise ValueError(f"Qpad={qpad} not a multiple of q_block={q_block}")
+    n_tiles = qpad // q_block
+    flat = probe_ids.reshape(n_tiles, q_block * t).astype(jnp.int32)
+    table, slot_of, count = dedup_rows(flat, None, u_cap)
+    slot_cluster = table.reshape(-1)
+    slot_tile = jnp.repeat(
+        jnp.arange(n_tiles, dtype=jnp.int32), u_cap, total_repeat_length=n_tiles * u_cap
+    )
+    probe_ok = (slot_of < u_cap).reshape(qpad, t)
+    slot_of_probe = (
+        jnp.minimum(slot_of, u_cap - 1)
+        + jnp.arange(n_tiles, dtype=jnp.int32)[:, None] * u_cap
+    ).reshape(qpad, t)
+    return slot_cluster, slot_tile, slot_of_probe, probe_ok, count
+
+
+def pad_to_tiles(x: Array, q_block: int) -> Array:
+    """Pads the leading (query) axis up to a q_block multiple with edge rows.
+
+    Edge rows (copies of the last real query) dedupe into the real queries'
+    probe slots, so padding adds no scan work.
+    """
+    q = x.shape[0]
+    pad = (-q) % q_block
+    if pad == 0:
+        return x
+    cfg = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, cfg, mode="edge")

@@ -33,6 +33,31 @@ from repro.core.filters import FilterSpec, match_all
 Array = jax.Array
 
 
+def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
+                         v_block: int = 256, backend: Optional[str] = None
+                         ) -> Callable:
+    """The batched server's default search step: the tiled fused path.
+
+    Returns ``search_fn(queries, fspec, shard_ok) -> (scores, ids)`` wired
+    to :func:`repro.kernels.filtered_scan.ops.search_fused_tiled` — the
+    micro-batcher's whole purpose is assembling a query batch whose probes
+    overlap, which is exactly what the tiled kernel's per-tile probe dedup
+    converts into saved HBM traffic.  ``shard_ok`` is accepted (and ignored)
+    so the same server drives the single-host and pod paths.
+    """
+    from repro.kernels.filtered_scan.ops import search_fused_tiled
+
+    def search_fn(queries, fspec, shard_ok=None):
+        del shard_ok  # single host; the pod path lives in core/distributed
+        res = search_fused_tiled(
+            index, queries, fspec, k=k, n_probes=n_probes,
+            q_block=q_block, v_block=v_block, backend=backend,
+        )
+        return res.scores, res.ids
+
+    return search_fn
+
+
 @dataclasses.dataclass
 class Request:
     query: np.ndarray  # [D]

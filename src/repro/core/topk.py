@@ -49,6 +49,30 @@ def merge_topk(
     return masked_topk(vals, None, k, ids=ids)
 
 
+def merge_topk_many(vals: Array, ids: Array, k: int, axis: int) -> Tuple[Array, Array]:
+    """Folds N candidate sets along ``axis`` down to one top-k per row.
+
+    A balanced tree of :func:`merge_topk` combines — the monoid's
+    associativity is what lets the tiled search path merge its per-probe
+    streaming top-k fragments in log2(N) rounds instead of one wide sort.
+    """
+    vals = jnp.moveaxis(vals, axis, -2)  # [..., N, k]
+    ids = jnp.moveaxis(ids, axis, -2)
+    n = vals.shape[-2]
+    while n > 1:
+        half = n // 2
+        a = (vals[..., :half, :], ids[..., :half, :])
+        b = (vals[..., half : 2 * half, :], ids[..., half : 2 * half, :])
+        mv, mi = merge_topk(a, b, k)
+        if n % 2:
+            vals = jnp.concatenate([mv, vals[..., -1:, :]], axis=-2)
+            ids = jnp.concatenate([mi, ids[..., -1:, :]], axis=-2)
+        else:
+            vals, ids = mv, mi
+        n = vals.shape[-2]
+    return vals[..., 0, :], ids[..., 0, :]
+
+
 def merge_topk_axis(
     vals: Array, ids: Array, k: int, axis_name: str
 ) -> Tuple[Array, Array]:

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -3.0e38
 
 
@@ -118,7 +120,7 @@ def centroid_topk(
             pltpu.VMEM((q_block, t), jnp.float32),
             pltpu.VMEM((q_block, t), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,5 +1,18 @@
-from repro.kernels.filtered_scan.filtered_scan import filtered_scan
-from repro.kernels.filtered_scan.ops import search_fused
-from repro.kernels.filtered_scan.ref import filtered_scan_ref
+from repro.kernels.filtered_scan.filtered_scan import (
+    filtered_scan,
+    filtered_scan_tiled,
+)
+from repro.kernels.filtered_scan.ops import search_fused, search_fused_tiled
+from repro.kernels.filtered_scan.ref import (
+    filtered_scan_ref,
+    filtered_scan_tiled_ref,
+)
 
-__all__ = ["filtered_scan", "filtered_scan_ref", "search_fused"]
+__all__ = [
+    "filtered_scan",
+    "filtered_scan_ref",
+    "filtered_scan_tiled",
+    "filtered_scan_tiled_ref",
+    "search_fused",
+    "search_fused_tiled",
+]

@@ -1,22 +1,40 @@
-"""Jit'd wrapper: index-level fused filtered search built on the Pallas scan.
+"""Jit'd wrappers: index-level fused filtered search built on the Pallas scans.
 
-``search_fused`` mirrors :func:`repro.core.search.search_reference` exactly
-(same SearchResult contract) but never materializes the [Q, T, Vpad, D]
-gather: probes are flattened to slots and streamed by the kernel.
+Two entry points share :class:`repro.core.search.SearchResult`'s contract:
+
+  * :func:`search_fused`       — the original per-(query, probe) slot path.
+    Still materializes a ``[Q·T, Vpad]`` score matrix on the way to top-k.
+  * :func:`search_fused_tiled` — the batched successor.  Queries are tiled,
+    probes are deduplicated per tile (``core/probes.py``), the kernel scores
+    a whole ``[QB, D]`` query tile per streamed block and reduces it to a
+    running ``[QB, k]`` on the fly, and the per-probe fragments are merged
+    with the ``merge_topk`` monoid — peak memory ``O(slots·QB·k)``, never
+    ``O(Q·T·Vpad)``, and a cluster probed by many queries of a tile is
+    streamed HBM→VMEM exactly once.
+
+Backends for the tiled path: ``"pallas"`` (compiled, TPU), ``"pallas_interpret"``
+(CPU debugging/tests), ``"xla"`` (pure-jnp streaming executor — the fast CPU
+path, chunked ``lax.map`` over slots so the same never-materialize bound
+holds).  ``backend=None`` picks ``"pallas"`` on TPU and ``"xla"`` elsewhere.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import probes as probes_lib
 from repro.core import topk as topk_lib
 from repro.core.filters import FilterSpec
-from repro.core.ivf import IVFFlatIndex
+from repro.core.ivf import IVFFlatIndex, round_up
 from repro.core.search import SearchResult, search_centroids
-from repro.kernels.filtered_scan.filtered_scan import filtered_scan
+from repro.kernels.filtered_scan.filtered_scan import (
+    filtered_scan,
+    filtered_scan_tiled,
+)
 
 Array = jax.Array
 
@@ -32,12 +50,16 @@ def search_fused(
     k: int,
     n_probes: int,
     v_block: int = 256,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> SearchResult:
     """Single-device fused search (paper §4.4 via the Pallas kernel).
 
-    interpret=True by default: this repo runs on CPU; on TPU pass False.
+    interpret=None auto-detects the backend: the compiled kernel on TPU,
+    interpret mode everywhere else (CPU tests, GPU dry-runs).  Pass an
+    explicit bool to pin the mode (tests do).
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     q = queries.shape[0]
     probe_ids, _ = search_centroids(index, queries, n_probes)  # [Q, T]
 
@@ -85,3 +107,149 @@ def search_fused(
     live = (out_ids >= 0).reshape(q, -1)
     n_scanned = jnp.sum(live.astype(jnp.int32), axis=-1)
     return SearchResult(vals, ids, n_scanned, n_passed)
+
+
+def tiled_scan_xla(
+    slot_cluster, slot_tile, queries, lo, hi, vectors, attrs, ids,
+    norms, scales, *, metric: str, k: int, q_block: int, chunk: int = 8,
+):
+    """XLA streaming executor with the tiled kernel's exact contract.
+
+    Chunked ``lax.map`` over slots: each step gathers ``chunk`` cluster
+    blocks, scores them against their query tiles and immediately reduces to
+    ``[QB, k]`` — the full per-slot score matrix never exists, matching the
+    kernel's memory bound.  This is the fast CPU path (Mosaic needs a real
+    TPU to lower non-interpreted).
+    """
+    d = queries.shape[-1]
+    qt = queries.reshape(-1, q_block, d).astype(jnp.float32)
+    lot = lo.reshape(-1, q_block, *lo.shape[1:]).astype(jnp.int32)
+    hit = hi.reshape(-1, q_block, *hi.shape[1:]).astype(jnp.int32)
+
+    def one(args):
+        sc, st = args
+        v = jnp.take(vectors, sc, axis=0).astype(jnp.float32)  # [Vpad, D]
+        qb = jnp.take(qt, st, axis=0)  # [QB, D]
+        scores = qb @ v.T  # [QB, Vpad]
+        if scales is not None:
+            scores = scores * jnp.take(scales, sc, axis=0)[None, :]
+        if metric == "l2":
+            scores = 2.0 * scores - jnp.take(norms, sc, axis=0)[None, :]
+        a = jnp.take(attrs, sc, axis=0).astype(jnp.int32)  # [Vpad, M]
+        qlo = jnp.take(lot, st, axis=0)  # [QB, F, M]
+        qhi = jnp.take(hit, st, axis=0)
+        inside = jnp.logical_and(
+            a[None, :, None, :] >= qlo[:, None],
+            a[None, :, None, :] <= qhi[:, None],
+        )  # [QB, Vpad, F, M]
+        fmask = jnp.any(jnp.all(inside, -1), -1)
+        live = jnp.take(ids, sc, axis=0) >= 0
+        mask = jnp.logical_and(fmask, live[None, :])
+        svals, sids = topk_lib.masked_topk(
+            scores, mask, k,
+            ids=jnp.broadcast_to(jnp.take(ids, sc, axis=0), scores.shape),
+        )
+        return svals, sids, jnp.sum(mask.astype(jnp.int32), axis=-1)
+
+    return jax.lax.map(
+        one, (slot_cluster, slot_tile), batch_size=min(chunk, slot_cluster.shape[0])
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "n_probes", "q_block", "v_block", "u_cap",
+                     "backend"),
+)
+def search_fused_tiled(
+    index: IVFFlatIndex,
+    queries: Array,
+    fspec: FilterSpec,
+    *,
+    k: int,
+    n_probes: int,
+    q_block: int = 64,
+    v_block: int = 256,
+    u_cap: Optional[int] = None,
+    backend: Optional[str] = None,
+) -> SearchResult:
+    """Query-tiled, probe-deduplicated fused search with streaming top-k.
+
+    Same contract as :func:`repro.core.search.search_reference` (identical
+    ids/scores modulo tie order).  q_block is the query-tile height QB;
+    u_cap bounds unique probes per tile (default ``min(QB·T, K)`` — always
+    sufficient, since a tile cannot probe more than K distinct clusters).
+    """
+    q, d = queries.shape
+    qb = min(q_block, round_up(q, 8))
+    metric = index.spec.metric
+    kc = index.n_clusters
+
+    probe_ids, _ = search_centroids(index, queries, n_probes)  # [Q, T]
+
+    # Pad the batch to whole tiles with edge rows; their probes dedupe into
+    # the last real query's slots, so padding adds no scan work.
+    probe_pad = probes_lib.pad_to_tiles(probe_ids, qb)  # [Qpad, T]
+    queries_pad = probes_lib.pad_to_tiles(
+        queries.astype(jnp.float32 if index.quantized
+                       else index.vectors.dtype),
+        qb,
+    )
+    lo_pad = probes_lib.pad_to_tiles(fspec.lo, qb)
+    hi_pad = probes_lib.pad_to_tiles(fspec.hi, qb)
+    qpad = queries_pad.shape[0]
+
+    cap = min(qb * n_probes, kc) if u_cap is None else u_cap
+    slot_cluster, slot_tile, slot_of_probe, probe_ok, _ = (
+        probes_lib.plan_probe_tiles(probe_pad, q_block=qb, u_cap=cap)
+    )
+
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend in ("pallas", "pallas_interpret"):
+        svals, sids, snpass = filtered_scan_tiled(
+            slot_cluster, slot_tile, queries_pad, lo_pad, hi_pad,
+            index.vectors, index.attrs, index.ids, index.norms, index.scales,
+            metric=metric, k=k, q_block=qb, v_block=v_block,
+            interpret=backend == "pallas_interpret",
+        )
+    elif backend == "xla":
+        svals, sids, snpass = tiled_scan_xla(
+            slot_cluster, slot_tile, queries_pad, lo_pad, hi_pad,
+            index.vectors, index.attrs, index.ids, index.norms, index.scales,
+            metric=metric, k=k, q_block=qb,
+        )
+    else:
+        raise ValueError(backend)
+
+    # Per-probe candidate fragments, then the monoid merge across T probes.
+    # Probes that overflowed an undersized u_cap are dropped soundly (their
+    # fragments masked out), mirroring the distributed dispatch's P_cap.
+    row = jnp.arange(qpad, dtype=jnp.int32) % qb  # [Qpad]
+    vals_qt = svals[slot_of_probe, row[:, None]]  # [Qpad, T, k]
+    ids_qt = sids[slot_of_probe, row[:, None]]
+    npass_qt = snpass[slot_of_probe, row[:, None]]  # [Qpad, T]
+    vals_qt = jnp.where(probe_ok[..., None], vals_qt, topk_lib.NEG_INF)
+    ids_qt = jnp.where(probe_ok[..., None], ids_qt, -1)
+    npass_qt = jnp.where(probe_ok, npass_qt, 0)
+    vals, out_ids = topk_lib.merge_topk_many(vals_qt, ids_qt, k, axis=1)
+    vals, out_ids = vals[:q], out_ids[:q]
+
+    if metric == "l2":
+        q2 = jnp.sum(queries.astype(jnp.float32) ** 2, -1)  # [Q]
+        vals = jnp.where(
+            vals > topk_lib.NEG_INF / 2, vals - q2[:, None], vals
+        )
+
+    n_passed = jnp.sum(npass_qt[:q], axis=-1)
+    live_per_cluster = jnp.sum(
+        (index.ids >= 0).astype(jnp.int32), axis=-1
+    )  # [K]
+    # probes dropped by an undersized u_cap were never scanned — keep the
+    # perf-accounting stats consistent with what actually ran
+    n_scanned = jnp.sum(
+        jnp.take(live_per_cluster, probe_ids)
+        * probe_ok[:q].astype(jnp.int32),
+        axis=-1,
+    )
+    return SearchResult(vals, out_ids, n_scanned, n_passed)

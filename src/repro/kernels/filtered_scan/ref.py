@@ -48,3 +48,55 @@ def filtered_scan_ref(
     fmask = jnp.any(jnp.all(inside, -1), -1)  # [P, V]
     live = iv >= 0
     return jnp.where(jnp.logical_and(fmask, live), score, NEG_INF)
+
+
+def filtered_scan_tiled_ref(
+    slot_cluster: jax.Array,  # [S] int32
+    slot_tile: jax.Array,  # [S] int32
+    queries: jax.Array,  # [Qpad, D], Qpad a multiple of q_block
+    lo: jax.Array,  # [Qpad, F, M] int16
+    hi: jax.Array,  # [Qpad, F, M] int16
+    vectors: jax.Array,  # [K, Vpad, D]
+    attrs: jax.Array,  # [K, Vpad, M] int16
+    ids: jax.Array,  # [K, Vpad] int32
+    norms: Optional[jax.Array] = None,
+    scales: Optional[jax.Array] = None,
+    *,
+    metric: str = "dot",
+    k: int = 10,
+    q_block: int = 64,
+):
+    """Gather-based oracle for the tiled kernel's (vals, ids, npass) contract."""
+    d = queries.shape[-1]
+    qt = queries.reshape(-1, q_block, d).astype(jnp.float32)
+    lot = lo.reshape(-1, q_block, *lo.shape[1:]).astype(jnp.int32)
+    hit = hi.reshape(-1, q_block, *hi.shape[1:]).astype(jnp.int32)
+
+    v = jnp.take(vectors, slot_cluster, axis=0).astype(jnp.float32)  # [S,V,D]
+    a = jnp.take(attrs, slot_cluster, axis=0).astype(jnp.int32)  # [S,V,M]
+    iv = jnp.take(ids, slot_cluster, axis=0)  # [S,V]
+    q = jnp.take(qt, slot_tile, axis=0)  # [S,QB,D]
+    qlo = jnp.take(lot, slot_tile, axis=0)  # [S,QB,F,M]
+    qhi = jnp.take(hit, slot_tile, axis=0)
+
+    scores = jnp.einsum("sqd,svd->sqv", q, v)
+    if scales is not None:
+        scores = scores * jnp.take(scales, slot_cluster, axis=0)[:, None, :]
+    if metric == "l2":
+        scores = 2.0 * scores - jnp.take(norms, slot_cluster, 0)[:, None, :]
+
+    inside = jnp.logical_and(
+        a[:, None, :, None, :] >= qlo[:, :, None, :, :],
+        a[:, None, :, None, :] <= qhi[:, :, None, :, :],
+    )  # [S, QB, V, F, M]
+    fmask = jnp.any(jnp.all(inside, -1), -1)  # [S, QB, V]
+    mask = jnp.logical_and(fmask, (iv >= 0)[:, None, :])
+    scores = jnp.where(mask, scores, NEG_INF)
+    npass = jnp.sum(mask.astype(jnp.int32), axis=-1)  # [S, QB]
+
+    vals, idx = jax.lax.top_k(scores, k)  # [S, QB, k]
+    out_ids = jnp.take_along_axis(
+        jnp.broadcast_to(iv[:, None, :], scores.shape), idx, axis=-1
+    )
+    out_ids = jnp.where(vals > NEG_INF / 2, out_ids, -1)
+    return vals, out_ids, npass

@@ -143,7 +143,8 @@ def moe_ffn_local(
     else:
         idx = jnp.int32(0)
         for a in ep_axes:  # linearized shard index, major axis first
-            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            # psum(1) == axis size, spelled portably across JAX versions
+            idx = idx * jax.lax.psum(jnp.int32(1), a) + jax.lax.axis_index(a)
         e_lo = idx * e_local
     if capacity is None:
         capacity = max(8, int(cfg.capacity_factor * n * cfg.top_k / e + 0.999))

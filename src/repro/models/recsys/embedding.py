@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+
 Array = jax.Array
 
 
@@ -111,10 +113,10 @@ def sharded_embedding_bag(
             out = out / jnp.maximum(n, 1.0)
         return out
 
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P("model", None), P(dp_axes, *([None] * (ids.ndim - 1)))),
         out_specs=P(dp_axes, *([None] * (ids.ndim - 2)), None),
-        check_vma=False,
+        check=False,
     )(table, ids)

@@ -1,0 +1,31 @@
+"""Shared test helpers.
+
+``hypothesis`` is an optional dependency: property tests run when it is
+installed and skip cleanly when it is not.  Import the guard from here::
+
+    from conftest import HAVE_HYPOTHESIS, given, needs_hypothesis, settings, st
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - env without hypothesis
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        return lambda f: f
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _StrategyStub:  # st.xxx(...) evaluates at decoration time
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed"
+)

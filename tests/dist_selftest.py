@@ -20,6 +20,7 @@ import numpy as np  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.core import (  # noqa: E402
     FilterBuilder,
     HybridSpec,
@@ -83,6 +84,21 @@ def main():
     )
     print("OK distributed == reference")
 
+    # ---- tiled backend: per-shard probe dedup + streaming top-k ----
+    cfg_tiled = ShardedSearchConfig(
+        k=20, n_probes=4, v_block=128, scan_q_block=8, backend="xla_tiled",
+    )
+    search_fn_t, _, info_t = make_sharded_search(
+        mesh, "dot", q_total=q, n_clusters=kc, cfg=cfg_tiled,
+    )
+    res_t = search_fn_t(index, queries, fspec)
+    np.testing.assert_array_equal(np.asarray(res_t.ids), np.asarray(ref.ids))
+    np.testing.assert_allclose(
+        np.asarray(res_t.scores)[live], np.asarray(ref.scores)[live],
+        rtol=1e-5, atol=1e-5,
+    )
+    print("OK tiled distributed == reference")
+
     # ---- straggler drop ----
     # Dropping shard 3 (clusters 6..7) must (a) never return an id stored in
     # those clusters, (b) keep every returned id filter-compliant, (c) not
@@ -135,7 +151,7 @@ def main():
     outs = {}
     for combine in ("psum", "scatter"):
         cfgc = dc.replace(cfg0, moe_combine=combine)
-        with jax.set_mesh(mesh):
+        with compat.use_mesh(mesh):
             h, _ = jax.jit(
                 lambda p, t: forward(p, cfgc, t, mesh=mesh,
                                      dp_axes=("data",))

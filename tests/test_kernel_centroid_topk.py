@@ -3,7 +3,8 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, needs_hypothesis, settings, st  # noqa: E402
 
 from repro.kernels.centroid_topk import (
     centroid_topk,
@@ -50,6 +51,7 @@ def test_kernel_matches_ref(q, k, d, t, qb, kb, metric):
     check_topk_equiv(vals, ids, rvals, rids)
 
 
+@needs_hypothesis
 @settings(max_examples=10, deadline=None)
 @given(
     seed=st.integers(0, 2**20),

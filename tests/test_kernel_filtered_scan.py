@@ -4,7 +4,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, needs_hypothesis, settings, st  # noqa: E402
 
 from repro.core import (
     FilterBuilder,
@@ -92,6 +93,7 @@ def test_kernel_matches_ref_l2(p, q, K, vpad, d, m, f, vb, dt):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
 
 
+@needs_hypothesis
 @settings(max_examples=15, deadline=None)
 @given(
     seed=st.integers(0, 2**20),
