@@ -39,10 +39,12 @@ from repro.core.ivf import (
 from repro.core.search import (
     SearchResult,
     brute_force,
+    centroid_scores,
     recall_at_k,
     search_centroids,
     search_reference,
 )
+from repro.core.disk import ClusterCache, DiskIVFIndex
 from repro.core.probes import dedup_rows, plan_probe_tiles
 from repro.core.topk import (
     masked_topk,

@@ -1,0 +1,423 @@
+"""Disk-resident index tier: page clusters in per query (paper's cost claim).
+
+The paper's economics rest on the index living on disk and only probed lists
+being loaded per query.  :class:`DiskIVFIndex` is that serving mode over a
+layout-v2 checkpoint (``core/storage.py``):
+
+  * **Resident set**: centroids ``[K, D]``, counts ``[K]`` and the manifest's
+    offset arithmetic — kilobytes per thousand clusters.  Everything a query
+    needs *before* it knows which lists to touch.
+  * **Paged set**: per-cluster records ``(vectors, attrs, ids, norms?,
+    scales?)`` read from the memory-mapped shard files through
+    :class:`ClusterCache` — a pinned host-buffer LRU keyed by cluster id,
+    capped so ``resident_bytes() ≤ resident_budget_bytes``.
+  * **Probe-driven fill**: the tiled search plan (``core/probes.py``) already
+    deduplicates each batch's probes into per-tile unique-cluster tables;
+    ``probes.fetch_order`` turns that plan into the cache's fetch list, and
+    ``prefetch`` loads it on a background thread while the previous batch
+    computes (SIEVE's batch-sharing observation, PipeANN's SSD pipelining).
+  * **Hot/cold split**: the cache counts probes per cluster and periodically
+    pins the most-probed clusters (SIEVE's hot-index placement) — hot lists
+    stay mapped across batches, cold lists churn through the LRU tail.
+
+Search runs through the *same* tiled kernel as the RAM path:
+``search_fused_tiled(..., gather_fn=disk_index.gather)`` swaps the kernel's
+full ``[K, Vpad, ...]`` operands for batch-local gathered ``[S, Vpad, ...]``
+blocks with slot-local cluster ids — bit-identical results, bounded memory.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+import queue
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import storage
+from repro.core.hybrid import HybridSpec
+
+
+class ShardReader:
+    """mmap-backed reader of layout-v2 shard files, one cluster per read.
+
+    Thread-safe: maps are opened lazily under a lock and reads copy the
+    record out of the map into a fresh host buffer, so returned arrays never
+    alias pageable mmap memory.
+    """
+
+    def __init__(self, directory: str, man: dict):
+        if man["layout"] != 2:
+            raise ValueError(
+                "DiskIVFIndex requires a layout-v2 checkpoint; re-save it "
+                "with storage.save_index(index, dir) (layout=2 is the "
+                "default) — v1 .npz shards are not cluster-addressable"
+            )
+        self.man = man
+        self.paths = storage.shard_paths(directory, man)
+        self.kl = man["n_clusters"] // man["n_shards"]
+        self.stride: int = man["record_stride"]
+        self.fields = [
+            (f["name"], storage.np_dtype(f["dtype"]), tuple(f["shape"]),
+             f["offset"])
+            for f in man["fields"]
+        ]
+        self._mm: List[Optional[np.memmap]] = [None] * len(self.paths)
+        self._lock = threading.Lock()
+
+    def _mmap(self, s: int) -> np.memmap:
+        if self._mm[s] is None:
+            with self._lock:
+                if self._mm[s] is None:
+                    self._mm[s] = np.memmap(
+                        self.paths[s], dtype=np.uint8, mode="r"
+                    )
+        return self._mm[s]
+
+    def read(self, cid: int) -> Dict[str, np.ndarray]:
+        """Reads cluster ``cid``'s record into one pinned host buffer and
+        returns zero-copy per-field views into it."""
+        s, r = divmod(int(cid), self.kl)
+        mm = self._mmap(s)
+        off = r * self.stride
+        buf = np.array(mm[off:off + self.stride])  # the one copy
+        rec = {}
+        for name, dt, shape, o in self.fields:
+            nb = int(np.prod(shape)) * dt.itemsize
+            rec[name] = buf[o:o + nb].view(dt).reshape(shape)
+        return rec
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0        # served from cache (incl. waits on in-flight loads)
+    misses: int = 0      # loaded synchronously by the requesting thread
+    evictions: int = 0
+    prefetched: int = 0  # loaded by the background thread
+
+
+class ClusterCache:
+    """Pinned host-buffer LRU over cluster records, with probe-driven
+    prefetch and hot-cluster pinning.
+
+    * ``get_many`` is the synchronous path: returns every requested record,
+      loading misses inline (deduplicated against in-flight prefetches).
+    * ``prefetch`` enqueues ids to a daemon thread so the next batch's
+      clusters stream from disk while the current batch computes.
+    * Every ``pin_refresh`` batches, the ``pin_fraction`` most-probed
+      clusters are pinned: the LRU never evicts them, so hot lists stay
+      resident across batches (SIEVE's hot/cold split).  Capacity is a hard
+      cap either way — the cache holds at most ``capacity_records`` records.
+    """
+
+    def __init__(self, reader: ShardReader, *, capacity_records: int,
+                 n_clusters: int, pin_fraction: float = 0.5,
+                 pin_refresh: int = 64):
+        if capacity_records < 1:
+            raise ValueError("capacity_records must be >= 1")
+        self.reader = reader
+        self.record_nbytes = reader.stride
+        self.capacity_records = capacity_records
+        self.pin_records = int(pin_fraction * capacity_records)
+        self.pin_refresh = pin_refresh
+        self.stats = CacheStats()
+        self._entries: "collections.OrderedDict[int, dict]" = (
+            collections.OrderedDict()
+        )
+        self._inflight: Dict[int, list] = {}  # cid -> [Event, record|None]
+        self._probe_count = np.zeros(n_clusters, np.int64)
+        self._pinned: set = set()
+        self._batches = 0
+        self._lock = threading.Lock()
+        self._queue: "queue.Queue[Optional[int]]" = queue.Queue()
+        self._worker = threading.Thread(target=self._prefetch_loop,
+                                        daemon=True)
+        self._worker.start()
+
+    # ---- internal (lock held) ----
+    def _insert_locked(self, cid: int, rec: dict):
+        if cid in self._entries:
+            self._entries.move_to_end(cid)
+            return
+        while len(self._entries) >= self.capacity_records:
+            victim = next(
+                (c for c in self._entries if c not in self._pinned), None
+            )
+            if victim is None:  # everything pinned: fall back to plain LRU
+                victim = next(iter(self._entries))
+            del self._entries[victim]
+            self.stats.evictions += 1
+        self._entries[cid] = rec
+
+    def _refresh_pins_locked(self):
+        if self.pin_records == 0:
+            return
+        order = np.argsort(self._probe_count)[::-1][: self.pin_records]
+        self._pinned = {
+            int(c) for c in order if self._probe_count[c] > 0
+        }
+
+    def _load(self, cid: int, *, prefetched: bool) -> dict:
+        # On any read failure the in-flight entry must still be resolved —
+        # a waiter blocked on the Event would otherwise hang forever.  The
+        # holder carries the exception to waiters instead of a record.
+        try:
+            rec = self.reader.read(cid)
+        except BaseException as e:
+            with self._lock:
+                holder = self._inflight.pop(cid, None)
+            if holder is not None:
+                holder[1] = e
+                holder[0].set()
+            raise
+        with self._lock:
+            holder = self._inflight.pop(cid, None)
+            self._insert_locked(cid, rec)
+            if prefetched:
+                self.stats.prefetched += 1
+        if holder is not None:
+            holder[1] = rec
+            holder[0].set()
+        return rec
+
+    def _prefetch_loop(self):
+        while True:
+            cid = self._queue.get()
+            try:
+                if cid is None:
+                    return
+                self._load(cid, prefetched=True)
+            except Exception:
+                pass  # failed prefetch = missed hint; get_many will retry
+            finally:
+                self._queue.task_done()
+
+    # ---- public ----
+    def get_many(self, cids: Sequence[int]) -> Dict[int, dict]:
+        """Returns {cid: record} for every id, blocking on disk as needed."""
+        out: Dict[int, dict] = {}
+        to_load: List[int] = []
+        waiters: List[Tuple[int, list]] = []
+        with self._lock:
+            self._batches += 1
+            for cid in cids:
+                self._probe_count[int(cid)] += 1
+            if self._batches % self.pin_refresh == 0:
+                self._refresh_pins_locked()
+            for cid in cids:
+                cid = int(cid)
+                if cid in self._entries:
+                    self._entries.move_to_end(cid)
+                    out[cid] = self._entries[cid]
+                    self.stats.hits += 1
+                elif cid in self._inflight:  # prefetch already racing
+                    waiters.append((cid, self._inflight[cid]))
+                    self.stats.hits += 1
+                else:
+                    self._inflight[cid] = [threading.Event(), None]
+                    to_load.append(cid)
+                    self.stats.misses += 1
+        for cid in to_load:
+            out[cid] = self._load(cid, prefetched=False)
+        for cid, holder in waiters:
+            holder[0].wait()
+            if isinstance(holder[1], BaseException):  # prefetch failed;
+                out[cid] = self._load(cid, prefetched=False)  # retry inline
+            else:
+                out[cid] = holder[1]
+        return out
+
+    def prefetch(self, cids: Sequence[int]):
+        """Queues cluster loads on the background thread (fire and forget)."""
+        todo = []
+        with self._lock:
+            for cid in cids:
+                cid = int(cid)
+                if cid in self._entries or cid in self._inflight:
+                    continue
+                self._inflight[cid] = [threading.Event(), None]
+                todo.append(cid)
+        for cid in todo:
+            self._queue.put(cid)
+
+    def drain(self):
+        """Blocks until every queued prefetch has landed (tests, shutdown)."""
+        self._queue.join()
+
+    def stop(self):
+        self._queue.put(None)
+        self._worker.join(timeout=10)
+
+    def resident_bytes(self) -> int:
+        return len(self._entries) * self.record_nbytes
+
+    @property
+    def pinned(self) -> frozenset:
+        return frozenset(self._pinned)
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.stats.hits + self.stats.misses
+        return self.stats.hits / tot if tot else 0.0
+
+
+class DiskIVFIndex:
+    """Disk-resident serving view of a layout-v2 index checkpoint.
+
+    Only centroids, counts and offset arithmetic stay in memory; flat lists
+    page through :class:`ClusterCache` under ``resident_budget_bytes``.
+    Satisfies the ``.spec / .centroids / .counts`` contract of
+    ``search_centroids``, and plugs into the tiled kernel as its
+    ``gather_fn`` — so RAM and disk tiers share one search implementation
+    and return identical results.
+    """
+
+    def __init__(self, directory: str, man: dict, spec: HybridSpec,
+                 centroids: np.ndarray, counts: np.ndarray,
+                 reader: ShardReader, cache: ClusterCache,
+                 resident_budget_bytes: Optional[int]):
+        self.directory = directory
+        self.man = man
+        self.spec = spec
+        self.centroids = jnp.asarray(centroids)
+        self.counts = jnp.asarray(counts)
+        self.reader = reader
+        self.cache = cache
+        self.resident_budget_bytes = resident_budget_bytes
+        self._overhead = centroids.nbytes + counts.nbytes
+
+    @classmethod
+    def open(cls, directory: str, *,
+             resident_budget_bytes: Optional[int] = None,
+             pin_fraction: float = 0.5,
+             pin_refresh: int = 64) -> "DiskIVFIndex":
+        """Opens a checkpoint for disk-tier serving.
+
+        ``resident_budget_bytes`` caps centroids + counts + cluster cache;
+        ``None`` sizes the cache to hold every cluster (pure page-on-demand,
+        no eviction pressure — useful as the parity baseline).
+        """
+        man = storage.load_manifest(directory)
+        storage.check_complete(directory, man)
+        reader = ShardReader(directory, man)
+        centroids = np.load(os.path.join(directory, "centroids.npy"))
+        counts = np.load(os.path.join(directory, "counts.npy"))
+        overhead = centroids.nbytes + counts.nbytes
+        if resident_budget_bytes is None:
+            cap = man["n_clusters"]
+        else:
+            budget = int(resident_budget_bytes) - overhead
+            cap = budget // reader.stride
+            if cap < 1:
+                raise ValueError(
+                    f"resident_budget_bytes={resident_budget_bytes} cannot "
+                    f"hold the resident set ({overhead} B) plus one cluster "
+                    f"record ({reader.stride} B)"
+                )
+            cap = min(cap, man["n_clusters"])
+        cache = ClusterCache(
+            reader, capacity_records=cap, n_clusters=man["n_clusters"],
+            pin_fraction=pin_fraction, pin_refresh=pin_refresh,
+        )
+        return cls(directory, man, storage.spec_from_manifest(man),
+                   centroids, counts, reader, cache, resident_budget_bytes)
+
+    # ---- IVFFlatIndex-compatible surface (what search paths touch) ----
+    @property
+    def n_clusters(self) -> int:
+        return self.man["n_clusters"]
+
+    @property
+    def vpad(self) -> int:
+        return self.man["vpad"]
+
+    @property
+    def quantized(self) -> bool:
+        return self.man["quantized"]
+
+    @property
+    def store_dtype(self):
+        return storage.np_dtype(self.man["store_dtype"])
+
+    def resident_bytes(self) -> int:
+        """Current bytes held in host memory for this index."""
+        return self._overhead + self.cache.resident_bytes()
+
+    # ---- paging ----
+    def gather(self, slot_cluster) -> Tuple:
+        """``gather_fn`` for :func:`search_fused_tiled`.
+
+        Maps the plan's global cluster ids to batch-local rows, pages the
+        distinct clusters through the cache, and returns
+        ``(local_ids [S], vectors [S, Vpad, D], attrs, ids, norms, scales)``
+        — static shapes (S = n_tiles·u_cap), so the jitted scan never
+        recompiles as the working set shifts.
+        """
+        flat = np.asarray(slot_cluster).reshape(-1)
+        uniq, local = np.unique(flat, return_inverse=True)
+        recs = self.cache.get_many(uniq)
+        s = flat.shape[0]
+        vpad, d, m = self.vpad, self.spec.dim, self.spec.n_attrs
+        vectors = np.zeros((s, vpad, d), self.store_dtype)
+        attrs = np.zeros((s, vpad, m), np.int16)
+        ids = np.full((s, vpad), -1, np.int32)
+        norms = np.zeros((s, vpad), np.float32) if self.man["has_norms"] else None
+        scales = np.ones((s, vpad), np.float32) if self.quantized else None
+        for i, cid in enumerate(uniq):
+            rec = recs[int(cid)]
+            vectors[i] = rec["vectors"]
+            attrs[i] = rec["attrs"]
+            ids[i] = rec["ids"]
+            if norms is not None:
+                norms[i] = rec["norms"]
+            if scales is not None:
+                scales[i] = rec["scales"]
+        return local.astype(np.int32), vectors, attrs, ids, norms, scales
+
+    def prefetch(self, cluster_ids):
+        """Background-loads clusters (e.g. ``probes.fetch_order`` output)."""
+        self.cache.prefetch(np.asarray(cluster_ids).reshape(-1))
+
+    def prefetch_for_queries(self, queries, n_probes: int,
+                             q_block: int = 64):
+        """Plans the next batch's probes and starts paging them in while the
+        current batch is still computing on device.
+
+        Clusters are enqueued in ``probes.fetch_order``'s first-need order —
+        tile 0's unique probes first — so by the time the scan reaches a
+        tile, its clusters are the ones most likely to have landed.  Pass
+        the same ``q_block`` the search will use for an exact tile match.
+        """
+        from repro.core import probes as probes_lib
+        from repro.core.search import search_centroids
+
+        q = queries.shape[0]
+        qb = min(q_block, ((q + 7) // 8) * 8)
+        probe_ids, _ = search_centroids(self, queries, n_probes)
+        probe_pad = probes_lib.pad_to_tiles(probe_ids, qb)
+        u_cap = min(qb * n_probes, self.n_clusters)
+        slot_cluster, _, _, _, n_unique = probes_lib.plan_probe_tiles(
+            probe_pad, q_block=qb, u_cap=u_cap
+        )
+        self.prefetch(probes_lib.fetch_order(slot_cluster, n_unique, u_cap))
+
+    # ---- search ----
+    def search(self, queries, fspec, *, k: int, n_probes: int,
+               q_block: int = 64, v_block: int = 256,
+               u_cap: Optional[int] = None, backend: Optional[str] = None):
+        """Disk-tier filtered search; same contract (and bit-identical ids)
+        as the RAM path's ``search_fused_tiled``."""
+        from repro.kernels.filtered_scan.ops import search_fused_tiled
+
+        return search_fused_tiled(
+            self, queries, fspec, k=k, n_probes=n_probes, q_block=q_block,
+            v_block=v_block, u_cap=u_cap, backend=backend,
+            gather_fn=self.gather,
+        )
+
+    def close(self):
+        self.cache.stop()

@@ -55,6 +55,11 @@ class IVFFlatIndex:
         return self.scales is not None
 
     @property
+    def store_dtype(self):
+        """Storage dtype of the flat lists (int8 under SQ8)."""
+        return self.vectors.dtype
+
+    @property
     def n_clusters(self) -> int:
         return self.centroids.shape[0]
 

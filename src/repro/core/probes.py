@@ -125,6 +125,34 @@ def plan_probe_tiles(
     return slot_cluster, slot_tile, slot_of_probe, probe_ok, count
 
 
+def fetch_order(slot_cluster, n_unique, u_cap: int):
+    """The disk tier's cache fetch list from a probe plan (host-side).
+
+    Flattens the per-tile unique-probe tables into one duplicate-free list of
+    cluster ids in *first-need order* — tile 0's unique clusters first, then
+    tile 1's novel ones, and so on.  Feeding this to the cluster cache's
+    prefetch thread loads clusters in exactly the order the scan will consume
+    them, so the earliest tiles unblock first.
+
+    Args:
+      slot_cluster: [n_tiles·u_cap] int32 (``plan_probe_tiles`` output),
+                    array-like (host numpy or device array).
+      n_unique:     [n_tiles] int32 live-slot counts (pads excluded).
+      u_cap:        static per-tile slot capacity.
+
+    Returns a 1-D int64 numpy array of distinct cluster ids.
+    """
+    import numpy as np
+
+    sc = np.asarray(slot_cluster).reshape(-1, u_cap)
+    nu = np.asarray(n_unique)
+    seen: dict = {}  # insertion-ordered
+    for tile in range(sc.shape[0]):
+        for cid in sc[tile, : int(nu[tile])]:
+            seen.setdefault(int(cid), None)
+    return np.fromiter(seen.keys(), dtype=np.int64, count=len(seen))
+
+
 def pad_to_tiles(x: Array, q_block: int) -> Array:
     """Pads the leading (query) axis up to a q_block multiple with edge rows.
 

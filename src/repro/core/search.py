@@ -66,16 +66,35 @@ def _query_scores(index: IVFFlatIndex, queries: Array, vectors: Array,
     return 2.0 * dots - norms - q2  # -(||q-v||²)
 
 
-def search_centroids(
-    index: IVFFlatIndex, queries: Array, n_probes: int
-) -> Tuple[Array, Array]:
-    """§4.4 step 2: T nearest centroids per query.  [Q, T] ids + scores."""
+def centroid_scores(
+    centroids: Array, counts: Array, queries: Array, *, metric: str
+) -> Array:
+    """[Q, K] centroid scores with empty clusters masked unprobeable.
+
+    Clusters with ``counts == 0`` (``pad_k`` fills, kmeans casualties) score
+    NEG_INF so the probe budget never lands on them — regardless of metric or
+    of the sign of any sentinel centroid coordinate.
+    """
     q32 = queries.astype(jnp.float32)
-    c = index.centroids
-    if index.spec.metric == "dot":
-        scores = q32 @ c.T
+    if metric == "dot":
+        scores = q32 @ centroids.T
     else:
-        scores = 2.0 * (q32 @ c.T) - jnp.sum(c * c, -1)[None, :]
+        scores = 2.0 * (q32 @ centroids.T) - jnp.sum(
+            centroids * centroids, -1
+        )[None, :]
+    return jnp.where(counts[None, :] > 0, scores, topk_lib.NEG_INF)
+
+
+def search_centroids(index, queries: Array, n_probes: int
+                     ) -> Tuple[Array, Array]:
+    """§4.4 step 2: T nearest non-empty centroids per query. [Q, T] ids+scores.
+
+    ``index`` needs only ``.spec`` / ``.centroids`` / ``.counts`` — both
+    :class:`IVFFlatIndex` and the disk tier's ``DiskIVFIndex`` qualify.
+    """
+    scores = centroid_scores(
+        index.centroids, index.counts, queries, metric=index.spec.metric
+    )
     vals, ids = jax.lax.top_k(scores, n_probes)
     return ids.astype(jnp.int32), vals
 

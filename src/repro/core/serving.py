@@ -34,7 +34,8 @@ Array = jax.Array
 
 
 def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
-                         v_block: int = 256, backend: Optional[str] = None
+                         v_block: int = 256, backend: Optional[str] = None,
+                         resident_budget_bytes: Optional[int] = None
                          ) -> Callable:
     """The batched server's default search step: the tiled fused path.
 
@@ -44,17 +45,34 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
     overlap, which is exactly what the tiled kernel's per-tile probe dedup
     converts into saved HBM traffic.  ``shard_ok`` is accepted (and ignored)
     so the same server drives the single-host and pod paths.
+
+    ``index`` selects the tier: an in-RAM :class:`IVFFlatIndex`, an already
+    open :class:`repro.core.disk.DiskIVFIndex`, or a checkpoint directory
+    path (opened disk-resident under ``resident_budget_bytes``, with
+    hot-cluster pinning).  Disk-tier batches run through the same kernel via
+    the cache's ``gather_fn`` and return identical results; the open index
+    is exposed as ``search_fn.index`` so callers can read
+    ``resident_bytes()`` / cache stats.
     """
+    from repro.core.disk import DiskIVFIndex
     from repro.kernels.filtered_scan.ops import search_fused_tiled
+
+    if isinstance(index, str):
+        index = DiskIVFIndex.open(
+            index, resident_budget_bytes=resident_budget_bytes
+        )
+    gather_fn = index.gather if isinstance(index, DiskIVFIndex) else None
 
     def search_fn(queries, fspec, shard_ok=None):
         del shard_ok  # single host; the pod path lives in core/distributed
         res = search_fused_tiled(
             index, queries, fspec, k=k, n_probes=n_probes,
             q_block=q_block, v_block=v_block, backend=backend,
+            gather_fn=gather_fn,
         )
         return res.scores, res.ids
 
+    search_fn.index = index
     return search_fn
 
 

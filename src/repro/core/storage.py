@@ -1,23 +1,42 @@
-"""Disk persistence, sharded checkpointing, elastic re-sharding (DESIGN §4).
+"""Disk persistence: layout v2 (memory-mappable records), v1-read compat.
 
-The paper's index lives on disk and is paged in per query; ours lives in pod
-HBM and the disk tier is the durability/cold-start layer.  Layout:
+The paper's index lives on disk and is paged in per query.  Layout v2 is the
+format that makes that an actual serving mode (``core/disk.py``'s
+``DiskIVFIndex``) instead of a cold-start checkpoint:
 
-    <dir>/manifest.json                 — schema, shapes, shard map, metric
-    <dir>/centroids.npy                 — [K, D] f32 (replicated at load)
-    <dir>/shard_<i>_of_<n>.npz          — contiguous cluster range per shard
-                                          (vectors, attrs, ids, counts, norms)
+    <dir>/manifest.json            — schema, shapes, metric, field table,
+                                     record stride, shard map, SQ8 flag
+    <dir>/centroids.npy            — [K, D] f32   (always resident)
+    <dir>/counts.npy               — [K]    int32 (always resident)
+    <dir>/shard_<i>_of_<n>.bin     — raw records for a contiguous cluster
+                                     range; cluster ``c`` of shard ``s`` lives
+                                     at byte ``(c - lo_s) · record_stride``
 
-Because the runtime sharding is "contiguous cluster ranges over a flat chip
-list", a checkpoint written from S chips can be restored onto S' chips by
-re-slicing ranges — no rebuild, no reassignment (elastic scaling).  ``pad_k``
-pads with empty clusters so K divides any target chip count; empty clusters
-are never probed in practice (their centroids sit at +inf) and cost only
-centroid-table rows.
+Every cluster record has the same fixed stride: the fields
+``(vectors [Vpad, D], attrs [Vpad, M], ids [Vpad], norms [Vpad]?,
+scales [Vpad]?)`` packed back to back at 64-byte-aligned offsets, with the
+stride rounded up to 512 bytes.  Fixed stride + an explicit field table in
+the manifest means a reader can ``mmap`` a shard and address any cluster with
+pure arithmetic — no per-cluster index, no deserialization.  ``norms`` is
+present only for metric="l2"; ``scales`` only for SQ8 (the manifest's
+``quantized`` flag), in which case ``vectors`` is int8 codes.
 
-Writes are atomic (tmp + rename) and the manifest carries a content version;
-``load_index`` verifies completeness before touching any array — a partially
-written checkpoint is never loaded (fault tolerance during save).
+Versioning: ``manifest["layout"]`` is 2 for this format.  Layout v1 (one
+``.npz`` of stacked arrays per shard) is still *read* — ``load_index``
+dispatches on the manifest — and can still be written with
+``save_index(..., layout=1)`` for tooling that expects it.  v1 checkpoints
+written before the SQ8 fix (no ``scales`` key) load as unquantized raw codes
+and are rejected with a clear error rather than silently mis-scored.
+
+Elastic re-sharding is unchanged: runtime sharding is "contiguous cluster
+ranges over a flat chip list", so a checkpoint from S chips restores onto S'
+chips by re-slicing ranges.  ``pad_k`` pads with empty clusters so K divides
+any target chip count; padded clusters have ``counts == 0``, which the
+centroid top-k masks to NEG_INF — they are *unprobeable* under every metric
+(the old sentinel-coordinate trick was sign-sensitive for dot queries).
+
+Writes are atomic (tmp + rename) and ``load_index`` verifies completeness
+before touching any array — a partially written checkpoint is never loaded.
 """
 
 from __future__ import annotations
@@ -26,9 +45,8 @@ import dataclasses
 import json
 import os
 import tempfile
-from typing import Optional
+from typing import Dict, List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -36,7 +54,51 @@ from repro.core.hybrid import HybridSpec
 from repro.core.ivf import IVFFlatIndex
 
 MANIFEST = "manifest.json"
-_FAR = 1.0e30  # centroid coordinate for padded (empty) clusters
+_FIELD_ALIGN = 64     # per-field offset alignment inside a record
+_RECORD_ALIGN = 512   # record stride alignment (mmap-friendly)
+
+
+def np_dtype(name: str) -> np.dtype:
+    """Resolves a manifest dtype name; bfloat16 via ml_dtypes (jax dep)."""
+    if name == "bfloat16":
+        import ml_dtypes
+
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(name)
+
+
+def _dtype_name(dtype) -> str:
+    name = np.dtype(dtype).name if dtype != jnp.bfloat16 else "bfloat16"
+    return name
+
+
+def _align(off: int, a: int) -> int:
+    return ((off + a - 1) // a) * a
+
+
+def record_layout(
+    *, vpad: int, dim: int, n_attrs: int, store_dtype: str,
+    has_norms: bool, quantized: bool,
+) -> Tuple[List[dict], int]:
+    """The v2 per-cluster record: ordered field table + fixed stride.
+
+    Returns ``(fields, stride)`` where each field is
+    ``{name, dtype, shape, offset}`` (shape is per-cluster, e.g. ``[Vpad, D]``
+    for vectors) and ``stride`` is the record size in bytes.
+    """
+    specs = [("vectors", store_dtype, (vpad, dim)),
+             ("attrs", "int16", (vpad, n_attrs)),
+             ("ids", "int32", (vpad,))]
+    if has_norms:
+        specs.append(("norms", "float32", (vpad,)))
+    if quantized:
+        specs.append(("scales", "float32", (vpad,)))
+    fields, off = [], 0
+    for name, dt, shape in specs:
+        off = _align(off, _FIELD_ALIGN)
+        fields.append(dict(name=name, dtype=dt, shape=list(shape), offset=off))
+        off += int(np.prod(shape)) * np_dtype(dt).itemsize
+    return fields, _align(off, _RECORD_ALIGN)
 
 
 def _atomic_save(path: str, save_fn):
@@ -53,75 +115,141 @@ def _atomic_save(path: str, save_fn):
 
 
 def pad_k(index: IVFFlatIndex, k_new: int) -> IVFFlatIndex:
-    """Pads the cluster axis to ``k_new`` with empty, unprobeable clusters."""
+    """Pads the cluster axis to ``k_new`` with empty, unprobeable clusters.
+
+    Padded clusters have ``counts == 0``; ``search_centroids`` masks them out
+    of the centroid top-k, so no probe budget is ever spent on them — for any
+    metric and any query sign.  Their centroid rows are plain zeros (inert;
+    correctness does not ride on a sentinel coordinate).  Every per-cluster
+    array — including SQ8 ``scales`` — is padded, so a resharded quantized
+    index keeps its ``[K, Vpad]`` shape contract.
+    """
     k = index.n_clusters
     if k_new < k:
         raise ValueError(f"cannot shrink K: {k} -> {k_new}")
     if k_new == k:
         return index
     dk = k_new - k
-    far = np.full((dk, index.centroids.shape[1]), _FAR, np.float32)
     pad = lambda a, fill: jnp.concatenate(
         [a, jnp.full((dk,) + a.shape[1:], fill, a.dtype)], axis=0
     )
     return dataclasses.replace(
         index,
-        centroids=jnp.concatenate([index.centroids, jnp.asarray(-far)], 0),
+        centroids=pad(index.centroids, 0.0),
         vectors=pad(index.vectors, 0),
         attrs=pad(index.attrs, 0),
         ids=pad(index.ids, -1),
         counts=pad(index.counts, 0),
         norms=None if index.norms is None else pad(index.norms, 0),
+        scales=None if index.scales is None else pad(index.scales, 1.0),
+    )
+
+
+def _index_arrays(index: IVFFlatIndex) -> Dict[str, np.ndarray]:
+    arrays = dict(
+        vectors=np.asarray(index.vectors),
+        attrs=np.asarray(index.attrs),
+        ids=np.asarray(index.ids),
+    )
+    if index.norms is not None:
+        arrays["norms"] = np.asarray(index.norms, np.float32)
+    if index.scales is not None:
+        arrays["scales"] = np.asarray(index.scales, np.float32)
+    return arrays
+
+
+def _base_manifest(index: IVFFlatIndex, *, n_shards: int, version: int
+                   ) -> dict:
+    return dict(
+        version=version,
+        n_clusters=index.n_clusters,
+        n_shards=n_shards,
+        vpad=index.vpad,
+        dim=index.spec.dim,
+        n_attrs=index.spec.n_attrs,
+        metric=index.spec.metric,
+        core_dtype=_dtype_name(index.spec.core_dtype),
+        store_dtype=_dtype_name(index.vectors.dtype),
+        has_norms=index.norms is not None,
+        quantized=index.quantized,
+        n_live=int(jnp.sum(index.counts)),
     )
 
 
 def save_index(index: IVFFlatIndex, directory: str, *, n_shards: int = 1,
-               version: int = 0) -> None:
-    """Writes the index as ``n_shards`` contiguous cluster-range files."""
+               version: int = 0, layout: int = 2) -> None:
+    """Writes the index as ``n_shards`` contiguous cluster-range files.
+
+    ``layout=2`` (default) writes the fixed-stride record format above;
+    ``layout=1`` writes the legacy one-npz-per-shard format (both now carry
+    SQ8 ``scales`` and the ``quantized`` manifest flag).
+    """
     k = index.n_clusters
     if k % n_shards:
         raise ValueError(f"K={k} not divisible by n_shards={n_shards}; pad_k first")
+    if layout not in (1, 2):
+        raise ValueError(f"unknown layout {layout}")
     os.makedirs(directory, exist_ok=True)
     kl = k // n_shards
+    manifest = _base_manifest(index, n_shards=n_shards, version=version)
+    arrays = _index_arrays(index)
+
     def _np_save(p, arr):
         with open(p, "wb") as f:  # file handle: np.save must not append .npy
             np.save(f, arr, allow_pickle=False)
 
     _atomic_save(
         os.path.join(directory, "centroids.npy"),
-        lambda p: _np_save(p, np.asarray(index.centroids)),
+        lambda p: _np_save(p, np.asarray(index.centroids, np.float32)),
     )
-    for s in range(n_shards):
-        lo, hi = s * kl, (s + 1) * kl
-        payload = dict(
-            vectors=np.asarray(index.vectors[lo:hi]),
-            attrs=np.asarray(index.attrs[lo:hi]),
-            ids=np.asarray(index.ids[lo:hi]),
-            counts=np.asarray(index.counts[lo:hi]),
-        )
-        if index.norms is not None:
-            payload["norms"] = np.asarray(index.norms[lo:hi])
-        def _npz_save(p, pl):
-            with open(p, "wb") as f:
-                np.savez(f, **pl)
 
-        _atomic_save(
-            os.path.join(directory, f"shard_{s}_of_{n_shards}.npz"),
-            lambda p, pl=payload: _npz_save(p, pl),
+    if layout == 1:
+        for s in range(n_shards):
+            lo, hi = s * kl, (s + 1) * kl
+            payload = {name: a[lo:hi] for name, a in arrays.items()}
+            payload["counts"] = np.asarray(index.counts[lo:hi], np.int32)
+
+            def _npz_save(p, pl):
+                with open(p, "wb") as f:
+                    np.savez(f, **pl)
+
+            _atomic_save(
+                os.path.join(directory, f"shard_{s}_of_{n_shards}.npz"),
+                lambda p, pl=payload: _npz_save(p, pl),
+            )
+        manifest["layout"] = 1
+    else:
+        fields, stride = record_layout(
+            vpad=index.vpad, dim=index.spec.dim, n_attrs=index.spec.n_attrs,
+            store_dtype=manifest["store_dtype"],
+            has_norms=manifest["has_norms"], quantized=index.quantized,
         )
-    manifest = dict(
-        version=version,
-        n_clusters=k,
-        n_shards=n_shards,
-        vpad=index.vpad,
-        dim=index.spec.dim,
-        n_attrs=index.spec.n_attrs,
-        metric=index.spec.metric,
-        core_dtype=str(np.dtype(index.spec.core_dtype).name)
-        if index.spec.core_dtype != jnp.bfloat16 else "bfloat16",
-        has_norms=index.norms is not None,
-        n_live=int(jnp.sum(index.counts)),
-    )
+        _atomic_save(
+            os.path.join(directory, "counts.npy"),
+            lambda p: _np_save(p, np.asarray(index.counts, np.int32)),
+        )
+        for s in range(n_shards):
+            lo, hi = s * kl, (s + 1) * kl
+
+            def _bin_save(p, lo=lo, hi=hi):
+                with open(p, "wb") as f:
+                    rec = np.zeros(stride, np.uint8)
+                    for c in range(lo, hi):
+                        rec[:] = 0
+                        for fld in fields:
+                            raw = np.ascontiguousarray(
+                                arrays[fld["name"]][c]
+                            ).tobytes()
+                            o = fld["offset"]
+                            rec[o:o + len(raw)] = np.frombuffer(raw, np.uint8)
+                        f.write(rec.tobytes())
+
+            _atomic_save(
+                os.path.join(directory, f"shard_{s}_of_{n_shards}.bin"),
+                _bin_save,
+            )
+        manifest.update(layout=2, record_stride=stride, fields=fields)
+
     _atomic_save(
         os.path.join(directory, MANIFEST),
         lambda p: open(p, "w").write(json.dumps(manifest, indent=2)),
@@ -130,46 +258,121 @@ def save_index(index: IVFFlatIndex, directory: str, *, n_shards: int = 1,
 
 def load_manifest(directory: str) -> dict:
     with open(os.path.join(directory, MANIFEST)) as f:
-        return json.load(f)
+        man = json.load(f)
+    man.setdefault("layout", 1)        # pre-v2 checkpoints
+    man.setdefault("quantized", False)  # pre-SQ8-fix checkpoints
+    return man
+
+
+def shard_paths(directory: str, man: dict) -> List[str]:
+    ext = "bin" if man["layout"] == 2 else "npz"
+    n = man["n_shards"]
+    return [
+        os.path.join(directory, f"shard_{s}_of_{n}.{ext}") for s in range(n)
+    ]
+
+
+def check_complete(directory: str, man: dict) -> List[str]:
+    paths = shard_paths(directory, man)
+    missing = [p for p in paths if not os.path.exists(p)]
+    if missing:
+        raise FileNotFoundError(f"incomplete checkpoint, missing: {missing}")
+    return paths
+
+
+def spec_from_manifest(man: dict) -> HybridSpec:
+    core_dtype = (
+        jnp.bfloat16 if man["core_dtype"] == "bfloat16"
+        else jnp.dtype(man["core_dtype"])
+    )
+    return HybridSpec(
+        dim=man["dim"], n_attrs=man["n_attrs"], core_dtype=core_dtype,
+        metric=man["metric"],
+    )
+
+
+def _load_v1(directory: str, man: dict, paths: List[str]) -> IVFFlatIndex:
+    parts = [np.load(p) for p in paths]
+    cat = lambda k: jnp.asarray(np.concatenate([p[k] for p in parts], 0))
+    spec = spec_from_manifest(man)
+    stored_int8 = parts[0]["vectors"].dtype == np.int8
+    if man["quantized"] or stored_int8:
+        # int8 vectors with no (or unflagged) scales = a checkpoint written
+        # by the pre-fix save_index, which dropped `scales` and the
+        # `quantized` flag; casting the codes to float would silently score
+        # garbage, so refuse to load it.
+        if "scales" not in parts[0].files:
+            raise ValueError(
+                "quantized checkpoint has no 'scales' payload (written by a "
+                "pre-fix save_index); rebuild and re-save the index"
+            )
+        vectors = cat("vectors")  # int8 codes, no cast
+        scales = cat("scales")
+    else:
+        vectors = cat("vectors").astype(spec.core_dtype)
+        scales = None
+    return IVFFlatIndex(
+        spec=spec,
+        centroids=jnp.asarray(np.load(os.path.join(directory, "centroids.npy"))),
+        vectors=vectors,
+        attrs=cat("attrs"),
+        ids=cat("ids"),
+        counts=cat("counts"),
+        norms=cat("norms") if man["has_norms"] else None,
+        scales=scales,
+    )
+
+
+def read_shard_fields(path: str, man: dict) -> Dict[str, np.ndarray]:
+    """Reads one v2 shard file into per-field arrays ``[kl, *field_shape]``."""
+    stride = man["record_stride"]
+    raw = np.fromfile(path, np.uint8)
+    if raw.size % stride:
+        raise ValueError(f"{path}: size {raw.size} not a stride multiple")
+    raw = raw.reshape(-1, stride)
+    out = {}
+    for fld in man["fields"]:
+        dt = np_dtype(fld["dtype"])
+        nb = int(np.prod(fld["shape"])) * dt.itemsize
+        o = fld["offset"]
+        flat = np.ascontiguousarray(raw[:, o:o + nb]).view(dt)
+        out[fld["name"]] = flat.reshape((raw.shape[0],) + tuple(fld["shape"]))
+    return out
+
+
+def _load_v2(directory: str, man: dict, paths: List[str]) -> IVFFlatIndex:
+    spec = spec_from_manifest(man)
+    parts = [read_shard_fields(p, man) for p in paths]
+    cat = lambda k: jnp.asarray(np.concatenate([p[k] for p in parts], 0))
+    return IVFFlatIndex(
+        spec=spec,
+        centroids=jnp.asarray(np.load(os.path.join(directory, "centroids.npy"))),
+        vectors=cat("vectors"),
+        attrs=cat("attrs"),
+        ids=cat("ids"),
+        counts=jnp.asarray(np.load(os.path.join(directory, "counts.npy"))),
+        norms=cat("norms") if man["has_norms"] else None,
+        scales=cat("scales") if man["quantized"] else None,
+    )
 
 
 def load_index(
     directory: str, *, target_shards: Optional[int] = None
 ) -> IVFFlatIndex:
-    """Restores an index; ``target_shards`` pads K for a new chip count.
+    """Restores an index into RAM; ``target_shards`` pads K for a new chip
+    count.  Reads both layout v2 (fixed-stride records) and legacy v1 (npz).
 
     Verifies every shard file exists before loading anything (a save that
     died mid-write leaves no manifest or a manifest pointing at a complete
-    older set — either way no partial state is observable).
+    older set — either way no partial state is observable).  For serving an
+    index larger than host memory, open it with
+    :class:`repro.core.disk.DiskIVFIndex` instead.
     """
     man = load_manifest(directory)
-    n_shards = man["n_shards"]
-    paths = [
-        os.path.join(directory, f"shard_{s}_of_{n_shards}.npz")
-        for s in range(n_shards)
-    ]
-    missing = [p for p in paths if not os.path.exists(p)]
-    if missing:
-        raise FileNotFoundError(f"incomplete checkpoint, missing: {missing}")
-
-    cents = np.load(os.path.join(directory, "centroids.npy"))
-    parts = [np.load(p) for p in paths]
-    cat = lambda k: jnp.asarray(np.concatenate([p[k] for p in parts], 0))
-    core_dtype = jnp.bfloat16 if man["core_dtype"] == "bfloat16" else jnp.dtype(
-        man["core_dtype"]
-    )
-    spec = HybridSpec(
-        dim=man["dim"], n_attrs=man["n_attrs"], core_dtype=core_dtype,
-        metric=man["metric"],
-    )
-    index = IVFFlatIndex(
-        spec=spec,
-        centroids=jnp.asarray(cents),
-        vectors=cat("vectors").astype(core_dtype),
-        attrs=cat("attrs"),
-        ids=cat("ids"),
-        counts=cat("counts"),
-        norms=cat("norms") if man["has_norms"] else None,
+    paths = check_complete(directory, man)
+    index = (
+        _load_v2(directory, man, paths) if man["layout"] == 2
+        else _load_v1(directory, man, paths)
     )
     if target_shards and index.n_clusters % target_shards:
         k_new = ((index.n_clusters + target_shards - 1) // target_shards

@@ -117,7 +117,11 @@ def compact_cluster(index: IVFFlatIndex, cluster: int) -> IVFFlatIndex:
     norms = index.norms
     if norms is not None:
         norms = norms.at[cluster].set(jnp.take(norms[cluster], perm, 0))
+    scales = index.scales
+    if scales is not None:  # SQ8 rows move with their dequantization scale
+        scales = scales.at[cluster].set(jnp.take(scales[cluster], perm, 0))
     counts = index.counts.at[cluster].set(n_live)
     return dataclasses.replace(
-        index, vectors=vec, attrs=att, ids=ids, counts=counts, norms=norms
+        index, vectors=vec, attrs=att, ids=ids, counts=counts, norms=norms,
+        scales=scales,
     )

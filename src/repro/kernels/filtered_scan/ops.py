@@ -25,12 +25,13 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import probes as probes_lib
 from repro.core import topk as topk_lib
 from repro.core.filters import FilterSpec
 from repro.core.ivf import IVFFlatIndex, round_up
-from repro.core.search import SearchResult, search_centroids
+from repro.core.search import SearchResult, centroid_scores, search_centroids
 from repro.kernels.filtered_scan.filtered_scan import (
     filtered_scan,
     filtered_scan_tiled,
@@ -158,66 +159,92 @@ def tiled_scan_xla(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "n_probes", "q_block", "v_block", "u_cap",
-                     "backend"),
+    static_argnames=("metric", "n_probes", "q_block", "u_cap", "cast_dtype"),
 )
-def search_fused_tiled(
-    index: IVFFlatIndex,
+def plan_fused_tiled(
+    centroids: Array,
+    counts: Array,
     queries: Array,
-    fspec: FilterSpec,
+    lo: Array,
+    hi: Array,
     *,
-    k: int,
+    metric: str,
     n_probes: int,
-    q_block: int = 64,
-    v_block: int = 256,
-    u_cap: Optional[int] = None,
-    backend: Optional[str] = None,
-) -> SearchResult:
-    """Query-tiled, probe-deduplicated fused search with streaming top-k.
+    q_block: int,
+    u_cap: int,
+    cast_dtype,
+):
+    """Stage 1 of the tiled search: centroid probe + per-tile dedup plan.
 
-    Same contract as :func:`repro.core.search.search_reference` (identical
-    ids/scores modulo tie order).  q_block is the query-tile height QB;
-    u_cap bounds unique probes per tile (default ``min(QB·T, K)`` — always
-    sufficient, since a tile cannot probe more than K distinct clusters).
+    Runs entirely on the *resident* state (centroids + counts), so the disk
+    tier can plan — and hand ``slot_cluster`` to its cluster cache as the
+    batch's fetch list — before any flat list is paged in.  Returns
+    ``(slot_cluster, slot_tile, slot_of_probe, probe_ok, n_unique,
+    queries_pad, lo_pad, hi_pad)``; queries/bounds come back padded to whole
+    ``q_block`` tiles with edge rows (whose probes dedupe into the last real
+    query's slots, so padding adds no scan work).
     """
-    q, d = queries.shape
-    qb = min(q_block, round_up(q, 8))
-    metric = index.spec.metric
-    kc = index.n_clusters
-
-    probe_ids, _ = search_centroids(index, queries, n_probes)  # [Q, T]
-
-    # Pad the batch to whole tiles with edge rows; their probes dedupe into
-    # the last real query's slots, so padding adds no scan work.
-    probe_pad = probes_lib.pad_to_tiles(probe_ids, qb)  # [Qpad, T]
-    queries_pad = probes_lib.pad_to_tiles(
-        queries.astype(jnp.float32 if index.quantized
-                       else index.vectors.dtype),
-        qb,
+    scores = centroid_scores(centroids, counts, queries, metric=metric)
+    _, probe_ids = jax.lax.top_k(scores, n_probes)
+    probe_ids = probe_ids.astype(jnp.int32)  # [Q, T]
+    probe_pad = probes_lib.pad_to_tiles(probe_ids, q_block)  # [Qpad, T]
+    queries_pad = probes_lib.pad_to_tiles(queries.astype(cast_dtype), q_block)
+    lo_pad = probes_lib.pad_to_tiles(lo, q_block)
+    hi_pad = probes_lib.pad_to_tiles(hi, q_block)
+    slot_cluster, slot_tile, slot_of_probe, probe_ok, n_unique = (
+        probes_lib.plan_probe_tiles(probe_pad, q_block=q_block, u_cap=u_cap)
     )
-    lo_pad = probes_lib.pad_to_tiles(fspec.lo, qb)
-    hi_pad = probes_lib.pad_to_tiles(fspec.hi, qb)
+    return (slot_cluster, slot_tile, slot_of_probe, probe_ok, n_unique,
+            queries_pad, lo_pad, hi_pad)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("metric", "k", "q", "q_block", "v_block", "backend"),
+)
+def _scan_merge_tiled(
+    slot_cluster: Array,
+    slot_tile: Array,
+    slot_of_probe: Array,
+    probe_ok: Array,
+    queries: Array,      # [Q, D] original (for the l2 ‖q‖² constant)
+    queries_pad: Array,  # [Qpad, D] cast + tile-padded
+    lo_pad: Array,
+    hi_pad: Array,
+    vectors: Array,
+    attrs: Array,
+    ids: Array,
+    norms: Optional[Array],
+    scales: Optional[Array],
+    *,
+    metric: str,
+    k: int,
+    q: int,
+    q_block: int,
+    v_block: int,
+    backend: str,
+) -> SearchResult:
+    """Stage 2: scan the planned slots and merge per-probe fragments.
+
+    ``vectors/attrs/ids/...`` are indexed by ``slot_cluster`` rows — either
+    the full ``[K, Vpad, ...]`` resident arrays (RAM tier) or batch-local
+    gathered ``[S, Vpad, ...]`` blocks with slot-local ids (disk tier).  The
+    kernel only ever dereferences rows named in ``slot_cluster``, so the two
+    are indistinguishable to it.
+    """
     qpad = queries_pad.shape[0]
-
-    cap = min(qb * n_probes, kc) if u_cap is None else u_cap
-    slot_cluster, slot_tile, slot_of_probe, probe_ok, _ = (
-        probes_lib.plan_probe_tiles(probe_pad, q_block=qb, u_cap=cap)
-    )
-
-    if backend is None:
-        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
     if backend in ("pallas", "pallas_interpret"):
         svals, sids, snpass = filtered_scan_tiled(
             slot_cluster, slot_tile, queries_pad, lo_pad, hi_pad,
-            index.vectors, index.attrs, index.ids, index.norms, index.scales,
-            metric=metric, k=k, q_block=qb, v_block=v_block,
+            vectors, attrs, ids, norms, scales,
+            metric=metric, k=k, q_block=q_block, v_block=v_block,
             interpret=backend == "pallas_interpret",
         )
     elif backend == "xla":
         svals, sids, snpass = tiled_scan_xla(
             slot_cluster, slot_tile, queries_pad, lo_pad, hi_pad,
-            index.vectors, index.attrs, index.ids, index.norms, index.scales,
-            metric=metric, k=k, q_block=qb,
+            vectors, attrs, ids, norms, scales,
+            metric=metric, k=k, q_block=q_block,
         )
     else:
         raise ValueError(backend)
@@ -225,7 +252,7 @@ def search_fused_tiled(
     # Per-probe candidate fragments, then the monoid merge across T probes.
     # Probes that overflowed an undersized u_cap are dropped soundly (their
     # fragments masked out), mirroring the distributed dispatch's P_cap.
-    row = jnp.arange(qpad, dtype=jnp.int32) % qb  # [Qpad]
+    row = jnp.arange(qpad, dtype=jnp.int32) % q_block  # [Qpad]
     vals_qt = svals[slot_of_probe, row[:, None]]  # [Qpad, T, k]
     ids_qt = sids[slot_of_probe, row[:, None]]
     npass_qt = snpass[slot_of_probe, row[:, None]]  # [Qpad, T]
@@ -242,14 +269,78 @@ def search_fused_tiled(
         )
 
     n_passed = jnp.sum(npass_qt[:q], axis=-1)
-    live_per_cluster = jnp.sum(
-        (index.ids >= 0).astype(jnp.int32), axis=-1
-    )  # [K]
-    # probes dropped by an undersized u_cap were never scanned — keep the
-    # perf-accounting stats consistent with what actually ran
+    # Scan accounting through the slot tables: a probe's slot scans exactly
+    # its cluster, so live-rows-per-slot gathered by slot_of_probe equals the
+    # old per-cluster lookup — and works when only gathered rows exist.
+    live_per_row = jnp.sum((ids >= 0).astype(jnp.int32), axis=-1)  # [K or S]
+    live_per_slot = jnp.take(live_per_row, slot_cluster)  # [S_flat]
     n_scanned = jnp.sum(
-        jnp.take(live_per_cluster, probe_ids)
+        jnp.take(live_per_slot, slot_of_probe[:q])
         * probe_ok[:q].astype(jnp.int32),
         axis=-1,
     )
     return SearchResult(vals, out_ids, n_scanned, n_passed)
+
+
+def search_fused_tiled(
+    index,
+    queries: Array,
+    fspec: FilterSpec,
+    *,
+    k: int,
+    n_probes: int,
+    q_block: int = 64,
+    v_block: int = 256,
+    u_cap: Optional[int] = None,
+    backend: Optional[str] = None,
+    gather_fn=None,
+) -> SearchResult:
+    """Query-tiled, probe-deduplicated fused search with streaming top-k.
+
+    Same contract as :func:`repro.core.search.search_reference` (identical
+    ids/scores modulo tie order).  q_block is the query-tile height QB;
+    u_cap bounds unique probes per tile (default ``min(QB·T, K)`` — always
+    sufficient, since a tile cannot probe more than K distinct clusters).
+
+    Two jitted stages: a *plan* over the resident state (centroid top-k +
+    per-tile probe dedup) and a *scan/merge* over the flat lists.  With
+    ``gather_fn=None`` the scan reads ``index``'s in-RAM ``[K, Vpad, ...]``
+    arrays.  A disk-resident index passes ``gather_fn`` (its cluster cache's
+    pager): the hook receives the plan's ``slot_cluster`` fetch list and
+    returns ``(local_ids, vectors, attrs, ids, norms, scales)`` batch-local
+    blocks, which the same kernel scans for bit-identical results.  ``index``
+    then only needs the resident surface (``spec / centroids / counts /
+    store_dtype / quantized``), e.g. :class:`repro.core.disk.DiskIVFIndex`.
+    """
+    q, _ = queries.shape
+    qb = min(q_block, round_up(q, 8))
+    kc = index.n_clusters
+    cap = min(qb * n_probes, kc) if u_cap is None else u_cap
+    cast_dtype = np.dtype(np.float32) if index.quantized else np.dtype(
+        index.store_dtype
+    )
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+
+    (slot_cluster, slot_tile, slot_of_probe, probe_ok, _, queries_pad,
+     lo_pad, hi_pad) = plan_fused_tiled(
+        index.centroids, index.counts, queries, fspec.lo, fspec.hi,
+        metric=index.spec.metric, n_probes=n_probes, q_block=qb, u_cap=cap,
+        cast_dtype=cast_dtype,
+    )
+
+    if gather_fn is None:
+        vectors, attrs, ids = index.vectors, index.attrs, index.ids
+        norms, scales = index.norms, index.scales
+    else:
+        slot_cluster, vectors, attrs, ids, norms, scales = gather_fn(
+            slot_cluster
+        )
+        slot_cluster = jnp.asarray(slot_cluster)
+
+    return _scan_merge_tiled(
+        slot_cluster, slot_tile, slot_of_probe, probe_ok, queries,
+        queries_pad, lo_pad, hi_pad, vectors, attrs, ids, norms, scales,
+        metric=index.spec.metric, k=k, q=q, q_block=qb, v_block=v_block,
+        backend=backend,
+    )

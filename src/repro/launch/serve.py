@@ -1,18 +1,42 @@
 """Serving launcher: builds (or loads) a hybrid index and serves batched
 filtered queries through the micro-batching server.
 
+Two tiers:
+
+  * ``--tier ram``  — the whole index lives in host/device memory.
+  * ``--tier disk`` — only centroids + counts stay resident; flat lists page
+    in from a layout-v2 checkpoint through the probe-driven cluster cache,
+    capped by ``--resident-budget-mb`` (hot clusters are pinned).
+
     PYTHONPATH=src python -m repro.launch.serve --n 100000 --requests 128
     PYTHONPATH=src python -m repro.launch.serve --load <index_dir>
+    PYTHONPATH=src python -m repro.launch.serve --load <index_dir> \\
+        --tier disk --resident-budget-mb 64
 """
 
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+
+def _sample_queries(disk_index, max_clusters: int = 4) -> np.ndarray:
+    """Demo query pool from a few paged-in clusters — O(clusters) memory,
+    never the whole index."""
+    rows = []
+    for cid in range(min(max_clusters, disk_index.n_clusters)):
+        rec = disk_index.reader.read(cid)
+        live = rec["ids"] >= 0
+        v = rec["vectors"][live].astype(np.float32)
+        if disk_index.quantized:
+            v = v * rec["scales"][live][:, None]
+        rows.append(v)
+    return np.concatenate(rows, 0)
 
 
 def main():
@@ -27,14 +51,26 @@ def main():
     ap.add_argument("--probes", type=int, default=7)
     ap.add_argument("--load", default=None, help="index dir to restore")
     ap.add_argument("--save", default=None, help="index dir to persist")
+    ap.add_argument("--tier", choices=("ram", "disk"), default="ram",
+                    help="disk = page clusters from the checkpoint on demand")
+    ap.add_argument("--resident-budget-mb", type=int, default=None,
+                    help="disk tier: cap on resident bytes (centroids + "
+                         "counts + cluster cache); default = unbounded cache")
     args = ap.parse_args()
 
     from repro.core import HybridSpec, build_ivf, storage
-    from repro.core.search import search_reference
-    from repro.core.serving import SearchServer
+    from repro.core.disk import DiskIVFIndex
+    from repro.core.serving import SearchServer, make_fused_search_fn
     from repro.data import synthetic_attributes, synthetic_embeddings
 
-    if args.load:
+    index_dir = args.load
+    index = None
+    if args.load and args.tier == "disk":
+        # Disk tier: never materialize the index in RAM — that would defeat
+        # serving an index larger than host memory.  Query vectors for the
+        # demo traffic are sampled from a few paged-in clusters instead.
+        pass
+    elif args.load:
         index = storage.load_index(args.load)
         core = np.asarray(index.vectors).reshape(-1, index.spec.dim)
         print(f"restored index: K={index.n_clusters}, "
@@ -54,16 +90,33 @@ def main():
         if args.save:
             storage.save_index(index, args.save, n_shards=4)
             print(f"persisted to {args.save}")
+            index_dir = args.save
 
-    def search_fn(queries, fspec, shard_ok):
-        del shard_ok
-        res = search_reference(index, queries, fspec, k=args.k,
-                               n_probes=args.probes)
-        return res.scores, res.ids
+    if args.tier == "disk":
+        if index_dir is None:  # disk tier needs a checkpoint to page from
+            index_dir = tempfile.mkdtemp(prefix="ivf_disk_")
+            storage.save_index(index, index_dir, n_shards=4)
+            print(f"wrote disk-tier checkpoint to {index_dir}")
+        budget = (args.resident_budget_mb * 1024 * 1024
+                  if args.resident_budget_mb else None)
+        serving_index = DiskIVFIndex.open(
+            index_dir, resident_budget_bytes=budget
+        )
+        print(f"disk tier: K={serving_index.n_clusters}, record stride "
+              f"{serving_index.reader.stride} B, budget "
+              f"{budget or 'unbounded'}")
+        if index is None:  # --load: sample demo queries from a few clusters
+            core = _sample_queries(serving_index)
+    else:
+        serving_index = index
+
+    search_fn = make_fused_search_fn(
+        serving_index, k=args.k, n_probes=args.probes, q_block=args.batch,
+    )
 
     server = SearchServer(
-        search_fn, batch_size=args.batch, dim=index.spec.dim,
-        n_attrs=index.spec.n_attrs, n_terms=1, n_shards=8,
+        search_fn, batch_size=args.batch, dim=serving_index.spec.dim,
+        n_attrs=serving_index.spec.n_attrs, n_terms=1, n_shards=8,
     )
     server.start()
     rng = np.random.default_rng(1)
@@ -80,6 +133,15 @@ def main():
           f"({args.requests/wall:.0f} QPS), p50 {np.percentile(lat,50):.1f}ms "
           f"p99 {np.percentile(lat,99):.1f}ms, "
           f"batches {server.stats['batches']}")
+    if args.tier == "disk":
+        cache = serving_index.cache
+        on_disk = serving_index.reader.stride * serving_index.n_clusters
+        print(f"resident {serving_index.resident_bytes()/2**20:.1f} MiB "
+              f"(index on disk {on_disk/2**20:.1f} MiB), "
+              f"cache hit-rate {cache.hit_rate:.2f}, "
+              f"evictions {cache.stats.evictions}, "
+              f"pinned {len(cache.pinned)} hot clusters")
+        serving_index.close()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,174 @@
+"""Index lifecycle: SQ8 persistence, pad_k probe-exclusion, compaction.
+
+These pin the bugs the disk tier shipped with: scales dropped by
+``save_index``/``load_index``, scales not padded by ``pad_k``, padded
+clusters probeable under dot with negative query sums, and
+``compact_cluster`` desyncing SQ8 rows from their dequantization scales.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    HybridSpec,
+    add_vectors,
+    compact_cluster,
+    match_all,
+    tombstone,
+)
+from repro.core import build_ivf, storage
+from repro.core.ivf import quantize_index
+from repro.core.search import search_centroids, search_reference
+
+
+def _build(metric="dot", seed=0, n=600, d=12, m=3, kc=6):
+    rng = np.random.default_rng(seed)
+    core = rng.standard_normal((n, d)).astype(np.float32)
+    core /= np.linalg.norm(core, axis=-1, keepdims=True)
+    attrs = rng.integers(0, 5, (n, m)).astype(np.int16)
+    spec = HybridSpec(dim=d, n_attrs=m, core_dtype=jnp.float32, metric=metric)
+    index, _ = build_ivf(
+        jax.random.key(0), spec, core, attrs, n_clusters=kc,
+        kmeans_mode="lloyd", kmeans_steps=4,
+    )
+    return index, core, attrs
+
+
+def _assert_same_search(a, b, queries, k=8, n_probes=None):
+    n_probes = n_probes or a.n_clusters
+    fspec = match_all(queries.shape[0], a.spec.n_attrs)
+    ra = search_reference(a, queries, fspec, k=k, n_probes=n_probes)
+    rb = search_reference(b, queries, fspec, k=k, n_probes=n_probes)
+    np.testing.assert_array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+    np.testing.assert_allclose(
+        np.asarray(ra.scores), np.asarray(rb.scores), rtol=1e-6, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("metric", ["dot", "l2"])
+@pytest.mark.parametrize("layout", [1, 2])
+def test_sq8_save_load_roundtrip(tmp_path, metric, layout):
+    """Quantized save→load→search must equal pre-save search exactly."""
+    index, core, _ = _build(metric)
+    qindex = quantize_index(index)
+    d = str(tmp_path / f"sq8_{metric}_{layout}")
+    storage.save_index(qindex, d, n_shards=3, layout=layout)
+
+    man = storage.load_manifest(d)
+    assert man["quantized"] is True
+
+    loaded = storage.load_index(d)
+    assert loaded.quantized
+    assert loaded.vectors.dtype == jnp.int8  # codes stay codes, no cast
+    np.testing.assert_allclose(
+        np.asarray(loaded.scales), np.asarray(qindex.scales), rtol=0, atol=0
+    )
+    _assert_same_search(qindex, loaded, jnp.asarray(core[:8]))
+
+
+def test_unquantized_roundtrip_both_layouts(tmp_path):
+    """v1 (legacy npz) stays readable and agrees with v2 on the same index."""
+    index, core, _ = _build("l2")
+    d1, d2 = str(tmp_path / "v1"), str(tmp_path / "v2")
+    storage.save_index(index, d1, n_shards=2, layout=1)
+    storage.save_index(index, d2, n_shards=2, layout=2)
+    assert storage.load_manifest(d1)["layout"] == 1
+    assert storage.load_manifest(d2)["layout"] == 2
+    q = jnp.asarray(core[:6])
+    _assert_same_search(index, storage.load_index(d1), q)
+    _assert_same_search(index, storage.load_index(d2), q)
+
+
+def test_pad_k_pads_scales():
+    index, _, _ = _build()
+    qindex = quantize_index(index)
+    padded = storage.pad_k(qindex, qindex.n_clusters + 4)
+    assert padded.scales is not None
+    assert padded.scales.shape == (qindex.n_clusters + 4, qindex.vpad)
+    np.testing.assert_array_equal(
+        np.asarray(padded.scales[: qindex.n_clusters]),
+        np.asarray(qindex.scales),
+    )
+
+
+@pytest.mark.parametrize("metric", ["dot", "l2"])
+def test_pad_k_clusters_unprobeable(metric):
+    """Padded (counts==0) clusters never receive probe budget — including
+    for dot queries whose components sum negative (the sentinel-sign bug)."""
+    index, core, _ = _build(metric)
+    k = index.n_clusters
+    padded = storage.pad_k(quantize_index(index), k + 6)
+    rng = np.random.default_rng(3)
+    negq = -np.abs(rng.standard_normal((16, core.shape[1]))).astype(np.float32)
+    for queries in (jnp.asarray(negq), jnp.asarray(core[:16])):
+        probe_ids, _ = search_centroids(padded, queries, k)
+        probed_counts = np.asarray(padded.counts)[np.asarray(probe_ids)]
+        assert (probed_counts > 0).all(), "probe budget spent on empty pads"
+    # and the padded index returns the same results as the original
+    _assert_same_search(
+        quantize_index(index), padded, jnp.asarray(core[:8]), n_probes=k
+    )
+
+
+def test_lifecycle_add_tombstone_compact_quantized():
+    """add→tombstone→compact on SQ8 must preserve scores bit-exactly: the
+    compaction permutes int8 rows and their scales together."""
+    index, core, _ = _build()
+    qindex = quantize_index(index)
+    rng = np.random.default_rng(7)
+    d, m = core.shape[1], 3
+    new = rng.standard_normal((4, d)).astype(np.float32)
+    new /= np.linalg.norm(new, axis=-1, keepdims=True)
+    na = np.full((4, m), 2, np.int16)
+    q2, dropped = add_vectors(
+        qindex, jnp.asarray(new), jnp.asarray(na),
+        jnp.asarray([900, 901, 902, 903], jnp.int32),
+    )
+    assert int(dropped) == 0
+
+    cluster = int(np.argmax(np.asarray(q2.counts)))
+    q3 = tombstone(q2, jnp.asarray([cluster]), jnp.asarray([0]))
+
+    queries = jnp.asarray(np.concatenate([core[:6], new], 0))
+    fspec = match_all(queries.shape[0], m)
+    pre = search_reference(q3, queries, fspec, k=8, n_probes=q3.n_clusters)
+    q4 = compact_cluster(q3, cluster)
+    post = search_reference(q4, queries, fspec, k=8, n_probes=q4.n_clusters)
+
+    np.testing.assert_array_equal(np.asarray(pre.ids), np.asarray(post.ids))
+    np.testing.assert_allclose(
+        np.asarray(pre.scores), np.asarray(post.scores), rtol=0, atol=0
+    )
+    # the tombstoned slot was actually reclaimed
+    assert int(q4.counts[cluster]) == int(q3.counts[cluster]) - 1
+
+
+def test_quantized_v1_pre_fix_checkpoint_rejected(tmp_path):
+    """A v1 checkpoint claiming quantized but lacking scales (written by the
+    pre-fix saver) must fail loudly, not silently score garbage."""
+    import json
+    import os
+
+    index, _, _ = _build()
+    qindex = quantize_index(index)
+    d = str(tmp_path / "pre_fix")
+    storage.save_index(qindex, d, n_shards=1, layout=1)
+    # simulate the pre-fix writer: strip scales from the payload
+    path = storage.shard_paths(d, storage.load_manifest(d))[0]
+    data = dict(np.load(path))
+    data.pop("scales")
+    np.savez(path, **data)
+    with pytest.raises(ValueError, match="scales"):
+        storage.load_index(d)
+
+    # a genuinely pre-fix manifest (no 'quantized' key at all) must be
+    # rejected too: the int8 codes betray the quantization even when the
+    # flag is missing — casting them to float would silently score garbage
+    mpath = os.path.join(d, storage.MANIFEST)
+    man = json.load(open(mpath))
+    del man["quantized"]
+    json.dump(man, open(mpath, "w"))
+    with pytest.raises(ValueError, match="scales"):
+        storage.load_index(d)

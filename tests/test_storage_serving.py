@@ -64,7 +64,7 @@ def test_incomplete_checkpoint_rejected(built, tmp_path):
     index, _, _ = built
     d = str(tmp_path / "idx3")
     storage.save_index(index, d, n_shards=3)
-    os.unlink(os.path.join(d, "shard_1_of_3.npz"))
+    os.unlink(storage.shard_paths(d, storage.load_manifest(d))[1])
     with pytest.raises(FileNotFoundError):
         storage.load_index(d)
 
