@@ -13,6 +13,15 @@ Emits ``BENCH_search.json`` at the repo root with QPS and p50 latency per
 
     PYTHONPATH=src python benchmarks/bench_search.py
 
+A second workload — the *selectivity sweep* — measures filter-aware probe
+pruning (``core/summaries.py``): a topic-mixture index with topic-correlated
+timestamps is searched under random time-window filters at ~50%/5%/0.5%
+selectivity, pruning on vs off, on both the RAM and disk tiers.  Per cell it
+records QPS, mean pruned probes per query, u_cap (the slot table the pruned
+plan needs is smaller), and the disk tier's cache hit rate + fetch count;
+every pruned result is gated bit-exact against ``search_reference``.
+``--smoke`` shrinks N for the CI gate; ``--skip-sweep`` drops the workload.
+
 The old fused path runs the Pallas kernel in interpret mode on CPU (it
 cannot lower to Mosaic without a TPU), so it is benchmarked with one
 measured iteration and full-list blocks; its numbers dominate wall time.
@@ -30,10 +39,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import HybridSpec, build_ivf, match_all, storage
+from repro.core import FilterSpec, HybridSpec, build_ivf, match_all, storage
 from repro.core.disk import DiskIVFIndex
-from repro.core.ivf import round_up
-from repro.core.search import search_centroids, search_reference
+from repro.core.ivf import build_from_assignments, round_up
+from repro.core.search import (
+    brute_force,
+    recall_at_k,
+    search_centroids,
+    search_reference,
+)
 from repro.kernels.filtered_scan import search_fused, search_fused_tiled
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
@@ -43,6 +57,12 @@ T, K = 4, 10
 N_HOT = 8       # hot topics the traffic clusters around
 NOISE = 0.01    # per-query perturbation of its topic seed
 Q_SWEEP = (8, 64, 256)
+
+# selectivity sweep (filter-aware probe pruning): timestamp-like attr0 in
+# [0, TS_RANGE), topic-correlated; a filter is a random window whose width
+# sets its selectivity
+TS_RANGE = 10_000
+SELECTIVITIES = (0.5, 0.05, 0.005)
 
 
 def _timeit(fn, *args, n_it=5):
@@ -114,6 +134,8 @@ def bench_disk_tier(index, core, rng, *, q=64, n_batches=10,
             return disk.search(qs, fspec, k=K, n_probes=T, q_block=qb)
 
         jax.block_until_ready(run(batches[0]).ids)  # compile + first page-in
+        disk.prefetch_for_queries(batches[0], T)  # compile the prefetch plan
+        disk.cache.drain()
         t0 = time.perf_counter()
         last = None
         for i, qs in enumerate(batches):
@@ -149,12 +171,275 @@ def bench_disk_tier(index, core, rng, *, q=64, n_batches=10,
     return entry
 
 
+def build_sweep():
+    """Topic-mixture dataset with a topic-correlated timestamp attribute.
+
+    One index cluster per topic (the paper's prebuilt-index mode via
+    ``build_from_assignments``), and ``attr0`` = a timestamp uniform over
+    ``[0, TS_RANGE)`` overall but narrow per topic — content drifts over
+    time, so a cluster's summary interval covers a thin time band.  That is
+    the workload where filter-aware pruning pays: a selective time-window
+    filter excludes most probed clusters *at plan time*.
+    """
+    rng = np.random.default_rng(2)
+    centers = rng.standard_normal((KC, D)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=-1, keepdims=True)
+    topic = (np.arange(N) * KC) // N  # equal-sized topics covering all N
+    core = centers[topic] + 0.05 * rng.standard_normal((N, D)).astype(
+        np.float32
+    )
+    core /= np.linalg.norm(core, axis=-1, keepdims=True)
+    band = TS_RANGE // KC
+    ts = topic * band + rng.integers(0, band, N)
+    attrs = rng.integers(0, 16, (N, M)).astype(np.int16)
+    attrs[:, 0] = ts.astype(np.int16)
+    spec = HybridSpec(dim=D, n_attrs=M, core_dtype=jnp.float32)
+    index, stats = build_from_assignments(
+        spec, jnp.asarray(centers), jnp.asarray(core), jnp.asarray(attrs),
+        jnp.asarray(topic),
+    )
+    return index, stats, core, attrs
+
+
+def window_fspec(q, rng, selectivity):
+    """Per-query random time windows of width selectivity·TS_RANGE."""
+    w = max(int(selectivity * TS_RANGE), 1)
+    lo = np.full((q, 1, M), -32768, np.int16)
+    hi = np.full((q, 1, M), 32767, np.int16)
+    start = rng.integers(0, TS_RANGE - w + 1, q)
+    lo[:, 0, 0] = start.astype(np.int16)
+    hi[:, 0, 0] = (start + w - 1).astype(np.int16)
+    return FilterSpec(lo=jnp.asarray(lo), hi=jnp.asarray(hi))
+
+
+def pick_u_cap_sweep(index, batches, q_block, prune):
+    """u_cap from observed *pruned* traffic: max per-tile unique surviving
+    probes over every batch, 8-bucketed like :func:`pick_u_cap`.
+
+    This is where pruning shrinks the scan itself — fewer unique clusters
+    per tile means a smaller static slot table, so the kernel streams (and
+    the disk tier gathers) fewer blocks.  Sizing over all batches keeps the
+    plan exact (no u_cap overflow drops).
+    """
+    from repro.core.summaries import can_match
+
+    max_u = 1
+    for qs, fs in batches:
+        probe_ids, _ = search_centroids(index, qs, T)
+        pids = np.asarray(probe_ids)
+        if prune == "on" and index.summaries is not None:
+            cm = np.asarray(can_match(index.summaries, fs.lo, fs.hi))
+            valid = np.take_along_axis(cm, pids, axis=1)
+        else:
+            valid = np.ones(pids.shape, bool)
+        nq = pids.shape[0]
+        pad = (-nq) % q_block
+        if pad:
+            pids = np.concatenate([pids, np.repeat(pids[-1:], pad, 0)])
+            valid = np.concatenate([valid, np.repeat(valid[-1:], pad, 0)])
+        pt = pids.reshape(-1, q_block * T)
+        vt = valid.reshape(-1, q_block * T)
+        for row_p, row_v in zip(pt, vt):
+            u = len(np.unique(row_p[row_v])) if row_v.any() else 1
+            max_u = max(max_u, u)
+    return round_up(max_u, 8)
+
+
+def bench_selectivity_sweep(index, core, attrs, rng, *, q=64, n_batches=8,
+                            cached_clusters=16):
+    """Filtered traffic at ~50%/5%/0.5% selectivity, pruning on vs off.
+
+    Emits per-(selectivity, tier, prune) QPS, mean pruned probes and disk
+    cache hit rate; gates every pruned result bit-exact against the
+    unpruned reference at the same n_probes, and reports a widened
+    (``t_max``) RAM entry's recall against the brute-force oracle.  The
+    unfiltered workload rides along as selectivity 1.0 — the no-regression
+    guard for prune=auto on unfiltered traffic.
+    """
+    import tempfile
+
+    qb = min(64, round_up(q, 8))
+    entries = []
+    exact = True
+    sweeps = [(1.0, None)] + [(s, None) for s in SELECTIVITIES]
+    queries_by_sel = {}
+    fspec_by_sel = {}
+    for sel, _ in sweeps:
+        queries_by_sel[sel] = [hot_queries(core, q, rng)
+                               for _ in range(n_batches)]
+        fspec_by_sel[sel] = [
+            match_all(q, M) if sel == 1.0 else window_fspec(q, rng, sel)
+            for _ in range(n_batches)
+        ]
+
+    u_caps = {
+        (sel, prune): pick_u_cap_sweep(
+            index, list(zip(queries_by_sel[sel], fspec_by_sel[sel])), qb,
+            prune,
+        )
+        for sel, _ in sweeps for prune in ("off", "on")
+    }
+
+    # --- RAM tier ---
+    for sel, _ in sweeps:
+        for prune in ("off", "on"):
+            u_cap = u_caps[(sel, prune)]
+
+            def run(qs, fs):
+                return search_fused_tiled(
+                    index, qs, fs, k=K, n_probes=T, q_block=qb, u_cap=u_cap,
+                    prune=prune,
+                )
+            qs0, fs0 = queries_by_sel[sel][0], fspec_by_sel[sel][0]
+            jax.block_until_ready(run(qs0, fs0).ids)  # compile
+            walls = []
+            for _ in range(5):  # median-of-passes: shared-machine noise
+                t0 = time.perf_counter()
+                last = None
+                for qs, fs in zip(queries_by_sel[sel], fspec_by_sel[sel]):
+                    last = run(qs, fs)
+                jax.block_until_ready(last.ids)
+                walls.append(time.perf_counter() - t0)
+            wall = float(np.median(walls))
+            n_pruned = float(np.asarray(run(qs0, fs0).n_pruned).mean())
+            ref = search_reference(index, qs0, fs0, k=K, n_probes=T)
+            ok = bool(
+                (np.asarray(ref.ids) == np.asarray(run(qs0, fs0).ids)).all()
+            )
+            exact = exact and ok
+            entries.append(dict(
+                path="sweep_ram", selectivity=sel, prune=prune,
+                q=q, qps=round(q * n_batches / wall, 1),
+                mean_pruned_probes=round(n_pruned, 2), u_cap=u_cap,
+                exact=ok,
+            ))
+
+    # widened recall entry (informational): selective filters refill pruned
+    # probes from next-best unpruned centroids up to t_max
+    for sel in SELECTIVITIES:
+        qs0, fs0 = queries_by_sel[sel][0], fspec_by_sel[sel][0]
+        oracle = brute_force(jnp.asarray(core), jnp.asarray(attrs), qs0,
+                             fs0, k=K, metric="dot")
+        narrow = search_fused_tiled(index, qs0, fs0, k=K, n_probes=T,
+                                    q_block=qb, u_cap=u_caps[(sel, "on")],
+                                    prune="on")
+        wide = search_fused_tiled(index, qs0, fs0, k=K, n_probes=T,
+                                  q_block=qb, prune="on", t_max=4 * T)
+        entries.append(dict(
+            path="sweep_widened", selectivity=sel, q=q, t_max=4 * T,
+            recall_narrow=round(recall_at_k(narrow, oracle), 4),
+            recall_widened=round(recall_at_k(wide, oracle), 4),
+        ))
+
+    # --- disk tier: fresh cache per config so hit rates are comparable ---
+    with tempfile.TemporaryDirectory(prefix="bench_sweep_") as ckpt:
+        storage.save_index(index, ckpt, n_shards=4)
+        man = storage.load_manifest(ckpt)
+        overhead = (index.centroids.size * 4 + index.n_clusters * 4
+                    + index.summaries.nbytes())
+        budget = overhead + cached_clusters * man["record_stride"] + 4096
+        for sel, _ in sweeps:
+            for prune in ("off", "on"):
+                u_cap = u_caps[(sel, prune)]
+                disk = DiskIVFIndex.open(ckpt, resident_budget_bytes=budget)
+
+                def run(qs, fs):
+                    return disk.search(qs, fs, k=K, n_probes=T, q_block=qb,
+                                       u_cap=u_cap, prune=prune)
+
+                qs_l, fs_l = queries_by_sel[sel], fspec_by_sel[sel]
+                jax.block_until_ready(run(qs_l[0], fs_l[0]).ids)  # compile
+                # compile the prefetch path's plan too (its u_cap differs),
+                # so the timed span measures steady-state serving only
+                disk.prefetch_for_queries(qs_l[0], T, q_block=qb,
+                                          fspec=fs_l[0], prune=prune)
+                disk.cache.drain()
+                walls = []
+                for _ in range(5):  # median-of-passes: shared-machine noise
+                    t0 = time.perf_counter()
+                    last = None
+                    for i, (qs, fs) in enumerate(zip(qs_l, fs_l)):
+                        if i + 1 < n_batches:  # filter-aware prefetch overlap
+                            disk.prefetch_for_queries(
+                                qs_l[i + 1], T, q_block=qb,
+                                fspec=fs_l[i + 1], prune=prune,
+                            )
+                        last = run(qs, fs)
+                    jax.block_until_ready(last.ids)
+                    walls.append(time.perf_counter() - t0)
+                wall = float(np.median(walls))
+                got = run(qs_l[0], fs_l[0])
+                ref = search_reference(index, qs_l[0], fs_l[0], k=K,
+                                       n_probes=T)
+                ok = bool(
+                    (np.asarray(ref.ids) == np.asarray(got.ids)).all()
+                )
+                exact = exact and ok
+                entries.append(dict(
+                    path="sweep_disk", selectivity=sel, prune=prune, q=q,
+                    qps=round(q * n_batches / wall, 1),
+                    mean_pruned_probes=round(
+                        float(np.asarray(got.n_pruned).mean()), 2
+                    ),
+                    cache_hit_rate=round(disk.cache.hit_rate, 3),
+                    fetched=disk.cache.stats.misses
+                    + disk.cache.stats.prefetched,
+                    u_cap=u_cap, exact=ok,
+                ))
+                disk.close()
+
+    by = {(e["path"], e["selectivity"], e.get("prune")): e for e in entries}
+    summary = {}
+    sel_lo = min(SELECTIVITIES)
+    d_on = by.get(("sweep_disk", sel_lo, "on"))
+    d_off = by.get(("sweep_disk", sel_lo, "off"))
+    if d_on and d_off:
+        summary["disk_prune_speedup_at_lowest_sel"] = round(
+            d_on["qps"] / d_off["qps"], 2
+        )
+        summary["disk_hit_rate_on_vs_off_at_lowest_sel"] = [
+            d_on["cache_hit_rate"], d_off["cache_hit_rate"]
+        ]
+    r_on = by.get(("sweep_ram", 1.0, "on"))
+    r_off = by.get(("sweep_ram", 1.0, "off"))
+    if r_on and r_off:
+        summary["ram_unfiltered_prune_ratio"] = round(
+            r_on["qps"] / r_off["qps"], 3
+        )
+    du_on = by.get(("sweep_disk", 1.0, "on"))
+    du_off = by.get(("sweep_disk", 1.0, "off"))
+    if du_on and du_off:
+        summary["disk_unfiltered_prune_ratio"] = round(
+            du_on["qps"] / du_off["qps"], 3
+        )
+    for e in entries:
+        tag = f"{e['path']} sel={e['selectivity']}"
+        if "prune" in e and e.get("prune") is not None:
+            extra = (f" hit={e['cache_hit_rate']}"
+                     if "cache_hit_rate" in e else "")
+            print(f"{tag:28s} prune={e['prune']:3s} {e['qps']:8.1f} qps  "
+                  f"pruned/probe {e['mean_pruned_probes']:.2f}{extra}")
+        elif e["path"] == "sweep_widened":
+            print(f"{tag:28s} recall {e['recall_narrow']:.3f} -> "
+                  f"{e['recall_widened']:.3f} (t_max={e['t_max']})")
+    return entries, summary, exact
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-old-fused", action="store_true")
     ap.add_argument("--tier", choices=("ram", "disk", "both"), default="both")
+    ap.add_argument("--skip-sweep", action="store_true",
+                    help="skip the selectivity sweep workload")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced scale for CI: small N, Q=64 only, no "
+                         "old-fused path; still gates exactness")
     ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_search.json"))
     args = ap.parse_args()
+    if args.smoke:
+        global N, Q_SWEEP
+        N, Q_SWEEP = 20_000, (64,)
+        args.skip_old_fused = True
 
     print(f"building index N={N} D={D} K={KC} ...")
     index, stats, core = build()
@@ -217,15 +502,33 @@ def main():
         disk_entry = bench_disk_tier(index, core, rng)
         results.append(disk_entry)
 
+    sweep_summary, sweep_exact = None, True
+    if not args.skip_sweep:
+        print("building sweep index (topic-correlated timestamps) ...")
+        sindex, _, s_core, s_attrs = build_sweep()
+        sweep_entries, sweep_summary, sweep_exact = bench_selectivity_sweep(
+            sindex, s_core, s_attrs, rng,
+            n_batches=4 if args.smoke else 8,
+        )
+        results.extend(sweep_entries)
+
     out = dict(
         config=dict(
             n=N, d=D, m=M, n_clusters=KC, n_probes=T, k=K, vpad=stats.vpad,
             n_hot_topics=N_HOT, noise=NOISE, backend=jax.default_backend(),
             workload="hot-topic traffic (batch probes overlap strongly)",
+            sweep_workload=(
+                None if args.skip_sweep else
+                "random time-window filters at "
+                f"{'/'.join(str(s) for s in SELECTIVITIES)} selectivity "
+                "over topic-correlated timestamps (pruning on vs off)"
+            ),
         ),
         results=results,
-        exact_vs_reference=True,
+        exact_vs_reference=bool(sweep_exact),
     )
+    if sweep_summary:
+        out["selectivity_sweep"] = sweep_summary
     by = {(r["path"], r["q"]): r for r in results}
     if ("tiled_fused", 64) in by and ("reference", 64) in by:
         speedup = by[("tiled_fused", 64)]["qps"] / by[("reference", 64)]["qps"]

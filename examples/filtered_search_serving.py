@@ -14,7 +14,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import HybridSpec, build_ivf, match_all, storage
+from repro.core import FilterSpec, HybridSpec, match_all, storage
 from repro.core.disk import DiskIVFIndex
 from repro.core.serving import SearchServer, make_fused_search_fn
 from repro.data import synthetic_attributes, synthetic_embeddings
@@ -27,10 +27,22 @@ def main():
     print(f"building index N={n} D={d} M={m} ...")
     core = synthetic_embeddings(0, n, d)
     attrs = synthetic_attributes(0, n, m, cardinalities=[8])
+    # attr0: a content-correlated category (e.g. language or store section —
+    # attributes that strongly determine where an embedding lands).  Modeled
+    # as the content partition's group id, so each index cluster holds one
+    # category and the cluster attribute summaries can prune probes in the
+    # filtered demo below.
+    from repro.core.ivf import build_from_assignments
+    from repro.core.kmeans import assign, minibatch_kmeans
+
+    state = minibatch_kmeans(jax.random.key(0), jnp.asarray(core),
+                             n_clusters=100, n_steps=40, batch_size=4096)
+    assignment = assign(jnp.asarray(core), state.centroids)
+    attrs[:, 0] = (np.asarray(assignment) % 8).astype(np.int16)
     spec = HybridSpec(dim=d, n_attrs=m, core_dtype=jnp.float32)
-    index, _ = build_ivf(
-        jax.random.key(0), spec, jnp.asarray(core), jnp.asarray(attrs),
-        n_clusters=100, kmeans_steps=40,
+    index, _ = build_from_assignments(
+        spec, state.centroids, jnp.asarray(core), jnp.asarray(attrs),
+        assignment,
     )
 
     # Tiled fused path: the micro-batch's overlapping probes are deduped per
@@ -58,14 +70,17 @@ def main():
 
     def client(i):
         qv = core[rng.integers(0, n)]
+        # filter within the query's own content category (the common case:
+        # users browse a category and search inside it)
+        cat = int(assign(jnp.asarray(qv[None]), state.centroids)[0]) % 8
         lo = np.full((1, m), ATTR_MIN, np.int16)
         hi = np.full((1, m), ATTR_MAX, np.int16)
-        lo[0, 0] = hi[0, 0] = i % 8  # WHERE attr0 == i%8
+        lo[0, 0] = hi[0, 0] = cat  # WHERE attr0 == cat
         resp = server.search_blocking(qv, (lo, hi))
         assert (resp.ids >= 0).any()
         for vid in resp.ids:
             if vid >= 0:
-                assert attrs[vid, 0] == i % 8, "filter violated!"
+                assert attrs[vid, 0] == cat, "filter violated!"
         with lock:
             latencies.append(resp.latency_s)
 
@@ -96,17 +111,23 @@ def main():
           "merges continue degraded (associative top-k monoid)")
 
     # --- disk tier: same index, fraction of the memory, identical ids ---
-    # The checkpoint is layout v2 (fixed-stride, memory-mappable records);
-    # DiskIVFIndex keeps only centroids + counts resident and pages probed
-    # clusters through an LRU cache with hot-cluster pinning.  The probe
-    # plan doubles as the cache's prefetch list, so the next batch's
-    # clusters stream from disk while the current batch computes.
+    # The checkpoint is layout v2.1: fixed-stride, memory-mappable cluster
+    # records PLUS the resident per-cluster attribute summaries (interval
+    # bounds + histograms, a few KiB) that make the probe plan filter-aware.
+    # DiskIVFIndex keeps centroids + counts + summaries resident and pages
+    # probed clusters through an LRU cache with hot-cluster pinning.  The
+    # probe plan doubles as the cache's prefetch list, so the next batch's
+    # clusters stream from disk while the current batch computes — and with
+    # `prune="auto"` (the default, also a knob on make_fused_search_fn /
+    # `repro.launch.serve --prune`) clusters a query's filter provably
+    # cannot match are dropped from the plan before they are ever fetched:
+    # identical ids, fewer disk reads.
     with tempfile.TemporaryDirectory() as ckpt:
         storage.save_index(index, ckpt, n_shards=4)
         budget = index.nbytes() // 4  # serve from ~25% of the RAM footprint
         disk = DiskIVFIndex.open(ckpt, resident_budget_bytes=budget)
         disk_fn = make_fused_search_fn(disk, k=k, n_probes=7,
-                                       q_block=batch_size)
+                                       q_block=batch_size, prune="auto")
         queries = jnp.asarray(core[rng.integers(0, n, batch_size)])
         fspec = match_all(batch_size, m)
         disk.prefetch_for_queries(queries, 7)  # overlap paging with compute
@@ -116,6 +137,23 @@ def main():
         print(f"disk tier: resident {disk.resident_bytes()/2**20:.1f} MiB "
               f"of {index.nbytes()/2**20:.1f} MiB index "
               f"(budget {budget/2**20:.1f} MiB), ids identical to RAM ✓")
+
+        # Selective filter: the summaries prove most probed clusters hold no
+        # passing row, so the plan prunes them — compare scan accounting.
+        lo = np.full((batch_size, 1, m), ATTR_MIN, np.int16)
+        hi = np.full((batch_size, 1, m), ATTR_MAX, np.int16)
+        lo[:, 0, 0] = hi[:, 0, 0] = 3  # WHERE attr0 == 3
+        sel = FilterSpec(lo=jnp.asarray(lo), hi=jnp.asarray(hi))
+        pruned = disk.search(queries, sel, k=k, n_probes=7,
+                             q_block=batch_size, prune="auto")
+        unpruned = disk.search(queries, sel, k=k, n_probes=7,
+                               q_block=batch_size, prune="off")
+        assert (np.asarray(pruned.ids) == np.asarray(unpruned.ids)).all()
+        print(f"filtered (attr0==3): pruned "
+              f"{int(np.asarray(pruned.n_pruned).sum())} of "
+              f"{7 * batch_size} probes, scanned "
+              f"{int(pruned.n_scanned.sum())} vs "
+              f"{int(unpruned.n_scanned.sum())} rows, ids identical ✓")
         disk.close()
 
 

@@ -5,6 +5,7 @@ Public API surface (see DESIGN.md §3):
   HybridSpec, make_hybrid, l2_normalize            — hybrid vector layout
   FilterBuilder, FilterSpec, match_all, filter_mask — SQL-like filters
   build_ivf, IVFFlatIndex                           — index construction
+  ClusterSummaries, build_summaries, can_match      — filter-aware pruning
   search_reference, brute_force, recall_at_k        — search paths + oracle
   add_vectors, tombstone                            — online updates
 """
@@ -45,7 +46,13 @@ from repro.core.search import (
     search_reference,
 )
 from repro.core.disk import ClusterCache, DiskIVFIndex
-from repro.core.probes import dedup_rows, plan_probe_tiles
+from repro.core.probes import dedup_rows, fetch_order, plan_probe_tiles
+from repro.core.summaries import (
+    ClusterSummaries,
+    build_summaries,
+    can_match,
+    expected_passing,
+)
 from repro.core.topk import (
     masked_topk,
     merge_topk,

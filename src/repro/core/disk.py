@@ -4,9 +4,12 @@ The paper's economics rest on the index living on disk and only probed lists
 being loaded per query.  :class:`DiskIVFIndex` is that serving mode over a
 layout-v2 checkpoint (``core/storage.py``):
 
-  * **Resident set**: centroids ``[K, D]``, counts ``[K]`` and the manifest's
-    offset arithmetic — kilobytes per thousand clusters.  Everything a query
-    needs *before* it knows which lists to touch.
+  * **Resident set**: centroids ``[K, D]``, counts ``[K]``, the per-cluster
+    attribute summaries (layout v2.1, ``core/summaries.py``) and the
+    manifest's offset arithmetic — kilobytes per thousand clusters.
+    Everything a query needs *before* it knows which lists to touch,
+    including the filter-aware pruning that decides which lists NOT to
+    touch.
   * **Paged set**: per-cluster records ``(vectors, attrs, ids, norms?,
     scales?)`` read from the memory-mapped shard files through
     :class:`ClusterCache` — a pinned host-buffer LRU keyed by cluster id,
@@ -265,6 +268,15 @@ class ClusterCache:
         return self.stats.hits / tot if tot else 0.0
 
 
+def _resident_overhead(centroids, counts, summaries) -> int:
+    """Bytes of the always-resident set (everything except the cluster
+    cache) — the single formula both the budget check in ``open`` and
+    ``resident_bytes()`` accounting rely on."""
+    return centroids.nbytes + counts.nbytes + (
+        summaries.nbytes() if summaries is not None else 0
+    )
+
+
 class DiskIVFIndex:
     """Disk-resident serving view of a layout-v2 index checkpoint.
 
@@ -279,7 +291,8 @@ class DiskIVFIndex:
     def __init__(self, directory: str, man: dict, spec: HybridSpec,
                  centroids: np.ndarray, counts: np.ndarray,
                  reader: ShardReader, cache: ClusterCache,
-                 resident_budget_bytes: Optional[int]):
+                 resident_budget_bytes: Optional[int],
+                 summaries=None):
         self.directory = directory
         self.man = man
         self.spec = spec
@@ -288,7 +301,11 @@ class DiskIVFIndex:
         self.reader = reader
         self.cache = cache
         self.resident_budget_bytes = resident_budget_bytes
-        self._overhead = centroids.nbytes + counts.nbytes
+        # Cluster attribute summaries (layout v2.1): resident like centroids,
+        # consulted by the plan stage so filtered-out clusters never reach
+        # the fetch list.  None for pre-v2.1 checkpoints (no pruning).
+        self.summaries = summaries
+        self._overhead = _resident_overhead(centroids, counts, summaries)
 
     @classmethod
     def open(cls, directory: str, *,
@@ -306,7 +323,8 @@ class DiskIVFIndex:
         reader = ShardReader(directory, man)
         centroids = np.load(os.path.join(directory, "centroids.npy"))
         counts = np.load(os.path.join(directory, "counts.npy"))
-        overhead = centroids.nbytes + counts.nbytes
+        summaries = storage.load_summaries(directory, man)
+        overhead = _resident_overhead(centroids, counts, summaries)
         if resident_budget_bytes is None:
             cap = man["n_clusters"]
         else:
@@ -315,8 +333,8 @@ class DiskIVFIndex:
             if cap < 1:
                 raise ValueError(
                     f"resident_budget_bytes={resident_budget_bytes} cannot "
-                    f"hold the resident set ({overhead} B) plus one cluster "
-                    f"record ({reader.stride} B)"
+                    f"hold the resident set ({overhead} B, incl. attribute "
+                    f"summaries) plus one cluster record ({reader.stride} B)"
                 )
             cap = min(cap, man["n_clusters"])
         cache = ClusterCache(
@@ -324,7 +342,8 @@ class DiskIVFIndex:
             pin_fraction=pin_fraction, pin_refresh=pin_refresh,
         )
         return cls(directory, man, storage.spec_from_manifest(man),
-                   centroids, counts, reader, cache, resident_budget_bytes)
+                   centroids, counts, reader, cache, resident_budget_bytes,
+                   summaries=summaries)
 
     # ---- IVFFlatIndex-compatible surface (what search paths touch) ----
     @property
@@ -383,40 +402,71 @@ class DiskIVFIndex:
         self.cache.prefetch(np.asarray(cluster_ids).reshape(-1))
 
     def prefetch_for_queries(self, queries, n_probes: int,
-                             q_block: int = 64):
+                             q_block: int = 64, fspec=None,
+                             prune: str = "auto",
+                             t_max: Optional[int] = None):
         """Plans the next batch's probes and starts paging them in while the
         current batch is still computing on device.
 
         Clusters are enqueued in ``probes.fetch_order``'s first-need order —
         tile 0's unique probes first — so by the time the scan reaches a
         tile, its clusters are the ones most likely to have landed.  Pass
-        the same ``q_block`` the search will use for an exact tile match.
+        the same ``q_block`` (and, for a filtered batch, the same ``fspec``
+        / ``prune`` / ``t_max``) the search will use: with the batch's
+        filters in hand the plan is filter-aware, so clusters the summaries
+        prove empty are never read off disk at all — the fetch list shrinks
+        with the filter's selectivity.  The jitted plan is shared with the
+        search itself, so this costs no extra compilation.
         """
         from repro.core import probes as probes_lib
-        from repro.core.search import search_centroids
+        from repro.kernels.filtered_scan.ops import (
+            plan_fused_tiled, resolve_prune,
+        )
 
         q = queries.shape[0]
         qb = min(q_block, ((q + 7) // 8) * 8)
-        probe_ids, _ = search_centroids(self, queries, n_probes)
-        probe_pad = probes_lib.pad_to_tiles(probe_ids, qb)
-        u_cap = min(qb * n_probes, self.n_clusters)
-        slot_cluster, _, _, _, n_unique = probes_lib.plan_probe_tiles(
-            probe_pad, q_block=qb, u_cap=u_cap
+        if fspec is None:  # no filters known yet: geometry-only plan
+            from repro.core.filters import match_all
+
+            fspec = match_all(q, self.spec.n_attrs)
+            summ = None
+        else:
+            summ = resolve_prune(self, prune)
+        if t_max is not None:
+            if t_max < n_probes:  # same validation as search_fused_tiled —
+                # prefetch must not succeed where the paired search raises
+                raise ValueError(f"t_max={t_max} < n_probes={n_probes}")
+            t_max = min(t_max, self.n_clusters)
+            if summ is None or t_max == n_probes:
+                t_max = None
+        width = n_probes if t_max is None else t_max
+        u_cap = min(qb * width, self.n_clusters)
+        cast_dtype = (
+            np.dtype(np.float32) if self.quantized
+            else np.dtype(self.store_dtype)
+        )
+        slot_cluster, _, _, _, n_unique, *_ = plan_fused_tiled(
+            self.centroids, self.counts, queries, fspec.lo, fspec.hi,
+            metric=self.spec.metric, n_probes=n_probes, q_block=qb,
+            u_cap=u_cap, cast_dtype=cast_dtype, summaries=summ, t_max=t_max,
         )
         self.prefetch(probes_lib.fetch_order(slot_cluster, n_unique, u_cap))
 
     # ---- search ----
     def search(self, queries, fspec, *, k: int, n_probes: int,
                q_block: int = 64, v_block: int = 256,
-               u_cap: Optional[int] = None, backend: Optional[str] = None):
+               u_cap: Optional[int] = None, backend: Optional[str] = None,
+               prune: str = "auto", t_max: Optional[int] = None):
         """Disk-tier filtered search; same contract (and bit-identical ids)
-        as the RAM path's ``search_fused_tiled``."""
+        as the RAM path's ``search_fused_tiled``.  With summaries resident
+        (layout v2.1) and ``prune`` active, clusters the filter excludes are
+        pruned at plan time and never fetched from disk."""
         from repro.kernels.filtered_scan.ops import search_fused_tiled
 
         return search_fused_tiled(
             self, queries, fspec, k=k, n_probes=n_probes, q_block=q_block,
             v_block=v_block, u_cap=u_cap, backend=backend,
-            gather_fn=self.gather,
+            gather_fn=self.gather, prune=prune, t_max=t_max,
         )
 
     def close(self):

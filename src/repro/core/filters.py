@@ -188,9 +188,45 @@ def filter_mask(spec: FilterSpec, attrs: Array, query_idx: Optional[Array] = Non
     return jnp.any(per_term, axis=-1)  # OR over DNF terms
 
 
-def selectivity(spec: FilterSpec, attrs: Array) -> Array:
+def selectivity(
+    spec: FilterSpec,
+    attrs: Array,
+    *,
+    sample_size: Optional[int] = None,
+    seed: int = 0,
+    chunk: int = 4096,
+) -> Array:
     """Fraction of rows passing each query's filter — used by the planner
-    to pick T adaptively (paper §4.3 'filter selectivity')."""
+    to pick T adaptively (paper §4.3 'filter selectivity').
+
+    The old implementation broadcast a ``[Q, N, M]`` view through
+    ``filter_mask`` (a ``[Q, N, n_terms, M]`` intermediate) — ruinous at
+    index scale.  Now rows are optionally subsampled (``sample_size`` rows,
+    deterministic in ``seed``) and evaluated in fixed-size chunks, so peak
+    memory is ``O(Q · chunk · n_terms · M)`` regardless of N.
+
+    Args:
+      spec: FilterSpec with lo/hi [Q, n_terms, M].
+      attrs: [N, M] attribute rows.
+      sample_size: if set and < N, estimate from that many uniformly sampled
+        rows (the planner's at-scale mode); None = exact over all rows.
+      seed: sampling seed (ignored when sample_size is None).
+      chunk: rows evaluated per step.
+
+    Returns [Q] f32 passing fractions (estimates under sampling).
+    """
+    n = attrs.shape[0]
+    if sample_size is not None and sample_size < n:
+        rows = np.random.default_rng(seed).choice(n, sample_size,
+                                                  replace=False)
+        attrs = jnp.take(jnp.asarray(attrs), jnp.asarray(rows), axis=0)
+        n = sample_size
     q = spec.lo.shape[0]
-    mask = filter_mask(spec, jnp.broadcast_to(attrs, (q,) + attrs.shape))
-    return jnp.mean(mask.astype(jnp.float32), axis=tuple(range(1, mask.ndim)))
+    passed = jnp.zeros((q,), jnp.int32)
+    for start in range(0, n, chunk):
+        block = attrs[start:start + chunk]
+        mask = filter_mask(
+            spec, jnp.broadcast_to(block, (q,) + block.shape)
+        )  # [Q, chunk]
+        passed = passed + jnp.sum(mask.astype(jnp.int32), axis=-1)
+    return passed.astype(jnp.float32) / max(n, 1)

@@ -31,6 +31,8 @@ import numpy as np
 
 from repro.core.hybrid import HybridSpec, make_hybrid
 from repro.core import kmeans as kmeans_lib
+from repro.core import summaries as summaries_lib
+from repro.core.summaries import ClusterSummaries
 
 Array = jax.Array
 
@@ -49,6 +51,10 @@ class IVFFlatIndex:
     # with a per-vector scale; halves the scan's HBM traffic (the dominant
     # roofline term) for ~1% recall cost. None ⇒ uncompressed bf16/f32.
     scales: Optional[Array] = None  # [K, Vpad] f32
+    # Per-cluster attribute summaries (core/summaries.py): intervals +
+    # histograms that let the probe planner prune clusters a query's filter
+    # provably cannot match. None ⇒ planner never prunes.
+    summaries: Optional[ClusterSummaries] = None
 
     @property
     def quantized(self) -> bool:
@@ -78,6 +84,8 @@ class IVFFlatIndex:
         for opt in (self.norms, self.scales):
             if opt is not None:
                 total += opt.size * opt.dtype.itemsize
+        if self.summaries is not None:
+            total += self.summaries.nbytes()
         return total
 
 
@@ -138,8 +146,15 @@ def build_from_assignments(
     *,
     vpad: Optional[int] = None,
     ids: Optional[Array] = None,
+    with_summaries: bool = True,
+    summary_bins: int = summaries_lib.DEFAULT_N_BINS,
 ) -> Tuple[IVFFlatIndex, BuildStats]:
-    """Builds the padded index given precomputed assignments (§4.2 steps 2-4)."""
+    """Builds the padded index given precomputed assignments (§4.2 steps 2-4).
+
+    ``with_summaries`` (default) also builds the per-cluster attribute
+    summaries the planner prunes with; ``summary_bins`` is the histogram
+    width B.
+    """
     core, attrs = make_hybrid(spec, core, attrs)
     n = core.shape[0]
     k = centroids.shape[0]
@@ -169,6 +184,10 @@ def build_from_assignments(
             vec_lists.astype(jnp.float32) ** 2, axis=-1
         )
 
+    summ = (
+        summaries_lib.build_summaries(attr_lists, id_lists, n_bins=summary_bins)
+        if with_summaries and spec.n_attrs > 0 else None
+    )
     index = IVFFlatIndex(
         spec=spec,
         centroids=centroids.astype(jnp.float32),
@@ -177,6 +196,7 @@ def build_from_assignments(
         ids=id_lists,
         counts=jnp.minimum(counts, vpad).astype(jnp.int32),
         norms=norms,
+        summaries=summ,
     )
     stats = BuildStats(
         n_vectors=n,
@@ -202,6 +222,8 @@ def build_ivf(
     kmeans_batch: int = 4096,
     assign_chunk: int = 65536,
     ids: Optional[Array] = None,
+    with_summaries: bool = True,
+    summary_bins: int = summaries_lib.DEFAULT_N_BINS,
 ) -> Tuple[IVFFlatIndex, BuildStats]:
     """End-to-end index build (paper §4.2): centroids → assign → scatter.
 
@@ -233,7 +255,8 @@ def build_ivf(
         core.astype(jnp.float32), centroids, chunk=assign_chunk
     )
     index, stats = build_from_assignments(
-        spec, centroids, core, attrs, assignments, vpad=vpad, ids=ids
+        spec, centroids, core, attrs, assignments, vpad=vpad, ids=ids,
+        with_summaries=with_summaries, summary_bins=summary_bins,
     )
     return index, dataclasses.replace(stats, kmeans_steps=kmeans_steps)
 

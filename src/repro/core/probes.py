@@ -85,7 +85,8 @@ def dedup_rows(
 
 
 def plan_probe_tiles(
-    probe_ids: Array, *, q_block: int, u_cap: int
+    probe_ids: Array, *, q_block: int, u_cap: int,
+    probe_valid: Optional[Array] = None,
 ) -> Tuple[Array, Array, Array, Array, Array]:
     """Builds the tiled kernel's slot tables for a single-host batch.
 
@@ -98,13 +99,19 @@ def plan_probe_tiles(
                  overflowed probes are reported via ``probe_ok`` and their
                  candidates dropped (sound degradation, like the distributed
                  dispatch's P_cap).
+      probe_valid: optional [Qpad, T] bool — probes the planner pruned (e.g.
+                 the filter-aware summary test proved the cluster holds no
+                 passing row).  Invalid probes never enter the slot tables:
+                 they are not scanned, not fetched by ``fetch_order``, and
+                 report ``probe_ok=False``.
 
     Returns:
       slot_cluster  [n_tiles·u_cap] int32 — cluster scanned by each slot.
       slot_tile     [n_tiles·u_cap] int32 — query tile each slot serves.
       slot_of_probe [Qpad, T] int32 — flat slot index of each original probe
                     (clipped in-range; check probe_ok).
-      probe_ok      [Qpad, T] bool — False where the probe overflowed u_cap.
+      probe_ok      [Qpad, T] bool — False where the probe overflowed u_cap
+                    or was pruned via ``probe_valid``.
       n_unique      [n_tiles] int32 — live slots per tile (rest are pads).
     """
     qpad, t = probe_ids.shape
@@ -112,12 +119,18 @@ def plan_probe_tiles(
         raise ValueError(f"Qpad={qpad} not a multiple of q_block={q_block}")
     n_tiles = qpad // q_block
     flat = probe_ids.reshape(n_tiles, q_block * t).astype(jnp.int32)
-    table, slot_of, count = dedup_rows(flat, None, u_cap)
+    valid = (
+        None if probe_valid is None
+        else probe_valid.reshape(n_tiles, q_block * t)
+    )
+    table, slot_of, count = dedup_rows(flat, valid, u_cap)
     slot_cluster = table.reshape(-1)
     slot_tile = jnp.repeat(
         jnp.arange(n_tiles, dtype=jnp.int32), u_cap, total_repeat_length=n_tiles * u_cap
     )
     probe_ok = (slot_of < u_cap).reshape(qpad, t)
+    if probe_valid is not None:
+        probe_ok = jnp.logical_and(probe_ok, probe_valid)
     slot_of_probe = (
         jnp.minimum(slot_of, u_cap - 1)
         + jnp.arange(n_tiles, dtype=jnp.int32)[:, None] * u_cap
@@ -141,16 +154,19 @@ def fetch_order(slot_cluster, n_unique, u_cap: int):
       u_cap:        static per-tile slot capacity.
 
     Returns a 1-D int64 numpy array of distinct cluster ids.
+
+    Vectorized (mask → flatten row-major → first-seen unique): the old
+    Python double loop over ``n_tiles × u_cap`` ran per batch on the serving
+    hot path and dominated plan time at large batch×probe products.
     """
     import numpy as np
 
-    sc = np.asarray(slot_cluster).reshape(-1, u_cap)
+    sc = np.asarray(slot_cluster).reshape(-1, u_cap).astype(np.int64)
     nu = np.asarray(n_unique)
-    seen: dict = {}  # insertion-ordered
-    for tile in range(sc.shape[0]):
-        for cid in sc[tile, : int(nu[tile])]:
-            seen.setdefault(int(cid), None)
-    return np.fromiter(seen.keys(), dtype=np.int64, count=len(seen))
+    live = np.arange(u_cap)[None, :] < nu[:, None]  # [n_tiles, u_cap]
+    flat = sc[live]  # row-major ⇒ tile 0's slots first, then tile 1's, ...
+    uniq, first = np.unique(flat, return_index=True)
+    return uniq[np.argsort(first, kind="stable")]
 
 
 def pad_to_tiles(x: Array, q_block: int) -> Array:

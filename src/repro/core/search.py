@@ -48,6 +48,10 @@ class SearchResult:
     ids: Array  # [Q, k] int32, -1 = no hit
     n_scanned: Array  # [Q] int32 — candidates scanned (perf accounting)
     n_passed: Array  # [Q] int32 — candidates passing the filter
+    # [Q] int32 — probes the filter-aware planner pruned (clusters the
+    # query's filter provably cannot match; see core/summaries.py).  None on
+    # paths without a plan stage (reference, brute force, old fused).
+    n_pruned: Optional[Array] = None
 
 
 def _query_scores(index: IVFFlatIndex, queries: Array, vectors: Array,

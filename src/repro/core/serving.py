@@ -35,7 +35,9 @@ Array = jax.Array
 
 def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
                          v_block: int = 256, backend: Optional[str] = None,
-                         resident_budget_bytes: Optional[int] = None
+                         resident_budget_bytes: Optional[int] = None,
+                         prune: str = "auto",
+                         t_max: Optional[int] = None,
                          ) -> Callable:
     """The batched server's default search step: the tiled fused path.
 
@@ -53,6 +55,15 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
     the cache's ``gather_fn`` and return identical results; the open index
     is exposed as ``search_fn.index`` so callers can read
     ``resident_bytes()`` / cache stats.
+
+    ``prune`` selects filter-aware probe pruning (``"auto"`` = use the
+    index's cluster attribute summaries when present; ``"on"`` requires
+    them; ``"off"`` disables): probes whose clusters the batch's filters
+    provably cannot match are dropped at plan time — same results, fewer
+    scans, and on the disk tier fewer cluster fetches.  ``t_max`` enables
+    adaptive probe widening (refill pruned probes from next-best unpruned
+    centroids up to t_max; recovers recall under selective filters at no
+    cost to unfiltered traffic).
     """
     from repro.core.disk import DiskIVFIndex
     from repro.kernels.filtered_scan.ops import search_fused_tiled
@@ -68,7 +79,7 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
         res = search_fused_tiled(
             index, queries, fspec, k=k, n_probes=n_probes,
             q_block=q_block, v_block=v_block, backend=backend,
-            gather_fn=gather_fn,
+            gather_fn=gather_fn, prune=prune, t_max=t_max,
         )
         return res.scores, res.ids
 

@@ -1,4 +1,5 @@
-"""Disk persistence: layout v2 (memory-mappable records), v1-read compat.
+"""Disk persistence: layout v2.1 (memory-mappable records + resident
+cluster attribute summaries), v1/v2-read compat.
 
 The paper's index lives on disk and is paged in per query.  Layout v2 is the
 format that makes that an actual serving mode (``core/disk.py``'s
@@ -21,7 +22,16 @@ pure arithmetic — no per-cluster index, no deserialization.  ``norms`` is
 present only for metric="l2"; ``scales`` only for SQ8 (the manifest's
 ``quantized`` flag), in which case ``vectors`` is int8 codes.
 
-Versioning: ``manifest["layout"]`` is 2 for this format.  Layout v1 (one
+Layout v2.1 adds the *resident* per-cluster attribute summaries
+(``core/summaries.py``): interval bounds, fixed-width histograms and their
+global bin edges, one small ``.npy`` per field next to ``centroids.npy``.
+They are what lets the probe planner prune filtered-out clusters before the
+disk tier fetches them.  The manifest carries ``has_summaries`` /
+``summary_bins``; checkpoints without them (v2.0, v1) load fine and simply
+disable pruning.
+
+Versioning: ``manifest["layout"]`` is 2 for this format (``layout_minor`` 1
+marks v2.1 writers).  Layout v1 (one
 ``.npz`` of stacked arrays per shard) is still *read* — ``load_index``
 dispatches on the manifest — and can still be written with
 ``save_index(..., layout=1)`` for tooling that expects it.  v1 checkpoints
@@ -52,8 +62,19 @@ import numpy as np
 
 from repro.core.hybrid import HybridSpec
 from repro.core.ivf import IVFFlatIndex
+from repro.core.summaries import ClusterSummaries, pad_clusters
 
 MANIFEST = "manifest.json"
+# Resident per-cluster attribute summaries (layout v2.1): one .npy per
+# field, loaded whole — like centroids/counts, they are consulted at plan
+# time before any flat list is touched.
+SUMMARY_FILES = dict(
+    amin="summaries_amin.npy",
+    amax="summaries_amax.npy",
+    hist="summaries_hist.npy",
+    edges_lo="summaries_edges_lo.npy",
+    edges_hi="summaries_edges_hi.npy",
+)
 _FIELD_ALIGN = 64     # per-field offset alignment inside a record
 _RECORD_ALIGN = 512   # record stride alignment (mmap-friendly)
 
@@ -142,6 +163,10 @@ def pad_k(index: IVFFlatIndex, k_new: int) -> IVFFlatIndex:
         counts=pad(index.counts, 0),
         norms=None if index.norms is None else pad(index.norms, 0),
         scales=None if index.scales is None else pad(index.scales, 1.0),
+        summaries=(
+            None if index.summaries is None
+            else pad_clusters(index.summaries, k_new)  # void rows: never match
+        ),
     )
 
 
@@ -172,6 +197,10 @@ def _base_manifest(index: IVFFlatIndex, *, n_shards: int, version: int
         store_dtype=_dtype_name(index.vectors.dtype),
         has_norms=index.norms is not None,
         quantized=index.quantized,
+        has_summaries=index.summaries is not None,
+        summary_bins=(
+            index.summaries.n_bins if index.summaries is not None else 0
+        ),
         n_live=int(jnp.sum(index.counts)),
     )
 
@@ -202,6 +231,14 @@ def save_index(index: IVFFlatIndex, directory: str, *, n_shards: int = 1,
         os.path.join(directory, "centroids.npy"),
         lambda p: _np_save(p, np.asarray(index.centroids, np.float32)),
     )
+    if index.summaries is not None:  # resident, layout-independent (v2.1)
+        for field, fname in SUMMARY_FILES.items():
+            _atomic_save(
+                os.path.join(directory, fname),
+                lambda p, f=field: _np_save(
+                    p, np.asarray(getattr(index.summaries, f))
+                ),
+            )
 
     if layout == 1:
         for s in range(n_shards):
@@ -248,7 +285,8 @@ def save_index(index: IVFFlatIndex, directory: str, *, n_shards: int = 1,
                 os.path.join(directory, f"shard_{s}_of_{n_shards}.bin"),
                 _bin_save,
             )
-        manifest.update(layout=2, record_stride=stride, fields=fields)
+        manifest.update(layout=2, layout_minor=1, record_stride=stride,
+                        fields=fields)
 
     _atomic_save(
         os.path.join(directory, MANIFEST),
@@ -261,7 +299,20 @@ def load_manifest(directory: str) -> dict:
         man = json.load(f)
     man.setdefault("layout", 1)        # pre-v2 checkpoints
     man.setdefault("quantized", False)  # pre-SQ8-fix checkpoints
+    man.setdefault("has_summaries", False)  # pre-v2.1: no pruning, sound
     return man
+
+
+def load_summaries(directory: str, man: dict) -> Optional[ClusterSummaries]:
+    """Loads the resident summary arrays, or None for pre-v2.1 checkpoints
+    (missing summaries simply disable probe pruning)."""
+    if not man.get("has_summaries"):
+        return None
+    fields = {
+        f: jnp.asarray(np.load(os.path.join(directory, fname)))
+        for f, fname in SUMMARY_FILES.items()
+    }
+    return ClusterSummaries(**fields)
 
 
 def shard_paths(directory: str, man: dict) -> List[str]:
@@ -274,7 +325,12 @@ def shard_paths(directory: str, man: dict) -> List[str]:
 
 def check_complete(directory: str, man: dict) -> List[str]:
     paths = shard_paths(directory, man)
-    missing = [p for p in paths if not os.path.exists(p)]
+    required = list(paths)
+    if man.get("has_summaries"):
+        required += [
+            os.path.join(directory, f) for f in SUMMARY_FILES.values()
+        ]
+    missing = [p for p in required if not os.path.exists(p)]
     if missing:
         raise FileNotFoundError(f"incomplete checkpoint, missing: {missing}")
     return paths
@@ -320,6 +376,7 @@ def _load_v1(directory: str, man: dict, paths: List[str]) -> IVFFlatIndex:
         counts=cat("counts"),
         norms=cat("norms") if man["has_norms"] else None,
         scales=scales,
+        summaries=load_summaries(directory, man),
     )
 
 
@@ -353,6 +410,7 @@ def _load_v2(directory: str, man: dict, paths: List[str]) -> IVFFlatIndex:
         counts=jnp.asarray(np.load(os.path.join(directory, "counts.npy"))),
         norms=cat("norms") if man["has_norms"] else None,
         scales=cat("scales") if man["quantized"] else None,
+        summaries=load_summaries(directory, man),
     )
 
 

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import kmeans as kmeans_lib
+from repro.core import summaries as summaries_lib
 from repro.core.hybrid import make_hybrid
 from repro.core.ivf import IVFFlatIndex
 
@@ -84,10 +85,18 @@ def add_vectors(
     )
     counts = index.counts + added
     n_dropped = b - jnp.sum(added)
+    summ = index.summaries
+    if summ is not None:
+        # Widen intervals / add histogram mass for the landed rows only, so
+        # the summaries keep their pruning contract: a cluster is pruned only
+        # if it provably holds zero passing rows.
+        summ = summaries_lib.widen_for_add(
+            summ, a, attrs.astype(jnp.int16), ok
+        )
     return (
         dataclasses.replace(
             index, vectors=vec, attrs=att, ids=ids, counts=counts,
-            norms=norms, scales=scales,
+            norms=norms, scales=scales, summaries=summ,
         ),
         n_dropped,
     )
@@ -96,7 +105,13 @@ def add_vectors(
 @jax.jit
 def tombstone(index: IVFFlatIndex, cluster: Array, slot: Array) -> IVFFlatIndex:
     """Marks (cluster, slot) pairs deleted. Ids become -1; counts unchanged
-    (the high-water mark still bounds the scan)."""
+    (the high-water mark still bounds the scan).
+
+    Cluster summaries are deliberately left stale: an interval/histogram that
+    still covers a deleted row over-approximates the live set, which is the
+    sound direction (never prunes a cluster with a live passing row).
+    :func:`compact_cluster` tightens them back to exact.
+    """
     ids = index.ids.at[cluster, slot].set(-1, mode="drop")
     return dataclasses.replace(index, ids=ids)
 
@@ -121,7 +136,14 @@ def compact_cluster(index: IVFFlatIndex, cluster: int) -> IVFFlatIndex:
     if scales is not None:  # SQ8 rows move with their dequantization scale
         scales = scales.at[cluster].set(jnp.take(scales[cluster], perm, 0))
     counts = index.counts.at[cluster].set(n_live)
+    summ = index.summaries
+    if summ is not None:
+        # Compaction is the tightening point: tombstoned rows are gone from
+        # the flat list, so this cluster's summary row is rebuilt exactly
+        # (intervals shrink back, histogram mass drops the dead rows).
+        summ = summaries_lib.rebuild_cluster(summ, att[cluster], ids_row,
+                                             cluster)
     return dataclasses.replace(
         index, vectors=vec, attrs=att, ids=ids, counts=counts, norms=norms,
-        scales=scales,
+        scales=scales, summaries=summ,
     )

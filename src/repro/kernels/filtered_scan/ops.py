@@ -27,7 +27,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import dataclasses
+
 from repro.core import probes as probes_lib
+from repro.core import summaries as summaries_lib
 from repro.core import topk as topk_lib
 from repro.core.filters import FilterSpec
 from repro.core.ivf import IVFFlatIndex, round_up
@@ -159,7 +162,8 @@ def tiled_scan_xla(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("metric", "n_probes", "q_block", "u_cap", "cast_dtype"),
+    static_argnames=("metric", "n_probes", "q_block", "u_cap", "cast_dtype",
+                     "t_max"),
 )
 def plan_fused_tiled(
     centroids: Array,
@@ -173,29 +177,88 @@ def plan_fused_tiled(
     q_block: int,
     u_cap: int,
     cast_dtype,
+    summaries=None,
+    t_max: Optional[int] = None,
 ):
     """Stage 1 of the tiled search: centroid probe + per-tile dedup plan.
 
-    Runs entirely on the *resident* state (centroids + counts), so the disk
-    tier can plan — and hand ``slot_cluster`` to its cluster cache as the
-    batch's fetch list — before any flat list is paged in.  Returns
-    ``(slot_cluster, slot_tile, slot_of_probe, probe_ok, n_unique,
-    queries_pad, lo_pad, hi_pad)``; queries/bounds come back padded to whole
-    ``q_block`` tiles with edge rows (whose probes dedupe into the last real
-    query's slots, so padding adds no scan work).
+    Runs entirely on the *resident* state (centroids + counts + attribute
+    summaries), so the disk tier can plan — and hand ``slot_cluster`` to its
+    cluster cache as the batch's fetch list — before any flat list is paged
+    in.  Returns ``(slot_cluster, slot_tile, slot_of_probe, probe_ok,
+    n_unique, queries_pad, lo_pad, hi_pad, n_pruned)``; queries/bounds come
+    back padded to whole ``q_block`` tiles with edge rows (whose probes
+    dedupe into the last real query's slots, so padding adds no scan work).
+
+    With ``summaries`` (a :class:`repro.core.summaries.ClusterSummaries`),
+    the plan is filter-aware: a branch-free disjointness test between each
+    query's DNF terms and the per-cluster interval/histogram summaries marks
+    clusters the filter provably cannot match, and those probes are dropped
+    *before* the per-tile dedup — they never get a slot, are never fetched
+    by ``probes.fetch_order``, and are never scanned.  Results stay
+    bit-identical to the unpruned plan (only zero-passing-row clusters can
+    be pruned).
+
+    ``t_max`` (static, > n_probes) additionally enables adaptive probe
+    widening (paper §4.3 selectivity-adaptive T): each query's probe set is
+    refilled with its next-best *unpruned* centroids from the geometric
+    top-``t_max``, so selective filters keep ``n_probes`` productive probes
+    instead of silently scanning fewer clusters.  Unfiltered queries prune
+    nothing, refill nothing, and plan exactly as before.  Within the refill
+    ranking, the summaries' histogram-mass estimate of each cluster's
+    expected passing count breaks exact centroid-score ties.
     """
     scores = centroid_scores(centroids, counts, queries, metric=metric)
-    _, probe_ids = jax.lax.top_k(scores, n_probes)
-    probe_ids = probe_ids.astype(jnp.int32)  # [Q, T]
-    probe_pad = probes_lib.pad_to_tiles(probe_ids, q_block)  # [Qpad, T]
+    q = queries.shape[0]
+    if summaries is None:
+        _, probe_ids = jax.lax.top_k(scores, n_probes)
+        probe_ids = probe_ids.astype(jnp.int32)  # [Q, T]
+        probe_valid = None
+        n_pruned = jnp.zeros((q,), jnp.int32)
+    else:
+        cm = summaries_lib.can_match(summaries, lo, hi)  # [Q, K]
+        width = n_probes if t_max is None else t_max
+        cvals, cand = jax.lax.top_k(scores, width)  # [Q, W] geometric order
+        cm_c = jnp.take_along_axis(cm, cand, axis=1)  # [Q, W]
+        real = cvals > topk_lib.NEG_INF / 2  # exclude empty/padded clusters
+        # accounting: probes a geometry-only planner would have scanned (and
+        # the disk tier fetched) that the filter proved empty
+        n_pruned = jnp.sum(
+            jnp.logical_and(~cm_c[:, :n_probes], real[:, :n_probes])
+            .astype(jnp.int32), axis=-1,
+        )
+        if t_max is None:
+            # exact mode: the geometric top-T minus its pruned members
+            probe_ids = cand.astype(jnp.int32)
+            probe_valid = jnp.logical_and(cm_c, real)
+        else:
+            # widened mode: re-rank candidates by (centroid score, expected
+            # passing mass) — the histogram estimate only breaks exact score
+            # ties — then keep each query's first n_probes unpruned ones.
+            epass = summaries_lib.expected_passing(summaries, lo, hi, counts)
+            ep_c = jnp.take_along_axis(epass, cand, axis=1)
+            order = jnp.lexsort((-ep_c, -cvals), axis=-1)  # last key primary
+            cand = jnp.take_along_axis(cand, order, axis=1)
+            cm_c = jnp.take_along_axis(cm_c, order, axis=1)
+            real = jnp.take_along_axis(real, order, axis=1)
+            ok = jnp.logical_and(cm_c, real)
+            rank = jnp.cumsum(ok.astype(jnp.int32), axis=1) - 1
+            probe_ids = cand.astype(jnp.int32)
+            probe_valid = jnp.logical_and(ok, rank < n_probes)
+    probe_pad = probes_lib.pad_to_tiles(probe_ids, q_block)  # [Qpad, W]
+    valid_pad = (
+        None if probe_valid is None
+        else probes_lib.pad_to_tiles(probe_valid, q_block)
+    )
     queries_pad = probes_lib.pad_to_tiles(queries.astype(cast_dtype), q_block)
     lo_pad = probes_lib.pad_to_tiles(lo, q_block)
     hi_pad = probes_lib.pad_to_tiles(hi, q_block)
     slot_cluster, slot_tile, slot_of_probe, probe_ok, n_unique = (
-        probes_lib.plan_probe_tiles(probe_pad, q_block=q_block, u_cap=u_cap)
+        probes_lib.plan_probe_tiles(probe_pad, q_block=q_block, u_cap=u_cap,
+                                    probe_valid=valid_pad)
     )
     return (slot_cluster, slot_tile, slot_of_probe, probe_ok, n_unique,
-            queries_pad, lo_pad, hi_pad)
+            queries_pad, lo_pad, hi_pad, n_pruned)
 
 
 @functools.partial(
@@ -282,6 +345,29 @@ def _scan_merge_tiled(
     return SearchResult(vals, out_ids, n_scanned, n_passed)
 
 
+def resolve_prune(index, prune: str):
+    """Resolves the ``prune`` knob against an index's summaries.
+
+    Returns the :class:`~repro.core.summaries.ClusterSummaries` to plan with,
+    or None for no pruning.  ``"auto"`` prunes iff the index carries
+    summaries; ``"on"`` demands them; ``"off"`` never prunes.
+    """
+    summ = getattr(index, "summaries", None)
+    if prune == "off":
+        return None
+    if prune == "on":
+        if summ is None:
+            raise ValueError(
+                "prune='on' but the index has no cluster summaries — build "
+                "with with_summaries=True or re-save the checkpoint (layout "
+                "v2.1), or use prune='auto'"
+            )
+        return summ
+    if prune == "auto":
+        return summ
+    raise ValueError(f"prune must be 'auto'|'on'|'off', got {prune!r}")
+
+
 def search_fused_tiled(
     index,
     queries: Array,
@@ -294,28 +380,49 @@ def search_fused_tiled(
     u_cap: Optional[int] = None,
     backend: Optional[str] = None,
     gather_fn=None,
+    prune: str = "auto",
+    t_max: Optional[int] = None,
 ) -> SearchResult:
     """Query-tiled, probe-deduplicated fused search with streaming top-k.
 
     Same contract as :func:`repro.core.search.search_reference` (identical
     ids/scores modulo tie order).  q_block is the query-tile height QB;
-    u_cap bounds unique probes per tile (default ``min(QB·T, K)`` — always
-    sufficient, since a tile cannot probe more than K distinct clusters).
+    u_cap bounds unique probes per tile (default ``min(QB·W, K)`` for probe
+    table width W — always sufficient, since a tile cannot probe more than K
+    distinct clusters).
 
     Two jitted stages: a *plan* over the resident state (centroid top-k +
-    per-tile probe dedup) and a *scan/merge* over the flat lists.  With
-    ``gather_fn=None`` the scan reads ``index``'s in-RAM ``[K, Vpad, ...]``
-    arrays.  A disk-resident index passes ``gather_fn`` (its cluster cache's
-    pager): the hook receives the plan's ``slot_cluster`` fetch list and
-    returns ``(local_ids, vectors, attrs, ids, norms, scales)`` batch-local
-    blocks, which the same kernel scans for bit-identical results.  ``index``
-    then only needs the resident surface (``spec / centroids / counts /
-    store_dtype / quantized``), e.g. :class:`repro.core.disk.DiskIVFIndex`.
+    filter-aware probe pruning + per-tile probe dedup) and a *scan/merge*
+    over the flat lists.  With ``gather_fn=None`` the scan reads ``index``'s
+    in-RAM ``[K, Vpad, ...]`` arrays.  A disk-resident index passes
+    ``gather_fn`` (its cluster cache's pager): the hook receives the plan's
+    ``slot_cluster`` fetch list and returns ``(local_ids, vectors, attrs,
+    ids, norms, scales)`` batch-local blocks, which the same kernel scans
+    for bit-identical results.  ``index`` then only needs the resident
+    surface (``spec / centroids / counts / store_dtype / quantized /
+    summaries``), e.g. :class:`repro.core.disk.DiskIVFIndex`.
+
+    ``prune``: ``"auto"`` (default) consults the index's cluster attribute
+    summaries when present and drops probes whose clusters provably contain
+    no row passing the query's filter — same ids/scores, fewer slots, fewer
+    disk fetches.  ``"on"`` requires summaries, ``"off"`` disables.
+    ``t_max`` (static, ≥ n_probes; needs pruning active) widens: pruned
+    probes are refilled from the query's next-best unpruned centroids within
+    the geometric top-``t_max``, trading bit-identity for recovered recall
+    under selective filters (every surfaced hit remains exact).
     """
     q, _ = queries.shape
     qb = min(q_block, round_up(q, 8))
     kc = index.n_clusters
-    cap = min(qb * n_probes, kc) if u_cap is None else u_cap
+    summ = resolve_prune(index, prune)
+    if t_max is not None:
+        if t_max < n_probes:
+            raise ValueError(f"t_max={t_max} < n_probes={n_probes}")
+        t_max = min(t_max, kc)
+        if summ is None or t_max == n_probes:
+            t_max = None  # widening is only meaningful with pruning active
+    width = n_probes if t_max is None else t_max
+    cap = min(qb * width, kc) if u_cap is None else u_cap
     cast_dtype = np.dtype(np.float32) if index.quantized else np.dtype(
         index.store_dtype
     )
@@ -323,10 +430,10 @@ def search_fused_tiled(
         backend = "pallas" if jax.default_backend() == "tpu" else "xla"
 
     (slot_cluster, slot_tile, slot_of_probe, probe_ok, _, queries_pad,
-     lo_pad, hi_pad) = plan_fused_tiled(
+     lo_pad, hi_pad, n_pruned) = plan_fused_tiled(
         index.centroids, index.counts, queries, fspec.lo, fspec.hi,
         metric=index.spec.metric, n_probes=n_probes, q_block=qb, u_cap=cap,
-        cast_dtype=cast_dtype,
+        cast_dtype=cast_dtype, summaries=summ, t_max=t_max,
     )
 
     if gather_fn is None:
@@ -338,9 +445,10 @@ def search_fused_tiled(
         )
         slot_cluster = jnp.asarray(slot_cluster)
 
-    return _scan_merge_tiled(
+    res = _scan_merge_tiled(
         slot_cluster, slot_tile, slot_of_probe, probe_ok, queries,
         queries_pad, lo_pad, hi_pad, vectors, attrs, ids, norms, scales,
         metric=index.spec.metric, k=k, q=q, q_block=qb, v_block=v_block,
         backend=backend,
     )
+    return dataclasses.replace(res, n_pruned=n_pruned)

@@ -55,7 +55,15 @@ def main():
                     help="disk = page clusters from the checkpoint on demand")
     ap.add_argument("--resident-budget-mb", type=int, default=None,
                     help="disk tier: cap on resident bytes (centroids + "
-                         "counts + cluster cache); default = unbounded cache")
+                         "counts + summaries + cluster cache); default = "
+                         "unbounded cache")
+    ap.add_argument("--prune", choices=("auto", "on", "off"), default="auto",
+                    help="filter-aware probe pruning from the resident "
+                         "cluster attribute summaries (layout v2.1); "
+                         "auto = prune when the index carries summaries")
+    ap.add_argument("--t-max", type=int, default=None,
+                    help="adaptive probe widening cap: refill pruned probes "
+                         "from next-best unpruned centroids up to this rank")
     args = ap.parse_args()
 
     from repro.core import HybridSpec, build_ivf, storage
@@ -112,6 +120,7 @@ def main():
 
     search_fn = make_fused_search_fn(
         serving_index, k=args.k, n_probes=args.probes, q_block=args.batch,
+        prune=args.prune, t_max=args.t_max,
     )
 
     server = SearchServer(
