@@ -41,6 +41,12 @@ import jax.numpy as jnp
 
 from repro.core import FilterSpec, HybridSpec, build_ivf, match_all, storage
 from repro.core.disk import DiskIVFIndex
+from repro.core.engine import (
+    EngineStats,
+    SearchEngine,
+    scan_compile_count,
+    u_cap_buckets,
+)
 from repro.core.ivf import build_from_assignments, round_up
 from repro.core.search import (
     brute_force,
@@ -124,7 +130,8 @@ def bench_disk_tier(index, core, rng, *, q=64, n_batches=10,
     with tempfile.TemporaryDirectory(prefix="bench_disk_") as ckpt:
         storage.save_index(index, ckpt, n_shards=4)
         man = storage.load_manifest(ckpt)
-        overhead = index.centroids.size * 4 + index.n_clusters * 4
+        overhead = (index.centroids.size * 4 + index.n_clusters * 4
+                    + (index.summaries.nbytes() if index.summaries is not None else 0))
         budget = overhead + cached_clusters * man["record_stride"] + 4096
         disk = DiskIVFIndex.open(ckpt, resident_budget_bytes=budget)
         batches = [hot_queries(core, q, rng) for _ in range(n_batches)]
@@ -171,6 +178,100 @@ def bench_disk_tier(index, core, rng, *, q=64, n_batches=10,
     return entry
 
 
+def bench_disk_tier_pipelined(index, core, rng, *, q=64, n_batches=10,
+                              cached_clusters=16, q_block=64,
+                              pipeline_depth=2):
+    """Disk tier through the pipelined execution engine.
+
+    Same workload/budget as :func:`bench_disk_tier`, software-pipelined
+    across the batch stream with the engine's ``submit``/``result`` pair:
+    batch *i+1* is planned and its cluster gathers (page-in + host→device
+    transfer, on the fetch worker) launch while batch *i* scans on device —
+    at Q=64 a batch is one query tile, so cross-batch submission is where
+    the IO/compute overlap comes from.  The slot table is provisioned
+    adaptively from observed unique counts.  Results are gated exact
+    against the reference; the entry reports the measured IO/compute
+    overlap ratio and the scan-compile count.
+    """
+    import tempfile
+
+    with tempfile.TemporaryDirectory(prefix="bench_diskp_") as ckpt:
+        storage.save_index(index, ckpt, n_shards=4)
+        man = storage.load_manifest(ckpt)
+        # same formula as DiskIVFIndex's own accounting: the budget must
+        # cover the FULL always-resident set (summaries included) plus the
+        # intended cache capacity, identically to bench_disk_tier above so
+        # the sync and pipelined entries share one budget
+        overhead = (index.centroids.size * 4 + index.n_clusters * 4
+                    + (index.summaries.nbytes() if index.summaries is not None else 0))
+        budget = overhead + cached_clusters * man["record_stride"] + 4096
+        with DiskIVFIndex.open(ckpt, resident_budget_bytes=budget) as disk:
+            eng = SearchEngine(
+                disk, k=K, n_probes=T, q_block=q_block, pipeline="on",
+                pipeline_depth=pipeline_depth,
+            )
+            batches = [hot_queries(core, q, rng) for _ in range(n_batches)]
+            fspec = match_all(q, M)
+
+            jax.block_until_ready(  # compile + first page-in
+                eng.search(batches[0], fspec).ids
+            )
+            eng.stats = EngineStats()  # measure the steady-state window only
+            t0 = time.perf_counter()
+            pend = eng.submit(batches[0], fspec)
+            last = None
+            for i in range(n_batches):
+                nxt = (eng.submit(batches[i + 1], fspec)
+                       if i + 1 < n_batches else None)
+                last = eng.result(pend)
+                pend = nxt
+            jax.block_until_ready(last.ids)
+            wall = time.perf_counter() - t0
+            # build the entry from the timed window BEFORE the exactness
+            # gate runs more (serial, depth-1) batches through eng.stats
+            stats = eng.stats
+            entry = dict(
+                path="disk_tier_pipelined", q=q, q_block=q_block,
+                pipeline_depth=pipeline_depth,
+                qps=round(q * n_batches / wall, 1),
+                mean_batch_ms=round(wall / n_batches * 1e3, 3),
+                iters=n_batches,
+                overlap_ratio=round(stats.overlap_ratio, 3),
+                io_wait_ms=round(stats.io_wait_s * 1e3, 1),
+                io_total_ms=round(stats.io_total_s * 1e3, 1),
+                u_cap=stats.last_u_cap,
+                scan_compilations_steady=stats.scan_compilations,
+                resident_bytes=disk.resident_bytes(),
+                resident_budget_bytes=budget,
+                cache_hit_rate=round(disk.cache.hit_rate, 3),
+                prefetched=disk.cache.stats.prefetched,
+                prefetch_errors=disk.cache.stats.errors,
+            )
+            assert disk.resident_bytes() <= budget
+
+            # exactness gates: the timed submit/result path itself (its
+            # final batch result is in hand), one fresh submit/result
+            # round-trip, and the serial-search path
+            ref_last = search_reference(index, batches[-1], fspec, k=K,
+                                        n_probes=T)
+            assert (np.asarray(ref_last.ids) == np.asarray(last.ids)).all(), \
+                "pipelined (submit/result) disk tier != reference"
+            rt = eng.result(eng.submit(batches[0], fspec))
+            ref0 = search_reference(index, batches[0], fspec, k=K,
+                                    n_probes=T)
+            assert (np.asarray(ref0.ids) == np.asarray(rt.ids)).all(), \
+                "submit/result round-trip != reference"
+            for qs in batches[:3]:  # serial-search path
+                ref = search_reference(index, qs, fspec, k=K, n_probes=T)
+                got = eng.search(qs, fspec)
+                assert (np.asarray(ref.ids) == np.asarray(got.ids)).all(), \
+                    "pipelined disk tier != reference"
+    print(f"disk tier pipelined Q={q}: {entry['qps']:.1f} qps, overlap "
+          f"{entry['overlap_ratio']:.2f}, u_cap {entry['u_cap']}, "
+          f"hit-rate {entry['cache_hit_rate']}")
+    return entry
+
+
 def build_sweep():
     """Topic-mixture dataset with a topic-correlated timestamp attribute.
 
@@ -212,53 +313,31 @@ def window_fspec(q, rng, selectivity):
     return FilterSpec(lo=jnp.asarray(lo), hi=jnp.asarray(hi))
 
 
-def pick_u_cap_sweep(index, batches, q_block, prune):
-    """u_cap from observed *pruned* traffic: max per-tile unique surviving
-    probes over every batch, 8-bucketed like :func:`pick_u_cap`.
-
-    This is where pruning shrinks the scan itself — fewer unique clusters
-    per tile means a smaller static slot table, so the kernel streams (and
-    the disk tier gathers) fewer blocks.  Sizing over all batches keeps the
-    plan exact (no u_cap overflow drops).
-    """
-    from repro.core.summaries import can_match
-
-    max_u = 1
-    for qs, fs in batches:
-        probe_ids, _ = search_centroids(index, qs, T)
-        pids = np.asarray(probe_ids)
-        if prune == "on" and index.summaries is not None:
-            cm = np.asarray(can_match(index.summaries, fs.lo, fs.hi))
-            valid = np.take_along_axis(cm, pids, axis=1)
-        else:
-            valid = np.ones(pids.shape, bool)
-        nq = pids.shape[0]
-        pad = (-nq) % q_block
-        if pad:
-            pids = np.concatenate([pids, np.repeat(pids[-1:], pad, 0)])
-            valid = np.concatenate([valid, np.repeat(valid[-1:], pad, 0)])
-        pt = pids.reshape(-1, q_block * T)
-        vt = valid.reshape(-1, q_block * T)
-        for row_p, row_v in zip(pt, vt):
-            u = len(np.unique(row_p[row_v])) if row_v.any() else 1
-            max_u = max(max_u, u)
-    return round_up(max_u, 8)
-
-
 def bench_selectivity_sweep(index, core, attrs, rng, *, q=64, n_batches=8,
-                            cached_clusters=16):
+                            cached_clusters=16, pipeline="off"):
     """Filtered traffic at ~50%/5%/0.5% selectivity, pruning on vs off.
 
-    Emits per-(selectivity, tier, prune) QPS, mean pruned probes and disk
-    cache hit rate; gates every pruned result bit-exact against the
-    unpruned reference at the same n_probes, and reports a widened
-    (``t_max``) RAM entry's recall against the brute-force oracle.  The
-    unfiltered workload rides along as selectivity 1.0 — the no-regression
-    guard for prune=auto on unfiltered traffic.
+    Every cell runs one :class:`SearchEngine` with adaptive u_cap
+    provisioning: the slot table is bucketed per batch from the observed
+    post-prune unique-cluster counts, so pruned cells provision (and the
+    bench *asserts* they provision) strictly smaller tables than prune=off
+    under selective filters, and the whole sweep triggers at most
+    ``len(buckets)`` scan compilations per tier (checked against the
+    engine's process-wide jit cache-miss counter).  ``pipeline`` selects the
+    disk tier's executor.
+
+    Emits per-(selectivity, tier, prune) QPS, mean pruned probes, the
+    provisioned u_cap, and disk cache hit rate; gates every pruned result
+    bit-exact against the unpruned reference at the same n_probes, and
+    reports a widened (``t_max``) RAM entry's recall against the
+    brute-force oracle.  The unfiltered workload rides along as selectivity
+    1.0 — the no-regression guard for prune=auto on unfiltered traffic.
     """
     import tempfile
 
     qb = min(64, round_up(q, 8))
+    full_cap = min(qb * T, index.n_clusters)
+    buckets = u_cap_buckets(full_cap)
     entries = []
     exact = True
     sweeps = [(1.0, None)] + [(s, None) for s in SELECTIVITIES]
@@ -272,24 +351,15 @@ def bench_selectivity_sweep(index, core, attrs, rng, *, q=64, n_batches=8,
             for _ in range(n_batches)
         ]
 
-    u_caps = {
-        (sel, prune): pick_u_cap_sweep(
-            index, list(zip(queries_by_sel[sel], fspec_by_sel[sel])), qb,
-            prune,
-        )
-        for sel, _ in sweeps for prune in ("off", "on")
-    }
-
-    # --- RAM tier ---
+    # --- RAM tier (adaptive u_cap engines) ---
+    ram_compiles0 = scan_compile_count()
     for sel, _ in sweeps:
         for prune in ("off", "on"):
-            u_cap = u_caps[(sel, prune)]
+            eng = SearchEngine(index, k=K, n_probes=T, q_block=qb,
+                               prune=prune)
 
             def run(qs, fs):
-                return search_fused_tiled(
-                    index, qs, fs, k=K, n_probes=T, q_block=qb, u_cap=u_cap,
-                    prune=prune,
-                )
+                return eng.search(qs, fs)
             qs0, fs0 = queries_by_sel[sel][0], fspec_by_sel[sel][0]
             jax.block_until_ready(run(qs0, fs0).ids)  # compile
             walls = []
@@ -310,9 +380,11 @@ def bench_selectivity_sweep(index, core, attrs, rng, *, q=64, n_batches=8,
             entries.append(dict(
                 path="sweep_ram", selectivity=sel, prune=prune,
                 q=q, qps=round(q * n_batches / wall, 1),
-                mean_pruned_probes=round(n_pruned, 2), u_cap=u_cap,
+                mean_pruned_probes=round(n_pruned, 2),
+                u_cap=max(eng.stats.u_cap_hist),
                 exact=ok,
             ))
+    ram_compiles = scan_compile_count() - ram_compiles0
 
     # widened recall entry (informational): selective filters refill pruned
     # probes from next-best unpruned centroids up to t_max
@@ -321,8 +393,8 @@ def bench_selectivity_sweep(index, core, attrs, rng, *, q=64, n_batches=8,
         oracle = brute_force(jnp.asarray(core), jnp.asarray(attrs), qs0,
                              fs0, k=K, metric="dot")
         narrow = search_fused_tiled(index, qs0, fs0, k=K, n_probes=T,
-                                    q_block=qb, u_cap=u_caps[(sel, "on")],
-                                    prune="on")
+                                    q_block=qb, prune="on",
+                                    adaptive_u_cap=True)
         wide = search_fused_tiled(index, qs0, fs0, k=K, n_probes=T,
                                   q_block=qb, prune="on", t_max=4 * T)
         entries.append(dict(
@@ -332,6 +404,7 @@ def bench_selectivity_sweep(index, core, attrs, rng, *, q=64, n_batches=8,
         ))
 
     # --- disk tier: fresh cache per config so hit rates are comparable ---
+    disk_compiles0 = scan_compile_count()
     with tempfile.TemporaryDirectory(prefix="bench_sweep_") as ckpt:
         storage.save_index(index, ckpt, n_shards=4)
         man = storage.load_manifest(ckpt)
@@ -340,12 +413,12 @@ def bench_selectivity_sweep(index, core, attrs, rng, *, q=64, n_batches=8,
         budget = overhead + cached_clusters * man["record_stride"] + 4096
         for sel, _ in sweeps:
             for prune in ("off", "on"):
-                u_cap = u_caps[(sel, prune)]
                 disk = DiskIVFIndex.open(ckpt, resident_budget_bytes=budget)
+                eng = SearchEngine(disk, k=K, n_probes=T, q_block=qb,
+                                   prune=prune, pipeline=pipeline)
 
                 def run(qs, fs):
-                    return disk.search(qs, fs, k=K, n_probes=T, q_block=qb,
-                                       u_cap=u_cap, prune=prune)
+                    return eng.search(qs, fs)
 
                 qs_l, fs_l = queries_by_sel[sel], fspec_by_sel[sel]
                 jax.block_until_ready(run(qs_l[0], fs_l[0]).ids)  # compile
@@ -384,13 +457,48 @@ def bench_selectivity_sweep(index, core, attrs, rng, *, q=64, n_batches=8,
                     cache_hit_rate=round(disk.cache.hit_rate, 3),
                     fetched=disk.cache.stats.misses
                     + disk.cache.stats.prefetched,
-                    u_cap=u_cap, exact=ok,
+                    u_cap=max(eng.stats.u_cap_hist),
+                    overlap_ratio=round(eng.stats.overlap_ratio, 3),
+                    # the executor actually used: serially-driven one-tile
+                    # batches fall back to the sync fetch+scan even under
+                    # --pipeline on (overlap needs ≥2 tiles or
+                    # submit/result interleaving)
+                    executor=("pipelined" if eng.stats.pipelined_batches
+                              else "sync"),
+                    pipeline=pipeline, exact=ok,
                 ))
                 disk.close()
+    disk_compiles = scan_compile_count() - disk_compiles0
 
     by = {(e["path"], e["selectivity"], e.get("prune")): e for e in entries}
     summary = {}
     sel_lo = min(SELECTIVITIES)
+
+    # --- adaptive provisioning gates: bounded recompiles, shrinking tables -
+    # The whole selectivity sweep (all selectivities × prune on/off) may
+    # compile at most one scan per u_cap bucket per tier; and under
+    # selective filters the pruned cells must provision strictly smaller
+    # slot tables than prune=off.  Violations fail the bench loudly.
+    assert ram_compiles <= len(buckets), (
+        f"RAM sweep compiled {ram_compiles} scans > {len(buckets)} buckets"
+    )
+    assert disk_compiles <= len(buckets), (
+        f"disk sweep compiled {disk_compiles} scans > {len(buckets)} buckets"
+    )
+    pruned_smaller = True
+    for tier in ("sweep_ram", "sweep_disk"):
+        u_on = by[(tier, sel_lo, "on")]["u_cap"]
+        u_off = by[(tier, sel_lo, "off")]["u_cap"]
+        assert u_on < u_off, (
+            f"{tier}: pruned u_cap {u_on} not < unpruned {u_off} at "
+            f"selectivity {sel_lo}"
+        )
+        pruned_smaller = pruned_smaller and u_on < u_off
+    summary["u_cap_provisioning"] = dict(
+        buckets=list(buckets), full_cap=full_cap,
+        ram_scan_compiles=ram_compiles, disk_scan_compiles=disk_compiles,
+        bound_per_tier=len(buckets), pruned_tables_smaller=pruned_smaller,
+    )
     d_on = by.get(("sweep_disk", sel_lo, "on"))
     d_off = by.get(("sweep_disk", sel_lo, "off"))
     if d_on and d_off:
@@ -434,6 +542,12 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="reduced scale for CI: small N, Q=64 only, no "
                          "old-fused path; still gates exactness")
+    ap.add_argument("--pipeline", choices=("on", "off"), default="off",
+                    help="on = run the disk tier through the pipelined "
+                         "execution engine (double-buffered per-tile "
+                         "fetch/scan) and emit a disk_tier_pipelined entry "
+                         "with the measured IO/compute overlap ratio; the "
+                         "sweep's disk cells use the same executor")
     ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_search.json"))
     args = ap.parse_args()
     if args.smoke:
@@ -497,10 +611,13 @@ def main():
         )
         print(f"Q={q:4d} u_cap={u_cap:3d} dedup {dedup_ratio:.1f}x  {line}")
 
-    disk_entry = None
+    disk_entry, disk_pipe_entry = None, None
     if args.tier in ("disk", "both"):
         disk_entry = bench_disk_tier(index, core, rng)
         results.append(disk_entry)
+        if args.pipeline == "on":
+            disk_pipe_entry = bench_disk_tier_pipelined(index, core, rng)
+            results.append(disk_pipe_entry)
 
     sweep_summary, sweep_exact = None, True
     if not args.skip_sweep:
@@ -509,6 +626,7 @@ def main():
         sweep_entries, sweep_summary, sweep_exact = bench_selectivity_sweep(
             sindex, s_core, s_attrs, rng,
             n_batches=4 if args.smoke else 8,
+            pipeline=args.pipeline,
         )
         results.extend(sweep_entries)
 
@@ -536,6 +654,13 @@ def main():
         print(f"tiled vs reference @ Q=64: {speedup:.2f}x")
     if disk_entry is not None:
         out["disk_tier"] = disk_entry
+    if disk_pipe_entry is not None:
+        out["disk_tier_pipelined"] = disk_pipe_entry
+        if disk_entry is not None:
+            ratio = disk_pipe_entry["qps"] / disk_entry["qps"]
+            out["disk_pipelined_vs_sync_qps"] = round(ratio, 2)
+            print(f"disk pipelined vs sync @ Q=64: {ratio:.2f}x "
+                  f"(overlap {disk_pipe_entry['overlap_ratio']:.2f})")
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"→ {args.out}")

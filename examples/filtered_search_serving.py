@@ -1,7 +1,44 @@
 """End-to-end serving driver (the paper's kind: batched filtered ANN
-serving) — the micro-batching server over a compiled search step, with
+serving) — the micro-batching server over the search execution engine, with
 latency stats, a straggler-degradation demonstration, and the disk-resident
 tier (index paged from a checkpoint under a resident-memory budget).
+
+Every search below runs through :class:`repro.core.engine.SearchEngine`,
+whose four stages are explicit and composable::
+
+            resident state                     paged / resident lists
+    ┌──────────────────────────┐        ┌────────────────────────────────┐
+    │ PLAN (jitted)            │ slot   │ FETCH                          │
+    │ centroid top-k           │ tables │ RAM tier: no-op (arrays)       │
+    │ + summary probe pruning  │ ─────► │ disk tier: ClusterCache pager, │
+    │ + per-tile probe dedup   │ fetch  │ sync gather or async           │
+    │ + adaptive u_cap buckets │ lists  │ gather_submit / gather_wait    │
+    └──────────────────────────┘        └───────────────┬────────────────┘
+                                                        ▼
+                                        ┌────────────────────────────────┐
+                                        │ SCAN + MERGE (jitted)          │
+                                        │ tiled kernel, streaming top-k, │
+                                        │ monoid merge across probes     │
+                                        └────────────────────────────────┘
+
+    pipeline="on" double-buffers FETCH against SCAN per query tile: tile i
+    scans on device while tiles i+1..i+depth gather from disk.
+
+Engine knobs, and which side of the latency/throughput trade they sit on:
+
+  * ``pipeline`` ("auto"/"on"/"off") — throughput: hides disk IO behind
+    compute; identical results.  "off" minimizes single-batch latency on
+    the RAM tier (one fused dispatch, no per-tile overhead).
+  * ``pipeline_depth`` (default 2) — throughput: gathers kept in flight;
+    deeper hides burstier IO but holds more gathered tiles in host memory.
+  * ``q_block`` — grain: smaller tiles pipeline finer (better overlap →
+    throughput) but add per-tile dispatch overhead (worse at RAM speeds).
+  * ``adaptive_u_cap`` (default on) — both: slot tables sized from the
+    observed post-prune unique-cluster counts in power-of-two buckets, so
+    selective filters scan small tables (latency AND throughput) at a
+    bounded compile cost (≤ len(buckets) scan shapes, ever).
+  * ``prune`` / ``t_max`` — latency under filters: drop provably-empty
+    probes at plan time / re-widen to recover recall.
 
     PYTHONPATH=src python examples/filtered_search_serving.py
 """
@@ -116,45 +153,54 @@ def main():
     # bounds + histograms, a few KiB) that make the probe plan filter-aware.
     # DiskIVFIndex keeps centroids + counts + summaries resident and pages
     # probed clusters through an LRU cache with hot-cluster pinning.  The
-    # probe plan doubles as the cache's prefetch list, so the next batch's
-    # clusters stream from disk while the current batch computes — and with
+    # engine drives it pipelined (pipeline="auto" → "on" for disk): while
+    # tile i scans, the cache's gather worker assembles tile i+1's blocks
+    # and the prefetch thread streams the records underneath — and with
     # `prune="auto"` (the default, also a knob on make_fused_search_fn /
     # `repro.launch.serve --prune`) clusters a query's filter provably
     # cannot match are dropped from the plan before they are ever fetched:
     # identical ids, fewer disk reads.
+    from repro.core.engine import SearchEngine
+
     with tempfile.TemporaryDirectory() as ckpt:
         storage.save_index(index, ckpt, n_shards=4)
         budget = index.nbytes() // 4  # serve from ~25% of the RAM footprint
-        disk = DiskIVFIndex.open(ckpt, resident_budget_bytes=budget)
-        disk_fn = make_fused_search_fn(disk, k=k, n_probes=7,
-                                       q_block=batch_size, prune="auto")
-        queries = jnp.asarray(core[rng.integers(0, n, batch_size)])
-        fspec = match_all(batch_size, m)
-        disk.prefetch_for_queries(queries, 7)  # overlap paging with compute
-        ram_scores, ram_ids = search_fn(queries, fspec, None)
-        dsk_scores, dsk_ids = disk_fn(queries, fspec, None)
-        assert (np.asarray(ram_ids) == np.asarray(dsk_ids)).all()
-        print(f"disk tier: resident {disk.resident_bytes()/2**20:.1f} MiB "
-              f"of {index.nbytes()/2**20:.1f} MiB index "
-              f"(budget {budget/2**20:.1f} MiB), ids identical to RAM ✓")
+        with DiskIVFIndex.open(ckpt, resident_budget_bytes=budget) as disk:
+            # q_block=8 → 4 tiles per batch of 32: the pipeline's grain
+            engine = SearchEngine(disk, k=k, n_probes=7, q_block=8,
+                                  pipeline="on", pipeline_depth=2)
+            queries = jnp.asarray(core[rng.integers(0, n, batch_size)])
+            fspec = match_all(batch_size, m)
+            disk.prefetch_for_queries(queries, 7, q_block=8)
+            ram_scores, ram_ids = search_fn(queries, fspec, None)
+            res = engine.search(queries, fspec)
+            assert (np.asarray(ram_ids) == np.asarray(res.ids)).all()
+            print(f"disk tier: resident {disk.resident_bytes()/2**20:.1f} "
+                  f"MiB of {index.nbytes()/2**20:.1f} MiB index "
+                  f"(budget {budget/2**20:.1f} MiB), ids identical to RAM ✓")
+            print(f"pipelined executor: {engine.stats.tiles_scanned} tiles, "
+                  f"overlap {engine.stats.overlap_ratio:.2f} "
+                  f"(IO hidden behind compute), adaptive u_cap "
+                  f"{engine.stats.last_u_cap} of worst-case "
+                  f"{min(8 * 7, disk.n_clusters)}")
 
-        # Selective filter: the summaries prove most probed clusters hold no
-        # passing row, so the plan prunes them — compare scan accounting.
-        lo = np.full((batch_size, 1, m), ATTR_MIN, np.int16)
-        hi = np.full((batch_size, 1, m), ATTR_MAX, np.int16)
-        lo[:, 0, 0] = hi[:, 0, 0] = 3  # WHERE attr0 == 3
-        sel = FilterSpec(lo=jnp.asarray(lo), hi=jnp.asarray(hi))
-        pruned = disk.search(queries, sel, k=k, n_probes=7,
-                             q_block=batch_size, prune="auto")
-        unpruned = disk.search(queries, sel, k=k, n_probes=7,
-                               q_block=batch_size, prune="off")
-        assert (np.asarray(pruned.ids) == np.asarray(unpruned.ids)).all()
-        print(f"filtered (attr0==3): pruned "
-              f"{int(np.asarray(pruned.n_pruned).sum())} of "
-              f"{7 * batch_size} probes, scanned "
-              f"{int(pruned.n_scanned.sum())} vs "
-              f"{int(unpruned.n_scanned.sum())} rows, ids identical ✓")
-        disk.close()
+            # Selective filter: the summaries prove most probed clusters
+            # hold no passing row, so the plan prunes them — and the
+            # adaptive provisioner shrinks the slot table to match.
+            lo = np.full((batch_size, 1, m), ATTR_MIN, np.int16)
+            hi = np.full((batch_size, 1, m), ATTR_MAX, np.int16)
+            lo[:, 0, 0] = hi[:, 0, 0] = 3  # WHERE attr0 == 3
+            sel = FilterSpec(lo=jnp.asarray(lo), hi=jnp.asarray(hi))
+            pruned = engine.search(queries, sel)
+            unpruned = disk.search(queries, sel, k=k, n_probes=7,
+                                   q_block=8, prune="off")
+            assert (np.asarray(pruned.ids) == np.asarray(unpruned.ids)).all()
+            print(f"filtered (attr0==3): pruned "
+                  f"{int(np.asarray(pruned.n_pruned).sum())} of "
+                  f"{7 * batch_size} probes, scanned "
+                  f"{int(pruned.n_scanned.sum())} vs "
+                  f"{int(unpruned.n_scanned.sum())} rows, slot table "
+                  f"{engine.stats.last_u_cap} slots, ids identical ✓")
 
 
 if __name__ == "__main__":

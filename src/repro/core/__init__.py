@@ -46,6 +46,14 @@ from repro.core.search import (
     search_reference,
 )
 from repro.core.disk import ClusterCache, DiskIVFIndex
+from repro.core.engine import (
+    SearchEngine,
+    SearchPlan,
+    TileWork,
+    scan_compile_count,
+    search_fused_tiled,
+    u_cap_buckets,
+)
 from repro.core.probes import dedup_rows, fetch_order, plan_probe_tiles
 from repro.core.summaries import (
     ClusterSummaries,

@@ -36,6 +36,7 @@ import dataclasses
 import os
 import queue
 import threading
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -101,6 +102,8 @@ class CacheStats:
     misses: int = 0      # loaded synchronously by the requesting thread
     evictions: int = 0
     prefetched: int = 0  # loaded by the background thread
+    errors: int = 0      # prefetch-thread load failures (retried inline by
+    #                      the next get_many touching the cluster)
 
 
 class ClusterCache:
@@ -136,6 +139,7 @@ class ClusterCache:
         self._pinned: set = set()
         self._batches = 0
         self._lock = threading.Lock()
+        self._stopped = False
         self._queue: "queue.Queue[Optional[int]]" = queue.Queue()
         self._worker = threading.Thread(target=self._prefetch_loop,
                                         daemon=True)
@@ -195,7 +199,11 @@ class ClusterCache:
                     return
                 self._load(cid, prefetched=True)
             except Exception:
-                pass  # failed prefetch = missed hint; get_many will retry
+                # failed prefetch = missed hint; get_many retries inline —
+                # but surface it: a silently failing disk turns every
+                # "prefetched" batch into synchronous reads.
+                with self._lock:
+                    self.stats.errors += 1
             finally:
                 self._queue.task_done()
 
@@ -224,8 +232,22 @@ class ClusterCache:
                     self._inflight[cid] = [threading.Event(), None]
                     to_load.append(cid)
                     self.stats.misses += 1
-        for cid in to_load:
-            out[cid] = self._load(cid, prefetched=False)
+        for i, cid in enumerate(to_load):
+            try:
+                out[cid] = self._load(cid, prefetched=False)
+            except BaseException as e:
+                # _load resolved cid's own in-flight entry; the rest of this
+                # call's registrations must be resolved too or any other
+                # thread waiting on them hangs forever.  They carry the
+                # exception — waiters retry inline, exactly like a failed
+                # prefetch.
+                with self._lock:
+                    for rest in to_load[i + 1:]:
+                        holder = self._inflight.pop(rest, None)
+                        if holder is not None:
+                            holder[1] = e
+                            holder[0].set()
+                raise
         for cid, holder in waiters:
             holder[0].wait()
             if isinstance(holder[1], BaseException):  # prefetch failed;
@@ -235,23 +257,42 @@ class ClusterCache:
         return out
 
     def prefetch(self, cids: Sequence[int]):
-        """Queues cluster loads on the background thread (fire and forget)."""
-        todo = []
+        """Queues cluster loads on the background thread (fire and forget).
+
+        A no-op after :meth:`stop` — registering in-flight entries with no
+        worker left to resolve them would hang any later ``get_many`` on
+        those clusters forever.
+        """
         with self._lock:
+            if self._stopped:
+                return
+            # enqueue under the same lock as the in-flight registration: a
+            # concurrent stop() would otherwise slip its shutdown sentinel
+            # between the two, leaving entries no worker will ever resolve
+            # (the queue is unbounded, so put() cannot block here)
             for cid in cids:
                 cid = int(cid)
                 if cid in self._entries or cid in self._inflight:
                     continue
                 self._inflight[cid] = [threading.Event(), None]
-                todo.append(cid)
-        for cid in todo:
-            self._queue.put(cid)
+                self._queue.put(cid)
 
     def drain(self):
-        """Blocks until every queued prefetch has landed (tests, shutdown)."""
+        """Blocks until every queued prefetch has landed (tests, shutdown).
+        A no-op after :meth:`stop` (the sentinel leaves the queue nonempty)."""
+        with self._lock:
+            if self._stopped:
+                return
         self._queue.join()
 
     def stop(self):
+        """Stops the prefetch thread.  Idempotent — serve/bench teardown
+        paths (context manager exit, explicit close, atexit) may all call
+        it; only the first enqueues the sentinel and joins."""
+        with self._lock:
+            if self._stopped:
+                return
+            self._stopped = True
         self._queue.put(None)
         self._worker.join(timeout=10)
 
@@ -306,6 +347,15 @@ class DiskIVFIndex:
         # the fetch list.  None for pre-v2.1 checkpoints (no pruning).
         self.summaries = summaries
         self._overhead = _resident_overhead(centroids, counts, summaries)
+        # Single-worker pool for gather_submit: one IO+assembly thread is
+        # the pipelined executor's fetch stage, and the single worker is
+        # what guarantees gathers are served strictly in submission order.
+        # Created eagerly (the OS thread itself only spawns on first
+        # submit) — lazy creation would race when one open index is shared
+        # by several engines/server threads.
+        self._gather_pool: Optional[ThreadPoolExecutor] = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="gather"
+        )
 
     @classmethod
     def open(cls, directory: str, *,
@@ -367,17 +417,32 @@ class DiskIVFIndex:
         return self._overhead + self.cache.resident_bytes()
 
     # ---- paging ----
-    def gather(self, slot_cluster) -> Tuple:
-        """``gather_fn`` for :func:`search_fused_tiled`.
+    @staticmethod
+    def _first_need_unique(flat: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Unique cluster ids in *first-occurrence* order + inverse map.
 
-        Maps the plan's global cluster ids to batch-local rows, pages the
-        distinct clusters through the cache, and returns
-        ``(local_ids [S], vectors [S, Vpad, D], attrs, ids, norms, scales)``
-        — static shapes (S = n_tiles·u_cap), so the jitted scan never
-        recompiles as the working set shifts.
+        The gather loads (and the cache's prefetch thread streams) clusters
+        in exactly the order the scan will first touch them — same ordering
+        contract as :func:`repro.core.probes.fetch_order`.
         """
-        flat = np.asarray(slot_cluster).reshape(-1)
-        uniq, local = np.unique(flat, return_inverse=True)
+        uniq_sorted, first, inv_sorted = np.unique(
+            flat, return_index=True, return_inverse=True
+        )
+        order = np.argsort(first, kind="stable")  # sorted-pos → need order
+        rank = np.empty_like(order)
+        rank[order] = np.arange(order.shape[0])
+        return uniq_sorted[order], rank[inv_sorted]
+
+    def _assemble(self, flat: np.ndarray, uniq: np.ndarray,
+                  local: np.ndarray, as_device: bool = False) -> Tuple:
+        """Pages ``uniq`` through the cache (in the given first-need order)
+        and packs the records into batch-local ``[S, Vpad, ...]`` blocks.
+
+        ``as_device`` additionally moves the blocks onto the default device
+        — on the async path that runs on the gather worker, so the
+        host→device copy (tens of ms for MB-scale tiles on CPU) is hidden
+        behind the previous tile's scan instead of paid at scan dispatch.
+        """
         recs = self.cache.get_many(uniq)
         s = flat.shape[0]
         vpad, d, m = self.vpad, self.spec.dim, self.spec.n_attrs
@@ -395,7 +460,55 @@ class DiskIVFIndex:
                 norms[i] = rec["norms"]
             if scales is not None:
                 scales[i] = rec["scales"]
-        return local.astype(np.int32), vectors, attrs, ids, norms, scales
+        out = (local.astype(np.int32), vectors, attrs, ids, norms, scales)
+        if as_device:
+            import jax
+
+            out = tuple(
+                None if a is None else jax.device_put(a) for a in out
+            )
+            jax.block_until_ready([a for a in out if a is not None])
+        return out
+
+    def gather(self, slot_cluster) -> Tuple:
+        """``gather_fn`` for the search engine's scan stage.
+
+        Maps the plan's global cluster ids to batch-local rows, pages the
+        distinct clusters through the cache, and returns
+        ``(local_ids [S], vectors [S, Vpad, D], attrs, ids, norms, scales)``
+        — static shapes (S = n_tiles·u_cap), so the jitted scan never
+        recompiles as the working set shifts.
+        """
+        flat = np.asarray(slot_cluster).reshape(-1)
+        uniq, local = self._first_need_unique(flat)
+        return self._assemble(flat, uniq, local)
+
+    def gather_submit(self, slot_cluster) -> "Future":
+        """Asynchronous half of the engine's fetch stage: starts paging +
+        assembling ``slot_cluster``'s blocks off-thread and returns a handle.
+
+        Slot-level granularity: the worker pages the distinct ids through
+        the cache in first-need order (the same ordering contract as
+        ``probes.fetch_order``), so individual cluster loads land while the
+        caller is still scanning the previous tile.  The worker's misses
+        load inline on its own thread — deliberately NOT routed through
+        ``prefetch``, which would mark every miss in-flight an instant
+        before ``get_many`` sees it and turn the cache's hit-rate signal
+        into a constant 1.0.  ``gather_wait`` must be called exactly once
+        per handle; a load failure is re-raised there.
+        """
+        flat = np.asarray(slot_cluster).reshape(-1)
+        uniq, local = self._first_need_unique(flat)
+        if self._gather_pool is None:
+            raise RuntimeError("gather_submit on a closed DiskIVFIndex")
+        return self._gather_pool.submit(self._assemble, flat, uniq, local,
+                                        True)
+
+    def gather_wait(self, handle: "Future") -> Tuple:
+        """Blocks until a :meth:`gather_submit` handle's blocks are ready and
+        returns them (same tuple as :meth:`gather`).  Propagates any read
+        failure; the cache is left consistent (no stuck in-flight entries)."""
+        return handle.result()
 
     def prefetch(self, cluster_ids):
         """Background-loads clusters (e.g. ``probes.fetch_order`` output)."""
@@ -419,9 +532,7 @@ class DiskIVFIndex:
         search itself, so this costs no extra compilation.
         """
         from repro.core import probes as probes_lib
-        from repro.kernels.filtered_scan.ops import (
-            plan_fused_tiled, resolve_prune,
-        )
+        from repro.core.engine import plan_fused_tiled, resolve_prune
 
         q = queries.shape[0]
         qb = min(q_block, ((q + 7) // 8) * 8)
@@ -456,18 +567,35 @@ class DiskIVFIndex:
     def search(self, queries, fspec, *, k: int, n_probes: int,
                q_block: int = 64, v_block: int = 256,
                u_cap: Optional[int] = None, backend: Optional[str] = None,
-               prune: str = "auto", t_max: Optional[int] = None):
+               prune: str = "auto", t_max: Optional[int] = None,
+               pipeline: str = "off", pipeline_depth: int = 2):
         """Disk-tier filtered search; same contract (and bit-identical ids)
         as the RAM path's ``search_fused_tiled``.  With summaries resident
         (layout v2.1) and ``prune`` active, clusters the filter excludes are
-        pruned at plan time and never fetched from disk."""
-        from repro.kernels.filtered_scan.ops import search_fused_tiled
+        pruned at plan time and never fetched from disk.  ``pipeline="on"``
+        runs the double-buffered executor (scan tile *i* while tile *i+1*'s
+        clusters page in) — identical results, overlapped IO."""
+        from repro.core.engine import SearchEngine
 
-        return search_fused_tiled(
-            self, queries, fspec, k=k, n_probes=n_probes, q_block=q_block,
-            v_block=v_block, u_cap=u_cap, backend=backend,
-            gather_fn=self.gather, prune=prune, t_max=t_max,
+        eng = SearchEngine(
+            self, k=k, n_probes=n_probes, q_block=q_block, v_block=v_block,
+            u_cap=u_cap, backend=backend, prune=prune, t_max=t_max,
+            pipeline=pipeline, pipeline_depth=pipeline_depth,
         )
+        return eng.search(queries, fspec)
 
     def close(self):
+        """Stops the prefetch thread and the gather pool.  Idempotent."""
         self.cache.stop()
+        if self._gather_pool is not None:
+            self._gather_pool.shutdown(wait=True)
+            self._gather_pool = None
+
+    # Context-manager support: serve/bench paths that open a disk tier can
+    # no longer leak the prefetch thread on an exception path.
+    def __enter__(self) -> "DiskIVFIndex":
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.close()
+        return False

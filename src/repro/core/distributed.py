@@ -46,6 +46,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import compat
 from repro.core import ivf as ivf_lib
 from repro.core import probes as probes_lib
+from repro.core import summaries as summaries_lib
 from repro.core import topk as topk_lib
 from repro.core.filters import FilterSpec
 from repro.core.ivf import IVFFlatIndex
@@ -55,7 +56,7 @@ from repro.kernels.filtered_scan.filtered_scan import (
     filtered_scan,
     filtered_scan_tiled,
 )
-from repro.kernels.filtered_scan.ops import tiled_scan_xla
+from repro.core.engine import tiled_scan_xla
 
 TILED_BACKENDS = ("pallas_tiled", "pallas_tiled_interpret", "xla_tiled")
 
@@ -71,7 +72,8 @@ def probe_capacity(q: int, t: int, n_shards: int, slack: float = 2.0) -> int:
 
 
 def dispatch_probes(
-    probe_ids: Array, *, n_shards: int, k_local: int, p_cap: int
+    probe_ids: Array, *, n_shards: int, k_local: int, p_cap: int,
+    probe_valid: Optional[Array] = None,
 ) -> Tuple[Array, Array, Array, Array]:
     """Builds the probe slot table (replicated computation).
 
@@ -80,18 +82,28 @@ def dispatch_probes(
       n_shards: S, total chips holding index shards.
       k_local: clusters per shard (K/S, contiguous ranges).
       p_cap: static per-shard slot capacity.
+      probe_valid: optional [Q, T] bool — probes the filter-aware planner
+        pruned (the cluster's attribute summaries prove no row can pass the
+        query's filter).  Pruned probes are dispatched to a sentinel owner
+        past every shard: they consume no P_cap slot on any chip, are never
+        scanned, and never count toward overflow — the pod-scale analogue of
+        the single-host plan dropping them before the per-tile dedup.
 
     Returns:
       slot_cluster [S, P_cap] int32 — local cluster id per slot (0 for pads),
       slot_query   [S, P_cap] int32 — query row per slot (0 for pads),
       slot_valid   [S, P_cap] bool,
-      n_overflowed scalar int32 — probes dropped by capacity.
+      n_overflowed scalar int32 — live probes dropped by capacity.
     """
     q, t = probe_ids.shape
     flat = probe_ids.reshape(-1)  # [Q*T]
     owner = flat // k_local
     local = flat % k_local
     query = jnp.repeat(jnp.arange(q, dtype=jnp.int32), t)
+    if probe_valid is not None:
+        # sentinel owner sorts after every real shard; its scatter rows are
+        # out of range and dropped, so pruned probes vanish from the table
+        owner = jnp.where(probe_valid.reshape(-1), owner, n_shards)
 
     order = jnp.argsort(owner)
     owner_s = jnp.take(owner, order)
@@ -108,20 +120,25 @@ def dispatch_probes(
         jnp.take(query, order).astype(jnp.int32), mode="drop"
     )
     sv = sv.at[owner_s, rank].set(True, mode="drop")
-    n_overflowed = jnp.sum((rank >= p_cap).astype(jnp.int32))
+    n_overflowed = jnp.sum(
+        jnp.logical_and(rank >= p_cap, owner_s < n_shards).astype(jnp.int32)
+    )
     return sc, sq, sv, n_overflowed
 
 
 def dispatch_probes_tiled(
     probe_ids: Array, *, n_shards: int, k_local: int, p_cap: int,
-    u_cap: int, q_block: int,
+    u_cap: int, q_block: int, probe_valid: Optional[Array] = None,
 ):
     """Probe dispatch + per-shard (query tile, cluster) deduplication.
 
     Extends :func:`dispatch_probes` with the tiled kernel's slot tables:
     per shard, the valid probes are deduplicated by ``(query_tile,
     local_cluster)`` so a cluster probed by many queries of a tile is
-    scanned once on its owner chip.
+    scanned once on its owner chip.  ``probe_valid`` threads the planner's
+    summary prune mask through: pruned probes take no P_cap slot, no unique
+    slot, and no scan on any shard (results stay bit-identical — only
+    zero-passing-row clusters are ever pruned).
 
     Returns the four :func:`dispatch_probes` outputs plus:
       u_cluster [S, u_cap] int32 — local cluster per unique slot (pads
@@ -131,7 +148,8 @@ def dispatch_probes_tiled(
       u_count   [S] int32 — live unique slots per shard.
     """
     sc, sq, sv, n_overflowed = dispatch_probes(
-        probe_ids, n_shards=n_shards, k_local=k_local, p_cap=p_cap
+        probe_ids, n_shards=n_shards, k_local=k_local, p_cap=p_cap,
+        probe_valid=probe_valid,
     )
     tile = sq // q_block
     key = tile * k_local + sc  # [S, P_cap]
@@ -278,6 +296,12 @@ class ShardedSearchConfig:
     # (TPU), "pallas_tiled_interpret" (CPU tests), "xla_tiled" (fast CPU).
     backend: str = "pallas_interpret"
     quantized: bool = False  # SQ8 lists (see ivf.quantize_index)
+    # Filter-aware probe pruning from the index's resident cluster attribute
+    # summaries (core/summaries.py), replicated like the centroids: "auto"
+    # prunes iff the index carries summaries, "on" requires them, "off"
+    # disables.  Pruned probes never consume P_cap slots on their owner
+    # shard; ids/scores stay bit-identical to the unpruned dispatch.
+    prune: str = "auto"
 
 
 def make_sharded_search(
@@ -363,18 +387,28 @@ def make_sharded_search(
             metric=metric, use_kernel=cfg.use_centroid_kernel,
             interpret=cfg.backend not in ("pallas", "pallas_tiled"),
         )
+        # ---- filter-aware prune mask (replicated, like the plan stage) ----
+        from repro.core.engine import resolve_prune
+
+        summ = resolve_prune(index, cfg.prune)
+        if summ is not None:
+            cm = summaries_lib.can_match(summ, fspec.lo, fspec.hi)  # [Q, K]
+            probe_valid = jnp.take_along_axis(cm, probe_ids, axis=1)
+        else:
+            probe_valid = None
         # ---- dispatch (replicated compute; each chip consumes its row) ----
         if tiled:
             sc, sq, sv, n_drop, uc, ut, uslot, _ = dispatch_probes_tiled(
                 probe_ids, n_shards=n_shards, k_local=k_local, p_cap=p_cap,
-                u_cap=u_cap, q_block=scan_qb,
+                u_cap=u_cap, q_block=scan_qb, probe_valid=probe_valid,
             )
             queries_in = probes_lib.pad_to_tiles(queries, scan_qb)
             lo_in = probes_lib.pad_to_tiles(fspec.lo, scan_qb)
             hi_in = probes_lib.pad_to_tiles(fspec.hi, scan_qb)
         else:
             sc, sq, sv, n_drop = dispatch_probes(
-                probe_ids, n_shards=n_shards, k_local=k_local, p_cap=p_cap
+                probe_ids, n_shards=n_shards, k_local=k_local, p_cap=p_cap,
+                probe_valid=probe_valid,
             )
             uc = jnp.zeros((n_shards, 1), jnp.int32)
             ut = jnp.zeros((n_shards, 1), jnp.int32)

@@ -1,0 +1,946 @@
+"""Pipelined search execution engine: plan → fetch → scan → merge.
+
+The fused search path used to be a monolith (``search_fused_tiled`` ran the
+jitted plan, a synchronous whole-batch gather, and one jitted scan/merge
+back-to-back).  That serializes disk IO behind device compute — the disk
+tier's dominant cost — and provisions every batch's slot tables for the
+unpruned worst case.  This module decomposes the path into explicit stages
+owned by :class:`SearchEngine`:
+
+    plan   — jitted, resident-state only (:func:`plan_fused_tiled`): centroid
+             top-k, filter-aware probe pruning, per-tile probe dedup.  Emits a
+             :class:`SearchPlan` carrying per-tile slot tables and first-need
+             fetch lists (:class:`TileWork`).
+    fetch  — materialize the slots' cluster operands.  RAM tier: the resident
+             ``[K, Vpad, ...]`` arrays (a no-op).  Disk tier: page the plan's
+             fetch list through the cluster cache — synchronously
+             (``gather``), or asynchronously via the cache's
+             ``gather_submit / gather_wait`` pair.
+    scan   — jitted (:func:`_scan_merge_tiled`): the tiled Pallas/XLA kernel
+             over the slot tables, one ``[QB, D] @ [D, VB]`` matmul per
+             streamed block, per-probe ``[QB, k]`` fragments.
+    merge  — jitted, fused into the scan call: monoid top-k across each
+             query's probes, l2 constant fix-up, scan accounting.
+
+Two executors share those stages and return bit-identical results:
+
+  * **sync** (``pipeline="off"``) — the original monolith: one fetch for the
+    whole batch, one scan over all ``n_tiles · u_cap`` slots.
+  * **pipelined** (``pipeline="on"``) — double-buffered: while tile *i*
+    scans on device, a background worker gathers tile *i+1*'s clusters from
+    disk (``pipeline_depth`` tiles stay in flight).  Per-tile scans reuse one
+    compiled shape, so the pipeline adds no recompiles.
+
+On top of the same plan objects the engine provisions ``u_cap`` adaptively
+(``adaptive_u_cap``): the plan runs at the always-sufficient worst-case
+table width, the observed post-prune per-tile unique-cluster counts are
+bucketed into a fixed power-of-two set of compiled scan shapes
+(:func:`u_cap_buckets`), and the slot tables are shrunk host-side to the
+smallest sufficient bucket — selective filters scan (and the disk tier
+gathers) small slot tables instead of the unpruned worst case, with at most
+``len(buckets)`` scan compilations ever (see :func:`scan_compile_count`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import probes as probes_lib
+from repro.core import summaries as summaries_lib
+from repro.core import topk as topk_lib
+from repro.core.filters import FilterSpec
+from repro.core.ivf import round_up
+from repro.core.search import SearchResult, centroid_scores
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Stage primitives (jitted).  These are module-level so their jit caches are
+# shared by every SearchEngine in the process.
+# ---------------------------------------------------------------------------
+
+
+def tiled_scan_xla(
+    slot_cluster, slot_tile, queries, lo, hi, vectors, attrs, ids,
+    norms, scales, *, metric: str, k: int, q_block: int, chunk: int = 8,
+):
+    """XLA streaming executor with the tiled kernel's exact contract.
+
+    Chunked ``lax.map`` over slots: each step gathers ``chunk`` cluster
+    blocks, scores them against their query tiles and immediately reduces to
+    ``[QB, k]`` — the full per-slot score matrix never exists, matching the
+    kernel's memory bound.  This is the fast CPU path (Mosaic needs a real
+    TPU to lower non-interpreted).
+    """
+    d = queries.shape[-1]
+    qt = queries.reshape(-1, q_block, d).astype(jnp.float32)
+    lot = lo.reshape(-1, q_block, *lo.shape[1:]).astype(jnp.int32)
+    hit = hi.reshape(-1, q_block, *hi.shape[1:]).astype(jnp.int32)
+
+    def one(args):
+        sc, st = args
+        v = jnp.take(vectors, sc, axis=0).astype(jnp.float32)  # [Vpad, D]
+        qb = jnp.take(qt, st, axis=0)  # [QB, D]
+        scores = qb @ v.T  # [QB, Vpad]
+        if scales is not None:
+            scores = scores * jnp.take(scales, sc, axis=0)[None, :]
+        if metric == "l2":
+            scores = 2.0 * scores - jnp.take(norms, sc, axis=0)[None, :]
+        a = jnp.take(attrs, sc, axis=0).astype(jnp.int32)  # [Vpad, M]
+        qlo = jnp.take(lot, st, axis=0)  # [QB, F, M]
+        qhi = jnp.take(hit, st, axis=0)
+        inside = jnp.logical_and(
+            a[None, :, None, :] >= qlo[:, None],
+            a[None, :, None, :] <= qhi[:, None],
+        )  # [QB, Vpad, F, M]
+        fmask = jnp.any(jnp.all(inside, -1), -1)
+        live = jnp.take(ids, sc, axis=0) >= 0
+        mask = jnp.logical_and(fmask, live[None, :])
+        svals, sids = topk_lib.masked_topk(
+            scores, mask, k,
+            ids=jnp.broadcast_to(jnp.take(ids, sc, axis=0), scores.shape),
+        )
+        return svals, sids, jnp.sum(mask.astype(jnp.int32), axis=-1)
+
+    return jax.lax.map(
+        one, (slot_cluster, slot_tile), batch_size=min(chunk, slot_cluster.shape[0])
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("metric", "n_probes", "q_block", "u_cap", "cast_dtype",
+                     "t_max"),
+)
+def plan_fused_tiled(
+    centroids: Array,
+    counts: Array,
+    queries: Array,
+    lo: Array,
+    hi: Array,
+    *,
+    metric: str,
+    n_probes: int,
+    q_block: int,
+    u_cap: int,
+    cast_dtype,
+    summaries=None,
+    t_max: Optional[int] = None,
+):
+    """Plan stage: centroid probe + per-tile dedup over resident state.
+
+    Runs entirely on the *resident* state (centroids + counts + attribute
+    summaries), so the disk tier can plan — and hand ``slot_cluster`` to its
+    cluster cache as the batch's fetch list — before any flat list is paged
+    in.  Returns ``(slot_cluster, slot_tile, slot_of_probe, probe_ok,
+    n_unique, queries_pad, lo_pad, hi_pad, n_pruned)``; queries/bounds come
+    back padded to whole ``q_block`` tiles with edge rows (whose probes
+    dedupe into the last real query's slots, so padding adds no scan work).
+
+    With ``summaries`` (a :class:`repro.core.summaries.ClusterSummaries`),
+    the plan is filter-aware: a branch-free disjointness test between each
+    query's DNF terms and the per-cluster interval/histogram summaries marks
+    clusters the filter provably cannot match, and those probes are dropped
+    *before* the per-tile dedup — they never get a slot, are never fetched
+    by ``probes.fetch_order``, and are never scanned.  Results stay
+    bit-identical to the unpruned plan (only zero-passing-row clusters can
+    be pruned).
+
+    ``t_max`` (static, > n_probes) additionally enables adaptive probe
+    widening (paper §4.3 selectivity-adaptive T): each query's probe set is
+    refilled with its next-best *unpruned* centroids from the geometric
+    top-``t_max``, so selective filters keep ``n_probes`` productive probes
+    instead of silently scanning fewer clusters.  Unfiltered queries prune
+    nothing, refill nothing, and plan exactly as before.  Within the refill
+    ranking, the summaries' histogram-mass estimate of each cluster's
+    expected passing count breaks exact centroid-score ties.
+    """
+    scores = centroid_scores(centroids, counts, queries, metric=metric)
+    q = queries.shape[0]
+    if summaries is None:
+        _, probe_ids = jax.lax.top_k(scores, n_probes)
+        probe_ids = probe_ids.astype(jnp.int32)  # [Q, T]
+        probe_valid = None
+        n_pruned = jnp.zeros((q,), jnp.int32)
+    else:
+        cm = summaries_lib.can_match(summaries, lo, hi)  # [Q, K]
+        width = n_probes if t_max is None else t_max
+        cvals, cand = jax.lax.top_k(scores, width)  # [Q, W] geometric order
+        cm_c = jnp.take_along_axis(cm, cand, axis=1)  # [Q, W]
+        real = cvals > topk_lib.NEG_INF / 2  # exclude empty/padded clusters
+        # accounting: probes a geometry-only planner would have scanned (and
+        # the disk tier fetched) that the filter proved empty
+        n_pruned = jnp.sum(
+            jnp.logical_and(~cm_c[:, :n_probes], real[:, :n_probes])
+            .astype(jnp.int32), axis=-1,
+        )
+        if t_max is None:
+            # exact mode: the geometric top-T minus its pruned members
+            probe_ids = cand.astype(jnp.int32)
+            probe_valid = jnp.logical_and(cm_c, real)
+        else:
+            # widened mode: re-rank candidates by (centroid score, expected
+            # passing mass) — the histogram estimate only breaks exact score
+            # ties — then keep each query's first n_probes unpruned ones.
+            epass = summaries_lib.expected_passing(summaries, lo, hi, counts)
+            ep_c = jnp.take_along_axis(epass, cand, axis=1)
+            order = jnp.lexsort((-ep_c, -cvals), axis=-1)  # last key primary
+            cand = jnp.take_along_axis(cand, order, axis=1)
+            cm_c = jnp.take_along_axis(cm_c, order, axis=1)
+            real = jnp.take_along_axis(real, order, axis=1)
+            ok = jnp.logical_and(cm_c, real)
+            rank = jnp.cumsum(ok.astype(jnp.int32), axis=1) - 1
+            probe_ids = cand.astype(jnp.int32)
+            probe_valid = jnp.logical_and(ok, rank < n_probes)
+    probe_pad = probes_lib.pad_to_tiles(probe_ids, q_block)  # [Qpad, W]
+    valid_pad = (
+        None if probe_valid is None
+        else probes_lib.pad_to_tiles(probe_valid, q_block)
+    )
+    queries_pad = probes_lib.pad_to_tiles(queries.astype(cast_dtype), q_block)
+    lo_pad = probes_lib.pad_to_tiles(lo, q_block)
+    hi_pad = probes_lib.pad_to_tiles(hi, q_block)
+    slot_cluster, slot_tile, slot_of_probe, probe_ok, n_unique = (
+        probes_lib.plan_probe_tiles(probe_pad, q_block=q_block, u_cap=u_cap,
+                                    probe_valid=valid_pad)
+    )
+    return (slot_cluster, slot_tile, slot_of_probe, probe_ok, n_unique,
+            queries_pad, lo_pad, hi_pad, n_pruned)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("metric", "k", "q", "q_block", "v_block", "backend"),
+)
+def _scan_merge_tiled(
+    slot_cluster: Array,
+    slot_tile: Array,
+    slot_of_probe: Array,
+    probe_ok: Array,
+    queries: Array,      # [Q, D] original (for the l2 ‖q‖² constant)
+    queries_pad: Array,  # [Qpad, D] cast + tile-padded
+    lo_pad: Array,
+    hi_pad: Array,
+    vectors: Array,
+    attrs: Array,
+    ids: Array,
+    norms: Optional[Array],
+    scales: Optional[Array],
+    *,
+    metric: str,
+    k: int,
+    q: int,
+    q_block: int,
+    v_block: int,
+    backend: str,
+) -> SearchResult:
+    """Scan + merge stages: scan the planned slots, merge per-probe fragments.
+
+    ``vectors/attrs/ids/...`` are indexed by ``slot_cluster`` rows — either
+    the full ``[K, Vpad, ...]`` resident arrays (RAM tier) or batch-local
+    gathered ``[S, Vpad, ...]`` blocks with slot-local ids (disk tier).  The
+    kernel only ever dereferences rows named in ``slot_cluster``, so the two
+    are indistinguishable to it.  The pipelined executor calls this once per
+    tile (``q = q_block``, ``slot_tile ≡ 0``) with identical per-slot
+    arithmetic, so its results are bit-identical to one whole-batch call.
+    """
+    from repro.kernels.filtered_scan.filtered_scan import filtered_scan_tiled
+
+    qpad = queries_pad.shape[0]
+    if backend in ("pallas", "pallas_interpret"):
+        svals, sids, snpass = filtered_scan_tiled(
+            slot_cluster, slot_tile, queries_pad, lo_pad, hi_pad,
+            vectors, attrs, ids, norms, scales,
+            metric=metric, k=k, q_block=q_block, v_block=v_block,
+            interpret=backend == "pallas_interpret",
+        )
+    elif backend == "xla":
+        svals, sids, snpass = tiled_scan_xla(
+            slot_cluster, slot_tile, queries_pad, lo_pad, hi_pad,
+            vectors, attrs, ids, norms, scales,
+            metric=metric, k=k, q_block=q_block,
+        )
+    else:
+        raise ValueError(backend)
+
+    # Per-probe candidate fragments, then the monoid merge across T probes.
+    # Probes that overflowed an undersized u_cap are dropped soundly (their
+    # fragments masked out), mirroring the distributed dispatch's P_cap.
+    row = jnp.arange(qpad, dtype=jnp.int32) % q_block  # [Qpad]
+    vals_qt = svals[slot_of_probe, row[:, None]]  # [Qpad, T, k]
+    ids_qt = sids[slot_of_probe, row[:, None]]
+    npass_qt = snpass[slot_of_probe, row[:, None]]  # [Qpad, T]
+    vals_qt = jnp.where(probe_ok[..., None], vals_qt, topk_lib.NEG_INF)
+    ids_qt = jnp.where(probe_ok[..., None], ids_qt, -1)
+    npass_qt = jnp.where(probe_ok, npass_qt, 0)
+    vals, out_ids = topk_lib.merge_topk_many(vals_qt, ids_qt, k, axis=1)
+    vals, out_ids = vals[:q], out_ids[:q]
+
+    if metric == "l2":
+        q2 = jnp.sum(queries.astype(jnp.float32) ** 2, -1)  # [Q]
+        vals = jnp.where(
+            vals > topk_lib.NEG_INF / 2, vals - q2[:, None], vals
+        )
+
+    n_passed = jnp.sum(npass_qt[:q], axis=-1)
+    # Scan accounting through the slot tables: a probe's slot scans exactly
+    # its cluster, so live-rows-per-slot gathered by slot_of_probe equals the
+    # old per-cluster lookup — and works when only gathered rows exist.
+    live_per_row = jnp.sum((ids >= 0).astype(jnp.int32), axis=-1)  # [K or S]
+    live_per_slot = jnp.take(live_per_row, slot_cluster)  # [S_flat]
+    n_scanned = jnp.sum(
+        jnp.take(live_per_slot, slot_of_probe[:q])
+        * probe_ok[:q].astype(jnp.int32),
+        axis=-1,
+    )
+    return SearchResult(vals, out_ids, n_scanned, n_passed)
+
+
+def resolve_prune(index, prune: str):
+    """Resolves the ``prune`` knob against an index's summaries.
+
+    Returns the :class:`~repro.core.summaries.ClusterSummaries` to plan with,
+    or None for no pruning.  ``"auto"`` prunes iff the index carries
+    summaries; ``"on"`` demands them; ``"off"`` never prunes.
+    """
+    summ = getattr(index, "summaries", None)
+    if prune == "off":
+        return None
+    if prune == "on":
+        if summ is None:
+            raise ValueError(
+                "prune='on' but the index has no cluster summaries — build "
+                "with with_summaries=True or re-save the checkpoint (layout "
+                "v2.1), or use prune='auto'"
+            )
+        return summ
+    if prune == "auto":
+        return summ
+    raise ValueError(f"prune must be 'auto'|'on'|'off', got {prune!r}")
+
+
+# ---------------------------------------------------------------------------
+# Plan objects
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TileWork:
+    """One query tile's slice of a :class:`SearchPlan` (host-side).
+
+    ``fetch`` is the tile's *novel* cluster list — ids not needed by any
+    earlier tile, in first-need (slot) order; concatenating every tile's
+    ``fetch`` reproduces ``probes.fetch_order`` for the whole plan, which is
+    what a slot-granular pager (or a multi-host cache router) consumes.
+    """
+
+    tile: int
+    slot_cluster: np.ndarray  # [u_cap] int32 — global cluster per slot
+    n_unique: int             # live slots (the rest are pads)
+    fetch: np.ndarray         # novel clusters, first-need order
+
+
+@dataclasses.dataclass
+class SearchPlan:
+    """Everything the fetch/scan/merge stages need, produced by plan().
+
+    Slot tables are numpy (host) when the executor needs them per tile
+    (pipelined mode, disk fetch lists, adaptive shrink) and device arrays on
+    the pure-RAM sync fast path — the scan stage accepts either.
+    """
+
+    q: int
+    q_block: int
+    n_tiles: int
+    u_cap: int               # provisioned table width (post-bucketing)
+    width: int               # probe table width (n_probes or t_max)
+    slot_cluster: Any        # [n_tiles·u_cap]
+    slot_tile: Any           # [n_tiles·u_cap]
+    slot_of_probe: Any       # [Qpad, W]
+    probe_ok: Any            # [Qpad, W]
+    n_unique: Any            # [n_tiles]
+    queries: Array           # [Q, D] original (l2 constant)
+    # [Qpad, D] original dtype, tile-padded — only the pipelined per-tile
+    # executor reads it, so it is built lazily (None on sync plans)
+    queries_orig_pad: Optional[Array]
+    queries_pad: Array       # [Qpad, D] cast to the scan dtype
+    lo_pad: Array
+    hi_pad: Array
+    n_pruned: Array          # [Q]
+    # Per-tile work items, built lazily by tile_work() (consumers: fetch
+    # routing diagnostics, multi-host cache sharding) — never on the hot
+    # path, the executors slice slot tables directly.
+    tiles: Optional[List[TileWork]] = None
+
+    def tile_work(self) -> List[TileWork]:
+        """Materializes (and caches) the per-tile work items with their
+        novel-cluster fetch lists.  Requires a host plan (numpy tables)."""
+        if self.tiles is None:
+            sc = np.asarray(self.slot_cluster).reshape(
+                self.n_tiles, self.u_cap
+            )
+            nu = np.asarray(self.n_unique)
+            fetches = probes_lib.tile_fetch_lists(sc, nu, self.u_cap)
+            self.tiles = [
+                TileWork(tile=i, slot_cluster=sc[i], n_unique=int(nu[i]),
+                         fetch=fetches[i])
+                for i in range(self.n_tiles)
+            ]
+        return self.tiles
+
+
+@dataclasses.dataclass
+class PendingSearch:
+    """A batch started by :meth:`SearchEngine.submit` — its plan plus any
+    tile gathers already in flight.  Finish with
+    :meth:`SearchEngine.result`."""
+
+    plan: SearchPlan
+    inflight: Optional[Dict] = None
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Per-engine execution counters (the bench reads these)."""
+
+    batches: int = 0
+    pipelined_batches: int = 0
+    tiles_scanned: int = 0
+    # jit cache misses for the scan stage: +1 whenever this engine dispatches
+    # a (shape, backend, ...) scan signature no engine in the process has
+    # compiled before — the bench's bounded-recompile gate.
+    scan_compilations: int = 0
+    # fetch-stage overlap accounting (pipelined disk tier)
+    io_wait_s: float = 0.0    # time execute() blocked on gather_wait
+    io_total_s: float = 0.0   # submit→completion span of every gather
+    last_u_cap: int = 0
+    u_cap_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def overlap_ratio(self) -> float:
+        """Fraction of gather time hidden behind compute (1 = fully
+        overlapped, 0 = fully serial)."""
+        if self.io_total_s <= 0:
+            return 0.0
+        return max(0.0, 1.0 - self.io_wait_s / self.io_total_s)
+
+
+# Process-wide registry of scan-stage signatures that have been dispatched;
+# mirrors the underlying jit cache (which is also process-wide), so a new key
+# here == a real XLA compilation.
+_SCAN_KEYS: set = set()
+
+
+def scan_compile_count() -> int:
+    """Number of distinct scan-stage compilations this process has run."""
+    return len(_SCAN_KEYS)
+
+
+def u_cap_buckets(full_cap: int, lo: int = 8) -> Tuple[int, ...]:
+    """The fixed power-of-two u_cap bucket set for ``full_cap``.
+
+    ``(8, 16, 32, ..., full_cap)`` — doubling widths from ``lo`` with the
+    exact worst-case cap appended, so every observed unique count maps to a
+    bucket and the bucket count (= max scan compilations) is
+    ``log2(full_cap/8) + O(1)``.
+    """
+    caps = []
+    b = lo
+    while b < full_cap:
+        caps.append(b)
+        b *= 2
+    caps.append(full_cap)
+    return tuple(caps)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+class SearchEngine:
+    """Single entry point for the tiled fused search, both tiers.
+
+    Knobs (latency ↔ throughput):
+      * ``pipeline`` — ``"off"``: one whole-batch fetch + one scan (lowest
+        per-batch latency when the data is RAM-resident).  ``"on"``: per-tile
+        double-buffered fetch/scan overlap (disk-tier throughput; identical
+        results).  ``"auto"``: on iff the index pages from disk.
+      * ``pipeline_depth`` — gathers kept in flight ahead of the scan
+        (2 = classic double buffering; more overlaps deeper but holds more
+        gathered tiles in host memory).
+      * ``adaptive_u_cap`` — provision the slot table from the observed
+        post-prune unique counts (power-of-two buckets, bounded recompiles)
+        instead of the worst case.  ``u_cap`` pins the width instead.
+      * ``q_block`` — query-tile height: smaller tiles → finer pipeline
+        grain (more IO/compute overlap) but more per-tile dispatches.
+
+    ``index`` needs the resident surface (``spec / centroids / counts /
+    n_clusters / store_dtype / quantized / summaries``) plus either resident
+    ``vectors/attrs/ids/norms/scales`` (RAM tier) or a ``gather`` method
+    (disk tier; ``gather_submit``/``gather_wait`` unlock the async fetch).
+    """
+
+    def __init__(self, index, *, k: int, n_probes: int, q_block: int = 64,
+                 v_block: int = 256, u_cap: Optional[int] = None,
+                 backend: Optional[str] = None,
+                 gather_fn: Optional[Callable] = None,
+                 prune: str = "auto", t_max: Optional[int] = None,
+                 pipeline: str = "auto", pipeline_depth: int = 2,
+                 adaptive_u_cap: Optional[bool] = None,
+                 u_cap_bucket_set: Optional[Tuple[int, ...]] = None):
+        if pipeline not in ("auto", "on", "off"):
+            raise ValueError(f"pipeline must be 'auto'|'on'|'off', got "
+                             f"{pipeline!r}")
+        if pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
+        self.index = index
+        self.k = k
+        self.n_probes = n_probes
+        self.q_block = q_block
+        self.v_block = v_block
+        self.u_cap = u_cap
+        self.prune = prune
+        self.t_max = t_max
+        self.pipeline_depth = pipeline_depth
+        self.u_cap_bucket_set = u_cap_bucket_set
+        self.backend = backend or (
+            "pallas" if jax.default_backend() == "tpu" else "xla"
+        )
+        # fetch source: explicit gather_fn wins; otherwise the index's own
+        # pager (disk tier); otherwise the resident arrays (RAM tier).
+        self._gather_fn = gather_fn or getattr(index, "gather", None)
+        # async pair available iff the source IS the index's pager
+        self._async_src = (
+            index if (self._gather_fn is not None
+                      and getattr(index, "gather_submit", None) is not None
+                      and self._gather_fn == index.gather)
+            else None
+        )
+        self.pipeline = (
+            pipeline if pipeline != "auto"
+            else ("on" if self._gather_fn is not None else "off")
+        )
+        # adaptive provisioning defaults on when the caller didn't pin u_cap
+        self.adaptive_u_cap = (
+            (u_cap is None) if adaptive_u_cap is None else adaptive_u_cap
+        )
+        if self.adaptive_u_cap and u_cap is not None:
+            raise ValueError("u_cap and adaptive_u_cap are exclusive")
+        self.stats = EngineStats()
+
+    # ---- plan ----
+    def plan(self, queries: Array, fspec: FilterSpec) -> SearchPlan:
+        """Plan stage: jitted resident-state plan + host-side provisioning.
+
+        Always plans at the sound worst-case table width (one compile); with
+        ``adaptive_u_cap`` the tables are then shrunk to the smallest
+        power-of-two bucket covering the observed per-tile unique counts.
+        """
+        index = self.index
+        q = queries.shape[0]
+        qb = min(self.q_block, round_up(q, 8))
+        kc = index.n_clusters
+        summ = resolve_prune(index, self.prune)
+        t_max = self.t_max
+        if t_max is not None:
+            if t_max < self.n_probes:
+                raise ValueError(
+                    f"t_max={t_max} < n_probes={self.n_probes}"
+                )
+            t_max = min(t_max, kc)
+            if summ is None or t_max == self.n_probes:
+                t_max = None  # widening is only meaningful with pruning
+        width = self.n_probes if t_max is None else t_max
+        full_cap = min(qb * width, kc)
+        cap = full_cap if self.u_cap is None else self.u_cap
+        cast_dtype = (
+            np.dtype(np.float32) if index.quantized
+            else np.dtype(index.store_dtype)
+        )
+
+        (slot_cluster, slot_tile, slot_of_probe, probe_ok, n_unique,
+         queries_pad, lo_pad, hi_pad, n_pruned) = plan_fused_tiled(
+            index.centroids, index.counts, queries, fspec.lo, fspec.hi,
+            metric=index.spec.metric, n_probes=self.n_probes, q_block=qb,
+            u_cap=cap, cast_dtype=cast_dtype, summaries=summ, t_max=t_max,
+        )
+        qpad = queries_pad.shape[0]
+        n_tiles = qpad // qb
+
+        # The sync RAM fast path needs no host view of the tables; the
+        # pipelined / disk paths (per-tile slices, fetch lists) do.  The
+        # adaptive provisioner alone only needs the tiny [n_tiles] unique
+        # counts — the full tables come to host iff a shrink happens.
+        need_host = (self.pipeline == "on" or self._gather_fn is not None)
+        plan = SearchPlan(
+            q=q, q_block=qb, n_tiles=n_tiles, u_cap=cap, width=width,
+            slot_cluster=slot_cluster, slot_tile=slot_tile,
+            slot_of_probe=slot_of_probe, probe_ok=probe_ok,
+            n_unique=n_unique, queries=queries,
+            queries_orig_pad=(
+                probes_lib.pad_to_tiles(queries, qb)
+                if self.pipeline == "on" else None
+            ),
+            queries_pad=queries_pad, lo_pad=lo_pad, hi_pad=hi_pad,
+            n_pruned=n_pruned,
+        )
+        if self.adaptive_u_cap:
+            self._provision(plan)
+        if need_host:
+            self._host_tables(plan)
+        self.stats.last_u_cap = plan.u_cap
+        self.stats.u_cap_hist[plan.u_cap] = (
+            self.stats.u_cap_hist.get(plan.u_cap, 0) + 1
+        )
+        return plan
+
+    def _host_tables(self, plan: SearchPlan):
+        plan.slot_cluster = np.asarray(plan.slot_cluster)
+        plan.slot_tile = np.asarray(plan.slot_tile)
+        plan.slot_of_probe = np.asarray(plan.slot_of_probe)
+        plan.probe_ok = np.asarray(plan.probe_ok)
+        plan.n_unique = np.asarray(plan.n_unique)
+
+    def _provision(self, plan: SearchPlan):
+        """Adaptive u_cap: shrink the slot tables to the smallest bucket
+        covering the observed per-tile unique counts.
+
+        Sound by construction — the bucket is ≥ every tile's true unique
+        count, so no probe is dropped and results stay bit-identical to the
+        worst-case table; only pad slots (repeats of each tile's last unique
+        id) are cut.  Only the [n_tiles] unique counts are synced to host
+        to pick the bucket; the full tables follow only when a shrink
+        actually happens (bucket == full leaves a device-only plan alone).
+        """
+        full = plan.u_cap
+        plan.n_unique = np.asarray(plan.n_unique)
+        max_u = max(int(plan.n_unique.max(initial=1)), 1)
+        buckets = self.u_cap_bucket_set or u_cap_buckets(full)
+        bucket = next((b for b in sorted(buckets) if b >= max_u), full)
+        bucket = min(bucket, full)
+        if bucket == full:
+            return
+        self._host_tables(plan)
+        sc = plan.slot_cluster.reshape(plan.n_tiles, full)[:, :bucket]
+        plan.slot_cluster = np.ascontiguousarray(sc).reshape(-1)
+        plan.slot_tile = np.repeat(
+            np.arange(plan.n_tiles, dtype=np.int32), bucket
+        )
+        # re-base flat probe→slot pointers from stride `full` to `bucket`;
+        # overflow-clipped junk pointers of not-ok probes stay in range.
+        t_idx, s = divmod(plan.slot_of_probe, full)
+        plan.slot_of_probe = (
+            t_idx * bucket + np.minimum(s, bucket - 1)
+        ).astype(np.int32)
+        plan.u_cap = bucket
+
+    # ---- fetch ----
+    def fetch(self, plan: SearchPlan):
+        """Whole-batch fetch stage (sync executor): resident arrays on the
+        RAM tier, one gather over the plan's slot list on the disk tier."""
+        index = self.index
+        if self._gather_fn is None:
+            return (plan.slot_cluster, index.vectors, index.attrs, index.ids,
+                    index.norms, index.scales)
+        slot_cluster, vectors, attrs, ids, norms, scales = self._gather_fn(
+            plan.slot_cluster
+        )
+        return (jnp.asarray(slot_cluster), vectors, attrs, ids, norms,
+                scales)
+
+    # ---- scan + merge ----
+    def _count_scan(self, key: Tuple):
+        if key not in _SCAN_KEYS:
+            _SCAN_KEYS.add(key)
+            self.stats.scan_compilations += 1
+
+    def _scan_key(self, plan: SearchPlan, *, q: int, qpad: int, s: int,
+                  q_block: int, vectors, norms, scales) -> Tuple:
+        """The scan stage's jit signature: statics + argument shapes/dtypes
+        of :func:`_scan_merge_tiled`.  A whole-batch call over one tile and
+        a per-tile call at the same shapes produce the SAME key — they hit
+        the same compiled executable, so they must count once."""
+        return (
+            self.backend, self.index.spec.metric, self.k, q, q_block,
+            self.v_block, s, qpad, plan.width,
+            np.shape(vectors), str(vectors.dtype),
+            str(plan.queries_pad.dtype), tuple(plan.lo_pad.shape[1:]),
+            norms is None, scales is None,
+        )
+
+    def scan_merge(self, plan: SearchPlan, operands) -> SearchResult:
+        """Whole-batch scan/merge over fetched operands (sync executor)."""
+        slot_cluster, vectors, attrs, ids, norms, scales = operands
+        metric = self.index.spec.metric
+        self._count_scan(self._scan_key(
+            plan, q=plan.q, qpad=plan.n_tiles * plan.q_block,
+            s=plan.n_tiles * plan.u_cap, q_block=plan.q_block,
+            vectors=vectors, norms=norms, scales=scales,
+        ))
+        res = _scan_merge_tiled(
+            jnp.asarray(slot_cluster), jnp.asarray(plan.slot_tile),
+            jnp.asarray(plan.slot_of_probe), jnp.asarray(plan.probe_ok),
+            plan.queries, plan.queries_pad, plan.lo_pad, plan.hi_pad,
+            vectors, attrs, ids, norms, scales,
+            metric=metric, k=self.k, q=plan.q, q_block=plan.q_block,
+            v_block=self.v_block, backend=self.backend,
+        )
+        return dataclasses.replace(res, n_pruned=plan.n_pruned)
+
+    def _scan_tile(self, plan: SearchPlan, i: int, operands) -> SearchResult:
+        """Scan/merge one query tile (pipelined executor).  Same jitted
+        stage as the monolith with ``n_tiles=1`` — per-slot arithmetic is
+        identical, so tile results concatenate to the sync result bitwise."""
+        slot_cluster, vectors, attrs, ids, norms, scales = operands
+        qb, cap = plan.q_block, plan.u_cap
+        metric = self.index.spec.metric
+        if plan.queries_orig_pad is None:  # plan was built for a sync run
+            plan.queries_orig_pad = probes_lib.pad_to_tiles(plan.queries, qb)
+        rows = slice(i * qb, (i + 1) * qb)
+        sop = plan.slot_of_probe[rows] - i * cap  # tile-local slot pointers
+        self._count_scan(self._scan_key(
+            plan, q=qb, qpad=qb, s=cap, q_block=qb,
+            vectors=vectors, norms=norms, scales=scales,
+        ))
+        return _scan_merge_tiled(
+            jnp.asarray(slot_cluster),
+            jnp.zeros((cap,), jnp.int32),
+            jnp.asarray(sop), jnp.asarray(plan.probe_ok[rows]),
+            plan.queries_orig_pad[rows], plan.queries_pad[rows],
+            plan.lo_pad[rows], plan.hi_pad[rows],
+            vectors, attrs, ids, norms, scales,
+            metric=metric, k=self.k, q=qb, q_block=qb,
+            v_block=self.v_block, backend=self.backend,
+        )
+
+    # ---- executors ----
+    def execute(self, plan: SearchPlan) -> SearchResult:
+        self.stats.batches += 1
+        if self.pipeline == "on":
+            return self._execute_pipelined(plan)
+        return self.scan_merge(plan, self.fetch(plan))
+
+    # ---- cross-batch software pipeline ----
+    def submit(self, queries: Array, fspec: FilterSpec) -> "PendingSearch":
+        """Starts a batch: plans it and (pipelined, disk tier) launches its
+        first ``pipeline_depth`` tile gathers immediately.
+
+        With :meth:`result` this software-pipelines *across batches*: submit
+        batch *i+1* while batch *i* scans, and batch *i+1*'s clusters page
+        in + transfer behind batch *i*'s compute.  At serving batch sizes
+        of one tile (``Q ≤ q_block``) this is the only place IO/compute
+        overlap can come from — within-batch double buffering needs ≥ 2
+        tiles.  Multi-tile batches pipeline best with ``pipeline_depth ≥
+        n_tiles`` when batches are interleaved through submit/result (the
+        single fetch worker serves gathers strictly in submission order).
+        """
+        plan = self.plan(queries, fspec)
+        self.stats.batches += 1
+        if self.pipeline != "on" or self._gather_fn is None:
+            return PendingSearch(plan=plan, inflight=None)
+        depth = min(self.pipeline_depth, plan.n_tiles)
+        inflight = {i: self._submit(plan, i) for i in range(depth)}
+        return PendingSearch(plan=plan, inflight=inflight)
+
+    def result(self, pending: "PendingSearch") -> SearchResult:
+        """Finishes a :meth:`submit`-started batch (scan + merge)."""
+        plan = pending.plan
+        if pending.inflight is None:
+            if self.pipeline == "on":
+                return self._execute_pipelined(plan)
+            return self.scan_merge(plan, self.fetch(plan))
+        return self._run_tiles(plan, pending.inflight)
+
+    def _tile_operands(self, plan: SearchPlan, i: int):
+        """RAM-tier per-tile operands: resident arrays + the tile's global
+        slot ids (no fetch needed)."""
+        index = self.index
+        sc = plan.slot_cluster.reshape(plan.n_tiles, plan.u_cap)[i]
+        return (sc, index.vectors, index.attrs, index.ids, index.norms,
+                index.scales)
+
+    def _submit(self, plan: SearchPlan, i: int):
+        """Starts tile *i*'s gather; returns (handle, t_submit, done_box)."""
+        sc = plan.slot_cluster.reshape(plan.n_tiles, plan.u_cap)[i]
+        t0 = time.monotonic()
+        done = [None]  # completion timestamp, set by the done-callback
+        if self._async_src is not None:
+            h = self._async_src.gather_submit(sc)
+        else:
+            # generic sync gather_fn: run it on the engine's own worker so
+            # the pipeline still overlaps IO with the device scan
+            from concurrent.futures import ThreadPoolExecutor
+
+            if getattr(self, "_pool", None) is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="engine-fetch"
+                )
+            h = self._pool.submit(self._gather_fn, sc)
+        h.add_done_callback(lambda _: done.__setitem__(0, time.monotonic()))
+        return h, t0, done
+
+    def _wait(self, handle_rec):
+        handle, t_submit, done = handle_rec
+        t0 = time.monotonic()
+        if self._async_src is not None:
+            out = self._async_src.gather_wait(handle)
+        else:
+            out = handle.result()
+        t1 = time.monotonic()
+        self.stats.io_wait_s += t1 - t0
+        # submit→completion span; a gather that finished long before this
+        # wait counts its true (short) duration, not the time it sat done —
+        # the callback timestamp may lag result() by a beat, so fall back
+        # to t1 when it hasn't landed yet
+        t_done = done[0] if done[0] is not None else t1
+        self.stats.io_total_s += max(t_done - t_submit, 0.0)
+        slot_cluster, vectors, attrs, ids, norms, scales = out
+        return (jnp.asarray(slot_cluster), vectors, attrs, ids, norms,
+                scales)
+
+    def _execute_pipelined(self, plan: SearchPlan) -> SearchResult:
+        """Double-buffered executor: scan tile *i* while tiles
+        *i+1 … i+depth* gather in the background.  RAM tier degenerates to
+        per-tile scans over the resident arrays (same results, no fetch).
+
+        A serially-executed single-tile batch has nothing to overlap with —
+        the pipelined path would only add a thread hop — so it falls back
+        to the sync fetch+scan (identical results, sync latency).  Cross-
+        batch overlap for single-tile batches comes from
+        :meth:`submit`/:meth:`result`, whose gathers are already in flight
+        when the result is drained.
+        """
+        if plan.n_tiles < 2 and self._gather_fn is not None:
+            return self.scan_merge(plan, self.fetch(plan))
+        if self._gather_fn is None:
+            self.stats.pipelined_batches += 1
+            parts: List[SearchResult] = []
+            for i in range(plan.n_tiles):
+                parts.append(
+                    self._scan_tile(plan, i, self._tile_operands(plan, i))
+                )
+                self.stats.tiles_scanned += 1
+            return self._merge_parts(plan, parts)
+        depth = min(self.pipeline_depth, plan.n_tiles)
+        inflight = {i: self._submit(plan, i) for i in range(depth)}
+        return self._run_tiles(plan, inflight)
+
+    def _run_tiles(self, plan: SearchPlan, inflight: Dict) -> SearchResult:
+        """Drains a pipelined batch: wait tile i's gather, keep ``depth``
+        gathers in flight, scan, concatenate.  On any failure the remaining
+        in-flight handles are still waited (exceptions swallowed) — every
+        ``gather_submit`` gets its ``gather_wait``, so no future exception
+        goes unretrieved and the cache ends consistent — then the original
+        error propagates."""
+        self.stats.pipelined_batches += 1
+        n = plan.n_tiles
+        depth = max(len(inflight), 1)
+        parts: List[SearchResult] = []
+        try:
+            for i in range(n):
+                operands = self._wait(inflight.pop(i))
+                if i + depth < n:
+                    inflight[i + depth] = self._submit(plan, i + depth)
+                parts.append(self._scan_tile(plan, i, operands))
+                self.stats.tiles_scanned += 1
+        except BaseException:
+            for handle_rec in inflight.values():
+                try:
+                    handle_rec[0].result()
+                except BaseException:
+                    pass
+            raise
+        return self._merge_parts(plan, parts)
+
+    def _merge_parts(self, plan: SearchPlan,
+                     parts: List[SearchResult]) -> SearchResult:
+        if len(parts) == 1:
+            res = parts[0]
+            res = SearchResult(res.scores[: plan.q], res.ids[: plan.q],
+                               res.n_scanned[: plan.q],
+                               res.n_passed[: plan.q])
+        else:
+            res = SearchResult(
+                jnp.concatenate([p.scores for p in parts])[: plan.q],
+                jnp.concatenate([p.ids for p in parts])[: plan.q],
+                jnp.concatenate([p.n_scanned for p in parts])[: plan.q],
+                jnp.concatenate([p.n_passed for p in parts])[: plan.q],
+            )
+        return dataclasses.replace(res, n_pruned=plan.n_pruned)
+
+    # ---- the whole pipeline ----
+    def search(self, queries: Array, fspec: FilterSpec) -> SearchResult:
+        return self.execute(self.plan(queries, fspec))
+
+    def close(self):
+        pool = getattr(self, "_pool", None)
+        if pool is not None:
+            pool.shutdown(wait=True)
+            self._pool = None
+
+
+def search_fused_tiled(
+    index,
+    queries: Array,
+    fspec: FilterSpec,
+    *,
+    k: int,
+    n_probes: int,
+    q_block: int = 64,
+    v_block: int = 256,
+    u_cap: Optional[int] = None,
+    backend: Optional[str] = None,
+    gather_fn=None,
+    prune: str = "auto",
+    t_max: Optional[int] = None,
+    pipeline: str = "off",
+    pipeline_depth: int = 2,
+    adaptive_u_cap: bool = False,
+) -> SearchResult:
+    """Query-tiled, probe-deduplicated fused search with streaming top-k.
+
+    Thin wrapper over :class:`SearchEngine` kept as the functional entry
+    point — same contract as :func:`repro.core.search.search_reference`
+    (identical ids/scores modulo tie order).  Defaults reproduce the classic
+    synchronous path exactly: ``u_cap=None`` provisions the always-sufficient
+    worst case (``min(q_block·W, K)``), ``pipeline="off"`` runs one fetch +
+    one scan.  ``pipeline="on"`` double-buffers per-tile fetches against the
+    scan; ``adaptive_u_cap=True`` buckets the slot-table width from the
+    observed post-prune unique counts.  Long-lived callers (servers, benches)
+    should hold a :class:`SearchEngine` instead to keep its stats.
+
+    With ``gather_fn=None`` the scan reads ``index``'s in-RAM
+    ``[K, Vpad, ...]`` arrays.  A disk-resident index supplies its cluster
+    cache's pager (``index.gather`` is picked up automatically by the
+    engine): the hook receives the plan's ``slot_cluster`` fetch list and
+    returns ``(local_ids, vectors, attrs, ids, norms, scales)`` batch-local
+    blocks, which the same kernel scans for bit-identical results.
+
+    ``prune``: ``"auto"`` (default) consults the index's cluster attribute
+    summaries when present and drops probes whose clusters provably contain
+    no row passing the query's filter — same ids/scores, fewer slots, fewer
+    disk fetches.  ``"on"`` requires summaries, ``"off"`` disables.
+    ``t_max`` (static, ≥ n_probes; needs pruning active) widens: pruned
+    probes are refilled from the query's next-best unpruned centroids within
+    the geometric top-``t_max``, trading bit-identity for recovered recall
+    under selective filters (every surfaced hit remains exact).
+    """
+    eng = SearchEngine(
+        index, k=k, n_probes=n_probes, q_block=q_block, v_block=v_block,
+        u_cap=u_cap, backend=backend, gather_fn=gather_fn, prune=prune,
+        t_max=t_max, pipeline=pipeline, pipeline_depth=pipeline_depth,
+        adaptive_u_cap=adaptive_u_cap,
+    )
+    try:
+        return eng.search(queries, fspec)
+    finally:
+        eng.close()

@@ -169,6 +169,32 @@ def fetch_order(slot_cluster, n_unique, u_cap: int):
     return uniq[np.argsort(first, kind="stable")]
 
 
+def tile_fetch_lists(slot_cluster, n_unique, u_cap: int):
+    """Per-tile *novel*-cluster fetch lists (host-side).
+
+    Splits :func:`fetch_order`'s flat first-need list back into per-tile
+    units: tile i's list holds the clusters it needs that no earlier tile
+    already fetched, in slot order.  Concatenating every tile's list
+    reproduces ``fetch_order`` exactly — these are the routing units a
+    slot-granular pager (the pipelined engine's fetch stage) or a
+    multi-host cache shard consumes per tile.
+
+    Returns a list of 1-D int64 numpy arrays, one per tile.
+    """
+    import numpy as np
+
+    sc = np.asarray(slot_cluster).reshape(-1, u_cap).astype(np.int64)
+    nu = np.asarray(n_unique)
+    seen: set = set()
+    out = []
+    for i in range(sc.shape[0]):
+        live = sc[i, : int(nu[i])]
+        novel = [int(c) for c in live if int(c) not in seen]
+        seen.update(novel)
+        out.append(np.asarray(novel, dtype=np.int64))
+    return out
+
+
 def pad_to_tiles(x: Array, q_block: int) -> Array:
     """Pads the leading (query) axis up to a q_block multiple with edge rows.
 

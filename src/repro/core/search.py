@@ -15,10 +15,14 @@ Three implementations of the same contract, fastest last:
                              probe ids, fuses the filter mask into the scoring
                              pass, never materializes the gather.
 
-The fastest path, ``search_fused_tiled`` (``kernels/filtered_scan/ops.py``),
-additionally tiles queries, deduplicates overlapping probes per tile
-(``core/probes.py``) and streams a per-probe top-k, so neither the gather
-nor any ``[Q·T, Vpad]`` score matrix ever exists.
+The fastest path is the search execution engine
+(``core/engine.py::SearchEngine``, functional entry point
+``search_fused_tiled``): it additionally tiles queries, deduplicates
+overlapping probes per tile (``core/probes.py``), streams a per-probe
+top-k — so neither the gather nor any ``[Q·T, Vpad]`` score matrix ever
+exists — and on the disk tier can double-buffer cluster fetches against
+the scan (``pipeline="on"``) while provisioning the slot table adaptively
+from observed unique-probe counts.
 
 All return ``SearchResult(scores [Q,k] f32, ids [Q,k] int32)`` where ids are
 original vector ids (-1 where fewer than k vectors satisfy the filter) and

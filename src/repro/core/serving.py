@@ -38,13 +38,16 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
                          resident_budget_bytes: Optional[int] = None,
                          prune: str = "auto",
                          t_max: Optional[int] = None,
+                         pipeline: str = "auto",
+                         pipeline_depth: int = 2,
+                         adaptive_u_cap: Optional[bool] = None,
                          ) -> Callable:
-    """The batched server's default search step: the tiled fused path.
+    """The batched server's default search step: the search engine.
 
     Returns ``search_fn(queries, fspec, shard_ok) -> (scores, ids)`` wired
-    to :func:`repro.kernels.filtered_scan.ops.search_fused_tiled` — the
+    to one long-lived :class:`repro.core.engine.SearchEngine` — the
     micro-batcher's whole purpose is assembling a query batch whose probes
-    overlap, which is exactly what the tiled kernel's per-tile probe dedup
+    overlap, which is exactly what the engine's per-tile probe dedup
     converts into saved HBM traffic.  ``shard_ok`` is accepted (and ignored)
     so the same server drives the single-host and pod paths.
 
@@ -52,38 +55,40 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
     open :class:`repro.core.disk.DiskIVFIndex`, or a checkpoint directory
     path (opened disk-resident under ``resident_budget_bytes``, with
     hot-cluster pinning).  Disk-tier batches run through the same kernel via
-    the cache's ``gather_fn`` and return identical results; the open index
-    is exposed as ``search_fn.index`` so callers can read
-    ``resident_bytes()`` / cache stats.
+    the cache's pager and return identical results; the open index is
+    exposed as ``search_fn.index`` (and the engine as ``search_fn.engine``)
+    so callers can read ``resident_bytes()`` / cache / pipeline stats.
 
-    ``prune`` selects filter-aware probe pruning (``"auto"`` = use the
-    index's cluster attribute summaries when present; ``"on"`` requires
-    them; ``"off"`` disables): probes whose clusters the batch's filters
-    provably cannot match are dropped at plan time — same results, fewer
-    scans, and on the disk tier fewer cluster fetches.  ``t_max`` enables
-    adaptive probe widening (refill pruned probes from next-best unpruned
-    centroids up to t_max; recovers recall under selective filters at no
-    cost to unfiltered traffic).
+    Engine knobs: ``prune`` selects filter-aware probe pruning (``"auto"``
+    = use the index's cluster attribute summaries when present); ``t_max``
+    enables adaptive probe widening; ``pipeline`` (``"auto"`` = on for the
+    disk tier) double-buffers per-tile cluster fetches against the scan —
+    identical results, IO hidden behind compute; ``adaptive_u_cap``
+    (default: on) provisions each batch's slot table from the observed
+    post-prune unique-cluster counts in power-of-two buckets instead of the
+    unpruned worst case — selective filters scan small tables, with at most
+    ``len(buckets)`` scan compilations ever.
     """
     from repro.core.disk import DiskIVFIndex
-    from repro.kernels.filtered_scan.ops import search_fused_tiled
+    from repro.core.engine import SearchEngine
 
     if isinstance(index, str):
         index = DiskIVFIndex.open(
             index, resident_budget_bytes=resident_budget_bytes
         )
-    gather_fn = index.gather if isinstance(index, DiskIVFIndex) else None
+    engine = SearchEngine(
+        index, k=k, n_probes=n_probes, q_block=q_block, v_block=v_block,
+        backend=backend, prune=prune, t_max=t_max, pipeline=pipeline,
+        pipeline_depth=pipeline_depth, adaptive_u_cap=adaptive_u_cap,
+    )
 
     def search_fn(queries, fspec, shard_ok=None):
         del shard_ok  # single host; the pod path lives in core/distributed
-        res = search_fused_tiled(
-            index, queries, fspec, k=k, n_probes=n_probes,
-            q_block=q_block, v_block=v_block, backend=backend,
-            gather_fn=gather_fn, prune=prune, t_max=t_max,
-        )
+        res = engine.search(queries, fspec)
         return res.scores, res.ids
 
     search_fn.index = index
+    search_fn.engine = engine
     return search_fn
 
 
@@ -187,13 +192,23 @@ class SearchServer:
             self._worker.join(timeout=30)
 
     def _drain(self) -> List[Request]:
+        """Assembles the next micro-batch.
+
+        The batch deadline is anchored at the *oldest request's enqueue
+        time* (``t_enqueue + max_wait_s``), not at drain start: a request
+        that aged in the queue while the previous batch was being served,
+        or a slow trickle of arrivals each landing just inside the old
+        per-``get`` timeout, can no longer stretch batch assembly.  Once
+        the deadline passes, only requests already sitting in the queue are
+        swept in (they cost no extra latency) and the batch is served.
+        """
         batch: List[Request] = []
         deadline = None
         while len(batch) < self.batch_size and not self._stop.is_set():
-            timeout = (
-                self.max_wait_s if deadline is None
-                else max(0.0, deadline - time.monotonic())
-            )
+            now = time.monotonic()
+            if deadline is not None and now >= deadline:
+                break
+            timeout = self.max_wait_s if deadline is None else deadline - now
             try:
                 req = self._q.get(timeout=max(timeout, 1e-4))
             except queue.Empty:
@@ -202,8 +217,13 @@ class SearchServer:
                 continue
             batch.append(req)
             if deadline is None:
-                deadline = time.monotonic() + self.max_wait_s
-            if deadline and time.monotonic() > deadline:
+                deadline = req.t_enqueue + self.max_wait_s
+        # Deadline hit or batch full: take whatever is already queued
+        # (non-blocking) — free batching, zero added wait.
+        while batch and len(batch) < self.batch_size:
+            try:
+                batch.append(self._q.get_nowait())
+            except queue.Empty:
                 break
         return batch
 

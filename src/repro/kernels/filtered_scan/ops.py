@@ -4,18 +4,18 @@ Two entry points share :class:`repro.core.search.SearchResult`'s contract:
 
   * :func:`search_fused`       — the original per-(query, probe) slot path.
     Still materializes a ``[Q·T, Vpad]`` score matrix on the way to top-k.
-  * :func:`search_fused_tiled` — the batched successor.  Queries are tiled,
-    probes are deduplicated per tile (``core/probes.py``), the kernel scores
-    a whole ``[QB, D]`` query tile per streamed block and reduces it to a
-    running ``[QB, k]`` on the fly, and the per-probe fragments are merged
-    with the ``merge_topk`` monoid — peak memory ``O(slots·QB·k)``, never
-    ``O(Q·T·Vpad)``, and a cluster probed by many queries of a tile is
-    streamed HBM→VMEM exactly once.
+  * :func:`search_fused_tiled` — the batched successor, now owned by the
+    search execution engine (:mod:`repro.core.engine`): a jitted plan stage
+    (centroid top-k + filter-aware probe pruning + per-tile probe dedup), a
+    fetch stage (resident arrays or the disk tier's cluster cache), and a
+    jitted scan/merge stage (query-tiled kernel + streaming top-k + monoid
+    merge).  Re-exported here for backward compatibility, together with the
+    engine's stage primitives (``plan_fused_tiled``, ``tiled_scan_xla``,
+    ``resolve_prune``) that used to live in this module.
 
 Backends for the tiled path: ``"pallas"`` (compiled, TPU), ``"pallas_interpret"``
 (CPU debugging/tests), ``"xla"`` (pure-jnp streaming executor — the fast CPU
-path, chunked ``lax.map`` over slots so the same never-materialize bound
-holds).  ``backend=None`` picks ``"pallas"`` on TPU and ``"xla"`` elsewhere.
+path).  ``backend=None`` picks ``"pallas"`` on TPU and ``"xla"`` elsewhere.
 """
 
 from __future__ import annotations
@@ -25,20 +25,20 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-import dataclasses
-
-from repro.core import probes as probes_lib
-from repro.core import summaries as summaries_lib
 from repro.core import topk as topk_lib
-from repro.core.filters import FilterSpec
-from repro.core.ivf import IVFFlatIndex, round_up
-from repro.core.search import SearchResult, centroid_scores, search_centroids
-from repro.kernels.filtered_scan.filtered_scan import (
-    filtered_scan,
-    filtered_scan_tiled,
+from repro.core.engine import (  # noqa: F401  (back-compat re-exports)
+    SearchEngine,
+    plan_fused_tiled,
+    resolve_prune,
+    search_fused_tiled,
+    tiled_scan_xla,
+    _scan_merge_tiled,
 )
+from repro.core.filters import FilterSpec
+from repro.core.ivf import IVFFlatIndex
+from repro.core.search import SearchResult, search_centroids
+from repro.kernels.filtered_scan.filtered_scan import filtered_scan
 
 Array = jax.Array
 
@@ -111,344 +111,3 @@ def search_fused(
     live = (out_ids >= 0).reshape(q, -1)
     n_scanned = jnp.sum(live.astype(jnp.int32), axis=-1)
     return SearchResult(vals, ids, n_scanned, n_passed)
-
-
-def tiled_scan_xla(
-    slot_cluster, slot_tile, queries, lo, hi, vectors, attrs, ids,
-    norms, scales, *, metric: str, k: int, q_block: int, chunk: int = 8,
-):
-    """XLA streaming executor with the tiled kernel's exact contract.
-
-    Chunked ``lax.map`` over slots: each step gathers ``chunk`` cluster
-    blocks, scores them against their query tiles and immediately reduces to
-    ``[QB, k]`` — the full per-slot score matrix never exists, matching the
-    kernel's memory bound.  This is the fast CPU path (Mosaic needs a real
-    TPU to lower non-interpreted).
-    """
-    d = queries.shape[-1]
-    qt = queries.reshape(-1, q_block, d).astype(jnp.float32)
-    lot = lo.reshape(-1, q_block, *lo.shape[1:]).astype(jnp.int32)
-    hit = hi.reshape(-1, q_block, *hi.shape[1:]).astype(jnp.int32)
-
-    def one(args):
-        sc, st = args
-        v = jnp.take(vectors, sc, axis=0).astype(jnp.float32)  # [Vpad, D]
-        qb = jnp.take(qt, st, axis=0)  # [QB, D]
-        scores = qb @ v.T  # [QB, Vpad]
-        if scales is not None:
-            scores = scores * jnp.take(scales, sc, axis=0)[None, :]
-        if metric == "l2":
-            scores = 2.0 * scores - jnp.take(norms, sc, axis=0)[None, :]
-        a = jnp.take(attrs, sc, axis=0).astype(jnp.int32)  # [Vpad, M]
-        qlo = jnp.take(lot, st, axis=0)  # [QB, F, M]
-        qhi = jnp.take(hit, st, axis=0)
-        inside = jnp.logical_and(
-            a[None, :, None, :] >= qlo[:, None],
-            a[None, :, None, :] <= qhi[:, None],
-        )  # [QB, Vpad, F, M]
-        fmask = jnp.any(jnp.all(inside, -1), -1)
-        live = jnp.take(ids, sc, axis=0) >= 0
-        mask = jnp.logical_and(fmask, live[None, :])
-        svals, sids = topk_lib.masked_topk(
-            scores, mask, k,
-            ids=jnp.broadcast_to(jnp.take(ids, sc, axis=0), scores.shape),
-        )
-        return svals, sids, jnp.sum(mask.astype(jnp.int32), axis=-1)
-
-    return jax.lax.map(
-        one, (slot_cluster, slot_tile), batch_size=min(chunk, slot_cluster.shape[0])
-    )
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("metric", "n_probes", "q_block", "u_cap", "cast_dtype",
-                     "t_max"),
-)
-def plan_fused_tiled(
-    centroids: Array,
-    counts: Array,
-    queries: Array,
-    lo: Array,
-    hi: Array,
-    *,
-    metric: str,
-    n_probes: int,
-    q_block: int,
-    u_cap: int,
-    cast_dtype,
-    summaries=None,
-    t_max: Optional[int] = None,
-):
-    """Stage 1 of the tiled search: centroid probe + per-tile dedup plan.
-
-    Runs entirely on the *resident* state (centroids + counts + attribute
-    summaries), so the disk tier can plan — and hand ``slot_cluster`` to its
-    cluster cache as the batch's fetch list — before any flat list is paged
-    in.  Returns ``(slot_cluster, slot_tile, slot_of_probe, probe_ok,
-    n_unique, queries_pad, lo_pad, hi_pad, n_pruned)``; queries/bounds come
-    back padded to whole ``q_block`` tiles with edge rows (whose probes
-    dedupe into the last real query's slots, so padding adds no scan work).
-
-    With ``summaries`` (a :class:`repro.core.summaries.ClusterSummaries`),
-    the plan is filter-aware: a branch-free disjointness test between each
-    query's DNF terms and the per-cluster interval/histogram summaries marks
-    clusters the filter provably cannot match, and those probes are dropped
-    *before* the per-tile dedup — they never get a slot, are never fetched
-    by ``probes.fetch_order``, and are never scanned.  Results stay
-    bit-identical to the unpruned plan (only zero-passing-row clusters can
-    be pruned).
-
-    ``t_max`` (static, > n_probes) additionally enables adaptive probe
-    widening (paper §4.3 selectivity-adaptive T): each query's probe set is
-    refilled with its next-best *unpruned* centroids from the geometric
-    top-``t_max``, so selective filters keep ``n_probes`` productive probes
-    instead of silently scanning fewer clusters.  Unfiltered queries prune
-    nothing, refill nothing, and plan exactly as before.  Within the refill
-    ranking, the summaries' histogram-mass estimate of each cluster's
-    expected passing count breaks exact centroid-score ties.
-    """
-    scores = centroid_scores(centroids, counts, queries, metric=metric)
-    q = queries.shape[0]
-    if summaries is None:
-        _, probe_ids = jax.lax.top_k(scores, n_probes)
-        probe_ids = probe_ids.astype(jnp.int32)  # [Q, T]
-        probe_valid = None
-        n_pruned = jnp.zeros((q,), jnp.int32)
-    else:
-        cm = summaries_lib.can_match(summaries, lo, hi)  # [Q, K]
-        width = n_probes if t_max is None else t_max
-        cvals, cand = jax.lax.top_k(scores, width)  # [Q, W] geometric order
-        cm_c = jnp.take_along_axis(cm, cand, axis=1)  # [Q, W]
-        real = cvals > topk_lib.NEG_INF / 2  # exclude empty/padded clusters
-        # accounting: probes a geometry-only planner would have scanned (and
-        # the disk tier fetched) that the filter proved empty
-        n_pruned = jnp.sum(
-            jnp.logical_and(~cm_c[:, :n_probes], real[:, :n_probes])
-            .astype(jnp.int32), axis=-1,
-        )
-        if t_max is None:
-            # exact mode: the geometric top-T minus its pruned members
-            probe_ids = cand.astype(jnp.int32)
-            probe_valid = jnp.logical_and(cm_c, real)
-        else:
-            # widened mode: re-rank candidates by (centroid score, expected
-            # passing mass) — the histogram estimate only breaks exact score
-            # ties — then keep each query's first n_probes unpruned ones.
-            epass = summaries_lib.expected_passing(summaries, lo, hi, counts)
-            ep_c = jnp.take_along_axis(epass, cand, axis=1)
-            order = jnp.lexsort((-ep_c, -cvals), axis=-1)  # last key primary
-            cand = jnp.take_along_axis(cand, order, axis=1)
-            cm_c = jnp.take_along_axis(cm_c, order, axis=1)
-            real = jnp.take_along_axis(real, order, axis=1)
-            ok = jnp.logical_and(cm_c, real)
-            rank = jnp.cumsum(ok.astype(jnp.int32), axis=1) - 1
-            probe_ids = cand.astype(jnp.int32)
-            probe_valid = jnp.logical_and(ok, rank < n_probes)
-    probe_pad = probes_lib.pad_to_tiles(probe_ids, q_block)  # [Qpad, W]
-    valid_pad = (
-        None if probe_valid is None
-        else probes_lib.pad_to_tiles(probe_valid, q_block)
-    )
-    queries_pad = probes_lib.pad_to_tiles(queries.astype(cast_dtype), q_block)
-    lo_pad = probes_lib.pad_to_tiles(lo, q_block)
-    hi_pad = probes_lib.pad_to_tiles(hi, q_block)
-    slot_cluster, slot_tile, slot_of_probe, probe_ok, n_unique = (
-        probes_lib.plan_probe_tiles(probe_pad, q_block=q_block, u_cap=u_cap,
-                                    probe_valid=valid_pad)
-    )
-    return (slot_cluster, slot_tile, slot_of_probe, probe_ok, n_unique,
-            queries_pad, lo_pad, hi_pad, n_pruned)
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("metric", "k", "q", "q_block", "v_block", "backend"),
-)
-def _scan_merge_tiled(
-    slot_cluster: Array,
-    slot_tile: Array,
-    slot_of_probe: Array,
-    probe_ok: Array,
-    queries: Array,      # [Q, D] original (for the l2 ‖q‖² constant)
-    queries_pad: Array,  # [Qpad, D] cast + tile-padded
-    lo_pad: Array,
-    hi_pad: Array,
-    vectors: Array,
-    attrs: Array,
-    ids: Array,
-    norms: Optional[Array],
-    scales: Optional[Array],
-    *,
-    metric: str,
-    k: int,
-    q: int,
-    q_block: int,
-    v_block: int,
-    backend: str,
-) -> SearchResult:
-    """Stage 2: scan the planned slots and merge per-probe fragments.
-
-    ``vectors/attrs/ids/...`` are indexed by ``slot_cluster`` rows — either
-    the full ``[K, Vpad, ...]`` resident arrays (RAM tier) or batch-local
-    gathered ``[S, Vpad, ...]`` blocks with slot-local ids (disk tier).  The
-    kernel only ever dereferences rows named in ``slot_cluster``, so the two
-    are indistinguishable to it.
-    """
-    qpad = queries_pad.shape[0]
-    if backend in ("pallas", "pallas_interpret"):
-        svals, sids, snpass = filtered_scan_tiled(
-            slot_cluster, slot_tile, queries_pad, lo_pad, hi_pad,
-            vectors, attrs, ids, norms, scales,
-            metric=metric, k=k, q_block=q_block, v_block=v_block,
-            interpret=backend == "pallas_interpret",
-        )
-    elif backend == "xla":
-        svals, sids, snpass = tiled_scan_xla(
-            slot_cluster, slot_tile, queries_pad, lo_pad, hi_pad,
-            vectors, attrs, ids, norms, scales,
-            metric=metric, k=k, q_block=q_block,
-        )
-    else:
-        raise ValueError(backend)
-
-    # Per-probe candidate fragments, then the monoid merge across T probes.
-    # Probes that overflowed an undersized u_cap are dropped soundly (their
-    # fragments masked out), mirroring the distributed dispatch's P_cap.
-    row = jnp.arange(qpad, dtype=jnp.int32) % q_block  # [Qpad]
-    vals_qt = svals[slot_of_probe, row[:, None]]  # [Qpad, T, k]
-    ids_qt = sids[slot_of_probe, row[:, None]]
-    npass_qt = snpass[slot_of_probe, row[:, None]]  # [Qpad, T]
-    vals_qt = jnp.where(probe_ok[..., None], vals_qt, topk_lib.NEG_INF)
-    ids_qt = jnp.where(probe_ok[..., None], ids_qt, -1)
-    npass_qt = jnp.where(probe_ok, npass_qt, 0)
-    vals, out_ids = topk_lib.merge_topk_many(vals_qt, ids_qt, k, axis=1)
-    vals, out_ids = vals[:q], out_ids[:q]
-
-    if metric == "l2":
-        q2 = jnp.sum(queries.astype(jnp.float32) ** 2, -1)  # [Q]
-        vals = jnp.where(
-            vals > topk_lib.NEG_INF / 2, vals - q2[:, None], vals
-        )
-
-    n_passed = jnp.sum(npass_qt[:q], axis=-1)
-    # Scan accounting through the slot tables: a probe's slot scans exactly
-    # its cluster, so live-rows-per-slot gathered by slot_of_probe equals the
-    # old per-cluster lookup — and works when only gathered rows exist.
-    live_per_row = jnp.sum((ids >= 0).astype(jnp.int32), axis=-1)  # [K or S]
-    live_per_slot = jnp.take(live_per_row, slot_cluster)  # [S_flat]
-    n_scanned = jnp.sum(
-        jnp.take(live_per_slot, slot_of_probe[:q])
-        * probe_ok[:q].astype(jnp.int32),
-        axis=-1,
-    )
-    return SearchResult(vals, out_ids, n_scanned, n_passed)
-
-
-def resolve_prune(index, prune: str):
-    """Resolves the ``prune`` knob against an index's summaries.
-
-    Returns the :class:`~repro.core.summaries.ClusterSummaries` to plan with,
-    or None for no pruning.  ``"auto"`` prunes iff the index carries
-    summaries; ``"on"`` demands them; ``"off"`` never prunes.
-    """
-    summ = getattr(index, "summaries", None)
-    if prune == "off":
-        return None
-    if prune == "on":
-        if summ is None:
-            raise ValueError(
-                "prune='on' but the index has no cluster summaries — build "
-                "with with_summaries=True or re-save the checkpoint (layout "
-                "v2.1), or use prune='auto'"
-            )
-        return summ
-    if prune == "auto":
-        return summ
-    raise ValueError(f"prune must be 'auto'|'on'|'off', got {prune!r}")
-
-
-def search_fused_tiled(
-    index,
-    queries: Array,
-    fspec: FilterSpec,
-    *,
-    k: int,
-    n_probes: int,
-    q_block: int = 64,
-    v_block: int = 256,
-    u_cap: Optional[int] = None,
-    backend: Optional[str] = None,
-    gather_fn=None,
-    prune: str = "auto",
-    t_max: Optional[int] = None,
-) -> SearchResult:
-    """Query-tiled, probe-deduplicated fused search with streaming top-k.
-
-    Same contract as :func:`repro.core.search.search_reference` (identical
-    ids/scores modulo tie order).  q_block is the query-tile height QB;
-    u_cap bounds unique probes per tile (default ``min(QB·W, K)`` for probe
-    table width W — always sufficient, since a tile cannot probe more than K
-    distinct clusters).
-
-    Two jitted stages: a *plan* over the resident state (centroid top-k +
-    filter-aware probe pruning + per-tile probe dedup) and a *scan/merge*
-    over the flat lists.  With ``gather_fn=None`` the scan reads ``index``'s
-    in-RAM ``[K, Vpad, ...]`` arrays.  A disk-resident index passes
-    ``gather_fn`` (its cluster cache's pager): the hook receives the plan's
-    ``slot_cluster`` fetch list and returns ``(local_ids, vectors, attrs,
-    ids, norms, scales)`` batch-local blocks, which the same kernel scans
-    for bit-identical results.  ``index`` then only needs the resident
-    surface (``spec / centroids / counts / store_dtype / quantized /
-    summaries``), e.g. :class:`repro.core.disk.DiskIVFIndex`.
-
-    ``prune``: ``"auto"`` (default) consults the index's cluster attribute
-    summaries when present and drops probes whose clusters provably contain
-    no row passing the query's filter — same ids/scores, fewer slots, fewer
-    disk fetches.  ``"on"`` requires summaries, ``"off"`` disables.
-    ``t_max`` (static, ≥ n_probes; needs pruning active) widens: pruned
-    probes are refilled from the query's next-best unpruned centroids within
-    the geometric top-``t_max``, trading bit-identity for recovered recall
-    under selective filters (every surfaced hit remains exact).
-    """
-    q, _ = queries.shape
-    qb = min(q_block, round_up(q, 8))
-    kc = index.n_clusters
-    summ = resolve_prune(index, prune)
-    if t_max is not None:
-        if t_max < n_probes:
-            raise ValueError(f"t_max={t_max} < n_probes={n_probes}")
-        t_max = min(t_max, kc)
-        if summ is None or t_max == n_probes:
-            t_max = None  # widening is only meaningful with pruning active
-    width = n_probes if t_max is None else t_max
-    cap = min(qb * width, kc) if u_cap is None else u_cap
-    cast_dtype = np.dtype(np.float32) if index.quantized else np.dtype(
-        index.store_dtype
-    )
-    if backend is None:
-        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
-
-    (slot_cluster, slot_tile, slot_of_probe, probe_ok, _, queries_pad,
-     lo_pad, hi_pad, n_pruned) = plan_fused_tiled(
-        index.centroids, index.counts, queries, fspec.lo, fspec.hi,
-        metric=index.spec.metric, n_probes=n_probes, q_block=qb, u_cap=cap,
-        cast_dtype=cast_dtype, summaries=summ, t_max=t_max,
-    )
-
-    if gather_fn is None:
-        vectors, attrs, ids = index.vectors, index.attrs, index.ids
-        norms, scales = index.norms, index.scales
-    else:
-        slot_cluster, vectors, attrs, ids, norms, scales = gather_fn(
-            slot_cluster
-        )
-        slot_cluster = jnp.asarray(slot_cluster)
-
-    res = _scan_merge_tiled(
-        slot_cluster, slot_tile, slot_of_probe, probe_ok, queries,
-        queries_pad, lo_pad, hi_pad, vectors, attrs, ids, norms, scales,
-        metric=index.spec.metric, k=k, q=q, q_block=qb, v_block=v_block,
-        backend=backend,
-    )
-    return dataclasses.replace(res, n_pruned=n_pruned)

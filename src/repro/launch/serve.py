@@ -64,6 +64,17 @@ def main():
     ap.add_argument("--t-max", type=int, default=None,
                     help="adaptive probe widening cap: refill pruned probes "
                          "from next-best unpruned centroids up to this rank")
+    ap.add_argument("--pipeline", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="double-buffered executor: scan tile i while tile "
+                         "i+1's clusters gather in the background (auto = "
+                         "on for the disk tier).  Identical results; "
+                         "improves throughput whenever fetches cost "
+                         "anything, costs nothing when they don't")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="cluster gathers kept in flight ahead of the scan "
+                         "(2 = classic double buffering; deeper overlaps "
+                         "more IO at the cost of gathered-tile host memory)")
     args = ap.parse_args()
 
     from repro.core import HybridSpec, build_ivf, storage
@@ -120,7 +131,8 @@ def main():
 
     search_fn = make_fused_search_fn(
         serving_index, k=args.k, n_probes=args.probes, q_block=args.batch,
-        prune=args.prune, t_max=args.t_max,
+        prune=args.prune, t_max=args.t_max, pipeline=args.pipeline,
+        pipeline_depth=args.pipeline_depth,
     )
 
     server = SearchServer(
@@ -142,6 +154,11 @@ def main():
           f"({args.requests/wall:.0f} QPS), p50 {np.percentile(lat,50):.1f}ms "
           f"p99 {np.percentile(lat,99):.1f}ms, "
           f"batches {server.stats['batches']}")
+    eng = search_fn.engine
+    print(f"engine: pipeline={eng.pipeline} "
+          f"(pipelined batches {eng.stats.pipelined_batches}, overlap "
+          f"{eng.stats.overlap_ratio:.2f}), u_cap {eng.stats.last_u_cap}, "
+          f"scan compiles {eng.stats.scan_compilations}")
     if args.tier == "disk":
         cache = serving_index.cache
         on_disk = serving_index.reader.stride * serving_index.n_clusters
@@ -149,7 +166,8 @@ def main():
               f"(index on disk {on_disk/2**20:.1f} MiB), "
               f"cache hit-rate {cache.hit_rate:.2f}, "
               f"evictions {cache.stats.evictions}, "
-              f"pinned {len(cache.pinned)} hot clusters")
+              f"pinned {len(cache.pinned)} hot clusters, "
+              f"prefetch errors {cache.stats.errors}")
         serving_index.close()
 
 

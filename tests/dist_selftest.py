@@ -99,6 +99,73 @@ def main():
     )
     print("OK tiled distributed == reference")
 
+    # ---- filter-aware pruned dispatch: shards skip filtered-out clusters --
+    # Topic-mixture index with a topic-correlated attr0 "timestamp" (one
+    # cluster per topic, narrow per-topic band): a selective window filter
+    # provably excludes most probed clusters, so the summary mask threaded
+    # through dispatch_probes_tiled must actually drop probes — and ids must
+    # stay bit-identical to both the unpruned dispatch and the reference.
+    from repro.core.ivf import build_from_assignments
+    from repro.core.summaries import can_match
+    from repro.core.filters import FilterSpec
+
+    centers = rng.standard_normal((kc, d)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=-1, keepdims=True)
+    topic = (np.arange(n) * kc) // n
+    core2 = centers[topic] + 0.05 * rng.standard_normal((n, d)).astype(
+        np.float32
+    )
+    core2 /= np.linalg.norm(core2, axis=-1, keepdims=True)
+    ts_range = 8192
+    band = ts_range // kc
+    attrs2 = rng.integers(0, 8, (n, m)).astype(np.int16)
+    attrs2[:, 0] = (topic * band + rng.integers(0, band, n)).astype(np.int16)
+    index2, _ = build_from_assignments(
+        spec, jnp.asarray(centers), jnp.asarray(core2), jnp.asarray(attrs2),
+        jnp.asarray(topic),
+    )
+    assert index2.summaries is not None
+    index2 = dataclasses.replace(
+        index2,
+        centroids=jax.device_put(index2.centroids, shardings["centroids"]),
+        vectors=jax.device_put(index2.vectors, shardings["vectors"]),
+        attrs=jax.device_put(index2.attrs, shardings["attrs"]),
+        ids=jax.device_put(index2.ids, shardings["ids"]),
+        counts=jax.device_put(index2.counts, shardings["counts"]),
+    )
+    queries2 = jnp.asarray(core2[:q] + 0.01)
+    w = band  # ~1-2 topics wide → most of the 4 probes prunable
+    lo2 = np.full((q, 1, m), -32768, np.int16)
+    hi2 = np.full((q, 1, m), 32767, np.int16)
+    start = rng.integers(0, ts_range - w, q)
+    lo2[:, 0, 0] = start.astype(np.int16)
+    hi2[:, 0, 0] = (start + w - 1).astype(np.int16)
+    fspec2 = FilterSpec(lo=jnp.asarray(lo2), hi=jnp.asarray(hi2))
+    cm = np.asarray(can_match(index2.summaries, fspec2.lo, fspec2.hi))
+    assert (~cm).sum() > 0, "window filter should exclude some clusters"
+    ref2 = search_reference(index2, queries2, fspec2, k=20, n_probes=4)
+    for backend in ("pallas_interpret", "xla_tiled"):
+        outs = {}
+        for prune in ("on", "off"):
+            cfg_p = ShardedSearchConfig(
+                k=20, n_probes=4, v_block=128, scan_q_block=8,
+                backend=backend, prune=prune,
+            )
+            fn_p, _, _ = make_sharded_search(
+                mesh, "dot", q_total=q, n_clusters=kc, cfg=cfg_p,
+            )
+            outs[prune] = fn_p(index2, queries2, fspec2)
+        np.testing.assert_array_equal(
+            np.asarray(outs["on"].ids), np.asarray(outs["off"].ids),
+            err_msg=f"pruned != unpruned ids ({backend})",
+        )
+        np.testing.assert_array_equal(
+            np.asarray(outs["on"].ids), np.asarray(ref2.ids),
+            err_msg=f"pruned != reference ids ({backend})",
+        )
+    print("OK pruned dispatch == unpruned == reference "
+          f"({int((~cm).sum())}/{cm.size} (q,cluster) pairs excluded)")
+
     # ---- straggler drop ----
     # Dropping shard 3 (clusters 6..7) must (a) never return an id stored in
     # those clusters, (b) keep every returned id filter-compliant, (c) not
