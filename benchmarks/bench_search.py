@@ -272,6 +272,280 @@ def bench_disk_tier_pipelined(index, core, rng, *, q=64, n_batches=10,
     return entry
 
 
+def _pipelined_stream(eng, batches, fspec):
+    """Warm, reset stats, run one submit/result-pipelined pass over the
+    batch stream, and return (wall_seconds, last_result) — the shared
+    measurement harness for the executor A/Bs below."""
+    jax.block_until_ready(eng.search(batches[0], fspec).ids)
+    eng.stats = EngineStats()
+    t0 = time.perf_counter()
+    pend = eng.submit(batches[0], fspec)
+    last = None
+    for i in range(len(batches)):
+        nxt = (eng.submit(batches[i + 1], fspec)
+               if i + 1 < len(batches) else None)
+        last = eng.result(pend)
+        pend = nxt
+    jax.block_until_ready(last.ids)
+    return time.perf_counter() - t0, last
+
+
+def bench_disk_tier_sharded(index, core, rng, *, n_nodes=3,
+                            transport="loopback", q=64, n_batches=10,
+                            cached_clusters=16, q_block=16):
+    """Disk tier fetching through a consistent-hash sharded cluster cache.
+
+    Same hot-topic workload as the other disk entries, but the engine's
+    fetch stage routes through a :class:`ShardedBlockStore` over ``n_nodes``
+    peer caches of the same checkpoint (one index copy per pod; each peer's
+    cache holds its ring share).  Per-tile fetch lists are split per owner
+    and fetched concurrently; remote blocks land in the engine-side L1.
+    Reports per-node hit rates + blocks served, L1 traffic, and the operand
+    -cache reuse counter; every result is gated bit-exact against the
+    reference — the ring must be unobservable in results.
+    """
+    import tempfile
+
+    from repro.core import blockstore as blockstore_lib
+
+    with tempfile.TemporaryDirectory(prefix="bench_shard_") as ckpt:
+        storage.save_index(index, ckpt, n_shards=4)
+        store = blockstore_lib.open_sharded(
+            ckpt, n_nodes=n_nodes, transport=transport,
+            capacity_records=max(cached_clusters // n_nodes, 4),
+            l1_records=cached_clusters,
+        )
+        try:
+            with DiskIVFIndex.open(ckpt) as disk:
+                eng = SearchEngine(disk, k=K, n_probes=T, q_block=q_block,
+                                   pipeline="on", blockstore=store)
+                batches = [hot_queries(core, q, rng)
+                           for _ in range(n_batches)]
+                fspec = match_all(q, M)
+                wall, last = _pipelined_stream(eng, batches, fspec)
+                stats = eng.stats
+                s = store.stats()
+                entry = dict(
+                    path="disk_tier_sharded", q=q, q_block=q_block,
+                    nodes=n_nodes, transport=transport,
+                    qps=round(q * n_batches / wall, 1),
+                    mean_batch_ms=round(wall / n_batches * 1e3, 3),
+                    iters=n_batches,
+                    overlap_ratio=round(stats.overlap_ratio, 3),
+                    blocks_fetched=stats.blocks_fetched,
+                    operand_reuse=stats.blocks_reused,
+                    l1_hits=s["l1_hits"], l1_misses=s["l1_misses"],
+                    remote_blocks=s["remote_blocks"],
+                    per_node={
+                        str(n): dict(
+                            blocks_served=ns["blocks_served"],
+                            hit_rate=ns.get("hit_rate"),
+                        )
+                        for n, ns in s["per_node"].items()
+                    },
+                )
+                # exactness gates: the timed stream's final batch + fresh
+                # serial batches — the ring must not change results
+                ref_last = search_reference(index, batches[-1], fspec, k=K,
+                                            n_probes=T)
+                ok = bool((np.asarray(ref_last.ids)
+                           == np.asarray(last.ids)).all())
+                for qs in batches[:3]:
+                    ref = search_reference(index, qs, fspec, k=K, n_probes=T)
+                    got = eng.search(qs, fspec)
+                    ok = ok and bool((np.asarray(ref.ids)
+                                      == np.asarray(got.ids)).all())
+                entry["exact"] = ok
+        finally:
+            store.close()
+    print(f"disk tier sharded Q={q} ({n_nodes}x{transport}): "
+          f"{entry['qps']:.1f} qps, reuse {entry['operand_reuse']}, "
+          f"per-node " + " ".join(
+              f"{n}:{v['hit_rate']}" for n, v in entry["per_node"].items()))
+    return entry
+
+
+def session_queries(core, q, rng, run):
+    """Session-coherent hot traffic: requests arrive in runs of ``run``
+    same-topic queries (a user browsing one topic issues several searches
+    in a row, and the micro-batcher drains arrivals in order), so a
+    ``q_block=run`` tile is probe-coherent — few unique clusters — while
+    the whole batch's union still spans many topics.  This is the regime
+    where pipeline *grain* matters: coarse tiles scan every query against
+    the batch-wide union, fine tiles scan only their own topic's clusters.
+    """
+    hot = core[rng.integers(0, N, N_HOT)]
+    t = rng.integers(0, N_HOT, (q + run - 1) // run)
+    qs = np.repeat(hot[t], run, axis=0)[:q]
+    qs = qs + NOISE * rng.standard_normal((q, D)).astype(np.float32)
+    return jnp.asarray(qs)
+
+
+def bench_operand_cache_ab(index, core, rng, *, q=64, n_batches=10,
+                           cached_clusters=16, fine_q_block=16):
+    """Pipeline grain A/B: does batch-level operand reuse make fine-grained
+    pipelining beat coarse?
+
+    Three submit/result-driven configurations over identical
+    session-coherent traffic at Q=64: *coarse* (q_block=Q → one tile per
+    batch, every query scanned against the batch-wide cluster union,
+    overlap only across batches), *fine* (q_block=16 → 4 probe-coherent
+    tiles, within-batch double buffering + the per-batch operand cache
+    reusing blocks tiles share), and *fine_nocache* (same grain, reuse
+    disabled — every tile re-fetches its full unique set through the
+    store).  The ROADMAP claim under test: with the operand cache,
+    fine-grained pipelining is no longer taxed by re-gathered overlap
+    between tiles, so fine ≥ coarse.  Configs alternate within each pass
+    and the headline ratio is the median of *paired* per-pass ratios —
+    pairing cancels the machine drift that a ratio of independent medians
+    keeps (this box swings ±30% between windows); per-arm QPS cells are
+    still per-arm medians.  Results gated exact.
+    """
+    import tempfile
+
+    configs = [
+        ("coarse", min(64, round_up(q, 8)), "auto"),
+        ("fine", fine_q_block, "auto"),
+        ("fine_nocache", fine_q_block, "off"),
+    ]
+    out = dict(path="operand_cache_ab", q=q, iters=n_batches,
+               workload=f"session-coherent (runs of {fine_q_block})")
+    exact = True
+    # the A/B's own rng: the comparison must not depend on how much traffic
+    # the preceding benches drew from the shared stream
+    ab_rng = np.random.default_rng(11)
+    with tempfile.TemporaryDirectory(prefix="bench_opcache_") as ckpt:
+        storage.save_index(index, ckpt, n_shards=4)
+        man = storage.load_manifest(ckpt)
+        overhead = (index.centroids.size * 4 + index.n_clusters * 4
+                    + (index.summaries.nbytes()
+                       if index.summaries is not None else 0))
+        budget = overhead + cached_clusters * man["record_stride"] + 4096
+        batches = [session_queries(core, q, ab_rng, fine_q_block)
+                   for _ in range(n_batches)]
+        fspec = match_all(q, M)
+        envs = [
+            (name, qb, oc,
+             DiskIVFIndex.open(ckpt, resident_budget_bytes=budget))
+            for name, qb, oc in configs
+        ]
+        try:
+            engines = {
+                name: SearchEngine(disk, k=K, n_probes=T, q_block=qb,
+                                   pipeline="on", operand_cache=oc)
+                for name, qb, oc, disk in envs
+            }
+            # alternate configs within each pass (A/B/C A/B/C ...): machine
+            # drift between passes hits every config equally instead of
+            # biasing whichever ran last
+            walls = {name: [] for name, *_ in envs}
+            lasts = {}
+            stats = {}
+            for _ in range(7):
+                for name, *_ in envs:
+                    wall, last = _pipelined_stream(engines[name], batches,
+                                                   fspec)
+                    walls[name].append(wall)
+                    lasts[name] = last
+                    stats[name] = engines[name].stats
+            ref = search_reference(index, batches[-1], fspec, k=K,
+                                   n_probes=T)
+            for name, qb, oc, _disk in envs:
+                wall = float(np.median(walls[name]))
+                ok = bool((np.asarray(ref.ids)
+                           == np.asarray(lasts[name].ids)).all())
+                exact = exact and ok
+                out[name] = dict(
+                    q_block=qb, operand_cache=oc,
+                    qps=round(q * n_batches / wall, 1),
+                    operand_reuse=stats[name].blocks_reused,
+                    blocks_fetched=stats[name].blocks_fetched,
+                    overlap_ratio=round(stats[name].overlap_ratio, 3),
+                    exact=ok,
+                )
+        finally:
+            for *_, disk in envs:
+                disk.close()
+    # paired per-pass ratios: pass i ran coarse and fine back to back, so
+    # wall_coarse[i] / wall_fine[i] controls for drift between passes
+    out["fine_vs_coarse_qps"] = round(float(np.median(
+        [c / f for c, f in zip(walls["coarse"], walls["fine"])]
+    )), 3)
+    out["fine_ge_coarse"] = out["fine_vs_coarse_qps"] >= 1.0
+    out["cache_vs_nocache_qps"] = round(float(np.median(
+        [n / f for n, f in zip(walls["fine_nocache"], walls["fine"])]
+    )), 3)
+    out["exact"] = exact
+    print(f"operand cache A/B Q={q}: fine {out['fine']['qps']:.1f} "
+          f"(reuse {out['fine']['operand_reuse']}) vs coarse "
+          f"{out['coarse']['qps']:.1f} vs fine-nocache "
+          f"{out['fine_nocache']['qps']:.1f} qps "
+          f"→ fine/coarse {out['fine_vs_coarse_qps']}x")
+    return out
+
+
+def bench_ladder_ab(sindex, core, rng, *, q=64, n_batches=6):
+    """u_cap bucket-ladder A/B: pow2 vs ×1.5-midpoint fine ladder.
+
+    Runs the same selective filtered stream through two adaptive engines
+    that differ only in ladder, recording QPS, the provisioned bucket
+    widths, and the compile cost — the compile-count/QPS tradeoff the
+    ROADMAP's "bucket granularity" item asks for.  (The XLA executor's cost
+    is linear in table width, so a fine bucket right under a pow2 edge
+    scans up to 25% fewer pad slots.)  Compile cost is reported as
+    ``buckets_used`` (distinct provisioned widths — what a fresh process
+    would compile for this stream) because the raw jit-cache delta
+    (``scan_compiles_new``) only counts shapes nothing else in this
+    process compiled first: the ladders share their power-of-two rungs, so
+    whichever runs second free-rides.  Results gated exact per ladder.
+    """
+    qb = min(64, round_up(q, 8))
+    full_cap = min(qb * T, sindex.n_clusters)
+    out = dict(path="u_cap_ladder_ab", q=q, full_cap=full_cap)
+    exact = True
+    # a moderately selective window stream: post-prune unique counts land
+    # between pow2 edges, where the midpoints pay
+    fspecs = [window_fspec(q, rng, 0.05) for _ in range(n_batches)]
+    batches = [hot_queries(core, q, rng) for _ in range(n_batches)]
+    for ladder in ("pow2", "fine"):
+        c0 = scan_compile_count()
+        eng = SearchEngine(sindex, k=K, n_probes=T, q_block=qb, prune="on",
+                           u_cap_ladder=ladder)
+        jax.block_until_ready(eng.search(batches[0], fspecs[0]).ids)
+        walls = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            last = None
+            for qs, fs in zip(batches, fspecs):
+                last = eng.search(qs, fs)
+            jax.block_until_ready(last.ids)
+            walls.append(time.perf_counter() - t0)
+        wall = float(np.median(walls))
+        ref = search_reference(sindex, batches[0], fspecs[0], k=K,
+                               n_probes=T)
+        got = eng.search(batches[0], fspecs[0])
+        ok = bool((np.asarray(ref.ids) == np.asarray(got.ids)).all())
+        exact = exact and ok
+        out[ladder] = dict(
+            qps=round(q * n_batches / wall, 1),
+            buckets=list(u_cap_buckets(full_cap, ladder=ladder)),
+            buckets_used=len(eng.stats.u_cap_hist),
+            scan_compiles_new=scan_compile_count() - c0,
+            u_cap_hist={str(k_): v
+                        for k_, v in sorted(eng.stats.u_cap_hist.items())},
+            exact=ok,
+        )
+    out["fine_vs_pow2_qps"] = round(
+        out["fine"]["qps"] / out["pow2"]["qps"], 3
+    )
+    out["exact"] = exact
+    print(f"u_cap ladder A/B: pow2 {out['pow2']['qps']:.1f} qps "
+          f"({out['pow2']['buckets_used']} buckets used) vs fine "
+          f"{out['fine']['qps']:.1f} qps "
+          f"({out['fine']['buckets_used']} buckets used)")
+    return out
+
+
 def build_sweep():
     """Topic-mixture dataset with a topic-correlated timestamp attribute.
 
@@ -546,8 +820,17 @@ def main():
                     help="on = run the disk tier through the pipelined "
                          "execution engine (double-buffered per-tile "
                          "fetch/scan) and emit a disk_tier_pipelined entry "
-                         "with the measured IO/compute overlap ratio; the "
+                         "with the measured IO/compute overlap ratio plus "
+                         "the operand-cache fine-vs-coarse A/B; the "
                          "sweep's disk cells use the same executor")
+    ap.add_argument("--cache-shards", type=int, default=1,
+                    help="> 1 = also bench the disk tier fetching through a "
+                         "consistent-hash ShardedBlockStore over this many "
+                         "peer caches (emits disk_tier_sharded with "
+                         "per-node hit rates)")
+    ap.add_argument("--cache-transport", choices=("loopback", "socket"),
+                    default="loopback",
+                    help="sharded-cache peer transport for the bench")
     ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_search.json"))
     args = ap.parse_args()
     if args.smoke:
@@ -612,12 +895,24 @@ def main():
         print(f"Q={q:4d} u_cap={u_cap:3d} dedup {dedup_ratio:.1f}x  {line}")
 
     disk_entry, disk_pipe_entry = None, None
+    sharded_entry, opcache_entry, ladder_entry = None, None, None
     if args.tier in ("disk", "both"):
         disk_entry = bench_disk_tier(index, core, rng)
         results.append(disk_entry)
         if args.pipeline == "on":
             disk_pipe_entry = bench_disk_tier_pipelined(index, core, rng)
             results.append(disk_pipe_entry)
+            opcache_entry = bench_operand_cache_ab(
+                index, core, rng, n_batches=6 if args.smoke else 10,
+            )
+            results.append(opcache_entry)
+        if args.cache_shards > 1:
+            sharded_entry = bench_disk_tier_sharded(
+                index, core, rng, n_nodes=args.cache_shards,
+                transport=args.cache_transport,
+                n_batches=6 if args.smoke else 10,
+            )
+            results.append(sharded_entry)
 
     sweep_summary, sweep_exact = None, True
     if not args.skip_sweep:
@@ -629,7 +924,15 @@ def main():
             pipeline=args.pipeline,
         )
         results.extend(sweep_entries)
+        ladder_entry = bench_ladder_ab(
+            sindex, s_core, rng, n_batches=4 if args.smoke else 6,
+        )
+        results.append(ladder_entry)
 
+    exact_all = bool(sweep_exact)
+    for e in (sharded_entry, opcache_entry, ladder_entry):
+        if e is not None:
+            exact_all = exact_all and bool(e.get("exact", True))
     out = dict(
         config=dict(
             n=N, d=D, m=M, n_clusters=KC, n_probes=T, k=K, vpad=stats.vpad,
@@ -643,7 +946,7 @@ def main():
             ),
         ),
         results=results,
-        exact_vs_reference=bool(sweep_exact),
+        exact_vs_reference=exact_all,
     )
     if sweep_summary:
         out["selectivity_sweep"] = sweep_summary
@@ -661,6 +964,12 @@ def main():
             out["disk_pipelined_vs_sync_qps"] = round(ratio, 2)
             print(f"disk pipelined vs sync @ Q=64: {ratio:.2f}x "
                   f"(overlap {disk_pipe_entry['overlap_ratio']:.2f})")
+    if sharded_entry is not None:
+        out["disk_tier_sharded"] = sharded_entry
+    if opcache_entry is not None:
+        out["operand_cache_ab"] = opcache_entry
+    if ladder_entry is not None:
+        out["u_cap_ladder_ab"] = ladder_entry
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"→ {args.out}")

@@ -4,25 +4,30 @@ latency stats, a straggler-degradation demonstration, and the disk-resident
 tier (index paged from a checkpoint under a resident-memory budget).
 
 Every search below runs through :class:`repro.core.engine.SearchEngine`,
-whose four stages are explicit and composable::
+whose four stages are explicit and composable.  The FETCH stage is a
+pluggable :class:`repro.core.blockstore.BlockStore`::
 
-            resident state                     paged / resident lists
-    ┌──────────────────────────┐        ┌────────────────────────────────┐
-    │ PLAN (jitted)            │ slot   │ FETCH                          │
-    │ centroid top-k           │ tables │ RAM tier: no-op (arrays)       │
-    │ + summary probe pruning  │ ─────► │ disk tier: ClusterCache pager, │
-    │ + per-tile probe dedup   │ fetch  │ sync gather or async           │
-    │ + adaptive u_cap buckets │ lists  │ gather_submit / gather_wait    │
-    └──────────────────────────┘        └───────────────┬────────────────┘
-                                                        ▼
-                                        ┌────────────────────────────────┐
-                                        │ SCAN + MERGE (jitted)          │
-                                        │ tiled kernel, streaming top-k, │
-                                        │ monoid merge across probes     │
-                                        └────────────────────────────────┘
+            resident state                 BlockStore protocol
+    ┌──────────────────────────┐    ┌──────────────────────────────────┐
+    │ PLAN (jitted)            │    │ FETCH  get / submit+wait / stats │
+    │ centroid top-k           │    │  Resident: RAM arrays (no-op)    │
+    │ + summary probe pruning  │    │  Local: ShardReader+ClusterCache │
+    │ + per-tile probe dedup   │───►│  Sharded: consistent-hash ring   │
+    │ + adaptive u_cap buckets │slot│   over N peer caches (loopback / │
+    └──────────────────────────┘tbls│   socket transport) + local L1   │
+                               fetch│  per-batch OPERAND CACHE: fetch  │
+                               lists│  each block once, reuse per tile │
+                                    └───────────────┬──────────────────┘
+                                                    ▼
+                                    ┌──────────────────────────────────┐
+                                    │ SCAN + MERGE (jitted)            │
+                                    │ tiled kernel, streaming top-k,   │
+                                    │ monoid merge across probes       │
+                                    └──────────────────────────────────┘
 
     pipeline="on" double-buffers FETCH against SCAN per query tile: tile i
-    scans on device while tiles i+1..i+depth gather from disk.
+    scans on device while the store worker pages tile i+1's blocks and the
+    engine worker assembles + device-puts them.
 
 Engine knobs, and which side of the latency/throughput trade they sit on:
 
@@ -32,13 +37,28 @@ Engine knobs, and which side of the latency/throughput trade they sit on:
   * ``pipeline_depth`` (default 2) — throughput: gathers kept in flight;
     deeper hides burstier IO but holds more gathered tiles in host memory.
   * ``q_block`` — grain: smaller tiles pipeline finer (better overlap →
-    throughput) but add per-tile dispatch overhead (worse at RAM speeds).
+    throughput) but add per-tile dispatch overhead; the per-batch operand
+    cache removes the re-fetch tax tiles used to pay for shared clusters,
+    so fine grain wins whenever tiles are probe-coherent.
+  * ``operand_cache`` ("auto"/"on"/"off") — throughput on the BlockStore
+    path: each cluster block crosses the store (ring hop, cache lock, mmap
+    read) once per batch; ``stats.blocks_reused`` counts the savings.
   * ``adaptive_u_cap`` (default on) — both: slot tables sized from the
-    observed post-prune unique-cluster counts in power-of-two buckets, so
+    observed post-prune unique-cluster counts in bounded buckets, so
     selective filters scan small tables (latency AND throughput) at a
-    bounded compile cost (≤ len(buckets) scan shapes, ever).
+    bounded compile cost; ``u_cap_ladder="fine"`` adds ×1.5 midpoints.
   * ``prune`` / ``t_max`` — latency under filters: drop provably-empty
-    probes at plan time / re-widen to recover recall.
+    probes at plan time / re-widen to recover recall (``t_max="auto"``
+    picks the widening per batch from the summaries' passing mass).
+
+Deployment shape (sharded-pod): every pod holds ONE full index copy on
+disk; the consistent-hash ring splits *cache* ownership of the cluster id
+space, so the pod fleet's aggregate RAM holds each hot cluster once
+instead of once per pod.  A pod plans locally (centroids + summaries are
+KiB-resident), fetches its plan's blocks from the ring (its own cache for
+owned clusters, peers over the socket transport for the rest, L1 for
+repeats), and scans locally.  Ring membership changes move ownership only
+— results stay bit-identical.
 
     PYTHONPATH=src python examples/filtered_search_serving.py
 """
@@ -201,6 +221,38 @@ def main():
                   f"{int(pruned.n_scanned.sum())} vs "
                   f"{int(unpruned.n_scanned.sum())} rows, slot table "
                   f"{engine.stats.last_u_cap} slots, ids identical ✓")
+            print(f"operand cache: {engine.stats.blocks_fetched} blocks "
+                  f"fetched, {engine.stats.blocks_reused} reused across "
+                  f"tiles of their batch")
+
+        # --- sharded cluster cache: one index copy per pod, a consistent-
+        # hash ring splitting cache ownership of the cluster-id space.
+        # Three in-process peers stand in for three pods (swap the loopback
+        # transport for the socket transport and this is the wire layout);
+        # the engine's fetch stage routes each tile's fetch list per owner
+        # and fetches owners concurrently.  Removing a node mid-run only
+        # moves ownership — ids stay identical.
+        from repro.core import blockstore as bstore
+
+        store = bstore.open_sharded(ckpt, n_nodes=3, transport="loopback")
+        try:
+            with DiskIVFIndex.open(ckpt) as disk:
+                engine = SearchEngine(disk, k=k, n_probes=7, q_block=8,
+                                      pipeline="on", blockstore=store)
+                res = engine.search(queries, fspec)
+                assert (np.asarray(ram_ids) == np.asarray(res.ids)).all()
+                s = store.stats()
+                served = {n: v["blocks_served"]
+                          for n, v in s["per_node"].items()}
+                print(f"sharded cache (3 nodes): ids identical to RAM ✓, "
+                      f"blocks per node {served}, L1 hits {s['l1_hits']}")
+                store.remove_node(1)  # pod leaves; ring rebalances
+                res2 = engine.search(queries, fspec)
+                assert (np.asarray(ram_ids) == np.asarray(res2.ids)).all()
+                print("node 1 removed mid-run: only ownership moved, ids "
+                      "identical ✓")
+        finally:
+            store.close()
 
 
 if __name__ == "__main__":

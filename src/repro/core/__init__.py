@@ -45,6 +45,18 @@ from repro.core.search import (
     search_centroids,
     search_reference,
 )
+from repro.core.blockstore import (
+    BlockSpec,
+    BlockStoreServer,
+    HashRing,
+    LocalBlockStore,
+    LoopbackTransport,
+    RangeOwnership,
+    ResidentBlockStore,
+    ShardedBlockStore,
+    SocketTransport,
+    open_sharded,
+)
 from repro.core.disk import ClusterCache, DiskIVFIndex
 from repro.core.engine import (
     SearchEngine,

@@ -1,0 +1,830 @@
+"""Pluggable cluster-block fetch layer: the engine's fetch stage as a protocol.
+
+The paper's disk-based IVF-Flat design is cost-effective because one index
+copy can serve heavy traffic — but a fetch path welded to a single-process
+``ClusterCache`` forces every serving host to hold its own cache, and every
+query tile to re-assemble blocks it shares with sibling tiles.  PipeANN's
+SSD-resident pipelining and SIEVE's collection-of-indexes framing both treat
+storage access as a first-class, composable layer; this module is that layer
+for the search engine:
+
+    BlockStore protocol
+        get(cluster_ids)  -> {cid: record}      synchronous fetch
+        submit(ids)/wait(h)                     async pair the pipelined
+                                                executor drives
+        stats()                                 observability
+
+    ResidentBlockStore   RAM tier — slices the resident [K, Vpad, ...]
+                         arrays per cluster (trivial; the engine's RAM fast
+                         path skips even this and passes the arrays whole).
+    LocalBlockStore      today's disk tier — ShardReader + ClusterCache,
+                         behavior-identical to the pre-protocol pager.
+    ShardedBlockStore    a consistent-hash ring over N peer stores keyed on
+                         cluster id: each pod holds ONE index copy, the ring
+                         decides whose cache owns each cluster, per-tile
+                         fetch lists are split per owner and fetched
+                         concurrently, and remote blocks land in a small
+                         local L1 so repeat probes don't re-cross the ring.
+
+Transports are pluggable: :class:`LoopbackTransport` keeps peers in-process
+(tests, benches, single-host multi-cache experiments); the length-prefixed
+:class:`SocketTransport` / :class:`BlockStoreServer` pair is the thin wire
+path for real pods (npz-encoded records, no pickle).
+
+Exactness invariant: every store returns the same per-cluster records, so
+any store composed with the engine yields results bit-identical to the sync
+local path.  Ring membership changes (node added/removed) only change
+*where* blocks come from — never results.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import io
+import socket
+import struct
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Record = Dict[str, np.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Block geometry + assembly (shared by every store and the engine)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """Static geometry of one cluster record — everything an assembler needs
+    to pack records into the kernel's batch-local ``[S, Vpad, ...]`` blocks."""
+
+    vpad: int
+    dim: int
+    n_attrs: int
+    has_norms: bool
+    quantized: bool
+    store_dtype: np.dtype
+
+    @classmethod
+    def from_index(cls, index) -> "BlockSpec":
+        """Derives the spec from any index with the resident surface
+        (IVFFlatIndex or DiskIVFIndex)."""
+        norms = getattr(index, "norms", None)
+        has_norms = (
+            index.man["has_norms"] if hasattr(index, "man")
+            else norms is not None
+        )
+        return cls(
+            vpad=int(index.vpad), dim=int(index.spec.dim),
+            n_attrs=int(index.spec.n_attrs), has_norms=bool(has_norms),
+            quantized=bool(index.quantized),
+            store_dtype=np.dtype(index.store_dtype),
+        )
+
+    @classmethod
+    def from_manifest(cls, man: dict) -> "BlockSpec":
+        from repro.core import storage
+
+        spec = storage.spec_from_manifest(man)
+        return cls(
+            vpad=int(man["vpad"]), dim=int(spec.dim),
+            n_attrs=int(spec.n_attrs), has_norms=bool(man["has_norms"]),
+            quantized=bool(man["quantized"]),
+            store_dtype=np.dtype(storage.np_dtype(man["store_dtype"])),
+        )
+
+    @property
+    def fields(self) -> Tuple[str, ...]:
+        f = ["vectors", "attrs", "ids"]
+        if self.has_norms:
+            f.append("norms")
+        if self.quantized:
+            f.append("scales")
+        return tuple(f)
+
+
+def first_need_unique(flat: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Unique cluster ids in *first-occurrence* order + inverse map.
+
+    Fetches load (and a cache's prefetch thread streams) clusters in exactly
+    the order the scan will first touch them — the same ordering contract as
+    :func:`repro.core.probes.fetch_order`.
+    """
+    uniq_sorted, first, inv_sorted = np.unique(
+        flat, return_index=True, return_inverse=True
+    )
+    order = np.argsort(first, kind="stable")  # sorted-pos → need order
+    rank = np.empty_like(order)
+    rank[order] = np.arange(order.shape[0])
+    return uniq_sorted[order], rank[inv_sorted]
+
+
+def assemble_blocks(flat: np.ndarray, uniq: np.ndarray, local: np.ndarray,
+                    recs: Dict[int, Record], spec: BlockSpec,
+                    as_device: bool = False) -> Tuple:
+    """Packs per-cluster records into batch-local ``[S, Vpad, ...]`` blocks.
+
+    ``flat`` is the slot list (sets S), ``uniq``/``local`` the first-need
+    unique ids and slot→row map from :func:`first_need_unique`, ``recs`` the
+    records a :class:`BlockStore` returned.  ``as_device`` additionally moves
+    the blocks onto the default device — on an async fetch worker that hides
+    the host→device copy behind the previous tile's scan.
+    """
+    s = flat.shape[0]
+    vpad, d, m = spec.vpad, spec.dim, spec.n_attrs
+    vectors = np.zeros((s, vpad, d), spec.store_dtype)
+    attrs = np.zeros((s, vpad, m), np.int16)
+    ids = np.full((s, vpad), -1, np.int32)
+    norms = np.zeros((s, vpad), np.float32) if spec.has_norms else None
+    scales = np.ones((s, vpad), np.float32) if spec.quantized else None
+    for i, cid in enumerate(uniq):
+        rec = recs[int(cid)]
+        vectors[i] = rec["vectors"]
+        attrs[i] = rec["attrs"]
+        ids[i] = rec["ids"]
+        if norms is not None:
+            norms[i] = rec["norms"]
+        if scales is not None:
+            scales[i] = rec["scales"]
+    out = (local.astype(np.int32), vectors, attrs, ids, norms, scales)
+    if as_device:
+        import jax
+
+        out = tuple(None if a is None else jax.device_put(a) for a in out)
+        jax.block_until_ready([a for a in out if a is not None])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Ownership: who serves a cluster
+# ---------------------------------------------------------------------------
+
+
+def _hash_point(key: str) -> int:
+    """Stable 64-bit ring point for a (node, replica) label."""
+    return int.from_bytes(
+        hashlib.blake2b(key.encode(), digest_size=8).digest(), "big"
+    )
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer: cluster id → ring position."""
+    with np.errstate(over="ignore"):
+        z = np.asarray(x).astype(np.uint64) + np.uint64(0x9E3779B97F4A7C15)
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return z ^ (z >> np.uint64(31))
+
+
+class HashRing:
+    """Consistent-hash ring over node ids, keyed on cluster id.
+
+    Each node contributes ``replicas`` virtual points; a cluster is owned by
+    the first point clockwise from its hash.  Removing a node therefore only
+    reassigns *that node's* clusters (its points vanish, everything else
+    keeps its owner) — the property that makes ring rebalance a pure
+    data-movement event: results never change, only where blocks come from.
+    """
+
+    def __init__(self, nodes: Sequence, replicas: int = 64):
+        nodes = tuple(nodes)
+        if not nodes:
+            raise ValueError("HashRing needs at least one node")
+        self.nodes = nodes
+        self.replicas = replicas
+        pts = []
+        for n in nodes:
+            for r in range(replicas):
+                pts.append((_hash_point(f"{n}#{r}"), n))
+        pts.sort(key=lambda p: p[0])
+        self._hashes = np.asarray([p[0] for p in pts], np.uint64)
+        self._owners = np.asarray([nodes.index(p[1]) for p in pts], np.int64)
+
+    def owner_of(self, cluster_ids) -> np.ndarray:
+        """Vectorized owner lookup: [n] cluster ids → [n] node ids."""
+        h = _mix64(np.asarray(cluster_ids, np.int64))
+        idx = np.searchsorted(self._hashes, h, side="right")
+        idx = idx % len(self._hashes)
+        return np.asarray(self.nodes, object)[self._owners[idx]] \
+            if any(not isinstance(n, (int, np.integer)) for n in self.nodes) \
+            else np.asarray(self.nodes, np.int64)[self._owners[idx]]
+
+    def without(self, node) -> "HashRing":
+        """A new ring with ``node`` removed (its clusters reassigned)."""
+        rest = tuple(n for n in self.nodes if n != node)
+        return HashRing(rest, replicas=self.replicas)
+
+
+@dataclasses.dataclass(frozen=True)
+class RangeOwnership:
+    """Contiguous range sharding: node ``s`` owns ``[s·k_local, (s+1)·k_local)``.
+
+    The same ownership map the pod-scale dispatch uses
+    (:func:`repro.core.distributed.dispatch_probes`): handing one instance to
+    both the dispatch and a :class:`ShardedBlockStore` makes shard routing
+    and cache routing agree — a chip's probes always hit its own pod's cache.
+    ``owner_of``/``local_of`` are jnp-compatible (plain integer arithmetic),
+    so the dispatch can trace them.
+    """
+
+    n_nodes: int
+    k_local: int
+
+    @property
+    def nodes(self) -> Tuple[int, ...]:
+        return tuple(range(self.n_nodes))
+
+    def owner_of(self, cluster_ids):
+        return cluster_ids // self.k_local
+
+    def local_of(self, cluster_ids):
+        return cluster_ids % self.k_local
+
+
+# ---------------------------------------------------------------------------
+# Stores
+# ---------------------------------------------------------------------------
+
+
+# Guards first-time pool creation for every store instance: pool creation is
+# a rare, cheap event, and a shared lock (vs a lazily-created per-instance
+# one) closes the check-then-act race when one store is shared by several
+# server threads — two racing first submits must not build two pools, or the
+# single-worker submission-order guarantee silently breaks.
+_POOL_INIT_LOCK = threading.Lock()
+
+
+class _AsyncStoreMixin:
+    """submit/wait over a single-worker pool: handles resolve strictly in
+    submission order, which is what keeps the pipelined executor's per-tile
+    waits aligned with its per-tile submits."""
+
+    _pool: Optional[ThreadPoolExecutor] = None
+    _pool_closed: bool = False
+
+    def _ensure_pool(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            with _POOL_INIT_LOCK:
+                if self._pool_closed:
+                    raise RuntimeError(
+                        f"submit on a closed {type(self).__name__}"
+                    )
+                if self._pool is None:
+                    self._pool = ThreadPoolExecutor(
+                        max_workers=1,
+                        thread_name_prefix=f"{type(self).__name__}-fetch",
+                    )
+        return self._pool
+
+    def submit(self, cluster_ids) -> Future:
+        """Starts fetching ``cluster_ids`` off-thread; returns a handle.
+        Raises ``RuntimeError`` after :meth:`close` — a late submit against
+        a stopped cache must surface, not quietly leak a fresh pool."""
+        return self._ensure_pool().submit(self.get, cluster_ids)
+
+    def wait(self, handle: Future) -> Dict[int, Record]:
+        """Blocks until a :meth:`submit` handle's records are ready."""
+        return handle.result()
+
+    def _shutdown_pool(self):
+        with _POOL_INIT_LOCK:
+            self._pool_closed = True
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
+
+
+class ResidentBlockStore(_AsyncStoreMixin):
+    """RAM tier: per-cluster views of the resident ``[K, Vpad, ...]`` arrays.
+
+    Trivial by design — it exists so the same engine/test/bench code can
+    treat the RAM tier as one more :class:`BlockStore` (e.g. as a loopback
+    peer in a sharded ring) without a checkpoint on disk.  The engine's
+    resident fast path bypasses it and passes the arrays whole.
+    """
+
+    def __init__(self, index):
+        self.index = index
+        self.spec = BlockSpec.from_index(index)
+        self._gets = 0
+        self._blocks = 0
+
+    def get(self, cluster_ids) -> Dict[int, Record]:
+        cids = np.asarray(cluster_ids, np.int64).reshape(-1)
+        self._gets += 1
+        self._blocks += len(cids)
+        out: Dict[int, Record] = {}
+        for cid in cids:
+            cid = int(cid)
+            rec: Record = {
+                "vectors": np.asarray(self.index.vectors[cid]),
+                "attrs": np.asarray(self.index.attrs[cid]),
+                "ids": np.asarray(self.index.ids[cid]),
+            }
+            if self.spec.has_norms:
+                rec["norms"] = np.asarray(self.index.norms[cid], np.float32)
+            if self.spec.quantized:
+                rec["scales"] = np.asarray(self.index.scales[cid], np.float32)
+            out[cid] = rec
+        return out
+
+    def stats(self) -> dict:
+        return dict(kind="resident", gets=self._gets, blocks=self._blocks)
+
+    def close(self):
+        self._shutdown_pool()
+
+
+class LocalBlockStore(_AsyncStoreMixin):
+    """One host's disk tier: ShardReader + ClusterCache behind the protocol.
+
+    Behavior-identical to the pre-protocol pager: ``get`` pages records
+    through the cache (misses load inline, deduplicated against in-flight
+    prefetches), and the gather convenience methods reproduce the old
+    ``DiskIVFIndex.gather`` / ``gather_submit`` / ``gather_wait`` contract
+    exactly — including assembling + device-putting blocks on the fetch
+    worker so the host→device copy hides behind the previous tile's scan.
+    """
+
+    def __init__(self, reader, cache, spec: BlockSpec, name: str = "local"):
+        self.reader = reader
+        self.cache = cache
+        self.spec = spec
+        self.name = name
+
+    @classmethod
+    def open(cls, directory: str, *, capacity_records: Optional[int] = None,
+             pin_fraction: float = 0.5, pin_refresh: int = 64,
+             name: str = "local") -> "LocalBlockStore":
+        """Opens one peer's view of a layout-v2 checkpoint (one index copy
+        per pod: every node opens the same directory, the ring decides which
+        node's cache serves each cluster)."""
+        from repro.core import storage
+        from repro.core.disk import ClusterCache, ShardReader
+
+        man = storage.load_manifest(directory)
+        storage.check_complete(directory, man)
+        reader = ShardReader(directory, man)
+        cap = (man["n_clusters"] if capacity_records is None
+               else min(int(capacity_records), man["n_clusters"]))
+        cache = ClusterCache(
+            reader, capacity_records=max(cap, 1),
+            n_clusters=man["n_clusters"], pin_fraction=pin_fraction,
+            pin_refresh=pin_refresh,
+        )
+        return cls(reader, cache, BlockSpec.from_manifest(man), name=name)
+
+    def get(self, cluster_ids) -> Dict[int, Record]:
+        cids = np.asarray(cluster_ids, np.int64).reshape(-1)
+        if len(cids) == 0:
+            return {}
+        return self.cache.get_many(cids)
+
+    # ---- the old DiskIVFIndex gather surface, now store-backed ----
+    def gather(self, slot_cluster) -> Tuple:
+        """Synchronous whole-list gather: records → ``[S, Vpad, ...]``
+        blocks with slot-local ids (static shapes, no recompiles)."""
+        flat = np.asarray(slot_cluster).reshape(-1)
+        uniq, local = first_need_unique(flat)
+        return assemble_blocks(flat, uniq, local, self.get(uniq), self.spec)
+
+    def gather_submit(self, slot_cluster) -> Future:
+        """Async gather: pages + assembles + device-puts off-thread.  The
+        worker's misses load inline on its own thread — deliberately NOT
+        routed through the cache's ``prefetch``, which would mark every miss
+        in-flight an instant before ``get_many`` sees it and turn the hit-
+        rate signal into a constant 1.0."""
+        flat = np.asarray(slot_cluster).reshape(-1)
+        uniq, local = first_need_unique(flat)
+        return self._ensure_pool().submit(
+            lambda: assemble_blocks(flat, uniq, local, self.get(uniq),
+                                    self.spec, as_device=True)
+        )
+
+    def gather_wait(self, handle: Future) -> Tuple:
+        return handle.result()
+
+    def stats(self) -> dict:
+        s = self.cache.stats
+        return dict(
+            kind="local", name=self.name, hits=s.hits, misses=s.misses,
+            evictions=s.evictions, prefetched=s.prefetched, errors=s.errors,
+            hit_rate=round(self.cache.hit_rate, 4),
+            resident_bytes=self.cache.resident_bytes(),
+        )
+
+    def close(self):
+        self._shutdown_pool()
+        self.cache.stop()
+
+
+# ---------------------------------------------------------------------------
+# Transports
+# ---------------------------------------------------------------------------
+
+
+class LoopbackTransport:
+    """In-process peer: requests go straight to the peer store.  The
+    test/bench transport — and the honest model of a pod talking to its own
+    co-located store."""
+
+    def __init__(self, store):
+        self.store = store
+
+    def fetch(self, cluster_ids) -> Dict[int, Record]:
+        return self.store.get(cluster_ids)
+
+    def stats(self) -> dict:
+        return self.store.stats()
+
+    def close(self):
+        pass
+
+
+_FRAME = struct.Struct(">Q")  # 8-byte big-endian payload length
+
+
+def _send_frame(sock: socket.socket, payload: bytes):
+    sock.sendall(_FRAME.pack(len(payload)) + payload)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError("peer closed mid-frame")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def _recv_frame(sock: socket.socket) -> bytes:
+    (n,) = _FRAME.unpack(_recv_exact(sock, _FRAME.size))
+    return _recv_exact(sock, n)
+
+
+def _encode_records(recs: Dict[int, Record]) -> bytes:
+    """npz-encodes records as ``{cid}:{field}`` arrays — dtype/shape travel
+    in the npz header, and decoding never unpickles objects."""
+    buf = io.BytesIO()
+    np.savez(buf, **{
+        f"{cid}:{field}": arr
+        for cid, rec in recs.items() for field, arr in rec.items()
+    })
+    return buf.getvalue()
+
+
+def _decode_records(payload: bytes) -> Dict[int, Record]:
+    out: Dict[int, Record] = {}
+    with np.load(io.BytesIO(payload), allow_pickle=False) as z:
+        for key in z.files:
+            cid_s, field = key.split(":", 1)
+            out.setdefault(int(cid_s), {})[field] = z[key]
+    return out
+
+
+class BlockStoreServer:
+    """Serves a store's blocks over a length-prefixed socket protocol.
+
+    Wire format (both directions): ``[u64 length][payload]``.  Request
+    payload = raw little-endian int64 cluster ids; response payload = npz of
+    ``{cid}:{field}`` arrays.  One thread per connection; ``port=0`` binds an
+    ephemeral port (read it back from ``.port``).
+    """
+
+    def __init__(self, store, host: str = "127.0.0.1", port: int = 0):
+        self.store = store
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(16)
+        self.host, self.port = self._sock.getsockname()
+        self._stopped = threading.Event()
+        self._conns: set = set()
+        self._conns_lock = threading.Lock()
+        self._accepter = threading.Thread(target=self._accept_loop,
+                                          daemon=True)
+        self._accepter.start()
+
+    def _accept_loop(self):
+        while not self._stopped.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                return  # listening socket closed by close()
+            with self._conns_lock:
+                self._conns.add(conn)
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             daemon=True).start()
+
+    def _serve_conn(self, conn: socket.socket):
+        try:
+            while not self._stopped.is_set():
+                try:
+                    req = _recv_frame(conn)
+                except (ConnectionError, OSError):
+                    return
+                cids = np.frombuffer(req, dtype="<i8")
+                _send_frame(conn, _encode_records(self.store.get(cids)))
+        finally:
+            conn.close()
+            # drop the tracked handle: long-lived peers see reconnecting
+            # clients, and dead sockets must not accumulate until close()
+            with self._conns_lock:
+                self._conns.discard(conn)
+
+    def close(self):
+        self._stopped.set()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        with self._conns_lock:
+            conns = list(self._conns)
+        for c in conns:
+            try:
+                c.close()
+            except OSError:
+                pass
+        self._accepter.join(timeout=5)
+
+
+class SocketTransport:
+    """Client half of the length-prefixed block protocol.  One persistent
+    connection, serialized under a lock (the sharded store already fans out
+    across owners, so per-owner serialization costs nothing extra)."""
+
+    def __init__(self, host: str, port: int, timeout: float = 30.0):
+        self.host, self.port, self.timeout = host, port, timeout
+        self._sock: Optional[socket.socket] = None
+        self._lock = threading.Lock()
+        self.requests = 0
+        self.blocks = 0
+
+    def _connect(self) -> socket.socket:
+        if self._sock is None:
+            self._sock = socket.create_connection(
+                (self.host, self.port), timeout=self.timeout
+            )
+        return self._sock
+
+    def fetch(self, cluster_ids) -> Dict[int, Record]:
+        cids = np.asarray(cluster_ids, np.int64).reshape(-1)
+        if len(cids) == 0:
+            return {}
+        with self._lock:
+            try:
+                sock = self._connect()
+                _send_frame(sock, cids.astype("<i8").tobytes())
+                payload = _recv_frame(sock)
+            except (ConnectionError, OSError):
+                # one reconnect: servers drop idle connections
+                self._sock = None
+                sock = self._connect()
+                _send_frame(sock, cids.astype("<i8").tobytes())
+                payload = _recv_frame(sock)
+            self.requests += 1
+            self.blocks += len(cids)
+        return _decode_records(payload)
+
+    def stats(self) -> dict:
+        return dict(kind="socket", addr=f"{self.host}:{self.port}",
+                    requests=self.requests, blocks=self.blocks)
+
+    def close(self):
+        with self._lock:
+            if self._sock is not None:
+                try:
+                    self._sock.close()
+                except OSError:
+                    pass
+                self._sock = None
+
+
+# ---------------------------------------------------------------------------
+# The sharded store
+# ---------------------------------------------------------------------------
+
+
+class ShardedBlockStore(_AsyncStoreMixin):
+    """Consistent-hash sharded cluster fetch over N peer stores.
+
+    ``transports`` maps node id → transport; ``ownership`` (default: a
+    :class:`HashRing` over the node ids) decides which peer serves each
+    cluster.  ``get`` splits the request per owner
+    (:func:`repro.core.probes.split_fetch_by_owner` — per-owner sublists keep
+    first-need order) and fetches owners concurrently; fetched blocks land in
+    a small local L1 LRU so repeat probes within a host don't re-cross the
+    ring.  ``self_node`` marks the co-located peer (its blocks skip the L1 —
+    that peer's own cache already holds them — and don't count as remote).
+
+    Ring membership is mutable: :meth:`remove_node` / :meth:`add_node`
+    rebuild the ring mid-run.  Only ownership moves; results are
+    bit-identical before and after (every peer serves the same records).
+    """
+
+    def __init__(self, transports: Dict[int, object], *,
+                 ownership=None, l1_records: int = 64,
+                 self_node: Optional[int] = None,
+                 owned_stores: Sequence = (), owned_servers: Sequence = ()):
+        if not transports:
+            raise ValueError("ShardedBlockStore needs at least one transport")
+        self.transports = dict(transports)
+        self.ownership = ownership or HashRing(sorted(self.transports))
+        self.self_node = self_node
+        self.l1_records = l1_records
+        self._l1: "collections.OrderedDict[int, Record]" = (
+            collections.OrderedDict()
+        )
+        self._l1_lock = threading.Lock()
+        self._fan = ThreadPoolExecutor(
+            max_workers=max(len(self.transports), 1),
+            thread_name_prefix="shard-fetch",
+        )
+        self._stats_lock = threading.Lock()
+        self.l1_hits = 0
+        self.l1_misses = 0
+        self.remote_blocks = 0
+        self.node_blocks: Dict[int, int] = {n: 0 for n in self.transports}
+        # teardown ownership (stores/servers built by open_sharded)
+        self._owned_stores = list(owned_stores)
+        self._owned_servers = list(owned_servers)
+
+    # ---- ring membership ----
+    def remove_node(self, node: int):
+        """Drops a peer from the ring.  Its clusters re-route to the
+        surviving peers (consistent hashing moves only those); results stay
+        bit-identical — only where blocks come from changes."""
+        if len(self.transports) <= 1:
+            raise ValueError("cannot remove the last node")
+        if node not in self.transports:
+            raise KeyError(node)
+        if isinstance(self.ownership, HashRing):
+            self.ownership = self.ownership.without(node)
+        else:
+            raise ValueError(
+                "remove_node needs a HashRing ownership (static maps like "
+                "RangeOwnership have no rebalance story)"
+            )
+        t = self.transports.pop(node)
+        t.close()
+        if self.self_node == node:
+            self.self_node = None
+
+    def add_node(self, node: int, transport):
+        if node in self.transports:
+            raise KeyError(f"node {node} already present")
+        if not isinstance(self.ownership, HashRing):
+            raise ValueError("add_node needs a HashRing ownership")
+        self.transports[node] = transport
+        self.node_blocks.setdefault(node, 0)
+        self.ownership = HashRing(
+            sorted(self.transports), replicas=self.ownership.replicas
+        )
+
+    # ---- fetch ----
+    def _l1_get(self, cids: np.ndarray) -> Tuple[Dict[int, Record], List[int]]:
+        found: Dict[int, Record] = {}
+        missing: List[int] = []
+        with self._l1_lock:
+            for cid in cids:
+                cid = int(cid)
+                rec = self._l1.get(cid)
+                if rec is None:
+                    missing.append(cid)
+                else:
+                    self._l1.move_to_end(cid)
+                    found[cid] = rec
+        with self._stats_lock:
+            self.l1_hits += len(found)
+            self.l1_misses += len(missing)
+        return found, missing
+
+    def _l1_put(self, recs: Dict[int, Record]):
+        with self._l1_lock:
+            for cid, rec in recs.items():
+                self._l1[cid] = rec
+                self._l1.move_to_end(cid)
+            while len(self._l1) > self.l1_records:
+                self._l1.popitem(last=False)
+
+    def get(self, cluster_ids) -> Dict[int, Record]:
+        from repro.core import probes as probes_lib
+
+        cids = np.asarray(cluster_ids, np.int64).reshape(-1)
+        if len(cids) == 0:
+            return {}
+        # self-owned clusters never enter the L1 (the co-located peer's own
+        # cache holds them), so they bypass the L1 probe entirely — probing
+        # would book a structural miss per lookup and depress the reported
+        # hit rate below what any l1_records setting could fix
+        if self.self_node is not None:
+            owners_all = np.asarray(self.ownership.owner_of(cids))
+            self_cids = cids[owners_all == self.self_node]
+            peer_cids = cids[owners_all != self.self_node]
+        else:
+            self_cids = cids[:0]
+            peer_cids = cids
+        out, missing = self._l1_get(peer_cids)
+        missing = list(self_cids) + missing
+        if not missing:
+            return out
+        per_owner = probes_lib.split_fetch_by_owner(
+            np.asarray(missing, np.int64), self.ownership.owner_of
+        )
+        futs = {
+            owner: self._fan.submit(self.transports[owner].fetch, sub)
+            for owner, sub in per_owner.items()
+        }
+        for owner, fut in futs.items():
+            recs = fut.result()
+            out.update(recs)
+            with self._stats_lock:
+                self.node_blocks[owner] = (
+                    self.node_blocks.get(owner, 0) + len(recs)
+                )
+                if owner != self.self_node:
+                    self.remote_blocks += len(recs)
+            if owner != self.self_node:
+                self._l1_put(recs)
+        return out
+
+    def stats(self) -> dict:
+        with self._stats_lock:
+            per_node = {}
+            for n, t in self.transports.items():
+                s = t.stats() if hasattr(t, "stats") else {}
+                s = dict(s)
+                s["blocks_served"] = self.node_blocks.get(n, 0)
+                per_node[n] = s
+            return dict(
+                kind="sharded", nodes=sorted(self.transports),
+                self_node=self.self_node, l1_hits=self.l1_hits,
+                l1_misses=self.l1_misses, l1_records=len(self._l1),
+                remote_blocks=self.remote_blocks, per_node=per_node,
+            )
+
+    def close(self):
+        self._shutdown_pool()
+        self._fan.shutdown(wait=True)
+        for t in self.transports.values():
+            t.close()
+        for s in self._owned_servers:
+            s.close()
+        for st in self._owned_stores:
+            st.close()
+
+
+def open_sharded(directory: str, *, n_nodes: int,
+                 transport: str = "loopback",
+                 capacity_records: Optional[int] = None,
+                 l1_records: int = 64, self_node: Optional[int] = 0,
+                 pin_fraction: float = 0.5,
+                 pin_refresh: int = 64) -> ShardedBlockStore:
+    """Opens an N-node sharded fetch layer over one checkpoint directory.
+
+    Models the sharded-pod deployment (one index copy per pod, the ring
+    splits *cache* ownership): every node opens its own reader + cache over
+    the same checkpoint; ``capacity_records`` is the per-node cache cap.
+    ``transport="socket"`` additionally runs each peer behind a
+    :class:`BlockStoreServer` and talks to it over the wire protocol — the
+    in-process rehearsal of the real pod topology.  ``self_node`` (the
+    co-located peer whose blocks skip the L1) only applies to the loopback
+    transport: behind a socket every peer costs a wire round trip, node 0
+    included, so its blocks belong in the L1 like everyone else's.  The
+    returned store owns its nodes (and servers): ``close()`` tears
+    everything down.
+    """
+    if transport not in ("loopback", "socket"):
+        raise ValueError(f"transport must be 'loopback'|'socket', got "
+                         f"{transport!r}")
+    if transport != "loopback":
+        self_node = None
+    stores = [
+        LocalBlockStore.open(
+            directory, capacity_records=capacity_records,
+            pin_fraction=pin_fraction, pin_refresh=pin_refresh,
+            name=f"node{i}",
+        )
+        for i in range(n_nodes)
+    ]
+    servers: List[BlockStoreServer] = []
+    if transport == "loopback":
+        transports = {i: LoopbackTransport(s) for i, s in enumerate(stores)}
+    else:
+        servers = [BlockStoreServer(s) for s in stores]
+        transports = {
+            i: SocketTransport(srv.host, srv.port)
+            for i, srv in enumerate(servers)
+        }
+    return ShardedBlockStore(
+        transports, ownership=HashRing(range(n_nodes)),
+        l1_records=l1_records, self_node=self_node,
+        owned_stores=stores, owned_servers=servers,
+    )

@@ -23,10 +23,13 @@ layout-v2 checkpoint (``core/storage.py``):
     pins the most-probed clusters (SIEVE's hot-index placement) — hot lists
     stay mapped across batches, cold lists churn through the LRU tail.
 
-Search runs through the *same* tiled kernel as the RAM path:
-``search_fused_tiled(..., gather_fn=disk_index.gather)`` swaps the kernel's
-full ``[K, Vpad, ...]`` operands for batch-local gathered ``[S, Vpad, ...]``
-blocks with slot-local cluster ids — bit-identical results, bounded memory.
+Search runs through the *same* tiled kernel as the RAM path: the engine's
+fetch stage pulls records through the index's
+:class:`repro.core.blockstore.LocalBlockStore` (reader + cache behind the
+pluggable BlockStore protocol — swap in a ``ShardedBlockStore`` to split
+cache ownership across pods) and swaps the kernel's full ``[K, Vpad, ...]``
+operands for batch-local gathered ``[S, Vpad, ...]`` blocks with slot-local
+cluster ids — bit-identical results, bounded memory.
 """
 
 from __future__ import annotations
@@ -36,12 +39,13 @@ import dataclasses
 import os
 import queue
 import threading
-from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import blockstore as blockstore_lib
 from repro.core import storage
 from repro.core.hybrid import HybridSpec
 
@@ -125,10 +129,24 @@ class ClusterCache:
                  pin_refresh: int = 64):
         if capacity_records < 1:
             raise ValueError("capacity_records must be >= 1")
+        if not 0.0 <= pin_fraction <= 1.0:
+            raise ValueError(f"pin_fraction must be in [0, 1], got "
+                             f"{pin_fraction}")
         self.reader = reader
         self.record_nbytes = reader.stride
         self.capacity_records = capacity_records
-        self.pin_records = int(pin_fraction * capacity_records)
+        # Pin-aware eviction accounting: at least one slot always stays
+        # evictable.  A pin_refresh swap that pinned the whole capacity left
+        # _insert_locked no legal victim; inserting without evicting would
+        # push resident_bytes() past the budget, and the old fallback that
+        # prevented that instead evicted a *pinned* entry — the pin contract
+        # broke exactly when pinning mattered most.  Capping pins at
+        # capacity-1 makes eviction always find an unpinned victim, so
+        # resident_bytes() ≤ capacity_records·stride holds through every
+        # swap AND pinned entries are never evicted (asserted in the
+        # lifecycle tests).
+        self.pin_records = min(int(pin_fraction * capacity_records),
+                               max(capacity_records - 1, 0))
         self.pin_refresh = pin_refresh
         self.stats = CacheStats()
         self._entries: "collections.OrderedDict[int, dict]" = (
@@ -347,14 +365,13 @@ class DiskIVFIndex:
         # the fetch list.  None for pre-v2.1 checkpoints (no pruning).
         self.summaries = summaries
         self._overhead = _resident_overhead(centroids, counts, summaries)
-        # Single-worker pool for gather_submit: one IO+assembly thread is
-        # the pipelined executor's fetch stage, and the single worker is
-        # what guarantees gathers are served strictly in submission order.
-        # Created eagerly (the OS thread itself only spawns on first
-        # submit) — lazy creation would race when one open index is shared
-        # by several engines/server threads.
-        self._gather_pool: Optional[ThreadPoolExecutor] = ThreadPoolExecutor(
-            max_workers=1, thread_name_prefix="gather"
+        # The fetch layer: this host's reader + cache behind the BlockStore
+        # protocol.  The search engine routes its fetch stage through it
+        # (or through a ShardedBlockStore composed over several of them);
+        # the gather* methods below stay as thin delegates for callers of
+        # the pre-protocol surface.
+        self.blockstore = blockstore_lib.LocalBlockStore(
+            reader, cache, blockstore_lib.BlockSpec.from_manifest(man)
         )
 
     @classmethod
@@ -416,59 +433,13 @@ class DiskIVFIndex:
         """Current bytes held in host memory for this index."""
         return self._overhead + self.cache.resident_bytes()
 
-    # ---- paging ----
+    # ---- paging (delegates to the BlockStore fetch layer) ----
     @staticmethod
     def _first_need_unique(flat: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """Unique cluster ids in *first-occurrence* order + inverse map.
-
-        The gather loads (and the cache's prefetch thread streams) clusters
-        in exactly the order the scan will first touch them — same ordering
-        contract as :func:`repro.core.probes.fetch_order`.
-        """
-        uniq_sorted, first, inv_sorted = np.unique(
-            flat, return_index=True, return_inverse=True
-        )
-        order = np.argsort(first, kind="stable")  # sorted-pos → need order
-        rank = np.empty_like(order)
-        rank[order] = np.arange(order.shape[0])
-        return uniq_sorted[order], rank[inv_sorted]
-
-    def _assemble(self, flat: np.ndarray, uniq: np.ndarray,
-                  local: np.ndarray, as_device: bool = False) -> Tuple:
-        """Pages ``uniq`` through the cache (in the given first-need order)
-        and packs the records into batch-local ``[S, Vpad, ...]`` blocks.
-
-        ``as_device`` additionally moves the blocks onto the default device
-        — on the async path that runs on the gather worker, so the
-        host→device copy (tens of ms for MB-scale tiles on CPU) is hidden
-        behind the previous tile's scan instead of paid at scan dispatch.
-        """
-        recs = self.cache.get_many(uniq)
-        s = flat.shape[0]
-        vpad, d, m = self.vpad, self.spec.dim, self.spec.n_attrs
-        vectors = np.zeros((s, vpad, d), self.store_dtype)
-        attrs = np.zeros((s, vpad, m), np.int16)
-        ids = np.full((s, vpad), -1, np.int32)
-        norms = np.zeros((s, vpad), np.float32) if self.man["has_norms"] else None
-        scales = np.ones((s, vpad), np.float32) if self.quantized else None
-        for i, cid in enumerate(uniq):
-            rec = recs[int(cid)]
-            vectors[i] = rec["vectors"]
-            attrs[i] = rec["attrs"]
-            ids[i] = rec["ids"]
-            if norms is not None:
-                norms[i] = rec["norms"]
-            if scales is not None:
-                scales[i] = rec["scales"]
-        out = (local.astype(np.int32), vectors, attrs, ids, norms, scales)
-        if as_device:
-            import jax
-
-            out = tuple(
-                None if a is None else jax.device_put(a) for a in out
-            )
-            jax.block_until_ready([a for a in out if a is not None])
-        return out
+        """Unique cluster ids in *first-occurrence* order + inverse map
+        (moved to :func:`repro.core.blockstore.first_need_unique`; kept as a
+        delegate for the pre-protocol surface)."""
+        return blockstore_lib.first_need_unique(flat)
 
     def gather(self, slot_cluster) -> Tuple:
         """``gather_fn`` for the search engine's scan stage.
@@ -479,36 +450,25 @@ class DiskIVFIndex:
         — static shapes (S = n_tiles·u_cap), so the jitted scan never
         recompiles as the working set shifts.
         """
-        flat = np.asarray(slot_cluster).reshape(-1)
-        uniq, local = self._first_need_unique(flat)
-        return self._assemble(flat, uniq, local)
+        return self.blockstore.gather(slot_cluster)
 
     def gather_submit(self, slot_cluster) -> "Future":
-        """Asynchronous half of the engine's fetch stage: starts paging +
+        """Asynchronous half of the legacy fetch surface: starts paging +
         assembling ``slot_cluster``'s blocks off-thread and returns a handle.
 
-        Slot-level granularity: the worker pages the distinct ids through
-        the cache in first-need order (the same ordering contract as
-        ``probes.fetch_order``), so individual cluster loads land while the
-        caller is still scanning the previous tile.  The worker's misses
-        load inline on its own thread — deliberately NOT routed through
-        ``prefetch``, which would mark every miss in-flight an instant
-        before ``get_many`` sees it and turn the cache's hit-rate signal
-        into a constant 1.0.  ``gather_wait`` must be called exactly once
-        per handle; a load failure is re-raised there.
+        The store's single worker pages the distinct ids through the cache
+        in first-need order and device-puts the assembled blocks, so the
+        host→device copy hides behind the previous tile's scan.
+        ``gather_wait`` must be called exactly once per handle; a load
+        failure is re-raised there.
         """
-        flat = np.asarray(slot_cluster).reshape(-1)
-        uniq, local = self._first_need_unique(flat)
-        if self._gather_pool is None:
-            raise RuntimeError("gather_submit on a closed DiskIVFIndex")
-        return self._gather_pool.submit(self._assemble, flat, uniq, local,
-                                        True)
+        return self.blockstore.gather_submit(slot_cluster)
 
     def gather_wait(self, handle: "Future") -> Tuple:
         """Blocks until a :meth:`gather_submit` handle's blocks are ready and
         returns them (same tuple as :meth:`gather`).  Propagates any read
         failure; the cache is left consistent (no stuck in-flight entries)."""
-        return handle.result()
+        return self.blockstore.gather_wait(handle)
 
     def prefetch(self, cluster_ids):
         """Background-loads clusters (e.g. ``probes.fetch_order`` output)."""
@@ -532,7 +492,11 @@ class DiskIVFIndex:
         search itself, so this costs no extra compilation.
         """
         from repro.core import probes as probes_lib
-        from repro.core.engine import plan_fused_tiled, resolve_prune
+        from repro.core.engine import (
+            plan_fused_tiled,
+            resolve_auto_t_max,
+            resolve_prune,
+        )
 
         q = queries.shape[0]
         qb = min(q_block, ((q + 7) // 8) * 8)
@@ -543,6 +507,12 @@ class DiskIVFIndex:
             summ = None
         else:
             summ = resolve_prune(self, prune)
+        if t_max == "auto":  # same per-batch resolution the engine applies,
+            # so the prefetch plan's width matches the paired search's
+            t_max = resolve_auto_t_max(
+                summ, self.counts, fspec.lo, fspec.hi, n_probes,
+                self.n_clusters,
+            )
         if t_max is not None:
             if t_max < n_probes:  # same validation as search_fused_tiled —
                 # prefetch must not succeed where the paired search raises
@@ -567,8 +537,9 @@ class DiskIVFIndex:
     def search(self, queries, fspec, *, k: int, n_probes: int,
                q_block: int = 64, v_block: int = 256,
                u_cap: Optional[int] = None, backend: Optional[str] = None,
-               prune: str = "auto", t_max: Optional[int] = None,
-               pipeline: str = "off", pipeline_depth: int = 2):
+               prune: str = "auto", t_max=None,
+               pipeline: str = "off", pipeline_depth: int = 2,
+               blockstore=None, operand_cache: str = "auto"):
         """Disk-tier filtered search; same contract (and bit-identical ids)
         as the RAM path's ``search_fused_tiled``.  With summaries resident
         (layout v2.1) and ``prune`` active, clusters the filter excludes are
@@ -581,15 +552,13 @@ class DiskIVFIndex:
             self, k=k, n_probes=n_probes, q_block=q_block, v_block=v_block,
             u_cap=u_cap, backend=backend, prune=prune, t_max=t_max,
             pipeline=pipeline, pipeline_depth=pipeline_depth,
+            blockstore=blockstore, operand_cache=operand_cache,
         )
         return eng.search(queries, fspec)
 
     def close(self):
-        """Stops the prefetch thread and the gather pool.  Idempotent."""
-        self.cache.stop()
-        if self._gather_pool is not None:
-            self._gather_pool.shutdown(wait=True)
-            self._gather_pool = None
+        """Stops the prefetch thread and the fetch worker.  Idempotent."""
+        self.blockstore.close()  # shuts the fetch pool down, stops the cache
 
     # Context-manager support: serve/bench paths that open a disk tier can
     # no longer leak the prefetch thread on an exception path.

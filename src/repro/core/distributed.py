@@ -74,6 +74,7 @@ def probe_capacity(q: int, t: int, n_shards: int, slack: float = 2.0) -> int:
 def dispatch_probes(
     probe_ids: Array, *, n_shards: int, k_local: int, p_cap: int,
     probe_valid: Optional[Array] = None,
+    ownership=None,
 ) -> Tuple[Array, Array, Array, Array]:
     """Builds the probe slot table (replicated computation).
 
@@ -88,6 +89,13 @@ def dispatch_probes(
         past every shard: they consume no P_cap slot on any chip, are never
         scanned, and never count toward overflow — the pod-scale analogue of
         the single-host plan dropping them before the per-tile dedup.
+      ownership: optional owner/local map with jnp-compatible ``owner_of``/
+        ``local_of`` (default: ``blockstore.RangeOwnership(n_shards,
+        k_local)``, the contiguous range map).  The SAME object can be
+        handed to a :class:`repro.core.blockstore.ShardedBlockStore` so
+        shard routing and cache routing agree — a chip's probes always land
+        on its own pod's cache (``make_sharded_search`` exposes it in its
+        info dict).
 
     Returns:
       slot_cluster [S, P_cap] int32 — local cluster id per slot (0 for pads),
@@ -95,10 +103,14 @@ def dispatch_probes(
       slot_valid   [S, P_cap] bool,
       n_overflowed scalar int32 — live probes dropped by capacity.
     """
+    from repro.core.blockstore import RangeOwnership
+
+    if ownership is None:
+        ownership = RangeOwnership(n_shards, k_local)
     q, t = probe_ids.shape
     flat = probe_ids.reshape(-1)  # [Q*T]
-    owner = flat // k_local
-    local = flat % k_local
+    owner = ownership.owner_of(flat)
+    local = ownership.local_of(flat)
     query = jnp.repeat(jnp.arange(q, dtype=jnp.int32), t)
     if probe_valid is not None:
         # sentinel owner sorts after every real shard; its scatter rows are
@@ -129,6 +141,7 @@ def dispatch_probes(
 def dispatch_probes_tiled(
     probe_ids: Array, *, n_shards: int, k_local: int, p_cap: int,
     u_cap: int, q_block: int, probe_valid: Optional[Array] = None,
+    ownership=None,
 ):
     """Probe dispatch + per-shard (query tile, cluster) deduplication.
 
@@ -149,7 +162,7 @@ def dispatch_probes_tiled(
     """
     sc, sq, sv, n_overflowed = dispatch_probes(
         probe_ids, n_shards=n_shards, k_local=k_local, p_cap=p_cap,
-        probe_valid=probe_valid,
+        probe_valid=probe_valid, ownership=ownership,
     )
     tile = sq // q_block
     key = tile * k_local + sc  # [S, P_cap]
@@ -441,5 +454,12 @@ def make_sharded_search(
         "scales": NamedSharding(mesh, shard_spec),
         "counts": NamedSharding(mesh, shard_spec),
     }
+    from repro.core.blockstore import RangeOwnership
+
+    # The dispatch's ownership map, exposed so the serving layer can hand
+    # the SAME map to a ShardedBlockStore — cache routing then agrees with
+    # shard routing (a chip's probes are always its own pod's cache load).
     return search_fn, shardings, dict(p_cap=p_cap, k_local=k_local,
-                                      n_shards=n_shards)
+                                      n_shards=n_shards,
+                                      ownership=RangeOwnership(n_shards,
+                                                               k_local))

@@ -11,11 +11,16 @@ owned by :class:`SearchEngine`:
              top-k, filter-aware probe pruning, per-tile probe dedup.  Emits a
              :class:`SearchPlan` carrying per-tile slot tables and first-need
              fetch lists (:class:`TileWork`).
-    fetch  — materialize the slots' cluster operands.  RAM tier: the resident
-             ``[K, Vpad, ...]`` arrays (a no-op).  Disk tier: page the plan's
-             fetch list through the cluster cache — synchronously
-             (``gather``), or asynchronously via the cache's
-             ``gather_submit / gather_wait`` pair.
+    fetch  — materialize the slots' cluster operands through the pluggable
+             :class:`repro.core.blockstore.BlockStore` protocol.  RAM tier:
+             the resident ``[K, Vpad, ...]`` arrays (a no-op).  Disk tier: a
+             ``LocalBlockStore`` pages the plan's fetch list through the
+             cluster cache; a ``ShardedBlockStore`` routes it over a
+             consistent-hash ring of peer caches.  Pipelined fetches ride
+             the store's ``submit``/``wait`` pair, and a per-batch *operand
+             cache* pulls each cluster block through the store once per
+             batch, reusing it across every tile of the batch that probes
+             the cluster.
     scan   — jitted (:func:`_scan_merge_tiled`): the tiled Pallas/XLA kernel
              over the slot tables, one ``[QB, D] @ [D, VB]`` matmul per
              streamed block, per-probe ``[QB, k]`` fragments.
@@ -52,6 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import blockstore as blockstore_lib
 from repro.core import probes as probes_lib
 from repro.core import summaries as summaries_lib
 from repro.core import topk as topk_lib
@@ -327,6 +333,50 @@ def resolve_prune(index, prune: str):
     raise ValueError(f"prune must be 'auto'|'on'|'off', got {prune!r}")
 
 
+@jax.jit
+def _batch_pass_fraction(summaries, counts, lo, hi):
+    """Per-query expected passing-mass fraction from the resident summaries
+    — the cheap, tier-agnostic selectivity estimate (the disk tier has no
+    resident attrs to sample)."""
+    ep = summaries_lib.expected_passing(summaries, lo, hi, counts)  # [Q, K]
+    tot = jnp.maximum(jnp.sum(counts.astype(jnp.float32)), 1.0)
+    return jnp.sum(ep, axis=1) / tot
+
+
+# t_max="auto" widening factors: powers of two over n_probes, so the set of
+# distinct plan/scan widths a serving mix can trigger stays bounded (same
+# bounded-compile argument as the u_cap buckets).
+AUTO_T_FACTORS = (2, 4, 8)
+
+
+def resolve_auto_t_max(summaries, counts, lo, hi, n_probes: int,
+                       n_clusters: int,
+                       factors: Tuple[int, ...] = AUTO_T_FACTORS
+                       ) -> Optional[int]:
+    """Summary-driven per-batch probe widening (``t_max="auto"``).
+
+    Estimates the batch's filter selectivity from the summaries' expected
+    passing mass and widens the probe search proportionally: a batch whose
+    filters pass ~1/f of the corpus gets its pruned probes refilled from the
+    geometric top-``f·n_probes`` (capped at ``factors[-1]``, bucketed into
+    powers of two so compiles stay bounded).  Unfiltered batches estimate
+    selectivity ~1 and return None — bit-identical to the static plan.
+    """
+    if summaries is None:
+        return None
+    sel = float(np.median(np.asarray(
+        _batch_pass_fraction(summaries, counts, lo, hi)
+    )))
+    need = 1.0 / max(sel, 1e-9)
+    factor = 1
+    for f in factors:
+        if need >= f:
+            factor = f
+    if factor == 1:
+        return None
+    return min(factor * n_probes, n_clusters)
+
+
 # ---------------------------------------------------------------------------
 # Plan objects
 # ---------------------------------------------------------------------------
@@ -340,12 +390,16 @@ class TileWork:
     earlier tile, in first-need (slot) order; concatenating every tile's
     ``fetch`` reproduces ``probes.fetch_order`` for the whole plan, which is
     what a slot-granular pager (or a multi-host cache router) consumes.
+    ``release`` is the mirror image — clusters no *later* tile needs — and
+    is what lets the per-batch operand cache free each record right after
+    its last consumer, keeping reuse inside the disk tier's memory budget.
     """
 
     tile: int
     slot_cluster: np.ndarray  # [u_cap] int32 — global cluster per slot
     n_unique: int             # live slots (the rest are pads)
     fetch: np.ndarray         # novel clusters, first-need order
+    release: np.ndarray       # clusters whose last need is this tile
 
 
 @dataclasses.dataclass
@@ -375,10 +429,15 @@ class SearchPlan:
     lo_pad: Array
     hi_pad: Array
     n_pruned: Array          # [Q]
-    # Per-tile work items, built lazily by tile_work() (consumers: fetch
-    # routing diagnostics, multi-host cache sharding) — never on the hot
-    # path, the executors slice slot tables directly.
+    # Per-tile work items, built lazily by tile_work() (consumers: the
+    # BlockStore fetch stage's per-tile novel-cluster lists, fetch routing
+    # diagnostics, multi-host cache sharding).
     tiles: Optional[List[TileWork]] = None
+    # Per-batch operand cache (BlockStore fetch path): cluster id → host
+    # record, filled as tiles' fetches land; later tiles of the batch that
+    # share the cluster assemble from these records instead of re-crossing
+    # the store.  Dropped with the plan.
+    operands: Optional[Dict[int, dict]] = None
 
     def tile_work(self) -> List[TileWork]:
         """Materializes (and caches) the per-tile work items with their
@@ -389,9 +448,10 @@ class SearchPlan:
             )
             nu = np.asarray(self.n_unique)
             fetches = probes_lib.tile_fetch_lists(sc, nu, self.u_cap)
+            releases = probes_lib.tile_release_lists(sc, nu, self.u_cap)
             self.tiles = [
                 TileWork(tile=i, slot_cluster=sc[i], n_unique=int(nu[i]),
-                         fetch=fetches[i])
+                         fetch=fetches[i], release=releases[i])
                 for i in range(self.n_tiles)
             ]
         return self.tiles
@@ -423,6 +483,10 @@ class EngineStats:
     io_total_s: float = 0.0   # submit→completion span of every gather
     last_u_cap: int = 0
     u_cap_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # BlockStore fetch path accounting
+    blocks_fetched: int = 0   # per-cluster blocks pulled through the store
+    blocks_reused: int = 0    # slots served from the per-batch operand
+    #                           cache instead of being re-assembled/re-put
 
     @property
     def overlap_ratio(self) -> float:
@@ -444,21 +508,36 @@ def scan_compile_count() -> int:
     return len(_SCAN_KEYS)
 
 
-def u_cap_buckets(full_cap: int, lo: int = 8) -> Tuple[int, ...]:
-    """The fixed power-of-two u_cap bucket set for ``full_cap``.
+def u_cap_buckets(full_cap: int, lo: int = 8,
+                  ladder: str = "pow2") -> Tuple[int, ...]:
+    """The fixed u_cap bucket set for ``full_cap``.
 
-    ``(8, 16, 32, ..., full_cap)`` — doubling widths from ``lo`` with the
-    exact worst-case cap appended, so every observed unique count maps to a
-    bucket and the bucket count (= max scan compilations) is
+    ``ladder="pow2"``: ``(8, 16, 32, ..., full_cap)`` — doubling widths from
+    ``lo`` with the exact worst-case cap appended, so every observed unique
+    count maps to a bucket and the bucket count (= max scan compilations) is
     ``log2(full_cap/8) + O(1)``.
+
+    ``ladder="fine"`` additionally inserts the ×1.5 midpoint between each
+    power-of-two pair (``8, 12, 16, 24, 32, 48, ...``): a batch observing 38
+    uniques scans a 48-slot table instead of 64 — the XLA executor's cost is
+    linear in table width, so the midpoints buy back up to ~25% of the slot
+    scans right above a bucket edge, at the price of ~2× the worst-case
+    compile count (still bounded; measured in BENCH_search.json's
+    ``u_cap_ladder_ab``).
     """
+    if ladder not in ("pow2", "fine"):
+        raise ValueError(f"ladder must be 'pow2'|'fine', got {ladder!r}")
     caps = []
     b = lo
     while b < full_cap:
         caps.append(b)
+        if ladder == "fine":
+            mid = (b * 3) // 2
+            if mid < full_cap:
+                caps.append(mid)
         b *= 2
     caps.append(full_cap)
-    return tuple(caps)
+    return tuple(sorted(set(caps)))
 
 
 # ---------------------------------------------------------------------------
@@ -481,27 +560,52 @@ class SearchEngine:
         post-prune unique counts (power-of-two buckets, bounded recompiles)
         instead of the worst case.  ``u_cap`` pins the width instead.
       * ``q_block`` — query-tile height: smaller tiles → finer pipeline
-        grain (more IO/compute overlap) but more per-tile dispatches.
+        grain (more IO/compute overlap) but more per-tile dispatches.  With
+        the operand cache, finer grain no longer pays re-assembly for the
+        clusters tiles share.
+      * ``operand_cache`` — per-batch reuse of fetched cluster blocks
+        (BlockStore path only): each block crosses the store (ring hop,
+        cache lock, mmap read) once per batch; tiles that share it assemble
+        straight from the batch-local records on the fetch worker
+        (``"auto"``/``"on"``/``"off"``; ``blocks_reused`` counts slots
+        served from the batch cache).
+      * ``u_cap_ladder`` — ``"pow2"`` (default) or ``"fine"`` (×1.5
+        midpoints): finer buckets waste fewer pad-slot scans right above a
+        bucket edge at ~2× the bounded compile count.
+      * ``t_max`` — static widening cap, or ``"auto"`` to pick the per-batch
+        cap from the summaries' expected passing mass (bucketed ×2/×4/×8).
 
     ``index`` needs the resident surface (``spec / centroids / counts /
-    n_clusters / store_dtype / quantized / summaries``) plus either resident
-    ``vectors/attrs/ids/norms/scales`` (RAM tier) or a ``gather`` method
-    (disk tier; ``gather_submit``/``gather_wait`` unlock the async fetch).
+    n_clusters / store_dtype / quantized / summaries``) plus one fetch
+    source: resident ``vectors/attrs/ids/norms/scales`` (RAM tier), a
+    ``blockstore`` (its own, or passed explicitly — e.g. a
+    :class:`~repro.core.blockstore.ShardedBlockStore`), or a legacy
+    ``gather`` method (``gather_submit``/``gather_wait`` unlock the async
+    fetch).
     """
 
     def __init__(self, index, *, k: int, n_probes: int, q_block: int = 64,
                  v_block: int = 256, u_cap: Optional[int] = None,
                  backend: Optional[str] = None,
                  gather_fn: Optional[Callable] = None,
-                 prune: str = "auto", t_max: Optional[int] = None,
+                 blockstore=None,
+                 prune: str = "auto", t_max=None,
                  pipeline: str = "auto", pipeline_depth: int = 2,
                  adaptive_u_cap: Optional[bool] = None,
-                 u_cap_bucket_set: Optional[Tuple[int, ...]] = None):
+                 u_cap_bucket_set: Optional[Tuple[int, ...]] = None,
+                 u_cap_ladder: str = "pow2",
+                 operand_cache: str = "auto"):
         if pipeline not in ("auto", "on", "off"):
             raise ValueError(f"pipeline must be 'auto'|'on'|'off', got "
                              f"{pipeline!r}")
         if pipeline_depth < 1:
             raise ValueError("pipeline_depth must be >= 1")
+        if operand_cache not in ("auto", "on", "off"):
+            raise ValueError(f"operand_cache must be 'auto'|'on'|'off', got "
+                             f"{operand_cache!r}")
+        if isinstance(t_max, str) and t_max != "auto":
+            raise ValueError(f"t_max must be an int, 'auto' or None, got "
+                             f"{t_max!r}")
         self.index = index
         self.k = k
         self.n_probes = n_probes
@@ -512,15 +616,39 @@ class SearchEngine:
         self.t_max = t_max
         self.pipeline_depth = pipeline_depth
         self.u_cap_bucket_set = u_cap_bucket_set
+        if u_cap_ladder not in ("pow2", "fine"):
+            raise ValueError(f"u_cap_ladder must be 'pow2'|'fine', got "
+                             f"{u_cap_ladder!r}")
+        self.u_cap_ladder = u_cap_ladder
+        self.operand_cache = operand_cache
         self.backend = backend or (
             "pallas" if jax.default_backend() == "tpu" else "xla"
         )
-        # fetch source: explicit gather_fn wins; otherwise the index's own
-        # pager (disk tier); otherwise the resident arrays (RAM tier).
-        self._gather_fn = gather_fn or getattr(index, "gather", None)
-        # async pair available iff the source IS the index's pager
+        # fetch source: explicit gather_fn wins (the pre-BlockStore path,
+        # kept as the A/B baseline and for custom pagers); otherwise an
+        # explicit or index-provided BlockStore; otherwise the index's own
+        # legacy pager; otherwise the resident arrays (RAM tier).
+        self._store = None
+        if gather_fn is not None:
+            self._gather_fn = gather_fn
+        else:
+            self._store = (blockstore if blockstore is not None
+                           else getattr(index, "blockstore", None))
+            self._gather_fn = (
+                self._store_gather if self._store is not None
+                else getattr(index, "gather", None)
+            )
+        self._bspec = (
+            blockstore_lib.BlockSpec.from_index(index)
+            if self._store is not None else None
+        )
+        if operand_cache == "on" and self._store is None:
+            raise ValueError("operand_cache='on' needs a BlockStore fetch "
+                             "path (disk tier or explicit blockstore=)")
+        # async pair available iff the source IS the index's legacy pager
         self._async_src = (
-            index if (self._gather_fn is not None
+            index if (self._store is None
+                      and self._gather_fn is not None
                       and getattr(index, "gather_submit", None) is not None
                       and self._gather_fn == index.gather)
             else None
@@ -551,6 +679,13 @@ class SearchEngine:
         kc = index.n_clusters
         summ = resolve_prune(index, self.prune)
         t_max = self.t_max
+        if t_max == "auto":
+            # summary-driven widening: bucketed per batch from the expected
+            # passing mass, so a selective batch widens and an unfiltered
+            # one plans exactly like t_max=None (bit-identical)
+            t_max = resolve_auto_t_max(
+                summ, index.counts, fspec.lo, fspec.hi, self.n_probes, kc
+            )
         if t_max is not None:
             if t_max < self.n_probes:
                 raise ValueError(
@@ -624,7 +759,9 @@ class SearchEngine:
         full = plan.u_cap
         plan.n_unique = np.asarray(plan.n_unique)
         max_u = max(int(plan.n_unique.max(initial=1)), 1)
-        buckets = self.u_cap_bucket_set or u_cap_buckets(full)
+        buckets = self.u_cap_bucket_set or u_cap_buckets(
+            full, ladder=self.u_cap_ladder
+        )
         bucket = next((b for b in sorted(buckets) if b >= max_u), full)
         bucket = min(bucket, full)
         if bucket == full:
@@ -644,6 +781,27 @@ class SearchEngine:
         plan.u_cap = bucket
 
     # ---- fetch ----
+    @property
+    def blockstore(self):
+        """The BlockStore the fetch stage routes through (None when the
+        engine reads resident arrays or a legacy gather_fn)."""
+        return self._store
+
+    @property
+    def _use_operand_cache(self) -> bool:
+        return self._store is not None and self.operand_cache != "off"
+
+    def _store_gather(self, slot_cluster):
+        """Whole-list gather through the BlockStore protocol — the sync
+        executor's fetch stage (same record ordering, and therefore cache
+        behavior, as the pre-protocol pager)."""
+        flat = np.asarray(slot_cluster).reshape(-1)
+        uniq, local = blockstore_lib.first_need_unique(flat)
+        recs = self._store.get(uniq)
+        self.stats.blocks_fetched += len(recs)
+        return blockstore_lib.assemble_blocks(flat, uniq, local, recs,
+                                              self._bspec)
+
     def fetch(self, plan: SearchPlan):
         """Whole-batch fetch stage (sync executor): resident arrays on the
         RAM tier, one gather over the plan's slot list on the disk tier."""
@@ -748,7 +906,7 @@ class SearchEngine:
         if self.pipeline != "on" or self._gather_fn is None:
             return PendingSearch(plan=plan, inflight=None)
         depth = min(self.pipeline_depth, plan.n_tiles)
-        inflight = {i: self._submit(plan, i) for i in range(depth)}
+        inflight = self._start_inflight(plan, depth)
         return PendingSearch(plan=plan, inflight=inflight)
 
     def result(self, pending: "PendingSearch") -> SearchResult:
@@ -768,23 +926,93 @@ class SearchEngine:
         return (sc, index.vectors, index.attrs, index.ids, index.norms,
                 index.scales)
 
-    def _submit(self, plan: SearchPlan, i: int):
-        """Starts tile *i*'s gather; returns (handle, t_submit, done_box)."""
+    def _ensure_pool(self):
+        """The engine's single fetch/assembly worker: tasks run strictly in
+        submission order, keeping per-tile waits aligned with submits."""
+        from concurrent.futures import ThreadPoolExecutor
+
+        if getattr(self, "_pool", None) is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="engine-fetch"
+            )
+        return self._pool
+
+    def _start_inflight(self, plan: SearchPlan, depth: int) -> Dict:
+        """Prepares a pipelined batch (operand cache + per-tile novel fetch
+        lists when the BlockStore path is active) and launches the first
+        ``depth`` tile fetches."""
+        if self._use_operand_cache:
+            plan.operands = {}
+            plan.tile_work()  # per-tile novel-cluster lists (host tables)
+        return {i: self._submit(plan, i) for i in range(depth)}
+
+    def _assemble_tile(self, plan: SearchPlan, i: int, h_store):
+        """Engine-worker half of the BlockStore fetch: wait the store's
+        records, merge them into the batch operand cache (when enabled),
+        assemble tile *i*'s ``[u_cap, ...]`` blocks and move them on-device
+        — all off the scan thread, so both IO (store worker) and assembly +
+        host→device copy (this worker) hide behind the previous tile's
+        scan.  With the operand cache, a cluster several tiles share is
+        fetched through the store once per batch; later tiles assemble it
+        straight from the batch-local records (``blocks_reused``)."""
+        recs = self._store.wait(h_store)
+        self.stats.blocks_fetched += len(recs)
         sc = plan.slot_cluster.reshape(plan.n_tiles, plan.u_cap)[i]
+        uniq, local = blockstore_lib.first_need_unique(sc)
+        if plan.operands is not None:  # per-batch reuse on
+            ops = plan.operands
+            for c, r in recs.items():
+                ops[int(c)] = r
+            # fetch lists and slot tables always agree; tolerate a gap by
+            # fetching inline rather than scanning stale rows
+            missing = [int(c) for c in uniq if int(c) not in ops]
+            if missing:
+                more = self._store.get(np.asarray(missing, np.int64))
+                self.stats.blocks_fetched += len(more)
+                for c, r in more.items():
+                    ops[int(c)] = r
+            self.stats.blocks_reused += max(
+                len(uniq) - len(recs) - len(missing), 0
+            )
+            out = blockstore_lib.assemble_blocks(sc, uniq, local, ops,
+                                                 self._bspec, as_device=True)
+            # free records whose last consuming tile is this one: the
+            # batch cache's footprint tracks live overlap ranges, not the
+            # batch's whole unique set — an evicted-under-budget record
+            # must not be kept alive past its last use (a later surprise
+            # consumer re-fetches via the `missing` fallback above)
+            if plan.tiles is not None:
+                for c in plan.tiles[i].release:
+                    ops.pop(int(c), None)
+            return out
+        return blockstore_lib.assemble_blocks(sc, uniq, local, recs,
+                                              self._bspec, as_device=True)
+
+    def _submit(self, plan: SearchPlan, i: int):
+        """Starts tile *i*'s fetch; returns (handle, t_submit, done_box).
+        The waited handle always yields assembled, device-resident
+        ``(local_ids, vectors, attrs, ids, norms, scales)`` operands."""
         t0 = time.monotonic()
         done = [None]  # completion timestamp, set by the done-callback
-        if self._async_src is not None:
+        if self._store is not None:
+            if self._use_operand_cache:
+                # fetch only clusters no earlier tile of this batch needed;
+                # everything else is already (or will be) in plan.operands
+                fetch_ids = plan.tile_work()[i].fetch
+            else:
+                sc = plan.slot_cluster.reshape(plan.n_tiles, plan.u_cap)[i]
+                fetch_ids, _ = blockstore_lib.first_need_unique(sc)
+            h_store = self._store.submit(fetch_ids)  # IO on the store worker
+            h = self._ensure_pool().submit(self._assemble_tile, plan, i,
+                                           h_store)
+        elif self._async_src is not None:
+            sc = plan.slot_cluster.reshape(plan.n_tiles, plan.u_cap)[i]
             h = self._async_src.gather_submit(sc)
         else:
             # generic sync gather_fn: run it on the engine's own worker so
             # the pipeline still overlaps IO with the device scan
-            from concurrent.futures import ThreadPoolExecutor
-
-            if getattr(self, "_pool", None) is None:
-                self._pool = ThreadPoolExecutor(
-                    max_workers=1, thread_name_prefix="engine-fetch"
-                )
-            h = self._pool.submit(self._gather_fn, sc)
+            sc = plan.slot_cluster.reshape(plan.n_tiles, plan.u_cap)[i]
+            h = self._ensure_pool().submit(self._gather_fn, sc)
         h.add_done_callback(lambda _: done.__setitem__(0, time.monotonic()))
         return h, t0, done
 
@@ -831,16 +1059,15 @@ class SearchEngine:
                 self.stats.tiles_scanned += 1
             return self._merge_parts(plan, parts)
         depth = min(self.pipeline_depth, plan.n_tiles)
-        inflight = {i: self._submit(plan, i) for i in range(depth)}
+        inflight = self._start_inflight(plan, depth)
         return self._run_tiles(plan, inflight)
 
     def _run_tiles(self, plan: SearchPlan, inflight: Dict) -> SearchResult:
-        """Drains a pipelined batch: wait tile i's gather, keep ``depth``
-        gathers in flight, scan, concatenate.  On any failure the remaining
+        """Drains a pipelined batch: wait tile i's fetch, keep ``depth``
+        fetches in flight, scan, concatenate.  On any failure the remaining
         in-flight handles are still waited (exceptions swallowed) — every
-        ``gather_submit`` gets its ``gather_wait``, so no future exception
-        goes unretrieved and the cache ends consistent — then the original
-        error propagates."""
+        submit gets its wait, so no future exception goes unretrieved and
+        the cache ends consistent — then the original error propagates."""
         self.stats.pipelined_batches += 1
         n = plan.n_tiles
         depth = max(len(inflight), 1)
@@ -900,11 +1127,14 @@ def search_fused_tiled(
     u_cap: Optional[int] = None,
     backend: Optional[str] = None,
     gather_fn=None,
+    blockstore=None,
     prune: str = "auto",
-    t_max: Optional[int] = None,
+    t_max=None,
     pipeline: str = "off",
     pipeline_depth: int = 2,
     adaptive_u_cap: bool = False,
+    u_cap_ladder: str = "pow2",
+    operand_cache: str = "auto",
 ) -> SearchResult:
     """Query-tiled, probe-deduplicated fused search with streaming top-k.
 
@@ -936,9 +1166,10 @@ def search_fused_tiled(
     """
     eng = SearchEngine(
         index, k=k, n_probes=n_probes, q_block=q_block, v_block=v_block,
-        u_cap=u_cap, backend=backend, gather_fn=gather_fn, prune=prune,
-        t_max=t_max, pipeline=pipeline, pipeline_depth=pipeline_depth,
-        adaptive_u_cap=adaptive_u_cap,
+        u_cap=u_cap, backend=backend, gather_fn=gather_fn,
+        blockstore=blockstore, prune=prune, t_max=t_max, pipeline=pipeline,
+        pipeline_depth=pipeline_depth, adaptive_u_cap=adaptive_u_cap,
+        u_cap_ladder=u_cap_ladder, operand_cache=operand_cache,
     )
     try:
         return eng.search(queries, fspec)

@@ -37,10 +37,15 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
                          v_block: int = 256, backend: Optional[str] = None,
                          resident_budget_bytes: Optional[int] = None,
                          prune: str = "auto",
-                         t_max: Optional[int] = None,
+                         t_max=None,
                          pipeline: str = "auto",
                          pipeline_depth: int = 2,
                          adaptive_u_cap: Optional[bool] = None,
+                         operand_cache: str = "auto",
+                         u_cap_ladder: str = "pow2",
+                         cache_shards: int = 1,
+                         cache_transport: str = "loopback",
+                         cache_l1_records: int = 64,
                          ) -> Callable:
     """The batched server's default search step: the search engine.
 
@@ -68,18 +73,51 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
     post-prune unique-cluster counts in power-of-two buckets instead of the
     unpruned worst case — selective filters scan small tables, with at most
     ``len(buckets)`` scan compilations ever.
+
+    Fetch-layer knobs: ``cache_shards > 1`` builds a consistent-hash
+    :class:`~repro.core.blockstore.ShardedBlockStore` over that many peer
+    caches of the same checkpoint (one index copy per pod) and routes the
+    engine's fetch stage through it; ``cache_transport`` selects the peer
+    transport (``"loopback"`` in-process, ``"socket"`` the length-prefixed
+    wire protocol behind a local server per peer — the pod-topology
+    rehearsal).  ``operand_cache`` fetches each cluster block through the
+    store once per batch, letting the batch's tiles share the records;
+    ``u_cap_ladder="fine"`` adds ×1.5 bucket
+    midpoints.  The sharded store is exposed as ``search_fn.blockstore``
+    (per-node stats via ``.stats()``) and torn down by
+    ``search_fn.close()``.
     """
+    from repro.core import blockstore as blockstore_lib
     from repro.core.disk import DiskIVFIndex
     from repro.core.engine import SearchEngine
 
-    if isinstance(index, str):
+    owns_index = isinstance(index, str)
+    if owns_index:
         index = DiskIVFIndex.open(
             index, resident_budget_bytes=resident_budget_bytes
+        )
+    store = None
+    if cache_shards > 1:
+        if not isinstance(index, DiskIVFIndex):
+            raise ValueError(
+                "cache_shards > 1 needs a disk-tier index (a checkpoint "
+                "path or an open DiskIVFIndex) — the RAM tier has no fetch "
+                "stage to shard"
+            )
+        # per-node cache capacity: split the index's own cache budget so N
+        # peers together hold what one local cache would have
+        cap = max(index.cache.capacity_records // cache_shards, 1)
+        store = blockstore_lib.open_sharded(
+            index.directory, n_nodes=cache_shards,
+            transport=cache_transport, capacity_records=cap,
+            l1_records=cache_l1_records,
         )
     engine = SearchEngine(
         index, k=k, n_probes=n_probes, q_block=q_block, v_block=v_block,
         backend=backend, prune=prune, t_max=t_max, pipeline=pipeline,
         pipeline_depth=pipeline_depth, adaptive_u_cap=adaptive_u_cap,
+        blockstore=store, operand_cache=operand_cache,
+        u_cap_ladder=u_cap_ladder,
     )
 
     def search_fn(queries, fspec, shard_ok=None):
@@ -87,8 +125,19 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
         res = engine.search(queries, fspec)
         return res.scores, res.ids
 
+    def close():
+        engine.close()
+        if store is not None:
+            store.close()
+        # only tear down an index this factory opened (str path) — a
+        # caller-provided DiskIVFIndex may back other search_fns
+        if owns_index:
+            index.close()
+
     search_fn.index = index
     search_fn.engine = engine
+    search_fn.blockstore = engine.blockstore
+    search_fn.close = close
     return search_fn
 
 

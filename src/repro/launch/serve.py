@@ -61,9 +61,11 @@ def main():
                     help="filter-aware probe pruning from the resident "
                          "cluster attribute summaries (layout v2.1); "
                          "auto = prune when the index carries summaries")
-    ap.add_argument("--t-max", type=int, default=None,
+    ap.add_argument("--t-max", default=None,
                     help="adaptive probe widening cap: refill pruned probes "
-                         "from next-best unpruned centroids up to this rank")
+                         "from next-best unpruned centroids up to this rank "
+                         "(an int, or 'auto' to pick the per-batch cap from "
+                         "the summaries' expected passing mass)")
     ap.add_argument("--pipeline", choices=("auto", "on", "off"),
                     default="auto",
                     help="double-buffered executor: scan tile i while tile "
@@ -75,7 +77,30 @@ def main():
                     help="cluster gathers kept in flight ahead of the scan "
                          "(2 = classic double buffering; deeper overlaps "
                          "more IO at the cost of gathered-tile host memory)")
+    ap.add_argument("--cache-shards", type=int, default=1,
+                    help="disk tier: shard the cluster cache over this many "
+                         "peer stores on a consistent-hash ring (one index "
+                         "copy per pod; 1 = the classic local cache)")
+    ap.add_argument("--cache-transport", choices=("loopback", "socket"),
+                    default="loopback",
+                    help="sharded-cache peer transport: in-process loopback "
+                         "or the length-prefixed socket protocol (each peer "
+                         "behind a local BlockStoreServer)")
+    ap.add_argument("--operand-cache", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="per-batch operand reuse: fetch each cluster "
+                         "block through the BlockStore (ring hop / cache "
+                         "lock / mmap read) once per batch and let the "
+                         "batch's tiles share the records (auto = on for "
+                         "BlockStore fetch)")
+    ap.add_argument("--u-cap-ladder", choices=("pow2", "fine"),
+                    default="pow2",
+                    help="slot-table bucket ladder: fine adds x1.5 "
+                         "midpoints (fewer wasted pad-slot scans, ~2x the "
+                         "bounded compile count)")
     args = ap.parse_args()
+    if args.t_max is not None and args.t_max != "auto":
+        args.t_max = int(args.t_max)
 
     from repro.core import HybridSpec, build_ivf, storage
     from repro.core.disk import DiskIVFIndex
@@ -129,11 +154,21 @@ def main():
     else:
         serving_index = index
 
+    if args.cache_shards > 1 and args.tier != "disk":
+        raise SystemExit("--cache-shards needs --tier disk")
     search_fn = make_fused_search_fn(
         serving_index, k=args.k, n_probes=args.probes, q_block=args.batch,
         prune=args.prune, t_max=args.t_max, pipeline=args.pipeline,
         pipeline_depth=args.pipeline_depth,
+        operand_cache=args.operand_cache, u_cap_ladder=args.u_cap_ladder,
+        cache_shards=args.cache_shards,
+        cache_transport=args.cache_transport,
     )
+    if search_fn.blockstore is not None and args.cache_shards > 1:
+        bs = search_fn.blockstore
+        print(f"sharded cluster cache: {args.cache_shards} nodes "
+              f"({args.cache_transport} transport), ring "
+              f"{bs.ownership.__class__.__name__}")
 
     server = SearchServer(
         search_fn, batch_size=args.batch, dim=serving_index.spec.dim,
@@ -158,16 +193,37 @@ def main():
     print(f"engine: pipeline={eng.pipeline} "
           f"(pipelined batches {eng.stats.pipelined_batches}, overlap "
           f"{eng.stats.overlap_ratio:.2f}), u_cap {eng.stats.last_u_cap}, "
-          f"scan compiles {eng.stats.scan_compilations}")
+          f"scan compiles {eng.stats.scan_compilations}, "
+          f"blocks fetched {eng.stats.blocks_fetched} / reused "
+          f"{eng.stats.blocks_reused} (operand cache)")
     if args.tier == "disk":
-        cache = serving_index.cache
         on_disk = serving_index.reader.stride * serving_index.n_clusters
-        print(f"resident {serving_index.resident_bytes()/2**20:.1f} MiB "
-              f"(index on disk {on_disk/2**20:.1f} MiB), "
-              f"cache hit-rate {cache.hit_rate:.2f}, "
-              f"evictions {cache.stats.evictions}, "
-              f"pinned {len(cache.pinned)} hot clusters, "
-              f"prefetch errors {cache.stats.errors}")
+        if args.cache_shards > 1:
+            # the engine fetches through the sharded store's per-node
+            # caches; the index's own cache sits idle, so report the
+            # fleet's caches instead of its zeros
+            s = search_fn.blockstore.stats()
+            print(f"sharded cache: l1 hits {s['l1_hits']} / misses "
+                  f"{s['l1_misses']}, remote blocks {s['remote_blocks']}")
+            node_bytes = 0
+            for node, ns in sorted(s["per_node"].items()):
+                hr = ns.get("hit_rate")
+                node_bytes += ns.get("resident_bytes", 0)
+                print(f"  node {node}: served {ns['blocks_served']} blocks"
+                      + (f", cache hit-rate {hr:.2f}" if hr is not None
+                         else ""))
+            print(f"resident across nodes {node_bytes/2**20:.1f} MiB "
+                  f"+ plan-side {serving_index.resident_bytes()/2**20:.1f} "
+                  f"MiB (index on disk {on_disk/2**20:.1f} MiB)")
+        else:
+            cache = serving_index.cache
+            print(f"resident {serving_index.resident_bytes()/2**20:.1f} MiB "
+                  f"(index on disk {on_disk/2**20:.1f} MiB), "
+                  f"cache hit-rate {cache.hit_rate:.2f}, "
+                  f"evictions {cache.stats.evictions}, "
+                  f"pinned {len(cache.pinned)} hot clusters, "
+                  f"prefetch errors {cache.stats.errors}")
+        search_fn.close()  # engine + sharded store (we opened the index)
         serving_index.close()
 
 

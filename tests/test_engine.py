@@ -191,6 +191,101 @@ def test_u_cap_buckets_shape():
     assert u_cap_buckets(6) == (6,)
 
 
+def test_u_cap_buckets_fine_ladder():
+    """×1.5 midpoints between the power-of-two buckets; the exact cap is
+    always the last rung, degenerate caps are untouched."""
+    assert u_cap_buckets(64, ladder="fine") == (8, 12, 16, 24, 32, 48, 64)
+    assert u_cap_buckets(48, ladder="fine") == (8, 12, 16, 24, 32, 48)
+    assert u_cap_buckets(8, ladder="fine") == (8,)
+    assert u_cap_buckets(6, ladder="fine") == (6,)
+    with pytest.raises(ValueError, match="ladder"):
+        u_cap_buckets(64, ladder="huge")
+
+
+def test_fine_ladder_engine_parity(built):
+    """A fine-ladder engine provisions a bucket ≤ the pow2 engine's and
+    returns bit-identical results."""
+    index, _, core, _ = built
+    q = 16
+    queries = jnp.asarray(core[np.linspace(0, N - 1, q).astype(int)])
+    fspec = _window_fspec(q, TS_RANGE // KC)
+    kw = dict(k=10, n_probes=6, q_block=16, v_block=128, backend="xla",
+              prune="on")
+    e_pow2 = SearchEngine(index, u_cap_ladder="pow2", **kw)
+    e_fine = SearchEngine(index, u_cap_ladder="fine", **kw)
+    r_pow2 = e_pow2.search(queries, fspec)
+    r_fine = e_fine.search(queries, fspec)
+    _assert_identical(r_pow2, r_fine, "fine vs pow2 ladder")
+    full = min(16 * 6, KC)
+    assert e_fine.stats.last_u_cap in u_cap_buckets(full, ladder="fine")
+    assert e_fine.stats.last_u_cap <= e_pow2.stats.last_u_cap
+
+
+# ---------------------------------------------------------------------------
+# Summary-driven t_max ("auto")
+# ---------------------------------------------------------------------------
+
+
+def test_t_max_auto_resolution(built):
+    from repro.core.engine import resolve_auto_t_max
+
+    index, _, core, _ = built
+    q = 16
+    wide = match_all(q, M)
+    sel = _window_fspec(q, TS_RANGE // (2 * KC))
+    t_wide = resolve_auto_t_max(index.summaries, index.counts, wide.lo,
+                                wide.hi, 4, KC)
+    t_sel = resolve_auto_t_max(index.summaries, index.counts, sel.lo,
+                               sel.hi, 4, KC)
+    assert t_wide is None  # unfiltered: no widening, static plan
+    assert t_sel is not None and 4 < t_sel <= KC  # selective: widened
+    # no summaries → no widening possible (nothing to prune, so nothing to
+    # refill), auto degrades to the static plan
+    assert resolve_auto_t_max(None, index.counts, sel.lo, sel.hi, 4,
+                              KC) is None
+
+
+def test_t_max_auto_unfiltered_bit_identical(built):
+    index, disk, core, _ = built
+    q = 16
+    queries = jnp.asarray(core[:q])
+    fspec = match_all(q, M)
+    kw = dict(k=10, n_probes=4, q_block=8, backend="xla")
+    static = search_fused_tiled(index, queries, fspec, **kw)
+    auto = search_fused_tiled(index, queries, fspec, t_max="auto", **kw)
+    _assert_identical(static, auto, "t_max auto, unfiltered")
+    np.testing.assert_array_equal(np.asarray(static.n_pruned),
+                                  np.asarray(auto.n_pruned))
+    # both tiers accept the knob
+    dsk = disk.search(queries, fspec, t_max="auto", **kw)
+    _assert_identical(static, dsk, "t_max auto, disk tier")
+
+
+def test_t_max_auto_matches_equivalent_static(built):
+    """Under a selective filter, auto picks a width and must plan exactly
+    like the same width passed statically (same refill, same results)."""
+    from repro.core.engine import resolve_auto_t_max
+
+    index, _, core, _ = built
+    q = 16
+    queries = jnp.asarray(core[np.linspace(0, N - 1, q).astype(int)])
+    fspec = _window_fspec(q, TS_RANGE // (2 * KC))
+    t = resolve_auto_t_max(index.summaries, index.counts, fspec.lo,
+                           fspec.hi, 4, KC)
+    assert t is not None and t > 4
+    kw = dict(k=10, n_probes=4, q_block=8, backend="xla", prune="on")
+    auto = search_fused_tiled(index, queries, fspec, t_max="auto", **kw)
+    static = search_fused_tiled(index, queries, fspec, t_max=int(t), **kw)
+    _assert_identical(static, auto, "t_max auto == static width")
+    assert int(np.asarray(auto.n_pruned).sum()) > 0
+
+
+def test_t_max_rejects_bad_string(built):
+    index, *_ = built
+    with pytest.raises(ValueError, match="t_max"):
+        SearchEngine(index, k=5, n_probes=3, t_max="adaptive")
+
+
 def test_adaptive_u_cap_shrinks_under_pruning(built):
     """Selective filters must provision strictly smaller slot tables than
     prune=off, results staying bit-identical; compilations stay bounded by

@@ -172,3 +172,62 @@ def test_quantized_v1_pre_fix_checkpoint_rejected(tmp_path):
     json.dump(man, open(mpath, "w"))
     with pytest.raises(ValueError, match="scales"):
         storage.load_index(d)
+
+
+def test_cluster_cache_pin_swap_budget_and_pin_safety(tmp_path):
+    """Pin-aware eviction accounting: through pin_refresh swaps — even with
+    pin_fraction=1.0 — resident_bytes() never exceeds the budget's cache
+    allotment and pinned entries are never evicted (the old fallback evicted
+    a *pinned* victim once a swap pinned the whole capacity)."""
+    from repro.core.disk import ClusterCache, DiskIVFIndex, ShardReader
+
+    index, core, _ = _build(n=1200, kc=12)
+    d = str(tmp_path / "pin_swap")
+    storage.save_index(index, d, n_shards=2)
+    man = storage.load_manifest(d)
+    reader = ShardReader(d, man)
+    capacity = 4
+    cache = ClusterCache(reader, capacity_records=capacity, n_clusters=12,
+                         pin_fraction=1.0, pin_refresh=1)  # swap every batch
+    cap_bytes = capacity * reader.stride
+    try:
+        rng = np.random.default_rng(0)
+        hot = [0, 1, 2]  # always-probed clusters: the pin set converges here
+        for _ in range(20):
+            want = hot + rng.integers(3, 12, 3).tolist()
+            cache.get_many([int(c) for c in want])
+            assert cache.resident_bytes() <= cap_bytes
+            # pins never exceed capacity-1: one slot stays evictable, so an
+            # insert never has to break a pin to respect the budget
+            assert len(cache.pinned) <= capacity - 1
+        assert cache.stats.evictions > 0  # churn actually happened
+        # the hot clusters are pinned and stayed resident through the churn
+        assert set(hot) <= cache.pinned
+        misses_before = cache.stats.misses
+        cache.get_many(hot)
+        assert cache.stats.misses == misses_before, "a pinned entry was " \
+            "evicted under pin_refresh churn"
+    finally:
+        cache.stop()
+
+    with pytest.raises(ValueError, match="pin_fraction"):
+        ClusterCache(reader, capacity_records=4, n_clusters=12,
+                     pin_fraction=1.5)
+
+    # end-to-end: a budgeted disk index under swap-heavy traffic holds the
+    # resident_bytes() ≤ resident_budget_bytes invariant at every step
+    overhead = index.centroids.size * 4 + index.n_clusters * 4 + (
+        index.summaries.nbytes() if index.summaries is not None else 0
+    )
+    budget = overhead + 3 * man["record_stride"] + 1024
+    disk = DiskIVFIndex.open(d, resident_budget_bytes=budget,
+                             pin_fraction=1.0, pin_refresh=1)
+    try:
+        fspec = match_all(8, index.spec.n_attrs)
+        for rep in range(6):
+            queries = jnp.asarray(core[rep * 8:rep * 8 + 8])
+            disk.search(queries, fspec, k=5, n_probes=4, q_block=8,
+                        backend="xla")
+            assert disk.resident_bytes() <= budget
+    finally:
+        disk.close()
