@@ -365,6 +365,110 @@ def bench_disk_tier_sharded(index, core, rng, *, n_nodes=3,
     return entry
 
 
+def bench_degraded_mode(index, core, rng, *, n_nodes=3,
+                        transport="loopback", chaos="all", q=64,
+                        n_batches=8, cached_clusters=16, q_block=16,
+                        brownout_s=0.2):
+    """Serving under faults: QPS and per-batch latency for a healthy ring
+    vs one peer dead vs one peer browned-out (every fetch +``brownout_s``).
+
+    Each scenario opens a fresh sharded store with the availability-floor
+    fallback enabled and a hair-trigger circuit breaker, injects the fault
+    on node 1 via the deterministic :mod:`repro.core.faults` schedule, and
+    runs serially timed batches.  Gates: every batch must complete within
+    its transport deadline (no hung batches — the CI job adds a hard
+    wall-clock timeout on top), results must stay bit-identical to the
+    reference, and the chaos scenarios must actually exercise failover
+    (``fallback_fetches > 0``, the CI gate).
+    """
+    import tempfile
+
+    from repro.core import blockstore as blockstore_lib
+    from repro.core import faults as faults_lib
+
+    scenarios = ["healthy"]
+    if chaos in ("kill-one-peer", "all"):
+        scenarios.append("one_peer_dead")
+    if chaos in ("brownout", "all"):
+        scenarios.append("one_peer_slow")
+
+    out = dict(q=q, q_block=q_block, nodes=n_nodes, transport=transport,
+               iters=n_batches, brownout_s=brownout_s)
+    with tempfile.TemporaryDirectory(prefix="bench_chaos_") as ckpt:
+        storage.save_index(index, ckpt, n_shards=4)
+        batches = [hot_queries(core, q, rng) for _ in range(n_batches)]
+        fspec = match_all(q, M)
+        refs = [search_reference(index, qs, fspec, k=K, n_probes=T)
+                for qs in batches]
+        for scen in scenarios:
+            store = blockstore_lib.open_sharded(
+                ckpt, n_nodes=n_nodes, transport=transport,
+                capacity_records=max(cached_clusters // n_nodes, 4),
+                l1_records=cached_clusters, timeout_s=5.0,
+                breaker_kwargs=dict(failure_threshold=1, cooldown_s=60.0,
+                                    brownout_latency_s=brownout_s / 4,
+                                    latency_alpha=0.5),
+            )
+            if scen == "one_peer_dead":
+                faults_lib.inject(store, 1, faults_lib.kill_peer())
+            elif scen == "one_peer_slow":
+                faults_lib.inject(
+                    store, 1, faults_lib.brownout_peer(latency_s=brownout_s)
+                )
+            try:
+                with DiskIVFIndex.open(ckpt) as disk:
+                    eng = SearchEngine(disk, k=K, n_probes=T,
+                                       q_block=q_block, pipeline="on",
+                                       blockstore=store)
+                    # warm the compile cache outside the timed region (the
+                    # warm batch still counts toward failover stats)
+                    np.asarray(eng.search(batches[0], fspec).ids)
+                    lats, ok = [], True
+                    t_all = time.perf_counter()
+                    for qs, ref in zip(batches, refs):
+                        t0 = time.perf_counter()
+                        got = eng.search(qs, fspec)
+                        got_ids = np.asarray(got.ids)  # force sync
+                        lats.append(time.perf_counter() - t0)
+                        ok = ok and bool(
+                            (np.asarray(ref.ids) == got_ids).all()
+                        )
+                    wall = time.perf_counter() - t_all
+                    s = store.stats()
+                    lat_ms = np.asarray(lats) * 1e3
+                    out[scen] = dict(
+                        qps=round(q * n_batches / wall, 1),
+                        p50_batch_ms=round(float(np.percentile(lat_ms, 50)),
+                                           3),
+                        p99_batch_ms=round(float(np.percentile(lat_ms, 99)),
+                                           3),
+                        exact=ok,
+                        failovers=s["failovers"],
+                        redirected_blocks=s["redirected_blocks"],
+                        fallback_fetches=s["fallback_blocks"],
+                        retries=s["retries"],
+                        deadline_misses=s["deadline_misses"],
+                        degraded_batches=eng.stats.degraded_batches,
+                        health={str(n): st
+                                for n, st in sorted(s["health"].items())},
+                    )
+            finally:
+                store.close()
+            e = out[scen]
+            print(f"degraded mode [{scen}]: {e['qps']:.1f} qps, "
+                  f"p50 {e['p50_batch_ms']:.1f}ms p99 "
+                  f"{e['p99_batch_ms']:.1f}ms, failovers {e['failovers']}, "
+                  f"redirected {e['redirected_blocks']}, fallback served "
+                  f"{e['fallback_fetches']}, exact={e['exact']}")
+    chaos_scens = [s for s in scenarios if s != "healthy"]
+    out["exact"] = all(out[s]["exact"] for s in scenarios)
+    # the CI chaos-smoke gate: exact AND failover actually exercised
+    out["fallback_fetches"] = sum(
+        out[s]["fallback_fetches"] for s in chaos_scens
+    )
+    return out
+
+
 def session_queries(core, q, rng, run):
     """Session-coherent hot traffic: requests arrive in runs of ``run``
     same-topic queries (a user browsing one topic issues several searches
@@ -831,6 +935,13 @@ def main():
     ap.add_argument("--cache-transport", choices=("loopback", "socket"),
                     default="loopback",
                     help="sharded-cache peer transport for the bench")
+    ap.add_argument("--chaos",
+                    choices=("off", "kill-one-peer", "brownout", "all"),
+                    default="off",
+                    help="with --cache-shards > 1: also bench degraded-mode "
+                         "serving (healthy vs one peer dead vs one peer "
+                         "slow), gated on bit-exact results and failover "
+                         "actually firing (emits a degraded_mode entry)")
     ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_search.json"))
     args = ap.parse_args()
     if args.smoke:
@@ -894,7 +1005,7 @@ def main():
         )
         print(f"Q={q:4d} u_cap={u_cap:3d} dedup {dedup_ratio:.1f}x  {line}")
 
-    disk_entry, disk_pipe_entry = None, None
+    disk_entry, disk_pipe_entry, degraded_entry = None, None, None
     sharded_entry, opcache_entry, ladder_entry = None, None, None
     if args.tier in ("disk", "both"):
         disk_entry = bench_disk_tier(index, core, rng)
@@ -913,6 +1024,14 @@ def main():
                 n_batches=6 if args.smoke else 10,
             )
             results.append(sharded_entry)
+        if args.chaos != "off":
+            if args.cache_shards <= 1:
+                raise SystemExit("--chaos needs --cache-shards > 1")
+            degraded_entry = bench_degraded_mode(
+                index, core, rng, n_nodes=args.cache_shards,
+                transport=args.cache_transport, chaos=args.chaos,
+                n_batches=6 if args.smoke else 10,
+            )
 
     sweep_summary, sweep_exact = None, True
     if not args.skip_sweep:
@@ -930,7 +1049,7 @@ def main():
         results.append(ladder_entry)
 
     exact_all = bool(sweep_exact)
-    for e in (sharded_entry, opcache_entry, ladder_entry):
+    for e in (sharded_entry, opcache_entry, ladder_entry, degraded_entry):
         if e is not None:
             exact_all = exact_all and bool(e.get("exact", True))
     out = dict(
@@ -966,6 +1085,8 @@ def main():
                   f"(overlap {disk_pipe_entry['overlap_ratio']:.2f})")
     if sharded_entry is not None:
         out["disk_tier_sharded"] = sharded_entry
+    if degraded_entry is not None:
+        out["degraded_mode"] = degraded_entry
     if opcache_entry is not None:
         out["operand_cache_ab"] = opcache_entry
     if ladder_entry is not None:

@@ -225,16 +225,27 @@ def main():
                   f"fetched, {engine.stats.blocks_reused} reused across "
                   f"tiles of their batch")
 
-        # --- sharded cluster cache: one index copy per pod, a consistent-
-        # hash ring splitting cache ownership of the cluster-id space.
-        # Three in-process peers stand in for three pods (swap the loopback
-        # transport for the socket transport and this is the wire layout);
-        # the engine's fetch stage routes each tile's fetch list per owner
-        # and fetches owners concurrently.  Removing a node mid-run only
-        # moves ownership — ids stay identical.
+        # --- sharded cluster cache: one FULL index copy per pod, a
+        # consistent-hash ring splitting *cache* ownership of the
+        # cluster-id space.  The deployment model to hold onto: the ring
+        # is a cache optimization (the fleet's aggregate RAM holds each
+        # hot cluster once instead of once per pod), the pod's own full
+        # copy is the availability floor.  A peer can therefore never be
+        # a dependency — when one dies, its clusters are served from the
+        # local copy while a circuit breaker keeps traffic off the
+        # corpse, and results stay bit-identical throughout.  Three
+        # in-process peers stand in for three pods (swap the loopback
+        # transport for the socket transport and this is the wire
+        # layout); the engine's fetch stage routes each tile's fetch
+        # list per owner and fetches owners concurrently.
         from repro.core import blockstore as bstore
+        from repro.core import faults
 
-        store = bstore.open_sharded(ckpt, n_nodes=3, transport="loopback")
+        store = bstore.open_sharded(
+            ckpt, n_nodes=3, transport="loopback",
+            breaker_kwargs=dict(failure_threshold=1, cooldown_s=0.05,
+                                half_open_successes=1),
+        )
         try:
             with DiskIVFIndex.open(ckpt) as disk:
                 engine = SearchEngine(disk, k=k, n_probes=7, q_block=8,
@@ -246,11 +257,32 @@ def main():
                           for n, v in s["per_node"].items()}
                 print(f"sharded cache (3 nodes): ids identical to RAM ✓, "
                       f"blocks per node {served}, L1 hits {s['l1_hits']}")
-                store.remove_node(1)  # pod leaves; ring rebalances
+
+                # kill a node mid-run: the next two fetch ops against peer
+                # 1 are refused (a deterministic fault schedule — the same
+                # harness the chaos tests and `bench_search.py --chaos`
+                # use), then the peer comes back
+                faults.inject(store, 1,
+                              (faults.FaultRule("refuse", count=2),))
+                with store._l1_lock:
+                    store._l1.clear()  # force refetching through the ring
                 res2 = engine.search(queries, fspec)
                 assert (np.asarray(ram_ids) == np.asarray(res2.ids)).all()
-                print("node 1 removed mid-run: only ownership moved, ids "
-                      "identical ✓")
+                s = store.stats()
+                print(f"node 1 killed mid-run: ids identical ✓ — "
+                      f"failovers {s['failovers']}, blocks served by the "
+                      f"local fallback {s['fallback_blocks']}, node 1 "
+                      f"circuit {s['health'][1]}")
+
+                # recovery needs an *active* probe: failover-served blocks
+                # were adopted into the L1, so repeat traffic alone may
+                # never re-touch the peer (serve.py --probe-interval-s
+                # runs this on a thread)
+                while store.health.state(1) != "closed":
+                    store.probe_peers()
+                    time.sleep(0.06)
+                print("node 1 back: circuit closed via active probe, "
+                      "remote fetches resume — no restart")
         finally:
             store.close()
 

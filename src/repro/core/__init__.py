@@ -55,7 +55,16 @@ from repro.core.blockstore import (
     ResidentBlockStore,
     ShardedBlockStore,
     SocketTransport,
+    StoreStats,
     open_sharded,
+)
+from repro.core.transport import TransportError, TransportTimeout
+from repro.core.health import CircuitBreaker, PeerHealth
+from repro.core.faults import (
+    FaultRule,
+    FaultSchedule,
+    FaultyBlockStore,
+    FaultyTransport,
 )
 from repro.core.disk import ClusterCache, DiskIVFIndex
 from repro.core.engine import (

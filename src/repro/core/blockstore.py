@@ -27,14 +27,23 @@ for the search engine:
                          local L1 so repeat probes don't re-cross the ring.
 
 Transports are pluggable: :class:`LoopbackTransport` keeps peers in-process
-(tests, benches, single-host multi-cache experiments); the length-prefixed
-:class:`SocketTransport` / :class:`BlockStoreServer` pair is the thin wire
-path for real pods (npz-encoded records, no pickle).
+(tests, benches, single-host multi-cache experiments); the pooled,
+deadline-bounded :class:`SocketTransport` / :class:`BlockStoreServer` pair
+(``repro.core.transport``) is the wire path for real pods (npz-encoded
+records, no pickle, typed :class:`TransportError` on every failure mode).
+
+The ring is a cache optimization, never a dependency: every pod holds a
+full index copy, so a :class:`ShardedBlockStore` built with a ``fallback``
+store (the pod's own :class:`LocalBlockStore`) keeps serving when peers
+die.  Per-peer circuit breakers (``repro.core.health``) watch the
+transports' passive failure/latency signals; an open peer's clusters are
+fetched through the local full copy (and optionally adopted into the L1)
+until the breaker's half-open probe sees the peer answer again.
 
 Exactness invariant: every store returns the same per-cluster records, so
 any store composed with the engine yields results bit-identical to the sync
-local path.  Ring membership changes (node added/removed) only change
-*where* blocks come from — never results.
+local path.  Ring membership changes (node added/removed), peer failures,
+and failover only change *where* blocks come from — never results.
 """
 
 from __future__ import annotations
@@ -42,10 +51,8 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
-import io
-import socket
-import struct
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -425,191 +432,40 @@ class LocalBlockStore(_AsyncStoreMixin):
 
 
 # ---------------------------------------------------------------------------
-# Transports
+# Transports — implementation lives in repro.core.transport; re-exported
+# here because the PR-5 surface (tests, benches, examples) imports them
+# from this module
 # ---------------------------------------------------------------------------
 
-
-class LoopbackTransport:
-    """In-process peer: requests go straight to the peer store.  The
-    test/bench transport — and the honest model of a pod talking to its own
-    co-located store."""
-
-    def __init__(self, store):
-        self.store = store
-
-    def fetch(self, cluster_ids) -> Dict[int, Record]:
-        return self.store.get(cluster_ids)
-
-    def stats(self) -> dict:
-        return self.store.stats()
-
-    def close(self):
-        pass
-
-
-_FRAME = struct.Struct(">Q")  # 8-byte big-endian payload length
-
-
-def _send_frame(sock: socket.socket, payload: bytes):
-    sock.sendall(_FRAME.pack(len(payload)) + payload)
-
-
-def _recv_exact(sock: socket.socket, n: int) -> bytes:
-    buf = bytearray()
-    while len(buf) < n:
-        chunk = sock.recv(n - len(buf))
-        if not chunk:
-            raise ConnectionError("peer closed mid-frame")
-        buf.extend(chunk)
-    return bytes(buf)
-
-
-def _recv_frame(sock: socket.socket) -> bytes:
-    (n,) = _FRAME.unpack(_recv_exact(sock, _FRAME.size))
-    return _recv_exact(sock, n)
-
-
-def _encode_records(recs: Dict[int, Record]) -> bytes:
-    """npz-encodes records as ``{cid}:{field}`` arrays — dtype/shape travel
-    in the npz header, and decoding never unpickles objects."""
-    buf = io.BytesIO()
-    np.savez(buf, **{
-        f"{cid}:{field}": arr
-        for cid, rec in recs.items() for field, arr in rec.items()
-    })
-    return buf.getvalue()
-
-
-def _decode_records(payload: bytes) -> Dict[int, Record]:
-    out: Dict[int, Record] = {}
-    with np.load(io.BytesIO(payload), allow_pickle=False) as z:
-        for key in z.files:
-            cid_s, field = key.split(":", 1)
-            out.setdefault(int(cid_s), {})[field] = z[key]
-    return out
-
-
-class BlockStoreServer:
-    """Serves a store's blocks over a length-prefixed socket protocol.
-
-    Wire format (both directions): ``[u64 length][payload]``.  Request
-    payload = raw little-endian int64 cluster ids; response payload = npz of
-    ``{cid}:{field}`` arrays.  One thread per connection; ``port=0`` binds an
-    ephemeral port (read it back from ``.port``).
-    """
-
-    def __init__(self, store, host: str = "127.0.0.1", port: int = 0):
-        self.store = store
-        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
-        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        self._sock.bind((host, port))
-        self._sock.listen(16)
-        self.host, self.port = self._sock.getsockname()
-        self._stopped = threading.Event()
-        self._conns: set = set()
-        self._conns_lock = threading.Lock()
-        self._accepter = threading.Thread(target=self._accept_loop,
-                                          daemon=True)
-        self._accepter.start()
-
-    def _accept_loop(self):
-        while not self._stopped.is_set():
-            try:
-                conn, _ = self._sock.accept()
-            except OSError:
-                return  # listening socket closed by close()
-            with self._conns_lock:
-                self._conns.add(conn)
-            threading.Thread(target=self._serve_conn, args=(conn,),
-                             daemon=True).start()
-
-    def _serve_conn(self, conn: socket.socket):
-        try:
-            while not self._stopped.is_set():
-                try:
-                    req = _recv_frame(conn)
-                except (ConnectionError, OSError):
-                    return
-                cids = np.frombuffer(req, dtype="<i8")
-                _send_frame(conn, _encode_records(self.store.get(cids)))
-        finally:
-            conn.close()
-            # drop the tracked handle: long-lived peers see reconnecting
-            # clients, and dead sockets must not accumulate until close()
-            with self._conns_lock:
-                self._conns.discard(conn)
-
-    def close(self):
-        self._stopped.set()
-        try:
-            self._sock.close()
-        except OSError:
-            pass
-        with self._conns_lock:
-            conns = list(self._conns)
-        for c in conns:
-            try:
-                c.close()
-            except OSError:
-                pass
-        self._accepter.join(timeout=5)
-
-
-class SocketTransport:
-    """Client half of the length-prefixed block protocol.  One persistent
-    connection, serialized under a lock (the sharded store already fans out
-    across owners, so per-owner serialization costs nothing extra)."""
-
-    def __init__(self, host: str, port: int, timeout: float = 30.0):
-        self.host, self.port, self.timeout = host, port, timeout
-        self._sock: Optional[socket.socket] = None
-        self._lock = threading.Lock()
-        self.requests = 0
-        self.blocks = 0
-
-    def _connect(self) -> socket.socket:
-        if self._sock is None:
-            self._sock = socket.create_connection(
-                (self.host, self.port), timeout=self.timeout
-            )
-        return self._sock
-
-    def fetch(self, cluster_ids) -> Dict[int, Record]:
-        cids = np.asarray(cluster_ids, np.int64).reshape(-1)
-        if len(cids) == 0:
-            return {}
-        with self._lock:
-            try:
-                sock = self._connect()
-                _send_frame(sock, cids.astype("<i8").tobytes())
-                payload = _recv_frame(sock)
-            except (ConnectionError, OSError):
-                # one reconnect: servers drop idle connections
-                self._sock = None
-                sock = self._connect()
-                _send_frame(sock, cids.astype("<i8").tobytes())
-                payload = _recv_frame(sock)
-            self.requests += 1
-            self.blocks += len(cids)
-        return _decode_records(payload)
-
-    def stats(self) -> dict:
-        return dict(kind="socket", addr=f"{self.host}:{self.port}",
-                    requests=self.requests, blocks=self.blocks)
-
-    def close(self):
-        with self._lock:
-            if self._sock is not None:
-                try:
-                    self._sock.close()
-                except OSError:
-                    pass
-                self._sock = None
+from repro.core.transport import (  # noqa: E402,F401  (re-export)
+    BlockStoreServer,
+    LoopbackTransport,
+    SocketTransport,
+    TransportError,
+    TransportTimeout,
+    _decode_records,
+    _encode_records,
+    _recv_frame,
+    _send_frame,
+)
 
 
 # ---------------------------------------------------------------------------
 # The sharded store
 # ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StoreStats:
+    """Degradation accounting for a sharded store — how often the fetch
+    path had to route around an unhealthy peer (``launch/serve.py`` and the
+    chaos bench surface these)."""
+
+    failovers: int = 0          # peer sub-fetches that failed mid-request
+    #                             and were re-served by the fallback
+    redirected_blocks: int = 0  # blocks routed straight to the fallback
+    #                             because the owner's circuit was open
+    fallback_blocks: int = 0    # blocks the local full copy actually served
 
 
 class ShardedBlockStore(_AsyncStoreMixin):
@@ -627,12 +483,30 @@ class ShardedBlockStore(_AsyncStoreMixin):
     Ring membership is mutable: :meth:`remove_node` / :meth:`add_node`
     rebuild the ring mid-run.  Only ownership moves; results are
     bit-identical before and after (every peer serves the same records).
+
+    Failover: with a ``fallback`` store (the pod's own full-copy
+    :class:`LocalBlockStore`), peer failures are absorbed instead of
+    raised.  A per-peer :class:`~repro.core.health.CircuitBreaker`
+    (``health``) watches every peer fetch; while a peer's circuit is open
+    its clusters are fetched through the fallback (``adopt_fallback``
+    additionally lands them in the L1 so repeat probes don't re-read
+    disk), and a sub-fetch that fails mid-request is transparently
+    re-served by the fallback (``StoreStats.failovers``).  When the
+    breaker's cooldown lapses, the next fetch for that peer doubles as the
+    half-open probe — recovery needs no restart and no operator.  Without
+    a fallback the PR-5 contract is preserved: peer errors raise.
     """
 
     def __init__(self, transports: Dict[int, object], *,
                  ownership=None, l1_records: int = 64,
                  self_node: Optional[int] = None,
-                 owned_stores: Sequence = (), owned_servers: Sequence = ()):
+                 owned_stores: Sequence = (), owned_servers: Sequence = (),
+                 fallback=None, owns_fallback: bool = False,
+                 adopt_fallback: bool = True, health=None,
+                 breaker_kwargs: Optional[dict] = None,
+                 probe_interval_s: Optional[float] = None):
+        from repro.core.health import PeerHealth
+
         if not transports:
             raise ValueError("ShardedBlockStore needs at least one transport")
         self.transports = dict(transports)
@@ -655,6 +529,23 @@ class ShardedBlockStore(_AsyncStoreMixin):
         # teardown ownership (stores/servers built by open_sharded)
         self._owned_stores = list(owned_stores)
         self._owned_servers = list(owned_servers)
+        # availability floor + per-peer health
+        self.fallback = fallback
+        self._owns_fallback = owns_fallback
+        self.adopt_fallback = adopt_fallback
+        self.health = health or PeerHealth(
+            self.transports, breaker_kwargs=breaker_kwargs
+        )
+        self.store_stats = StoreStats()
+        self.probe_interval_s = probe_interval_s
+        self._probe_stop = threading.Event()
+        self._prober: Optional[threading.Thread] = None
+        if probe_interval_s:
+            self._prober = threading.Thread(
+                target=self._probe_loop, daemon=True,
+                name="shard-health-probe",
+            )
+            self._prober.start()
 
     # ---- ring membership ----
     def remove_node(self, node: int):
@@ -674,6 +565,7 @@ class ShardedBlockStore(_AsyncStoreMixin):
             )
         t = self.transports.pop(node)
         t.close()
+        self.health.drop(node)
         if self.self_node == node:
             self.self_node = None
 
@@ -738,12 +630,34 @@ class ShardedBlockStore(_AsyncStoreMixin):
         per_owner = probes_lib.split_fetch_by_owner(
             np.asarray(missing, np.int64), self.ownership.owner_of
         )
-        futs = {
-            owner: self._fan.submit(self.transports[owner].fetch, sub)
-            for owner, sub in per_owner.items()
-        }
-        for owner, fut in futs.items():
-            recs = fut.result()
+        futs = {}
+        fallback_cids: List[int] = []
+        for owner, sub in per_owner.items():
+            if (self.fallback is not None and owner != self.self_node
+                    and not self.health.allow(owner)):
+                # circuit open and cooldown not lapsed: don't even knock —
+                # the local full copy serves this peer's clusters.  (When
+                # the cooldown HAS lapsed, allow() grants the half-open
+                # probe token and this sub-fetch is the probe.)
+                fallback_cids.extend(int(c) for c in sub)
+                with self._stats_lock:
+                    self.store_stats.redirected_blocks += len(sub)
+                continue
+            futs[owner] = (sub, self._fan.submit(self._fetch_peer, owner,
+                                                 sub))
+        for owner, (sub, fut) in futs.items():
+            try:
+                recs = fut.result()
+            except Exception:
+                # _fetch_peer already fed the breaker; without a fallback
+                # the PR-5 contract holds (the error surfaces), and the
+                # co-located peer failing is a local bug, not a ring event
+                if self.fallback is None or owner == self.self_node:
+                    raise
+                fallback_cids.extend(int(c) for c in sub)
+                with self._stats_lock:
+                    self.store_stats.failovers += 1
+                continue
             out.update(recs)
             with self._stats_lock:
                 self.node_blocks[owner] = (
@@ -753,24 +667,86 @@ class ShardedBlockStore(_AsyncStoreMixin):
                     self.remote_blocks += len(recs)
             if owner != self.self_node:
                 self._l1_put(recs)
+        if fallback_cids:
+            recs = self.fallback.get(np.asarray(fallback_cids, np.int64))
+            out.update(recs)
+            with self._stats_lock:
+                self.store_stats.fallback_blocks += len(recs)
+            if self.adopt_fallback:
+                self._l1_put(recs)
         return out
+
+    def _fetch_peer(self, owner, sub) -> Dict[int, Record]:
+        """One peer sub-fetch with passive health signaling: latency feeds
+        the breaker's EWMA (brownout detection), any exception is a
+        failure vote."""
+        t0 = time.monotonic()
+        try:
+            recs = self.transports[owner].fetch(sub)
+        except Exception:
+            if owner != self.self_node:
+                self.health.on_failure(owner)
+            raise
+        if owner != self.self_node:
+            self.health.on_success(owner, time.monotonic() - t0)
+        return recs
+
+    # ---- health ----
+    @property
+    def degraded(self) -> bool:
+        """True while any peer's circuit is not closed (the engine counts
+        batches served in this state)."""
+        return self.health.degraded
+
+    def probe_peers(self) -> int:
+        """One active-probe pass: pings every non-closed peer whose breaker
+        grants a token (``transport.ping`` is a zero-id round trip).
+        Returns how many probes succeeded.  Runs periodically when the
+        store was built with ``probe_interval_s``; tests call it
+        directly."""
+        ok = 0
+        for node, t in list(self.transports.items()):
+            if node == self.self_node:
+                continue
+            ping = getattr(t, "ping", None)
+            if ping is None:
+                continue
+            ok += int(self.health.probe(node, ping))
+        return ok
+
+    def _probe_loop(self):
+        while not self._probe_stop.wait(self.probe_interval_s):
+            self.probe_peers()
 
     def stats(self) -> dict:
         with self._stats_lock:
             per_node = {}
+            retries = deadline_misses = 0
             for n, t in self.transports.items():
                 s = t.stats() if hasattr(t, "stats") else {}
                 s = dict(s)
                 s["blocks_served"] = self.node_blocks.get(n, 0)
+                retries += s.get("retries", 0)
+                deadline_misses += s.get("timeouts", 0)
                 per_node[n] = s
             return dict(
                 kind="sharded", nodes=sorted(self.transports),
                 self_node=self.self_node, l1_hits=self.l1_hits,
                 l1_misses=self.l1_misses, l1_records=len(self._l1),
                 remote_blocks=self.remote_blocks, per_node=per_node,
+                health={n: s["state"]
+                        for n, s in self.health.snapshot().items()},
+                failovers=self.store_stats.failovers,
+                redirected_blocks=self.store_stats.redirected_blocks,
+                fallback_blocks=self.store_stats.fallback_blocks,
+                retries=retries, deadline_misses=deadline_misses,
+                has_fallback=self.fallback is not None,
             )
 
     def close(self):
+        self._probe_stop.set()
+        if self._prober is not None:
+            self._prober.join(timeout=5)
         self._shutdown_pool()
         self._fan.shutdown(wait=True)
         for t in self.transports.values():
@@ -779,6 +755,8 @@ class ShardedBlockStore(_AsyncStoreMixin):
             s.close()
         for st in self._owned_stores:
             st.close()
+        if self._owns_fallback and self.fallback is not None:
+            self.fallback.close()
 
 
 def open_sharded(directory: str, *, n_nodes: int,
@@ -786,20 +764,35 @@ def open_sharded(directory: str, *, n_nodes: int,
                  capacity_records: Optional[int] = None,
                  l1_records: int = 64, self_node: Optional[int] = 0,
                  pin_fraction: float = 0.5,
-                 pin_refresh: int = 64) -> ShardedBlockStore:
+                 pin_refresh: int = 64,
+                 fallback="open", adopt_fallback: bool = True,
+                 timeout_s: float = 30.0, retries: int = 1,
+                 breaker_kwargs: Optional[dict] = None,
+                 probe_interval_s: Optional[float] = None
+                 ) -> ShardedBlockStore:
     """Opens an N-node sharded fetch layer over one checkpoint directory.
 
     Models the sharded-pod deployment (one index copy per pod, the ring
     splits *cache* ownership): every node opens its own reader + cache over
     the same checkpoint; ``capacity_records`` is the per-node cache cap.
     ``transport="socket"`` additionally runs each peer behind a
-    :class:`BlockStoreServer` and talks to it over the wire protocol — the
-    in-process rehearsal of the real pod topology.  ``self_node`` (the
-    co-located peer whose blocks skip the L1) only applies to the loopback
-    transport: behind a socket every peer costs a wire round trip, node 0
-    included, so its blocks belong in the L1 like everyone else's.  The
-    returned store owns its nodes (and servers): ``close()`` tears
-    everything down.
+    :class:`BlockStoreServer` and talks to it over the deadline-bounded
+    wire protocol (``timeout_s``/``retries``) — the in-process rehearsal of
+    the real pod topology.  ``self_node`` (the co-located peer whose blocks
+    skip the L1) only applies to the loopback transport: behind a socket
+    every peer costs a wire round trip, node 0 included, so its blocks
+    belong in the L1 like everyone else's.
+
+    ``fallback`` is the availability floor: ``"open"`` (the default) opens
+    one more uncached-capacity view of the same checkpoint as the local
+    full copy, any BlockStore instance is used as-is (e.g. the pod's own
+    ``DiskIVFIndex.blockstore`` — no extra memory), and ``None`` disables
+    failover entirely (peer errors raise, the PR-5 contract).
+    ``breaker_kwargs`` tune the per-peer circuit breakers
+    (:class:`~repro.core.health.CircuitBreaker`); ``probe_interval_s``
+    starts the background active-probe thread.  The returned store owns
+    its nodes (and servers, and an ``"open"``-ed fallback): ``close()``
+    tears everything down.
     """
     if transport not in ("loopback", "socket"):
         raise ValueError(f"transport must be 'loopback'|'socket', got "
@@ -820,11 +813,22 @@ def open_sharded(directory: str, *, n_nodes: int,
     else:
         servers = [BlockStoreServer(s) for s in stores]
         transports = {
-            i: SocketTransport(srv.host, srv.port)
+            i: SocketTransport(srv.host, srv.port, timeout=timeout_s,
+                               retries=retries)
             for i, srv in enumerate(servers)
         }
+    owns_fallback = fallback == "open"
+    if owns_fallback:
+        fallback = LocalBlockStore.open(
+            directory, capacity_records=capacity_records,
+            pin_fraction=pin_fraction, pin_refresh=pin_refresh,
+            name="fallback",
+        )
     return ShardedBlockStore(
         transports, ownership=HashRing(range(n_nodes)),
         l1_records=l1_records, self_node=self_node,
         owned_stores=stores, owned_servers=servers,
+        fallback=fallback, owns_fallback=owns_fallback,
+        adopt_fallback=adopt_fallback, breaker_kwargs=breaker_kwargs,
+        probe_interval_s=probe_interval_s,
     )

@@ -108,6 +108,9 @@ class CacheStats:
     prefetched: int = 0  # loaded by the background thread
     errors: int = 0      # prefetch-thread load failures (retried inline by
     #                      the next get_many touching the cluster)
+    stalled_waits: int = 0  # waits on an in-flight load that outlived the
+    #                         waiter timeout (loader hung or died); the
+    #                         waiter re-loaded inline instead of hanging
 
 
 class ClusterCache:
@@ -126,7 +129,7 @@ class ClusterCache:
 
     def __init__(self, reader: ShardReader, *, capacity_records: int,
                  n_clusters: int, pin_fraction: float = 0.5,
-                 pin_refresh: int = 64):
+                 pin_refresh: int = 64, waiter_timeout_s: float = 30.0):
         if capacity_records < 1:
             raise ValueError("capacity_records must be >= 1")
         if not 0.0 <= pin_fraction <= 1.0:
@@ -148,6 +151,7 @@ class ClusterCache:
         self.pin_records = min(int(pin_fraction * capacity_records),
                                max(capacity_records - 1, 0))
         self.pin_refresh = pin_refresh
+        self.waiter_timeout_s = waiter_timeout_s
         self.stats = CacheStats()
         self._entries: "collections.OrderedDict[int, dict]" = (
             collections.OrderedDict()
@@ -267,8 +271,16 @@ class ClusterCache:
                             holder[0].set()
                 raise
         for cid, holder in waiters:
-            holder[0].wait()
-            if isinstance(holder[1], BaseException):  # prefetch failed;
+            # Bounded wait: a loader that hung or died (fault injection, a
+            # stuck disk) must not hang every batch that raced its load —
+            # after waiter_timeout_s the waiter loads inline.  _load is
+            # idempotent under the cache lock, so a late-finishing original
+            # loader is harmless (the insert just refreshes LRU position).
+            if not holder[0].wait(timeout=self.waiter_timeout_s):
+                with self._lock:
+                    self.stats.stalled_waits += 1
+                out[cid] = self._load(cid, prefetched=False)
+            elif isinstance(holder[1], BaseException):  # prefetch failed;
                 out[cid] = self._load(cid, prefetched=False)  # retry inline
             else:
                 out[cid] = holder[1]

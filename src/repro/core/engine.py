@@ -487,6 +487,10 @@ class EngineStats:
     blocks_fetched: int = 0   # per-cluster blocks pulled through the store
     blocks_reused: int = 0    # slots served from the per-batch operand
     #                           cache instead of being re-assembled/re-put
+    # degradation accounting: batches completed while the store reported a
+    # non-closed peer circuit (results stay bit-identical — the fallback
+    # serves the same records — but the fleet should know it ran degraded)
+    degraded_batches: int = 0
 
     @property
     def overlap_ratio(self) -> float:
@@ -884,8 +888,19 @@ class SearchEngine:
     def execute(self, plan: SearchPlan) -> SearchResult:
         self.stats.batches += 1
         if self.pipeline == "on":
-            return self._execute_pipelined(plan)
-        return self.scan_merge(plan, self.fetch(plan))
+            res = self._execute_pipelined(plan)
+        else:
+            res = self.scan_merge(plan, self.fetch(plan))
+        self._note_degraded()
+        return res
+
+    def _note_degraded(self):
+        """Counts batches served while the fetch store was routing around
+        an unhealthy peer (failover keeps results bit-identical, so this
+        counter is the only visible trace)."""
+        if self._store is not None and getattr(self._store, "degraded",
+                                               False):
+            self.stats.degraded_batches += 1
 
     # ---- cross-batch software pipeline ----
     def submit(self, queries: Array, fspec: FilterSpec) -> "PendingSearch":
@@ -914,9 +929,13 @@ class SearchEngine:
         plan = pending.plan
         if pending.inflight is None:
             if self.pipeline == "on":
-                return self._execute_pipelined(plan)
-            return self.scan_merge(plan, self.fetch(plan))
-        return self._run_tiles(plan, pending.inflight)
+                res = self._execute_pipelined(plan)
+            else:
+                res = self.scan_merge(plan, self.fetch(plan))
+        else:
+            res = self._run_tiles(plan, pending.inflight)
+        self._note_degraded()
+        return res
 
     def _tile_operands(self, plan: SearchPlan, i: int):
         """RAM-tier per-tile operands: resident arrays + the tile's global

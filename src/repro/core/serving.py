@@ -46,6 +46,11 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
                          cache_shards: int = 1,
                          cache_transport: str = "loopback",
                          cache_l1_records: int = 64,
+                         cache_fallback: bool = True,
+                         peer_timeout_s: float = 30.0,
+                         peer_retries: int = 1,
+                         breaker_kwargs: Optional[dict] = None,
+                         probe_interval_s: Optional[float] = None,
                          ) -> Callable:
     """The batched server's default search step: the search engine.
 
@@ -86,6 +91,15 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
     midpoints.  The sharded store is exposed as ``search_fn.blockstore``
     (per-node stats via ``.stats()``) and torn down by
     ``search_fn.close()``.
+
+    Resilience knobs (sharded fetch only): ``cache_fallback`` (default on)
+    wires the index's own full-copy pager in as the availability floor —
+    an unhealthy peer's clusters are served from local disk, results
+    bit-identical, and the batch never fails; ``peer_timeout_s`` /
+    ``peer_retries`` bound each socket fetch; ``breaker_kwargs`` tune the
+    per-peer circuit breakers; ``probe_interval_s`` starts the active
+    health probe.  ``search_fn.degraded()`` reports whether any peer
+    circuit is currently open (the server marks responses accordingly).
     """
     from repro.core import blockstore as blockstore_lib
     from repro.core.disk import DiskIVFIndex
@@ -107,10 +121,17 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
         # per-node cache capacity: split the index's own cache budget so N
         # peers together hold what one local cache would have
         cap = max(index.cache.capacity_records // cache_shards, 1)
+        # the pod's own full-copy pager (which otherwise idles while the
+        # ring serves) is the availability floor: peer failures fetch
+        # through it instead of failing the batch — zero extra memory
         store = blockstore_lib.open_sharded(
             index.directory, n_nodes=cache_shards,
             transport=cache_transport, capacity_records=cap,
             l1_records=cache_l1_records,
+            fallback=index.blockstore if cache_fallback else None,
+            timeout_s=peer_timeout_s, retries=peer_retries,
+            breaker_kwargs=breaker_kwargs,
+            probe_interval_s=probe_interval_s,
         )
     engine = SearchEngine(
         index, k=k, n_probes=n_probes, q_block=q_block, v_block=v_block,
@@ -137,6 +158,9 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
     search_fn.index = index
     search_fn.engine = engine
     search_fn.blockstore = engine.blockstore
+    search_fn.degraded = (
+        lambda: bool(getattr(engine.blockstore, "degraded", False))
+    )
     search_fn.close = close
     return search_fn
 
@@ -156,7 +180,10 @@ class Response:
     ids: np.ndarray  # [k]
     latency_s: float
     batched_with: int
-    degraded: bool  # True if any shard was dropped from the merge
+    degraded: bool  # a shard was dropped from the merge, or the fetch
+    #                 layer served around an open peer circuit (the latter
+    #                 keeps results bit-identical — it is a health signal,
+    #                 not a recall warning)
 
 
 class ShardHealth:
@@ -302,7 +329,13 @@ class SearchServer:
         scores = np.asarray(scores)
         ids = np.asarray(ids)
         t1 = time.monotonic()
-        degraded = self.health.degraded
+        # degraded = a shard dropped from the merge OR the fetch layer
+        # routing around an open peer circuit (results stay bit-identical
+        # in the latter case; clients still deserve the signal)
+        store_degraded = getattr(self.search_fn, "degraded", None)
+        degraded = self.health.degraded or bool(
+            store_degraded() if callable(store_degraded) else False
+        )
         self.stats["batches"] += 1
         self.stats["requests"] += b
         self.stats["degraded_batches"] += int(degraded)

@@ -1,0 +1,458 @@
+"""Deadline-bounded block transport: the wire half of the fetch layer.
+
+PR-5's ``SocketTransport`` assumed a healthy peer: one persistent
+connection, a 30 s default timeout that a single slow response could hold
+for the whole store, and mid-stream failures (peer died between the frame
+header and the payload) surfacing as struct/npz decode garbage two layers
+up.  Production filtered-search systems (PipeANN's SSD path, the
+attribute-filtering study's tail-latency analysis) treat the fetch tier as
+an unreliable device behind a deadline-aware client; this module is that
+client:
+
+  * every request carries its own deadline (``timeout_s``) — a peer that
+    stalls costs one bounded wait, never a hung batch;
+  * failures are *typed*: any short read, reset, refusal, or corrupt
+    payload raises :class:`TransportError` (a ``ConnectionError`` subclass,
+    so pre-existing callers keep working) and the connection is discarded —
+    a socket in an unknown mid-stream state is never reused;
+  * reconnect-on-broken-pipe with capped exponential backoff + jitter
+    (``retries``/``backoff_s``/``backoff_cap_s``);
+  * a small connection pool bounds in-flight requests per peer
+    (``max_inflight``) so concurrent engines sharing one peer neither
+    serialize behind a single socket nor stampede it;
+  * request coalescing: concurrent fetches through one transport issue one
+    wire fetch per cluster id — followers wait on the leader's in-flight
+    holder instead of re-crossing the wire;
+  * ``ping()`` — a zero-id request/response round trip — is the health
+    layer's lightweight active probe.
+
+The server half (:class:`BlockStoreServer`) and the in-process
+:class:`LoopbackTransport` live here too; ``repro.core.blockstore``
+re-exports everything for backwards compatibility.
+
+Wire format (both directions): ``[u64 big-endian length][payload]``.
+Request payload = raw little-endian int64 cluster ids (empty = ping);
+response payload = npz of ``{cid}:{field}`` arrays, never pickled.
+"""
+
+from __future__ import annotations
+
+import io
+import random
+import socket
+import struct
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+Record = Dict[str, np.ndarray]
+
+
+class TransportError(ConnectionError):
+    """A fetch failed at the transport layer (connect refused, peer closed
+    mid-frame, deadline exceeded, corrupt payload).  Subclasses
+    ``ConnectionError`` so callers written against the PR-5 transport keep
+    catching it; the health layer treats every instance as a passive
+    failure signal."""
+
+
+class TransportTimeout(TransportError):
+    """The per-request deadline expired (connect, send, or receive)."""
+
+
+_FRAME = struct.Struct(">Q")  # 8-byte big-endian payload length
+
+# Frames beyond this are a protocol violation (a desynced stream decoding
+# garbage as a length), not a plausible response — fail fast instead of
+# trying to recv an exabyte.
+_MAX_FRAME = 1 << 40
+
+
+def _send_frame(sock: socket.socket, payload: bytes):
+    sock.sendall(_FRAME.pack(len(payload)) + payload)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise TransportError(
+                f"peer closed mid-frame ({len(buf)}/{n} bytes)"
+            )
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def _recv_frame(sock: socket.socket) -> bytes:
+    (n,) = _FRAME.unpack(_recv_exact(sock, _FRAME.size))
+    if n > _MAX_FRAME:
+        raise TransportError(f"frame length {n} exceeds protocol maximum "
+                             f"(desynced stream?)")
+    return _recv_exact(sock, n)
+
+
+def _encode_records(recs: Dict[int, Record]) -> bytes:
+    """npz-encodes records as ``{cid}:{field}`` arrays — dtype/shape travel
+    in the npz header, and decoding never unpickles objects."""
+    buf = io.BytesIO()
+    np.savez(buf, **{
+        f"{cid}:{field}": arr
+        for cid, rec in recs.items() for field, arr in rec.items()
+    })
+    return buf.getvalue()
+
+
+def _decode_records(payload: bytes) -> Dict[int, Record]:
+    out: Dict[int, Record] = {}
+    with np.load(io.BytesIO(payload), allow_pickle=False) as z:
+        for key in z.files:
+            cid_s, field = key.split(":", 1)
+            out.setdefault(int(cid_s), {})[field] = z[key]
+    return out
+
+
+class LoopbackTransport:
+    """In-process peer: requests go straight to the peer store.  The
+    test/bench transport — and the honest model of a pod talking to its own
+    co-located store."""
+
+    def __init__(self, store):
+        self.store = store
+
+    def fetch(self, cluster_ids) -> Dict[int, Record]:
+        return self.store.get(cluster_ids)
+
+    def ping(self):
+        """Active probe: a zero-id fetch (fails iff the store does)."""
+        self.store.get(np.asarray([], np.int64))
+
+    def stats(self) -> dict:
+        return self.store.stats()
+
+    def close(self):
+        pass
+
+
+class BlockStoreServer:
+    """Serves a store's blocks over a length-prefixed socket protocol.
+
+    Wire format (both directions): ``[u64 length][payload]``.  Request
+    payload = raw little-endian int64 cluster ids (an empty request is a
+    ping and gets an empty npz back); response payload = npz of
+    ``{cid}:{field}`` arrays.  One thread per connection; ``port=0`` binds
+    an ephemeral port (read it back from ``.port``).
+
+    ``close()`` is idempotent and reliably unblocks the accepter: besides
+    closing the listening socket (which wakes ``accept()`` on most
+    platforms but is allowed not to), it pokes a throwaway connection at
+    the listener so a blocked ``accept()`` always returns and sees the
+    stop flag.
+    """
+
+    def __init__(self, store, host: str = "127.0.0.1", port: int = 0):
+        self.store = store
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(16)
+        self.host, self.port = self._sock.getsockname()
+        self._stopped = threading.Event()
+        self._closed = False
+        self._close_lock = threading.Lock()
+        self._conns: set = set()
+        self._conns_lock = threading.Lock()
+        self._accepter = threading.Thread(target=self._accept_loop,
+                                          daemon=True)
+        self._accepter.start()
+
+    def _accept_loop(self):
+        while not self._stopped.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                return  # listening socket closed by close()
+            if self._stopped.is_set():
+                conn.close()
+                return
+            with self._conns_lock:
+                self._conns.add(conn)
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             daemon=True).start()
+
+    def _serve_conn(self, conn: socket.socket):
+        try:
+            while not self._stopped.is_set():
+                try:
+                    req = _recv_frame(conn)
+                    cids = np.frombuffer(req, dtype="<i8")
+                    _send_frame(conn, _encode_records(self.store.get(cids)))
+                except (ConnectionError, OSError):
+                    # client went away (or close() yanked the socket from
+                    # under a mid-request handler) — just drop the conn
+                    return
+        finally:
+            conn.close()
+            # drop the tracked handle: long-lived peers see reconnecting
+            # clients, and dead sockets must not accumulate until close()
+            with self._conns_lock:
+                self._conns.discard(conn)
+
+    def close(self):
+        with self._close_lock:
+            if self._closed:
+                return
+            self._closed = True
+        self._stopped.set()
+        # Wake a blocked accept() even where closing the listener doesn't:
+        # a throwaway connection makes accept() return, and the loop's stop
+        # check drops it.  Refusal just means the listener is already dead.
+        try:
+            poke = socket.create_connection((self.host, self.port),
+                                            timeout=0.5)
+            poke.close()
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        with self._conns_lock:
+            conns = list(self._conns)
+        for c in conns:
+            try:
+                c.close()
+            except OSError:
+                pass
+        self._accepter.join(timeout=5)
+
+
+class SocketTransport:
+    """Pooled, deadline-bounded client half of the block protocol.
+
+    Per-request deadline (``timeout_s``), reconnect-on-broken-pipe with
+    capped exponential backoff + jitter, at most ``max_inflight`` wire
+    requests in flight (a small connection pool — concurrent engines
+    sharing a peer fan out without stampeding it), and request coalescing:
+    cluster ids another thread is already fetching through this transport
+    are not re-requested — the follower waits on the leader's holder.
+
+    Every failure mode raises :class:`TransportError` (deadlines raise
+    :class:`TransportTimeout`), and the implicated connection is discarded:
+    a socket that timed out or short-read is mid-stream in an unknown
+    state, and reusing it is how PR-5 turned one truncated payload into a
+    cascade of npz decode errors.
+    """
+
+    def __init__(self, host: str, port: int, timeout: float = 30.0, *,
+                 connect_timeout: Optional[float] = None,
+                 max_inflight: int = 4, retries: int = 1,
+                 backoff_s: float = 0.05, backoff_cap_s: float = 2.0,
+                 jitter: float = 0.5, coalesce: bool = True, seed: int = 0):
+        self.host, self.port, self.timeout = host, port, timeout
+        self.connect_timeout = connect_timeout or timeout
+        self.max_inflight = max(int(max_inflight), 1)
+        self.retries = max(int(retries), 0)
+        self.backoff_s = backoff_s
+        self.backoff_cap_s = backoff_cap_s
+        self.jitter = jitter
+        self.coalesce = coalesce
+        self._rng = random.Random(seed)
+        self._sem = threading.BoundedSemaphore(self.max_inflight)
+        self._idle: List[socket.socket] = []
+        self._lock = threading.Lock()
+        self._closed = False
+        # coalescing: cid -> [Event, record | exception | None]
+        self._pending: Dict[int, list] = {}
+        self._co_lock = threading.Lock()
+        # counters (read under/over _lock; exact totals don't matter)
+        self.requests = 0
+        self.blocks = 0
+        self.connects = 0
+        self.reconnects = 0
+        self.retried = 0
+        self.timeouts = 0
+        self.errors = 0
+        self.coalesced = 0
+
+    @property
+    def addr(self) -> str:
+        return f"{self.host}:{self.port}"
+
+    # ---- connection pool ----
+    def _checkout(self) -> socket.socket:
+        with self._lock:
+            if self._closed:
+                raise TransportError(f"transport to {self.addr} is closed")
+            if self._idle:
+                return self._idle.pop()
+            first = self.connects == 0
+        try:
+            sock = socket.create_connection(
+                (self.host, self.port), timeout=self.connect_timeout
+            )
+        except OSError as e:
+            with self._lock:
+                self.errors += 1
+            if isinstance(e, (socket.timeout, TimeoutError)):
+                raise TransportTimeout(
+                    f"connect to {self.addr} timed out") from e
+            raise TransportError(f"connect to {self.addr} failed: {e}") from e
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        with self._lock:
+            self.connects += 1
+            if not first:
+                self.reconnects += 1
+        return sock
+
+    def _checkin(self, sock: socket.socket):
+        with self._lock:
+            if not self._closed and len(self._idle) < self.max_inflight:
+                self._idle.append(sock)
+                return
+        sock.close()
+
+    @staticmethod
+    def _discard(sock: socket.socket):
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+    # ---- one wire round trip ----
+    def _wire_once(self, payload_req: bytes, n_blocks: int
+                   ) -> Dict[int, Record]:
+        if not self._sem.acquire(timeout=self.timeout):
+            with self._lock:
+                self.timeouts += 1
+            raise TransportTimeout(
+                f"{self.addr}: {self.max_inflight} requests already in "
+                f"flight for {self.timeout}s"
+            )
+        try:
+            sock = self._checkout()
+            try:
+                sock.settimeout(self.timeout)
+                _send_frame(sock, payload_req)
+                payload = _recv_frame(sock)
+                recs = _decode_records(payload) if payload else {}
+            except BaseException as e:
+                # mid-stream state is unknowable: never reuse this socket
+                self._discard(sock)
+                with self._lock:
+                    self.errors += 1
+                if isinstance(e, (socket.timeout, TimeoutError)):
+                    with self._lock:
+                        self.timeouts += 1
+                    raise TransportTimeout(
+                        f"{self.addr}: no response within "
+                        f"{self.timeout}s") from e
+                if isinstance(e, TransportError):
+                    raise
+                if isinstance(e, (ConnectionError, OSError, struct.error,
+                                  ValueError, KeyError, EOFError)):
+                    # short read / reset / corrupt npz — one typed error
+                    raise TransportError(
+                        f"{self.addr}: fetch failed: {e}") from e
+                raise
+            self._checkin(sock)
+            with self._lock:
+                self.requests += 1
+                self.blocks += n_blocks
+            return recs
+        finally:
+            self._sem.release()
+
+    def _fetch_retry(self, cids: List[int]) -> Dict[int, Record]:
+        payload_req = np.asarray(cids, "<i8").tobytes()
+        delay = self.backoff_s
+        last: Optional[TransportError] = None
+        for attempt in range(self.retries + 1):
+            if attempt:
+                with self._lock:
+                    self.retried += 1
+                time.sleep(delay * (1.0 + self.jitter * self._rng.random()))
+                delay = min(delay * 2.0, self.backoff_cap_s)
+            try:
+                return self._wire_once(payload_req, len(cids))
+            except TransportError as e:
+                last = e
+        assert last is not None
+        raise last
+
+    # ---- public ----
+    def fetch(self, cluster_ids) -> Dict[int, Record]:
+        cids = [int(c) for c in
+                np.asarray(cluster_ids, np.int64).reshape(-1)]
+        if not cids:
+            return {}
+        if not self.coalesce:
+            return self._fetch_retry(cids)
+        mine: List[int] = []
+        follow: Dict[int, list] = {}
+        with self._co_lock:
+            for cid in dict.fromkeys(cids):  # unique, first-need order
+                holder = self._pending.get(cid)
+                if holder is None:
+                    self._pending[cid] = holder = [threading.Event(), None]
+                    mine.append(cid)
+                else:
+                    follow[cid] = holder
+        out: Dict[int, Record] = {}
+        if mine:
+            try:
+                recs = self._fetch_retry(mine)
+            except BaseException as e:
+                with self._co_lock:
+                    for cid in mine:
+                        holder = self._pending.pop(cid, None)
+                        if holder is not None:
+                            holder[1] = e
+                            holder[0].set()
+                raise
+            with self._co_lock:
+                for cid in mine:
+                    holder = self._pending.pop(cid, None)
+                    if holder is not None:
+                        holder[1] = recs.get(cid)
+                        holder[0].set()
+            out.update(recs)
+        # the leader's own deadline + backoff budget bounds this wait; the
+        # slack keeps a racing leader's bookkeeping from tripping us early
+        budget = (self.retries + 1) * self.timeout + 2 * self.backoff_cap_s
+        for cid, holder in follow.items():
+            got = holder[0].wait(timeout=budget + 5.0)
+            rec = holder[1] if got else None
+            if rec is None or isinstance(rec, BaseException):
+                # leader failed (or stalled): fetch this id ourselves so one
+                # bad leader doesn't fail every coalesced follower
+                out.update(self._fetch_retry([cid]))
+            else:
+                with self._lock:
+                    self.coalesced += 1
+                out[cid] = rec
+        return out
+
+    def ping(self):
+        """Lightweight active probe: one empty request/response round trip
+        (no retries — the health layer decides how often to knock)."""
+        self._wire_once(b"", 0)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return dict(
+                kind="socket", addr=self.addr, requests=self.requests,
+                blocks=self.blocks, connects=self.connects,
+                reconnects=self.reconnects, retries=self.retried,
+                timeouts=self.timeouts, errors=self.errors,
+                coalesced=self.coalesced,
+            )
+
+    def close(self):
+        with self._lock:
+            self._closed = True
+            idle, self._idle = self._idle, []
+        for sock in idle:
+            self._discard(sock)

@@ -98,6 +98,22 @@ def main():
                     help="slot-table bucket ladder: fine adds x1.5 "
                          "midpoints (fewer wasted pad-slot scans, ~2x the "
                          "bounded compile count)")
+    ap.add_argument("--cache-fallback", choices=("on", "off"), default="on",
+                    help="sharded cache: serve an unhealthy peer's "
+                         "clusters from the pod's own full index copy "
+                         "(ring = cache optimization, local copy = "
+                         "availability floor); off restores the PR-5 "
+                         "fail-on-peer-error contract")
+    ap.add_argument("--peer-timeout-s", type=float, default=30.0,
+                    help="sharded cache, socket transport: per-request "
+                         "deadline on every peer fetch")
+    ap.add_argument("--peer-retries", type=int, default=1,
+                    help="sharded cache, socket transport: reconnect "
+                         "retries per fetch (capped exponential backoff)")
+    ap.add_argument("--probe-interval-s", type=float, default=None,
+                    help="sharded cache: active health-probe period for "
+                         "open peer circuits (default: passive half-open "
+                         "probes only)")
     args = ap.parse_args()
     if args.t_max is not None and args.t_max != "auto":
         args.t_max = int(args.t_max)
@@ -163,6 +179,10 @@ def main():
         operand_cache=args.operand_cache, u_cap_ladder=args.u_cap_ladder,
         cache_shards=args.cache_shards,
         cache_transport=args.cache_transport,
+        cache_fallback=args.cache_fallback == "on",
+        peer_timeout_s=args.peer_timeout_s,
+        peer_retries=args.peer_retries,
+        probe_interval_s=args.probe_interval_s,
     )
     if search_fn.blockstore is not None and args.cache_shards > 1:
         bs = search_fn.blockstore
@@ -195,16 +215,24 @@ def main():
           f"{eng.stats.overlap_ratio:.2f}), u_cap {eng.stats.last_u_cap}, "
           f"scan compiles {eng.stats.scan_compilations}, "
           f"blocks fetched {eng.stats.blocks_fetched} / reused "
-          f"{eng.stats.blocks_reused} (operand cache)")
+          f"{eng.stats.blocks_reused} (operand cache), "
+          f"degraded batches {eng.stats.degraded_batches}")
     if args.tier == "disk":
         on_disk = serving_index.reader.stride * serving_index.n_clusters
         if args.cache_shards > 1:
             # the engine fetches through the sharded store's per-node
-            # caches; the index's own cache sits idle, so report the
-            # fleet's caches instead of its zeros
+            # caches; the index's own cache is the availability floor
+            # (fallback), so report the fleet's caches plus the
+            # degradation counters
             s = search_fn.blockstore.stats()
             print(f"sharded cache: l1 hits {s['l1_hits']} / misses "
                   f"{s['l1_misses']}, remote blocks {s['remote_blocks']}")
+            states = " ".join(f"{n}:{st}"
+                              for n, st in sorted(s["health"].items()))
+            print(f"peer health: {states} | failovers {s['failovers']}, "
+                  f"redirected {s['redirected_blocks']} blocks, fallback "
+                  f"served {s['fallback_blocks']}, transport retries "
+                  f"{s['retries']}, deadline misses {s['deadline_misses']}")
             node_bytes = 0
             for node, ns in sorted(s["per_node"].items()):
                 hr = ns.get("hit_rate")

@@ -1,0 +1,573 @@
+"""Fault-tolerant serving: circuit-breaker state machine, transport
+deadlines/typed errors, and the fault matrix.
+
+The bar (ISSUE 6): no matter which fault fires — connection refusal,
+mid-stream disconnect, payload truncation, latency spike, slow-peer
+brownout — every batch completes and results stay BIT-IDENTICAL to the
+healthy ``LocalBlockStore`` sync path.  Failover changes where bytes come
+from, never what is returned.  The breaker tests run on a fake clock, the
+chaos tests on the deterministic :mod:`repro.core.faults` schedule, and
+the rogue-server tests on hand-rolled sockets — nothing here is timing-
+or luck-dependent beyond generous deadlines.
+"""
+
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import HybridSpec, match_all, storage
+from repro.core import blockstore as bs
+from repro.core import faults
+from repro.core.disk import DiskIVFIndex
+from repro.core.engine import SearchEngine
+from repro.core.health import CLOSED, HALF_OPEN, OPEN, CircuitBreaker, \
+    PeerHealth
+from repro.core.ivf import build_from_assignments
+from repro.core.transport import (
+    _FRAME,
+    BlockStoreServer,
+    SocketTransport,
+    TransportError,
+    TransportTimeout,
+    _recv_frame,
+    _send_frame,
+)
+
+N, D, M, KC = 1536, 32, 6, 12
+TS_RANGE = 6000
+
+
+def _topic_index():
+    rng = np.random.default_rng(3)
+    centers = rng.standard_normal((KC, D)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=-1, keepdims=True)
+    topic = (np.arange(N) * KC) // N
+    core = centers[topic] + 0.05 * rng.standard_normal((N, D)).astype(
+        np.float32
+    )
+    core /= np.linalg.norm(core, axis=-1, keepdims=True)
+    band = TS_RANGE // KC
+    attrs = rng.integers(0, 16, (N, M)).astype(np.int16)
+    attrs[:, 0] = (topic * band + rng.integers(0, band, N)).astype(np.int16)
+    spec = HybridSpec(dim=D, n_attrs=M, core_dtype=jnp.float32)
+    index, _ = build_from_assignments(
+        spec, jnp.asarray(centers), jnp.asarray(core), jnp.asarray(attrs),
+        jnp.asarray(topic),
+    )
+    return index, core
+
+
+KW = dict(k=10, n_probes=4, q_block=8, v_block=128, backend="xla")
+Q = 21  # ragged multi-tile at q_block=8 → 3 tiles → several store gets
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    index, core = _topic_index()
+    ckpt = str(tmp_path_factory.mktemp("faults"))
+    storage.save_index(index, ckpt, n_shards=2)
+    queries = jnp.asarray(core[5:5 + Q] + 0.01)
+    fspec = match_all(Q, M)
+    with DiskIVFIndex.open(ckpt) as disk:
+        ref = {
+            prune: disk.search(queries, fspec, prune=prune, **KW)
+            for prune in ("off", "on")
+        }
+    yield ckpt, queries, fspec, ref
+
+
+def _assert_identical(a, b, msg=""):
+    np.testing.assert_array_equal(np.asarray(b.ids), np.asarray(a.ids),
+                                  err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(b.scores), np.asarray(a.scores),
+                                  err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(b.n_scanned),
+                                  np.asarray(a.n_scanned), err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(b.n_passed),
+                                  np.asarray(a.n_passed), err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker state machine (fake clock — no sleeps)
+# ---------------------------------------------------------------------------
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _breaker(clock, **kw):
+    kw.setdefault("failure_threshold", 3)
+    kw.setdefault("cooldown_s", 1.0)
+    kw.setdefault("half_open_successes", 2)
+    return CircuitBreaker(clock=clock, **kw)
+
+
+def test_breaker_opens_on_threshold():
+    clk = FakeClock()
+    br = _breaker(clk)
+    for _ in range(2):
+        br.record_failure()
+    assert br.state == CLOSED  # below threshold
+    br.record_failure()
+    assert br.state == OPEN
+    assert not br.allow()  # cooldown not elapsed
+
+
+def test_breaker_no_flapping_on_intermittent_faults():
+    """Successes reset the consecutive-failure count: a peer that fails
+    every other request never trips a threshold-3 breaker."""
+    clk = FakeClock()
+    br = _breaker(clk)
+    for _ in range(20):
+        br.record_failure()
+        br.record_failure()
+        br.record_success(0.001)
+    assert br.state == CLOSED
+    assert br.trips == 0
+
+
+def test_breaker_half_open_probe_and_close():
+    clk = FakeClock()
+    br = _breaker(clk)
+    for _ in range(3):
+        br.record_failure()
+    assert br.state == OPEN
+    clk.advance(1.1)
+    assert br.allow()  # the half-open probe token
+    assert br.state == HALF_OPEN
+    assert not br.allow()  # only one probe in flight at a time
+    br.record_success(0.001)
+    assert br.state == HALF_OPEN  # needs half_open_successes=2
+    assert br.allow()
+    br.record_success(0.001)
+    assert br.state == CLOSED
+
+
+def test_breaker_half_open_failure_escalates_cooldown():
+    clk = FakeClock()
+    br = _breaker(clk, cooldown_s=1.0, cooldown_factor=2.0,
+                  cooldown_max_s=3.0)
+    for _ in range(3):
+        br.record_failure()
+    clk.advance(1.1)
+    assert br.allow()
+    br.record_failure()  # probe failed → reopen, cooldown ×2
+    assert br.state == OPEN
+    clk.advance(1.1)
+    assert not br.allow()  # 1.1 < escalated 2.0
+    clk.advance(1.0)
+    assert br.allow()
+    br.record_failure()  # ×2 again, capped at 3.0
+    clk.advance(2.9)
+    assert not br.allow()
+    clk.advance(0.2)
+    assert br.allow()
+
+
+def test_breaker_brownout_trips_on_latency_ewma():
+    clk = FakeClock()
+    br = _breaker(clk, brownout_latency_s=0.05, latency_alpha=0.5)
+    br.record_success(0.001)
+    assert br.state == CLOSED
+    for _ in range(8):  # EWMA climbs toward 0.2
+        br.record_success(0.2)
+        if br.state == OPEN:
+            break
+    assert br.state == OPEN
+    # recovery: the peer answers fast now — probes close the circuit
+    clk.advance(1.1)
+    assert br.allow()
+    br.record_success(0.001)
+    assert br.allow()
+    br.record_success(0.001)
+    assert br.state == CLOSED
+
+
+def test_breaker_half_open_slow_answer_is_not_recovery():
+    clk = FakeClock()
+    br = _breaker(clk, brownout_latency_s=0.05, latency_alpha=1.0)
+    br.record_success(0.2)  # instant trip at alpha=1
+    assert br.state == OPEN
+    clk.advance(1.1)
+    assert br.allow()
+    br.record_success(0.2)  # answered, but still browned out
+    assert br.state == OPEN
+
+
+def test_peer_health_registry():
+    clk = FakeClock()
+    ph = PeerHealth([0, 1, 2], breaker_kwargs=dict(failure_threshold=1),
+                    clock=clk)
+    assert not ph.degraded
+    ph.on_failure(1)
+    assert ph.state(1) == OPEN and ph.state(0) == CLOSED
+    assert ph.degraded
+    assert not ph.allow(1)
+    clk.advance(1.1)
+    calls = []
+    assert ph.probe(1, lambda: calls.append(1))
+    assert ph.probe(1, lambda: calls.append(1))
+    assert calls == [1, 1]
+    assert ph.state(1) == CLOSED  # default half_open_successes=2
+    assert not ph.probe(1, lambda: calls.append(1))  # closed → no probe
+
+
+# ---------------------------------------------------------------------------
+# Fault matrix: every fault class × pipeline × prune — bit-identical
+# ---------------------------------------------------------------------------
+
+ERROR_KINDS = ("refuse", "disconnect", "truncate")
+
+
+@pytest.mark.parametrize("pipeline", ["off", "on"])
+@pytest.mark.parametrize("prune", ["off", "on"])
+@pytest.mark.parametrize("kind",
+                         list(ERROR_KINDS) + ["latency", "brownout"])
+def test_fault_matrix_bit_identical(built, kind, prune, pipeline):
+    ckpt, queries, fspec, ref = built
+    if kind in ERROR_KINDS:
+        # first op succeeds, then the peer dies mid-run and stays dead
+        rules = (faults.FaultRule(kind, after=1),)
+        breaker = dict(failure_threshold=1, cooldown_s=60.0)
+    elif kind == "latency":  # a bounded spike — absorbed, never tripped
+        rules = (faults.FaultRule("latency", latency_s=0.02, count=2),)
+        breaker = dict(failure_threshold=1, cooldown_s=60.0)
+    else:  # brownout: answers, slowly, forever → EWMA tripwire
+        rules = (faults.FaultRule("latency", latency_s=0.06),)
+        breaker = dict(failure_threshold=1, cooldown_s=60.0,
+                       brownout_latency_s=0.02, latency_alpha=1.0)
+    store = bs.open_sharded(ckpt, n_nodes=3, breaker_kwargs=breaker)
+    faults.inject(store, 1, rules)
+    try:
+        with DiskIVFIndex.open(ckpt) as disk:
+            for _ in range(2):
+                # drop the L1 between batches: batch 1 warms the peer
+                # (op 0 passes), batch 2 must re-fetch through the ring
+                # and hits the now-armed fault mid-stream
+                got = disk.search(queries, fspec, prune=prune,
+                                  pipeline=pipeline, blockstore=store, **KW)
+                with store._l1_lock:
+                    store._l1.clear()
+        _assert_identical(ref[prune], got,
+                          f"{kind} prune={prune} pipeline={pipeline}")
+        s = store.stats()
+        if kind in ERROR_KINDS:
+            assert s["failovers"] >= 1
+            assert s["fallback_blocks"] > 0
+            assert s["health"][1] == OPEN
+        elif kind == "latency":
+            assert s["failovers"] == 0
+            assert s["health"][1] == CLOSED
+        else:  # brownout
+            assert s["health"][1] == OPEN
+            assert s["fallback_blocks"] > 0
+    finally:
+        store.close()
+
+
+def test_no_fallback_preserves_fail_fast(built):
+    """Without an availability floor the PR-5 contract holds: the typed
+    transport error surfaces instead of being silently absorbed."""
+    ckpt, queries, fspec, ref = built
+    store = bs.open_sharded(ckpt, n_nodes=3, fallback=None)
+    faults.inject(store, 1, faults.kill_peer())
+    try:
+        with DiskIVFIndex.open(ckpt) as disk:
+            with pytest.raises(ConnectionError):
+                disk.search(queries, fspec, pipeline="off",
+                            blockstore=store, **KW)
+    finally:
+        store.close()
+
+
+def test_engine_counts_degraded_batches(built):
+    ckpt, queries, fspec, ref = built
+    store = bs.open_sharded(
+        ckpt, n_nodes=3,
+        breaker_kwargs=dict(failure_threshold=1, cooldown_s=60.0),
+    )
+    faults.inject(store, 1, faults.kill_peer())
+    try:
+        with DiskIVFIndex.open(ckpt) as disk:
+            eng = SearchEngine(disk, blockstore=store, pipeline="on",
+                               prune="off", **KW)
+            got = eng.search(queries, fspec)
+            _assert_identical(ref["off"], got, "degraded engine batch")
+            assert eng.stats.degraded_batches >= 1
+            eng.close()
+    finally:
+        store.close()
+
+
+def test_recovery_closes_circuit_and_resumes_remote(built):
+    """Peer dies for 2 ops, then answers again: the active probe notices
+    (L1 adoption means passive traffic may never re-touch the peer), the
+    circuit closes, and remote fetches resume without a restart."""
+    ckpt, queries, fspec, ref = built
+    store = bs.open_sharded(
+        ckpt, n_nodes=3,
+        breaker_kwargs=dict(failure_threshold=1, cooldown_s=0.05,
+                            half_open_successes=1),
+    )
+    faults.inject(store, 1, (faults.FaultRule("refuse", after=0, count=2),))
+    try:
+        with DiskIVFIndex.open(ckpt) as disk:
+            got = disk.search(queries, fspec, prune="off",
+                              blockstore=store, **KW)
+            _assert_identical(ref["off"], got, "during outage")
+            assert store.health.state(1) == OPEN
+            deadline = time.monotonic() + 30
+            while (store.health.state(1) != CLOSED
+                   and time.monotonic() < deadline):
+                store.probe_peers()
+                time.sleep(0.06)
+            assert store.health.state(1) == CLOSED
+            assert not store.degraded
+            # remote fetches resume: bypass the adopted L1 and refetch
+            with store._l1_lock:
+                store._l1.clear()
+            served_before = store.stats()["per_node"][1]["blocks_served"]
+            store.get(np.arange(KC))
+            assert (store.stats()["per_node"][1]["blocks_served"]
+                    > served_before)
+            got = disk.search(queries, fspec, prune="off",
+                              blockstore=store, **KW)
+            _assert_identical(ref["off"], got, "after recovery")
+    finally:
+        store.close()
+
+
+def test_socket_peer_killed_mid_stream(built):
+    """Real wire path: one of three BlockStoreServers is closed mid-run.
+    Batches keep completing (bit-identical) and stats report failovers;
+    double-closing the dead server is a no-op."""
+    ckpt, queries, fspec, ref = built
+    store = bs.open_sharded(
+        ckpt, n_nodes=3, transport="socket", timeout_s=5.0, retries=1,
+        breaker_kwargs=dict(failure_threshold=1, cooldown_s=60.0),
+    )
+    try:
+        with DiskIVFIndex.open(ckpt) as disk:
+            got = disk.search(queries, fspec, prune="off", pipeline="on",
+                              blockstore=store, **KW)
+            _assert_identical(ref["off"], got, "healthy ring")
+            store._owned_servers[1].close()  # the kill
+            store._owned_servers[1].close()  # idempotent double-close
+            with store._l1_lock:
+                store._l1.clear()  # force re-fetching through the ring
+            got = disk.search(queries, fspec, prune="off", pipeline="on",
+                              blockstore=store, **KW)
+            _assert_identical(ref["off"], got, "one peer dead")
+        s = store.stats()
+        assert s["failovers"] >= 1 or s["redirected_blocks"] > 0
+        assert s["fallback_blocks"] > 0
+        assert s["health"][1] == OPEN
+    finally:
+        store.close()
+
+
+# ---------------------------------------------------------------------------
+# Transport: typed errors, deadlines, coalescing, pool
+# ---------------------------------------------------------------------------
+
+
+def _rogue_server(behavior):
+    """One-shot server: accepts one connection, reads the request frame,
+    then misbehaves per ``behavior(conn)``."""
+    lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    lsock.bind(("127.0.0.1", 0))
+    lsock.listen(1)
+    host, port = lsock.getsockname()
+
+    def run():
+        conn, _ = lsock.accept()
+        try:
+            _recv_frame(conn)
+            behavior(conn)
+        finally:
+            conn.close()
+            lsock.close()
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    return host, port
+
+
+def test_short_read_raises_typed_error_not_decode_garbage():
+    """Peer closes mid-payload → TransportError (a ConnectionError), not a
+    struct.error / zipfile decode error two layers up (the PR-5 bug)."""
+    def close_mid_payload(conn):
+        conn.sendall(_FRAME.pack(1000) + b"xy")  # promise 1000, send 2
+
+    host, port = _rogue_server(close_mid_payload)
+    tr = SocketTransport(host, port, timeout=5.0, retries=0)
+    try:
+        with pytest.raises(TransportError) as ei:
+            tr.fetch([0, 1])
+        assert isinstance(ei.value, ConnectionError)  # old callers catch it
+        assert not isinstance(ei.value, struct.error)
+    finally:
+        tr.close()
+
+
+def test_corrupt_payload_raises_typed_error():
+    def garbage_payload(conn):
+        _send_frame(conn, b"this is not an npz archive")
+
+    host, port = _rogue_server(garbage_payload)
+    tr = SocketTransport(host, port, timeout=5.0, retries=0)
+    try:
+        with pytest.raises(TransportError):
+            tr.fetch([0])
+    finally:
+        tr.close()
+
+
+def test_connection_refused_raises_typed_error():
+    lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    lsock.bind(("127.0.0.1", 0))
+    host, port = lsock.getsockname()
+    lsock.close()  # nothing listens here
+    tr = SocketTransport(host, port, timeout=1.0, retries=1,
+                         backoff_s=0.01)
+    try:
+        with pytest.raises(TransportError):
+            tr.fetch([0])
+        assert tr.stats()["retries"] == 1  # backoff+retry actually ran
+    finally:
+        tr.close()
+
+
+def test_deadline_bounded_fetch(built):
+    """A server stalled past the client deadline costs one bounded wait
+    and a TransportTimeout — never a hung batch."""
+    ckpt, *_ = built
+    lstore = bs.LocalBlockStore.open(ckpt)
+    sched = faults.FaultSchedule(
+        (faults.FaultRule("latency", latency_s=5.0),)
+    )
+    srv = BlockStoreServer(faults.FaultyBlockStore(lstore, sched))
+    tr = SocketTransport(srv.host, srv.port, timeout=0.3, retries=0)
+    try:
+        t0 = time.monotonic()
+        with pytest.raises(TransportTimeout):
+            tr.fetch([0])
+        assert time.monotonic() - t0 < 3.0
+        assert tr.stats()["timeouts"] >= 1
+    finally:
+        tr.close()
+        srv.close()
+        lstore.close()
+
+
+def test_coalescing_one_wire_fetch_per_cluster(built):
+    """Two threads requesting the same ids through one transport issue one
+    wire fetch; the follower is served from the leader's response."""
+    ckpt, *_ = built
+    lstore = bs.LocalBlockStore.open(ckpt)
+    sched = faults.FaultSchedule(
+        (faults.FaultRule("latency", latency_s=0.1),)  # one slow op →
+    )                                                  # guaranteed overlap
+    srv = BlockStoreServer(faults.FaultyBlockStore(lstore, sched))
+    tr = SocketTransport(srv.host, srv.port, timeout=10.0)
+    try:
+        res = [None, None]
+
+        def go(i):
+            res[i] = tr.fetch([0, 1, 2])
+
+        ts = [threading.Thread(target=go, args=(i,)) for i in range(2)]
+        ts[0].start()
+        time.sleep(0.03)  # leader is mid-flight (0.1s server stall) when
+        ts[1].start()     # the follower asks for the same ids
+        for t in ts:
+            t.join()
+        assert res[0].keys() == res[1].keys() == {0, 1, 2}
+        for cid in (0, 1, 2):
+            np.testing.assert_array_equal(res[0][cid]["ids"],
+                                          res[1][cid]["ids"])
+        s = tr.stats()
+        assert s["coalesced"] >= 1
+        assert s["requests"] + s["coalesced"] // 3 <= 3
+    finally:
+        tr.close()
+        srv.close()
+        lstore.close()
+
+
+def test_ping_round_trip(built):
+    ckpt, *_ = built
+    lstore = bs.LocalBlockStore.open(ckpt)
+    srv = BlockStoreServer(lstore)
+    tr = SocketTransport(srv.host, srv.port, timeout=5.0)
+    try:
+        tr.ping()  # a real empty-request wire exchange
+        assert tr.stats()["requests"] >= 1
+        srv.close()
+        with pytest.raises(TransportError):
+            tr.ping()  # dead server → typed failure (the probe signal)
+    finally:
+        tr.close()
+        lstore.close()
+
+
+# ---------------------------------------------------------------------------
+# BlockStoreServer close semantics
+# ---------------------------------------------------------------------------
+
+
+def test_server_close_is_idempotent_and_unblocks_accepter(built):
+    ckpt, *_ = built
+    lstore = bs.LocalBlockStore.open(ckpt)
+    srv = BlockStoreServer(lstore)
+    assert srv._accepter.is_alive()
+    srv.close()
+    assert not srv._accepter.is_alive()
+    srv.close()  # double close: no-op, no error
+    assert not srv._accepter.is_alive()
+    lstore.close()
+
+
+def test_server_close_with_request_in_flight(built):
+    """close() while a handler is mid-request returns promptly, the client
+    gets a typed error (not a hang), and the accepter is gone."""
+    ckpt, *_ = built
+    lstore = bs.LocalBlockStore.open(ckpt)
+    sched = faults.FaultSchedule(
+        (faults.FaultRule("latency", latency_s=1.0),)
+    )
+    srv = BlockStoreServer(faults.FaultyBlockStore(lstore, sched))
+    tr = SocketTransport(srv.host, srv.port, timeout=10.0, retries=0)
+    errs = []
+
+    def go():
+        try:
+            tr.fetch([0, 1])
+        except TransportError as e:
+            errs.append(e)
+
+    t = threading.Thread(target=go)
+    t.start()
+    time.sleep(0.2)  # request is in flight, handler sleeping in the store
+    t0 = time.monotonic()
+    srv.close()
+    assert time.monotonic() - t0 < 6.0
+    t.join(timeout=10)
+    assert not t.is_alive()
+    assert not srv._accepter.is_alive()
+    assert len(errs) == 1  # the in-flight request surfaced a typed error
+    tr.close()
+    lstore.close()
