@@ -469,6 +469,156 @@ def bench_degraded_mode(index, core, rng, *, n_nodes=3,
     return out
 
 
+def bench_ingest(rng, *, smoke=False):
+    """Live-updating serving: the hot/cold tiered index under a sustained
+    add/tombstone/search stream with periodic background republishes.
+
+    Measures what a live pod cares about: steady-state batch latency with
+    the RAM delta tier in the fold path, the off-path cost of
+    ``compact_deltas`` (background rewrite), and the serving-visible pause
+    of ``refresh()`` (the between-batch generation flip).  Gated on
+    bit-identity to a from-scratch rebuild at every republish boundary —
+    and on the republish actually invalidating cached cluster blocks
+    (``invalidations > 0``), so the gen-tagged cache path is exercised,
+    not just present.
+    """
+    import shutil
+    import tempfile
+
+    from repro.core import DeltaTier, compact_deltas
+    from repro.core import kmeans as kmeans_lib
+
+    n, d, m, kc = (4_000 if smoke else 8_000), 64, 6, 24
+    k, n_probes, q, qb = 10, 6, 16, 8
+    steps = 80 if smoke else 200
+    compact_every = 20 if smoke else 40
+
+    centers = rng.standard_normal((kc, d)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=-1, keepdims=True)
+    topic = (np.arange(n) * kc) // n
+    core = centers[topic] + 0.05 * rng.standard_normal((n, d)).astype(
+        np.float32
+    )
+    core /= np.linalg.norm(core, axis=-1, keepdims=True)
+    attrs = rng.integers(0, 16, (n, m)).astype(np.int16)
+    spec = HybridSpec(dim=d, n_attrs=m, core_dtype=jnp.float32)
+    vpad = int(np.bincount(topic, minlength=kc).max()) + 256
+    index, _ = build_from_assignments(
+        spec, jnp.asarray(centers), jnp.asarray(core), jnp.asarray(attrs),
+        jnp.asarray(topic), vpad=vpad, ids=jnp.arange(n),
+    )
+
+    # logical ground truth for the rebuild oracle
+    all_core, all_attrs = core.copy(), attrs.copy()
+    all_ids = np.arange(n)
+    all_cl = topic.astype(np.int64)
+    alive = np.ones(n, bool)
+    next_id = n
+
+    queries = jnp.asarray(core[:q] + 0.01)
+    fspec = match_all(q, m)
+
+    def oracle_ids_scores():
+        idx, _ = build_from_assignments(
+            spec, jnp.asarray(centers), jnp.asarray(all_core[alive]),
+            jnp.asarray(all_attrs[alive]), jnp.asarray(all_cl[alive]),
+            ids=jnp.asarray(all_ids[alive]),
+        )
+        eng = SearchEngine(idx, k=k, n_probes=n_probes, q_block=qb)
+        res = eng.search(queries, fspec)
+        eng.close()
+        return np.asarray(res.ids), np.asarray(res.scores)
+
+    tmp = tempfile.mkdtemp(prefix="bench_ingest_")
+    search_ms, compact_ms, flip_ms = [], [], []
+    republishes, rows_folded = 0, 0
+    exact = True
+    try:
+        storage.save_index(index, tmp, n_shards=2)
+        disk = DiskIVFIndex.open(tmp)
+        tier = DeltaTier.for_index(disk, 16.0)
+        disk.delta = tier
+        eng = SearchEngine(disk, k=k, n_probes=n_probes, q_block=qb)
+        jax.block_until_ready(eng.search(queries, fspec).ids)  # warm
+
+        for step in range(steps):
+            b = 8
+            add = (centers[rng.integers(0, kc, b)]
+                   + 0.05 * rng.standard_normal((b, d))).astype(np.float32)
+            add /= np.linalg.norm(add, axis=-1, keepdims=True)
+            aat = rng.integers(0, 16, (b, m)).astype(np.int16)
+            ids = np.arange(next_id, next_id + b)
+            next_id += b
+            tier.add(add, aat, ids)
+            asg = np.asarray(kmeans_lib.assign(
+                jnp.asarray(add), jnp.asarray(centers)
+            )).astype(np.int64)
+            all_core = np.concatenate([all_core, add])
+            all_attrs = np.concatenate([all_attrs, aat])
+            all_ids = np.concatenate([all_ids, ids])
+            all_cl = np.concatenate([all_cl, asg])
+            alive = np.concatenate([alive, np.ones(b, bool)])
+
+            if step % 3 == 2:
+                live = all_ids[alive]
+                dead = rng.choice(live, 4, replace=False)
+                pos = np.searchsorted(all_ids, dead)
+                tier.tombstone(dead, clusters=all_cl[pos])
+                alive[pos] = False
+
+            if step and step % compact_every == 0:
+                t0 = time.perf_counter()
+                st = compact_deltas(tmp, tier)
+                compact_ms.append((time.perf_counter() - t0) * 1e3)
+                t0 = time.perf_counter()
+                eng.refresh()
+                flip_ms.append((time.perf_counter() - t0) * 1e3)
+                republishes += 1
+                rows_folded += st.rows_folded
+                res = eng.search(queries, fspec)
+                oi, osc = oracle_ids_scores()
+                ok = (np.array_equal(np.asarray(res.ids), oi)
+                      and np.array_equal(np.asarray(res.scores), osc))
+                exact = exact and ok
+                print(f"  republish @ step {step}: "
+                      f"{st.clusters_rewritten} clusters, "
+                      f"{st.rows_folded} folded, flip "
+                      f"{flip_ms[-1]:.1f}ms, exact={ok}")
+
+            t0 = time.perf_counter()
+            jax.block_until_ready(eng.search(queries, fspec).ids)
+            search_ms.append((time.perf_counter() - t0) * 1e3)
+
+        oi, osc = oracle_ids_scores()
+        res = eng.search(queries, fspec)
+        exact = exact and (np.array_equal(np.asarray(res.ids), oi)
+                           and np.array_equal(np.asarray(res.scores), osc))
+        invalidations = disk.cache.stats.invalidations
+        dstats = tier.stats()
+        eng.close()
+        disk.close()
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    p = lambda xs, f: round(float(np.percentile(xs, f)), 2) if xs else None
+    entry = dict(
+        path="ingest", q=q, n=n, d=d, n_clusters=kc, steps=steps,
+        adds=int(dstats["adds"]), tombstones=int(dstats["tombstoned"]),
+        republishes=republishes, rows_folded=rows_folded,
+        search_p50_ms=p(search_ms, 50), search_p99_ms=p(search_ms, 99),
+        compact_p50_ms=p(compact_ms, 50), compact_max_ms=p(compact_ms, 100),
+        flip_p50_ms=p(flip_ms, 50), flip_max_ms=p(flip_ms, 100),
+        invalidations=int(invalidations),
+        exact_vs_rebuild=bool(exact),
+    )
+    print(f"ingest: {steps} steps, {entry['adds']} adds / "
+          f"{entry['tombstones']} tombstones / {republishes} republishes, "
+          f"search p50 {entry['search_p50_ms']}ms p99 "
+          f"{entry['search_p99_ms']}ms, flip p50 {entry['flip_p50_ms']}ms, "
+          f"invalidations {invalidations}, exact={exact}")
+    return entry
+
+
 def session_queries(core, q, rng, run):
     """Session-coherent hot traffic: requests arrive in runs of ``run``
     same-topic queries (a user browsing one topic issues several searches
@@ -942,6 +1092,13 @@ def main():
                          "serving (healthy vs one peer dead vs one peer "
                          "slow), gated on bit-exact results and failover "
                          "actually firing (emits a degraded_mode entry)")
+    ap.add_argument("--ingest", action="store_true",
+                    help="also bench live-updating serving: a sustained "
+                         "add/tombstone/search stream over the RAM delta "
+                         "tier with periodic compact_deltas republishes "
+                         "(emits a delta_tier entry gated on bit-identity "
+                         "to a from-scratch rebuild and on the republish "
+                         "invalidating cached blocks)")
     ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_search.json"))
     args = ap.parse_args()
     if args.smoke:
@@ -1033,6 +1190,12 @@ def main():
                 n_batches=6 if args.smoke else 10,
             )
 
+    ingest_entry = None
+    if args.ingest:
+        print("ingest workload (live delta tier + republish) ...")
+        ingest_entry = bench_ingest(rng, smoke=args.smoke)
+        results.append(ingest_entry)
+
     sweep_summary, sweep_exact = None, True
     if not args.skip_sweep:
         print("building sweep index (topic-correlated timestamps) ...")
@@ -1074,6 +1237,10 @@ def main():
         speedup = by[("tiled_fused", 64)]["qps"] / by[("reference", 64)]["qps"]
         out["tiled_vs_reference_qps_at_q64"] = round(speedup, 2)
         print(f"tiled vs reference @ Q=64: {speedup:.2f}x")
+    if ingest_entry is not None:
+        out["delta_tier"] = ingest_entry
+        out["exact_vs_rebuild"] = ingest_entry["exact_vs_rebuild"]
+        out["invalidations"] = ingest_entry["invalidations"]
     if disk_entry is not None:
         out["disk_tier"] = disk_entry
     if disk_pipe_entry is not None:

@@ -8,6 +8,7 @@ Public API surface (see DESIGN.md §3):
   ClusterSummaries, build_summaries, can_match      — filter-aware pruning
   search_reference, brute_force, recall_at_k        — search paths + oracle
   add_vectors, tombstone                            — online updates
+  DeltaTier, compact_deltas                         — live hot/cold serving
 """
 
 from repro.core.hybrid import (
@@ -88,6 +89,19 @@ from repro.core.topk import (
     merge_topk_many,
     topk_tree_merge,
 )
-from repro.core.update import add_vectors, compact_cluster, tombstone
+from repro.core.update import (
+    add_vectors,
+    compact_cluster,
+    compact_stale,
+    stale_counts,
+    tombstone,
+)
+from repro.core.delta import (
+    DeltaOverflowError,
+    DeltaTier,
+    RepublishStats,
+    compact_deltas,
+)
+from repro.core.storage import GenerationMismatchError
 
 __all__ = [k for k in dir() if not k.startswith("_")]

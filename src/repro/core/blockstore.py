@@ -61,6 +61,17 @@ import numpy as np
 Record = Dict[str, np.ndarray]
 
 
+def record_gen(rec: Record) -> int:
+    """Generation stamped on a cluster record (0 for pre-v3 records).
+
+    Every fetch layer keys freshness on this: a record whose gen is below
+    the caller's published minimum was superseded by a republish and must
+    be invalidated, never served.
+    """
+    g = rec.get("gen")
+    return int(g[0]) if g is not None else 0
+
+
 # ---------------------------------------------------------------------------
 # Block geometry + assembly (shared by every store and the engine)
 # ---------------------------------------------------------------------------
@@ -289,11 +300,14 @@ class _AsyncStoreMixin:
                     )
         return self._pool
 
-    def submit(self, cluster_ids) -> Future:
+    def submit(self, cluster_ids, gens=None) -> Future:
         """Starts fetching ``cluster_ids`` off-thread; returns a handle.
+        ``gens`` (parallel minimum generations) rides along to :meth:`get`.
         Raises ``RuntimeError`` after :meth:`close` — a late submit against
         a stopped cache must surface, not quietly leak a fresh pool."""
-        return self._ensure_pool().submit(self.get, cluster_ids)
+        if gens is None:
+            return self._ensure_pool().submit(self.get, cluster_ids)
+        return self._ensure_pool().submit(self.get, cluster_ids, gens=gens)
 
     def wait(self, handle: Future) -> Dict[int, Record]:
         """Blocks until a :meth:`submit` handle's records are ready."""
@@ -322,7 +336,10 @@ class ResidentBlockStore(_AsyncStoreMixin):
         self._gets = 0
         self._blocks = 0
 
-    def get(self, cluster_ids) -> Dict[int, Record]:
+    def get(self, cluster_ids, gens=None) -> Dict[int, Record]:
+        # gens accepted for protocol uniformity; the resident arrays ARE
+        # the current generation, so records are stamped gen 0 and never
+        # stale by construction.
         cids = np.asarray(cluster_ids, np.int64).reshape(-1)
         self._gets += 1
         self._blocks += len(cids)
@@ -333,6 +350,7 @@ class ResidentBlockStore(_AsyncStoreMixin):
                 "vectors": np.asarray(self.index.vectors[cid]),
                 "attrs": np.asarray(self.index.attrs[cid]),
                 "ids": np.asarray(self.index.ids[cid]),
+                "gen": np.zeros(1, np.int64),
             }
             if self.spec.has_norms:
                 rec["norms"] = np.asarray(self.index.norms[cid], np.float32)
@@ -340,6 +358,9 @@ class ResidentBlockStore(_AsyncStoreMixin):
                 rec["scales"] = np.asarray(self.index.scales[cid], np.float32)
             out[cid] = rec
         return out
+
+    def refresh(self):
+        """No-op: the resident arrays are always the current generation."""
 
     def stats(self) -> dict:
         return dict(kind="resident", gets=self._gets, blocks=self._blocks)
@@ -387,11 +408,18 @@ class LocalBlockStore(_AsyncStoreMixin):
         )
         return cls(reader, cache, BlockSpec.from_manifest(man), name=name)
 
-    def get(self, cluster_ids) -> Dict[int, Record]:
+    def get(self, cluster_ids, gens=None) -> Dict[int, Record]:
         cids = np.asarray(cluster_ids, np.int64).reshape(-1)
         if len(cids) == 0:
             return {}
-        return self.cache.get_many(cids)
+        g = None if gens is None else np.asarray(gens).reshape(-1)
+        return self.cache.get_many(cids, gens=g)
+
+    def refresh(self):
+        """Adopts a republished checkpoint: reopens the shard reader (new
+        manifest + fresh mmaps).  Cached records are NOT flushed — the next
+        gen-stamped fetch invalidates exactly the rewritten clusters."""
+        self.reader.reopen()
 
     # ---- the old DiskIVFIndex gather surface, now store-backed ----
     def gather(self, slot_cluster) -> Tuple:
@@ -422,6 +450,7 @@ class LocalBlockStore(_AsyncStoreMixin):
         return dict(
             kind="local", name=self.name, hits=s.hits, misses=s.misses,
             evictions=s.evictions, prefetched=s.prefetched, errors=s.errors,
+            invalidations=s.invalidations,
             hit_rate=round(self.cache.hit_rate, 4),
             resident_bytes=self.cache.resident_bytes(),
         )
@@ -466,6 +495,10 @@ class StoreStats:
     redirected_blocks: int = 0  # blocks routed straight to the fallback
     #                             because the owner's circuit was open
     fallback_blocks: int = 0    # blocks the local full copy actually served
+    stale_answers: int = 0      # peer answers below the published minimum
+    #                             generation (peer lagging a republish) —
+    #                             treated as misses and re-served fresh,
+    #                             never silently accepted
 
 
 class ShardedBlockStore(_AsyncStoreMixin):
@@ -524,6 +557,7 @@ class ShardedBlockStore(_AsyncStoreMixin):
         self._stats_lock = threading.Lock()
         self.l1_hits = 0
         self.l1_misses = 0
+        self.l1_invalidations = 0
         self.remote_blocks = 0
         self.node_blocks: Dict[int, int] = {n: 0 for n in self.transports}
         # teardown ownership (stores/servers built by open_sharded)
@@ -581,13 +615,21 @@ class ShardedBlockStore(_AsyncStoreMixin):
         )
 
     # ---- fetch ----
-    def _l1_get(self, cids: np.ndarray) -> Tuple[Dict[int, Record], List[int]]:
+    def _l1_get(self, cids: np.ndarray,
+                exp: Optional[Dict[int, int]] = None
+                ) -> Tuple[Dict[int, Record], List[int]]:
         found: Dict[int, Record] = {}
         missing: List[int] = []
+        invalid = 0
         with self._l1_lock:
             for cid in cids:
                 cid = int(cid)
                 rec = self._l1.get(cid)
+                if rec is not None and exp is not None and \
+                        record_gen(rec) < exp.get(cid, 0):
+                    del self._l1[cid]  # superseded by a republish
+                    invalid += 1
+                    rec = None
                 if rec is None:
                     missing.append(cid)
                 else:
@@ -596,6 +638,7 @@ class ShardedBlockStore(_AsyncStoreMixin):
         with self._stats_lock:
             self.l1_hits += len(found)
             self.l1_misses += len(missing)
+            self.l1_invalidations += invalid
         return found, missing
 
     def _l1_put(self, recs: Dict[int, Record]):
@@ -606,12 +649,16 @@ class ShardedBlockStore(_AsyncStoreMixin):
             while len(self._l1) > self.l1_records:
                 self._l1.popitem(last=False)
 
-    def get(self, cluster_ids) -> Dict[int, Record]:
+    def get(self, cluster_ids, gens=None) -> Dict[int, Record]:
         from repro.core import probes as probes_lib
 
         cids = np.asarray(cluster_ids, np.int64).reshape(-1)
         if len(cids) == 0:
             return {}
+        exp: Optional[Dict[int, int]] = None
+        if gens is not None:
+            exp = {int(c): int(g)
+                   for c, g in zip(cids, np.asarray(gens).reshape(-1))}
         # self-owned clusters never enter the L1 (the co-located peer's own
         # cache holds them), so they bypass the L1 probe entirely — probing
         # would book a structural miss per lookup and depress the reported
@@ -623,7 +670,7 @@ class ShardedBlockStore(_AsyncStoreMixin):
         else:
             self_cids = cids[:0]
             peer_cids = cids
-        out, missing = self._l1_get(peer_cids)
+        out, missing = self._l1_get(peer_cids, exp)
         missing = list(self_cids) + missing
         if not missing:
             return out
@@ -643,8 +690,11 @@ class ShardedBlockStore(_AsyncStoreMixin):
                 with self._stats_lock:
                     self.store_stats.redirected_blocks += len(sub)
                 continue
+            sub_gens = (None if exp is None else
+                        np.asarray([exp.get(int(c), 0) for c in sub],
+                                   np.int64))
             futs[owner] = (sub, self._fan.submit(self._fetch_peer, owner,
-                                                 sub))
+                                                 sub, sub_gens))
         for owner, (sub, fut) in futs.items():
             try:
                 recs = fut.result()
@@ -658,6 +708,27 @@ class ShardedBlockStore(_AsyncStoreMixin):
                 with self._stats_lock:
                     self.store_stats.failovers += 1
                 continue
+            if exp is not None and owner != self.self_node:
+                # A peer that hasn't adopted the republish yet (reader not
+                # reopened, gens not forwarded by an old wire) answers with
+                # the superseded record.  Treat those as misses: re-serve
+                # through the fallback, never accept them, never L1 them.
+                stale = [cid for cid, rec in recs.items()
+                         if record_gen(rec) < exp.get(cid, 0)]
+                if stale:
+                    with self._stats_lock:
+                        self.store_stats.stale_answers += len(stale)
+                    if self.fallback is None:
+                        from repro.core import storage
+
+                        raise storage.GenerationMismatchError(
+                            f"peer {owner} served stale generations for "
+                            f"clusters {stale[:8]} and no fallback store "
+                            f"is configured"
+                        )
+                    for cid in stale:
+                        recs.pop(cid)
+                    fallback_cids.extend(stale)
             out.update(recs)
             with self._stats_lock:
                 self.node_blocks[owner] = (
@@ -668,7 +739,15 @@ class ShardedBlockStore(_AsyncStoreMixin):
             if owner != self.self_node:
                 self._l1_put(recs)
         if fallback_cids:
-            recs = self.fallback.get(np.asarray(fallback_cids, np.int64))
+            fb_gens = (None if exp is None else
+                       np.asarray([exp.get(int(c), 0)
+                                   for c in fallback_cids], np.int64))
+            if fb_gens is None:
+                recs = self.fallback.get(np.asarray(fallback_cids, np.int64))
+            else:
+                recs = self.fallback.get(
+                    np.asarray(fallback_cids, np.int64), gens=fb_gens
+                )
             out.update(recs)
             with self._stats_lock:
                 self.store_stats.fallback_blocks += len(recs)
@@ -676,13 +755,16 @@ class ShardedBlockStore(_AsyncStoreMixin):
                 self._l1_put(recs)
         return out
 
-    def _fetch_peer(self, owner, sub) -> Dict[int, Record]:
+    def _fetch_peer(self, owner, sub, gens=None) -> Dict[int, Record]:
         """One peer sub-fetch with passive health signaling: latency feeds
         the breaker's EWMA (brownout detection), any exception is a
         failure vote."""
         t0 = time.monotonic()
         try:
-            recs = self.transports[owner].fetch(sub)
+            if gens is None:
+                recs = self.transports[owner].fetch(sub)
+            else:
+                recs = self.transports[owner].fetch(sub, gens=gens)
         except Exception:
             if owner != self.self_node:
                 self.health.on_failure(owner)
@@ -690,6 +772,20 @@ class ShardedBlockStore(_AsyncStoreMixin):
         if owner != self.self_node:
             self.health.on_success(owner, time.monotonic() - t0)
         return recs
+
+    def refresh(self):
+        """Adopts a republished checkpoint ring-wide: reopens every owned
+        peer store and the fallback.  The L1 is deliberately NOT cleared —
+        the next gen-stamped fetch invalidates exactly the rewritten
+        clusters (``l1_invalidations``), everything else stays hot."""
+        for st in self._owned_stores:
+            r = getattr(st, "refresh", None)
+            if r is not None:
+                r()
+        if self.fallback is not None:
+            r = getattr(self.fallback, "refresh", None)
+            if r is not None:
+                r()
 
     # ---- health ----
     @property
@@ -733,12 +829,14 @@ class ShardedBlockStore(_AsyncStoreMixin):
                 kind="sharded", nodes=sorted(self.transports),
                 self_node=self.self_node, l1_hits=self.l1_hits,
                 l1_misses=self.l1_misses, l1_records=len(self._l1),
+                l1_invalidations=self.l1_invalidations,
                 remote_blocks=self.remote_blocks, per_node=per_node,
                 health={n: s["state"]
                         for n, s in self.health.snapshot().items()},
                 failovers=self.store_stats.failovers,
                 redirected_blocks=self.store_stats.redirected_blocks,
                 fallback_blocks=self.store_stats.fallback_blocks,
+                stale_answers=self.store_stats.stale_answers,
                 retries=retries, deadline_misses=deadline_misses,
                 has_fallback=self.fallback is not None,
             )

@@ -1,0 +1,702 @@
+"""RAM delta tier + generation-tagged republish: live-updating serving.
+
+The disk tier serves a frozen checkpoint; ``update.py`` mutates a resident
+index.  This module is the bridge that makes mutation a *serving* concern —
+the hot/cold split the percolate-node exemplar ships, recast in engine
+terms:
+
+  * :class:`DeltaTier` — a small, byte-bounded, RAM-resident append-only
+    segment (vectors + attrs + ids + cluster assignments + a tombstone set).
+    ``SearchEngine`` scans it *exactly* every batch (``scan_snapshot``, the
+    same per-row arithmetic as the cold kernel) and folds the fragment into
+    the top-k monoid after the merge stage; tombstones mask cold-tier hits
+    by id inside the scan, so the (k+1)-th cold candidate surfaces exactly
+    as a rebuild without the deleted rows would rank it.
+  * :func:`compact_deltas` — the background republish: folds the frozen
+    delta rows and tombstones into their cluster records on disk, rewrites
+    only the touched shards, bumps each rewritten cluster's **generation**
+    (layout v3) and the resident ``gens.npy``.  Every cache layer keys on
+    ``(cluster_id, gen)``, so the republish invalidates exactly the
+    rewritten clusters — locally and across the sharded peer ring.
+  * The freeze/commit handshake — ``compact_deltas`` freezes the segment's
+    prefix; adds keep landing behind the freeze and tombstones landing on
+    frozen rows are queued (``late_tombs``); ``DeltaTier.commit`` (called
+    from ``DiskIVFIndex.refresh`` between batches) atomically drops the
+    republished prefix and replays the queued tombstones against the new
+    cold generation.  No drain, no double-serving, no lost delete.
+
+Parity contract (the tentpole invariant): for any interleaving of
+add / tombstone / compact / publish, search over the live two-tier index is
+bit-identical to a from-scratch rebuild at the same logical state.  Three
+properties carry it:
+
+  1. the delta scan replicates the cold kernel's row arithmetic (same cast
+     chain, same score expression, same masked top-k, same l2 fix-up);
+  2. a delta row only competes for queries whose *geometric*
+     top-``n_probes`` candidate set contains the row's cluster
+     (``geo_probes``/``geo_valid`` from the plan) — precisely the queries
+     that would scan it in the rebuilt index;
+  3. the planner sees tombstone/append-adjusted cluster counts, so the
+     centroid top-k (which masks empty clusters by count) ranks clusters
+     exactly as the rebuilt index's planner would.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+import threading
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blockstore as blockstore_lib
+from repro.core import kmeans as kmeans_lib
+from repro.core import storage
+from repro.core import summaries as summaries_lib
+from repro.core import topk as topk_lib
+from repro.core.hybrid import make_hybrid
+
+Array = jax.Array
+
+
+class DeltaOverflowError(RuntimeError):
+    """The RAM delta segment is full: republish (``compact_deltas`` +
+    ``refresh``) before adding more rows.  Raised instead of silently
+    dropping — a lost add is a correctness bug in a live-serving tier."""
+
+
+# ---------------------------------------------------------------------------
+# Snapshot + jitted scans
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DeltaSnapshot:
+    """Immutable per-batch view of the delta segment.
+
+    ``vectors/attrs/clusters/norms/scales`` reference the tier's append-only
+    buffers (rows beyond ``n_rows`` are masked by the scan); ``ids`` is a
+    copy (tombstoning mutates it in place).  ``tombstones`` is the cold-id
+    tombstone set as a sorted int32 array padded *at the front* with ``-2``
+    to the next power of two — sorted for ``searchsorted``, pow2 so the
+    jitted mask sees a bounded set of shapes, and ``-2`` never collides
+    with a real id (≥ 0) or the dead-slot sentinel (-1).
+    """
+
+    n_rows: int
+    vectors: np.ndarray            # [cap, D] store dtype
+    attrs: np.ndarray              # [cap, M] int16
+    ids: np.ndarray                # [cap] int32 (−1 = dead)
+    clusters: np.ndarray           # [cap] int32
+    norms: Optional[np.ndarray]    # [cap] f32 (l2 only)
+    scales: Optional[np.ndarray]   # [cap] f32 (SQ8 only)
+    tombstones: Optional[np.ndarray]  # sorted pow2 int32, −2-padded
+    version: int = 0
+
+
+@jax.jit
+def mask_tombstones(ids: Array, tombs: Array) -> Array:
+    """Replaces tombstoned ids with −1 (the scan's dead-slot sentinel).
+
+    ``tombs`` is the snapshot's sorted −2-padded array; applied to the ids
+    *operand* (not the merged result) so the cold scan's masked top-k
+    naturally promotes the next-best live candidate.
+    """
+    idx = jnp.searchsorted(tombs, ids)
+    hit = jnp.take(tombs, jnp.clip(idx, 0, tombs.shape[0] - 1)) == ids
+    return jnp.where(hit, -1, ids)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "k"))
+def _delta_scan(
+    queries, queries_pad, lo_pad, hi_pad, geo, geo_ok,
+    vectors, attrs, ids, clusters, norms, scales, n_rows,
+    *, metric: str, k: int,
+):
+    """Exact scan of the delta rows, bit-matching the cold kernel's math.
+
+    Mirrors ``tiled_scan_xla.one()`` per row: queries arrive as the plan's
+    cast ``queries_pad`` and are re-cast to f32 (the cold path's double
+    cast), rows go store-dtype → f32, scores are ``q @ v.T`` (+ SQ8 scale,
+    + l2 ``2s − ‖v‖²`` with the guarded ``−‖q‖²`` fix-up), and the filter
+    mask is the same DNF interval test.  On top the *membership* mask: a
+    row counts for query ``q`` iff the row's cluster is in ``q``'s
+    geometric top-``n_probes`` candidate set — the rebuilt index would
+    only scan it there.
+    """
+    q32 = queries_pad.astype(jnp.float32)           # [Qpad, D]
+    v32 = vectors.astype(jnp.float32)               # [C, D]
+    scores = q32 @ v32.T                            # [Qpad, C]
+    if scales is not None:
+        scores = scores * scales[None, :]
+    if metric == "l2":
+        scores = 2.0 * scores - norms[None, :]
+    a = attrs.astype(jnp.int32)                     # [C, M]
+    inside = jnp.logical_and(
+        a[None, :, None, :] >= lo_pad[:, None],
+        a[None, :, None, :] <= hi_pad[:, None],
+    )                                               # [Qpad, C, F, M]
+    fmask = jnp.any(jnp.all(inside, -1), -1)        # [Qpad, C]
+    cap = ids.shape[0]
+    live = jnp.logical_and(ids >= 0, jnp.arange(cap) < n_rows)  # [C]
+    member = jnp.any(
+        jnp.logical_and(
+            geo[:, :, None] == clusters[None, None, :],
+            geo_ok[:, :, None],
+        ),
+        axis=1,
+    )                                               # [Qpad, C]
+    reach = jnp.logical_and(member, live[None, :])
+    mask = jnp.logical_and(fmask, reach)
+    dvals, dids = topk_lib.masked_topk(
+        scores, mask, k,
+        ids=jnp.broadcast_to(ids[None, :], scores.shape),
+    )
+    if metric == "l2":
+        q2 = jnp.sum(queries.astype(jnp.float32) ** 2, -1)  # [Q]
+        q2p = jnp.zeros((queries_pad.shape[0],), jnp.float32)
+        q2p = q2p.at[: q2.shape[0]].set(q2)
+        dvals = jnp.where(
+            dvals > topk_lib.NEG_INF / 2, dvals - q2p[:, None], dvals
+        )
+    dscanned = jnp.sum(reach.astype(jnp.int32), axis=-1)
+    dpassed = jnp.sum(mask.astype(jnp.int32), axis=-1)
+    return dvals, dids, dscanned, dpassed
+
+
+def scan_snapshot(
+    snap: DeltaSnapshot, queries, queries_pad, lo_pad, hi_pad, geo, geo_ok,
+    *, metric: str, k: int,
+):
+    """[Qpad, k] delta-tier top-k fragment + per-query scan accounting."""
+    return _delta_scan(
+        queries, queries_pad, lo_pad, hi_pad, geo, geo_ok,
+        jnp.asarray(snap.vectors), jnp.asarray(snap.attrs),
+        jnp.asarray(snap.ids), jnp.asarray(snap.clusters),
+        None if snap.norms is None else jnp.asarray(snap.norms),
+        None if snap.scales is None else jnp.asarray(snap.scales),
+        jnp.int32(snap.n_rows), metric=metric, k=k,
+    )
+
+
+def _pack_tombstones(tombs) -> Optional[np.ndarray]:
+    if not tombs:
+        return None
+    arr = np.fromiter(tombs, np.int64, len(tombs)).astype(np.int32)
+    arr.sort()
+    p = 1 << (len(arr) - 1).bit_length()
+    out = np.full(p, -2, np.int32)
+    out[p - len(arr):] = arr  # front-padded: stays sorted, −2 never matches
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The tier
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FrozenDelta:
+    """The segment prefix a republish is folding to disk — copies, so late
+    tombstones on the live buffers cannot change what lands in the
+    checkpoint mid-write."""
+
+    n0: int
+    ids: np.ndarray
+    clusters: np.ndarray
+    vectors: np.ndarray
+    attrs: np.ndarray
+    norms: Optional[np.ndarray]
+    scales: Optional[np.ndarray]
+    tombs: frozenset
+    # tombstones that hit a frozen row *while the republish ran*: the row
+    # was written live to the new cold generation, so the delete must be
+    # replayed against cold at commit — queued here, merged by commit()
+    late_tombs: List[Tuple[int, int]] = dataclasses.field(
+        default_factory=list
+    )
+
+
+class DeltaTier:
+    """Byte-bounded RAM-resident append segment over a cold index.
+
+    ``add`` mirrors ``update.add_vectors`` exactly (same centroid
+    assignment, same SQ8 quantization, same norms) so a later republish —
+    or a from-scratch rebuild — stores bit-identical rows.  ``tombstone``
+    kills delta rows in place and records cold-row deletes in the tombstone
+    set (with an optional cluster hint that keeps planned cluster counts in
+    lockstep with a rebuild).  All methods are thread-safe; a snapshot is
+    immutable for the batch that captured it.
+    """
+
+    def __init__(self, index, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        bspec = blockstore_lib.BlockSpec.from_index(index)
+        self.spec = index.spec
+        self.metric = index.spec.metric
+        self.quantized = bool(bspec.quantized)
+        self.capacity = int(capacity)
+        self._centroids = jnp.asarray(index.centroids)
+        self._store_dtype = np.dtype(index.store_dtype)
+        d, m = bspec.dim, bspec.n_attrs
+        self._vectors = np.zeros((capacity, d), self._store_dtype)
+        self._attrs = np.zeros((capacity, m), np.int16)
+        self._ids = np.full((capacity,), -1, np.int32)
+        self._clusters = np.zeros((capacity,), np.int32)
+        self._norms = (
+            np.zeros((capacity,), np.float32) if bspec.has_norms else None
+        )
+        self._scales = (
+            np.zeros((capacity,), np.float32) if self.quantized else None
+        )
+        self._n = 0
+        self._id2row: Dict[int, int] = {}
+        self._tombs: set = set()
+        self._tomb_clusters: Dict[int, int] = {}  # cold id → cluster hint
+        self._pending: Optional[FrozenDelta] = None
+        self._version = 0
+        self._lock = threading.Lock()
+        # counters (metrics() / tests)
+        self._adds = 0
+        self._tombstoned = 0
+        self._commits = 0
+        self._snap_cache: Optional[Tuple[int, Optional[DeltaSnapshot]]] = None
+        self._adj_cache: Optional[Tuple[int, Optional[np.ndarray]]] = None
+
+    @classmethod
+    def for_index(cls, index, budget_mb: float) -> "DeltaTier":
+        """Sizes the segment from a byte budget (`--delta-budget-mb`)."""
+        bspec = blockstore_lib.BlockSpec.from_index(index)
+        row = (
+            bspec.dim * np.dtype(index.store_dtype).itemsize
+            + bspec.n_attrs * 2   # attrs int16
+            + 4 + 4               # ids + cluster assignment
+            + (4 if bspec.has_norms else 0)
+            + (4 if bspec.quantized else 0)
+        )
+        cap = max(int(budget_mb * 2 ** 20) // row, 8)
+        return cls(index, capacity=cap)
+
+    # ---- mutation ----
+    def add(self, core, attrs, ids) -> int:
+        """Appends a batch of hybrid rows; returns rows added.
+
+        Raises :class:`DeltaOverflowError` when the batch would overflow
+        the byte budget — the caller's signal to republish.
+        """
+        core_j, attrs_j = make_hybrid(self.spec, core, attrs)
+        assign = kmeans_lib.assign(
+            core_j.astype(jnp.float32), self._centroids
+        )
+        if self.quantized:  # the add_vectors SQ8 path, bit for bit
+            c32 = core_j.astype(jnp.float32)
+            amax = jnp.max(jnp.abs(c32), axis=-1)
+            scale = jnp.maximum(amax, 1e-12) / 127.0
+            codes = jnp.clip(jnp.round(c32 / scale[:, None]), -127, 127)
+            rows = np.asarray(codes).astype(self._store_dtype)
+            scales = np.asarray(scale, np.float32)
+        else:
+            rows = np.asarray(core_j.astype(jnp.dtype(self._store_dtype)))
+            scales = None
+        norms = (
+            np.asarray(jnp.sum(core_j.astype(jnp.float32) ** 2, -1),
+                       np.float32)
+            if self._norms is not None else None
+        )
+        a_np = np.asarray(attrs_j, np.int16)
+        ids_np = np.asarray(ids, np.int32)
+        cl_np = np.asarray(assign, np.int32)
+        b = ids_np.shape[0]
+        with self._lock:
+            if self._n + b > self.capacity:
+                raise DeltaOverflowError(
+                    f"delta segment full: {self._n}+{b} > capacity "
+                    f"{self.capacity} rows — run compact_deltas() and "
+                    f"refresh() before adding more"
+                )
+            lo = self._n
+            self._vectors[lo:lo + b] = rows
+            self._attrs[lo:lo + b] = a_np
+            self._clusters[lo:lo + b] = cl_np
+            if self._norms is not None:
+                self._norms[lo:lo + b] = norms
+            if self._scales is not None:
+                self._scales[lo:lo + b] = scales
+            # ids last: a snapshot taken concurrently masks rows ≥ its
+            # n_rows anyway, but dead-until-assigned keeps this append
+            # invisible even to a torn read
+            self._ids[lo:lo + b] = ids_np
+            for j in range(b):
+                self._id2row[int(ids_np[j])] = lo + j
+            self._n += b
+            self._adds += b
+            self._version += 1
+        return b
+
+    def tombstone(self, ids, clusters=None) -> int:
+        """Deletes rows by id; returns how many were newly tombstoned.
+
+        Delta rows die in place.  Ids not in the segment are cold rows:
+        they join the tombstone set the scan masks against, with
+        ``clusters`` (aligned per-id hints, −1 = unknown) keeping the
+        planner's adjusted counts exact — without a hint the row still
+        never surfaces, but a cluster emptied purely by hint-less deletes
+        would stay probeable where a rebuild's planner would skip it.
+        """
+        ids_np = np.asarray(ids, np.int64).reshape(-1)
+        hints = (
+            None if clusters is None
+            else np.asarray(clusters, np.int64).reshape(-1)
+        )
+        n_new = 0
+        with self._lock:
+            for j, _id in enumerate(int(i) for i in ids_np):
+                row = self._id2row.pop(_id, None)
+                if row is not None:
+                    self._ids[row] = -1
+                    n_new += 1
+                    if (self._pending is not None
+                            and row < self._pending.n0):
+                        # frozen row: it is being written live to the new
+                        # cold generation right now — queue the delete for
+                        # replay against cold at commit
+                        self._pending.late_tombs.append(
+                            (_id, int(self._clusters[row]))
+                        )
+                    continue
+                if _id in self._tombs:
+                    continue
+                self._tombs.add(_id)
+                n_new += 1
+                if hints is not None and hints[j] >= 0:
+                    self._tomb_clusters[_id] = int(hints[j])
+            self._tombstoned += n_new
+            self._version += 1
+        return n_new
+
+    # ---- per-batch views ----
+    def snapshot(self) -> Optional[DeltaSnapshot]:
+        """The batch's immutable view (None when the tier is truly empty —
+        frozen-checkpoint batches pay zero delta overhead).  Cached by
+        version: back-to-back batches with no interleaved mutation share
+        one snapshot (and its packed tombstone array)."""
+        with self._lock:
+            if self._snap_cache is not None and \
+                    self._snap_cache[0] == self._version:
+                return self._snap_cache[1]
+            if self._n == 0 and not self._tombs:
+                snap = None
+            else:
+                snap = DeltaSnapshot(
+                    n_rows=self._n,
+                    vectors=self._vectors,
+                    attrs=self._attrs,
+                    ids=self._ids.copy(),
+                    clusters=self._clusters,
+                    norms=self._norms,
+                    scales=self._scales,
+                    tombstones=_pack_tombstones(self._tombs),
+                    version=self._version,
+                )
+            self._snap_cache = (self._version, snap)
+            return snap
+
+    def count_adjustment(self, n_clusters: int) -> Optional[np.ndarray]:
+        """[K] int32 live-delta-adds minus hinted cold tombstones — what the
+        planner adds to the cold counts so ``centroid_scores``'s
+        empty-cluster mask agrees with a rebuild.  None when all-zero."""
+        with self._lock:
+            if self._adj_cache is not None and \
+                    self._adj_cache[0] == self._version:
+                return self._adj_cache[1]
+            adj = np.zeros(n_clusters, np.int32)
+            n = self._n
+            if n:
+                live = self._ids[:n] >= 0
+                np.add.at(adj, self._clusters[:n][live], 1)
+            for c in self._tomb_clusters.values():
+                adj[c] -= 1
+            out = adj if adj.any() else None
+            self._adj_cache = (self._version, out)
+            return out
+
+    # ---- republish handshake ----
+    def freeze(self) -> FrozenDelta:
+        """Snapshots the segment prefix + tombstone set for a republish.
+        Adds keep landing behind the freeze; only one republish may be in
+        flight."""
+        with self._lock:
+            if self._pending is not None:
+                raise RuntimeError(
+                    "a republish is already in flight (freeze without "
+                    "commit) — refresh() the serving index first"
+                )
+            n0 = self._n
+            fro = FrozenDelta(
+                n0=n0,
+                ids=self._ids[:n0].copy(),
+                clusters=self._clusters[:n0].copy(),
+                vectors=self._vectors[:n0].copy(),
+                attrs=self._attrs[:n0].copy(),
+                norms=(None if self._norms is None
+                       else self._norms[:n0].copy()),
+                scales=(None if self._scales is None
+                        else self._scales[:n0].copy()),
+                tombs=frozenset(self._tombs),
+            )
+            self._pending = fro
+            return fro
+
+    def commit(self) -> bool:
+        """Drops the republished prefix (the new cold generation now serves
+        those rows) and replays queued late tombstones against it.  Called
+        from ``refresh()`` between batches — the same atomic flip that
+        swaps in the new generation vector.  Returns False when no
+        republish was in flight."""
+        with self._lock:
+            fro = self._pending
+            if fro is None:
+                return False
+            n0, n = fro.n0, self._n
+            keep = n - n0
+            for arr in (self._vectors, self._attrs, self._clusters):
+                arr[:keep] = arr[n0:n]
+            if self._norms is not None:
+                self._norms[:keep] = self._norms[n0:n]
+            if self._scales is not None:
+                self._scales[:keep] = self._scales[n0:n]
+            self._ids[:keep] = self._ids[n0:n]
+            self._ids[keep:n] = -1
+            self._n = keep
+            self._id2row = {
+                int(i): r for r, i in enumerate(self._ids[:keep]) if i >= 0
+            }
+            # folded tombstones are physically gone from the new records
+            self._tombs -= fro.tombs
+            for _id in fro.tombs:
+                self._tomb_clusters.pop(_id, None)
+            # deletes that raced the republish: their rows are live in the
+            # new cold generation — mask them there from the next batch on
+            for _id, c in fro.late_tombs:
+                self._tombs.add(_id)
+                self._tomb_clusters[_id] = c
+            self._pending = None
+            self._version += 1
+            self._commits += 1
+            return True
+
+    # ---- observability ----
+    def stats(self) -> Dict[str, object]:
+        with self._lock:
+            live = int((self._ids[: self._n] >= 0).sum())
+            return dict(
+                rows=self._n,
+                live_rows=live,
+                capacity=self.capacity,
+                tombstones=len(self._tombs),
+                adds=self._adds,
+                tombstoned=self._tombstoned,
+                commits=self._commits,
+                pending=self._pending is not None,
+                version=self._version,
+            )
+
+
+# ---------------------------------------------------------------------------
+# Republish
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RepublishStats:
+    """What one ``compact_deltas`` run rewrote (the bench's invalidation
+    accounting reads ``clusters_rewritten``)."""
+
+    clusters_rewritten: int
+    shards_rewritten: int
+    rows_folded: int        # delta rows written into cluster records
+    rows_reclaimed: int     # dead (tombstoned/stale) slots dropped
+    tombstones_applied: int
+    gen_max: int
+
+
+def compact_deltas(
+    directory: str,
+    tier: Optional[DeltaTier] = None,
+    *,
+    include_stale: bool = True,
+) -> RepublishStats:
+    """Folds the tier's frozen rows + tombstones into the checkpoint.
+
+    Rewrites *only* the shards holding touched clusters; each touched
+    cluster's record gets its rows compacted (tombstones reclaimed, delta
+    rows appended in add order — matching the stable scatter a from-scratch
+    rebuild performs), its summary row rebuilt exactly, and its ``gen``
+    bumped, then ``counts.npy`` / ``gens.npy`` / the manifest follow
+    atomically.  A serving pod keeps reading its old mmap until
+    ``refresh()`` flips it between batches; gen-keyed caches then miss on
+    exactly the rewritten clusters.
+
+    ``include_stale`` also folds clusters whose only debt is pre-existing
+    tombstoned slots under the count high-water mark (the ``stale_counts``
+    debt), so prune effectiveness recovers on republish.
+
+    The freeze taken here stays pending until ``tier.commit()`` — run via
+    ``DiskIVFIndex.refresh()`` / ``SearchEngine.refresh()`` — so serving
+    never double-counts or drops a row mid-republish.
+    """
+    man = storage.load_manifest(directory)
+    if man.get("layout", 1) < 3:
+        raise storage.GenerationMismatchError(
+            f"compact_deltas needs a generation-tagged (layout 3) "
+            f"checkpoint, found layout {man.get('layout', 1)} at "
+            f"{directory!r} — re-save with save_index(..., layout=3)"
+        )
+    paths = storage.check_complete(directory, man)
+    gens = storage.load_gens(directory, man)
+    counts = np.array(
+        np.load(os.path.join(directory, "counts.npy")), np.int32
+    )
+    k, n_shards, vpad = man["n_clusters"], man["n_shards"], man["vpad"]
+    kl = k // n_shards
+    parts = [storage.read_shard_fields(p, man) for p in paths]
+
+    frozen = tier.freeze() if tier is not None else None
+    if frozen is not None and frozen.n0:
+        f_live = np.nonzero(frozen.ids >= 0)[0]
+    else:
+        f_live = np.zeros(0, np.int64)
+    tombs = frozen.tombs if frozen is not None else frozenset()
+    tomb_arr = (
+        np.fromiter(tombs, np.int64, len(tombs)) if tombs
+        else np.zeros(0, np.int64)
+    )
+
+    per_cluster: Dict[int, List[int]] = {}
+    for i in f_live:
+        per_cluster.setdefault(int(frozen.clusters[i]), []).append(int(i))
+    touched = set(per_cluster)
+    tombstones_applied = 0
+    for s, part in enumerate(parts):
+        ids_s = part["ids"]                      # [kl, Vpad]
+        if tomb_arr.size:
+            hit = np.isin(ids_s, tomb_arr)
+            tombstones_applied += int(hit.sum())
+            touched.update(s * kl + lc for lc in np.nonzero(
+                hit.any(axis=1))[0])
+        if include_stale:
+            crow = counts[s * kl:(s + 1) * kl]
+            within = np.arange(vpad)[None, :] < crow[:, None]
+            stale = np.logical_and(within, ids_s < 0)
+            touched.update(s * kl + lc for lc in np.nonzero(
+                stale.any(axis=1))[0])
+
+    if not touched:
+        # nothing to publish; the (empty) freeze is dropped at the next
+        # refresh()'s commit
+        return RepublishStats(0, 0, 0, 0, 0, int(gens.max(initial=0)))
+
+    summ = storage.load_summaries(directory, man)
+    field_names = [f["name"] for f in man["fields"] if f["name"] != "gen"]
+    frozen_fields = (
+        {} if frozen is None else dict(
+            vectors=frozen.vectors, attrs=frozen.attrs, ids=frozen.ids,
+            norms=frozen.norms, scales=frozen.scales,
+        )
+    )
+    rows_folded = rows_reclaimed = 0
+    for c in sorted(touched):
+        s, lc = divmod(c, kl)
+        part = parts[s]
+        old_ids = part["ids"][lc]
+        cnt = int(counts[c])
+        within = np.arange(vpad) < cnt
+        keep = np.logical_and(within, old_ids >= 0)
+        if tomb_arr.size:
+            keep = np.logical_and(keep, ~np.isin(old_ids, tomb_arr))
+        keep_idx = np.nonzero(keep)[0]           # stable slot order
+        add_rows = per_cluster.get(c, [])
+        n_new = len(keep_idx) + len(add_rows)
+        if n_new > vpad:
+            raise ValueError(
+                f"cluster {c} overflows vpad={vpad} with {n_new} rows "
+                f"after folding {len(add_rows)} delta rows — the cluster "
+                f"needs a split/rebuild, not a republish"
+            )
+        for name in field_names:
+            row = part[name][lc]
+            new = np.zeros_like(row)
+            if name == "ids":
+                new[:] = -1
+            new[: len(keep_idx)] = row[keep_idx]
+            if add_rows:
+                new[len(keep_idx): n_new] = frozen_fields[name][add_rows]
+            part[name][lc] = new
+        part["gen"][lc, 0] = gens[c] + 1
+        gens[c] += 1
+        rows_folded += len(add_rows)
+        rows_reclaimed += cnt - len(keep_idx)
+        counts[c] = n_new
+        if summ is not None:
+            summ = summaries_lib.rebuild_cluster(
+                summ, jnp.asarray(part["attrs"][lc]),
+                jnp.asarray(part["ids"][lc]), c,
+            )
+
+    # rewrite only the shards that hold touched clusters, then the resident
+    # vectors, summaries and manifest — each atomically, manifest last
+    stride = man["record_stride"]
+    shards_touched = sorted({c // kl for c in touched})
+    for s in shards_touched:
+        def _bin_save(p, s=s):
+            with open(p, "wb") as f:
+                rec = np.zeros(stride, np.uint8)
+                for lc in range(kl):
+                    rec[:] = 0
+                    for fld in man["fields"]:
+                        raw = np.ascontiguousarray(
+                            parts[s][fld["name"]][lc]
+                        ).tobytes()
+                        o = fld["offset"]
+                        rec[o:o + len(raw)] = np.frombuffer(raw, np.uint8)
+                    f.write(rec.tobytes())
+
+        storage._atomic_save(paths[s], _bin_save)
+
+    def _np_save(p, arr):
+        with open(p, "wb") as f:
+            np.save(f, arr, allow_pickle=False)
+
+    storage._atomic_save(
+        os.path.join(directory, "counts.npy"),
+        lambda p: _np_save(p, counts),
+    )
+    storage._atomic_save(
+        os.path.join(directory, storage.GENS_FILE),
+        lambda p: _np_save(p, gens),
+    )
+    if summ is not None:
+        for field, fname in storage.SUMMARY_FILES.items():
+            storage._atomic_save(
+                os.path.join(directory, fname),
+                lambda p, f=field: _np_save(p, np.asarray(getattr(summ, f))),
+            )
+    man["n_live"] = int(counts.sum())
+    storage._atomic_save(
+        os.path.join(directory, storage.MANIFEST),
+        lambda p: open(p, "w").write(json.dumps(man, indent=2)),
+    )
+    return RepublishStats(
+        clusters_rewritten=len(touched),
+        shards_rewritten=len(shards_touched),
+        rows_folded=rows_folded,
+        rows_reclaimed=rows_reclaimed,
+        tombstones_applied=tombstones_applied,
+        gen_max=int(gens.max(initial=0)),
+    )

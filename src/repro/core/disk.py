@@ -51,22 +51,29 @@ from repro.core.hybrid import HybridSpec
 
 
 class ShardReader:
-    """mmap-backed reader of layout-v2 shard files, one cluster per read.
+    """mmap-backed reader of layout-v2/v3 shard files, one cluster per read.
 
     Thread-safe: maps are opened lazily under a lock and reads copy the
     record out of the map into a fresh host buffer, so returned arrays never
-    alias pageable mmap memory.
+    alias pageable mmap memory.  Every record carries a ``gen`` field —
+    read from layout-v3 records, synthesized as 0 for v2 — so gen-keyed
+    cache layers treat both uniformly.
     """
 
     def __init__(self, directory: str, man: dict):
-        if man["layout"] != 2:
+        if man["layout"] not in (2, 3):
             raise ValueError(
-                "DiskIVFIndex requires a layout-v2 checkpoint; re-save it "
-                "with storage.save_index(index, dir) (layout=2 is the "
-                "default) — v1 .npz shards are not cluster-addressable"
+                "DiskIVFIndex requires a layout-v2/v3 checkpoint; re-save "
+                "it with storage.save_index(index, dir) — v1 .npz shards "
+                "are not cluster-addressable"
             )
+        self.directory = directory
+        self._lock = threading.Lock()
+        self._apply_manifest(man)
+
+    def _apply_manifest(self, man: dict):
         self.man = man
-        self.paths = storage.shard_paths(directory, man)
+        self.paths = storage.shard_paths(self.directory, man)
         self.kl = man["n_clusters"] // man["n_shards"]
         self.stride: int = man["record_stride"]
         self.fields = [
@@ -74,17 +81,36 @@ class ShardReader:
              f["offset"])
             for f in man["fields"]
         ]
-        self._mm: List[Optional[np.memmap]] = [None] * len(self.paths)
-        self._lock = threading.Lock()
+        # eager: mapping is just a VM reservation (pages fault in on
+        # read), and a lazy first map after a republish rename would pin
+        # the NEW inode against the old counts/gens — a torn view
+        self._mm: List[Optional[np.memmap]] = [
+            np.memmap(p, dtype=np.uint8, mode="r") for p in self.paths
+        ]
+
+    def reopen(self, man: Optional[dict] = None):
+        """Re-reads the manifest and drops the shard mmaps — the local half
+        of a generation flip.  ``compact_deltas`` rewrites shard files
+        atomically (tmp + rename), so old maps keep serving the *old* inode
+        consistently until this swap; reads racing the swap may still
+        return old-generation records, which the gen-keyed caches catch and
+        re-read rather than serve."""
+        with self._lock:
+            self._apply_manifest(
+                man if man is not None
+                else storage.load_manifest(self.directory)
+            )
 
     def _mmap(self, s: int) -> np.memmap:
-        if self._mm[s] is None:
+        mm = self._mm
+        if mm[s] is None:
             with self._lock:
-                if self._mm[s] is None:
-                    self._mm[s] = np.memmap(
+                mm = self._mm  # reopen() may have swapped the list
+                if mm[s] is None:
+                    mm[s] = np.memmap(
                         self.paths[s], dtype=np.uint8, mode="r"
                     )
-        return self._mm[s]
+        return mm[s]
 
     def read(self, cid: int) -> Dict[str, np.ndarray]:
         """Reads cluster ``cid``'s record into one pinned host buffer and
@@ -97,6 +123,8 @@ class ShardReader:
         for name, dt, shape, o in self.fields:
             nb = int(np.prod(shape)) * dt.itemsize
             rec[name] = buf[o:o + nb].view(dt).reshape(shape)
+        if "gen" not in rec:  # layout v2: pre-generation records are gen 0
+            rec["gen"] = np.zeros(1, np.int64)
         return rec
 
 
@@ -111,6 +139,9 @@ class CacheStats:
     stalled_waits: int = 0  # waits on an in-flight load that outlived the
     #                         waiter timeout (loader hung or died); the
     #                         waiter re-loaded inline instead of hanging
+    invalidations: int = 0  # cached records dropped because a fetch carried
+    #                         a newer expected generation (republish flips
+    #                         exactly the rewritten clusters)
 
 
 class ClusterCache:
@@ -229,9 +260,49 @@ class ClusterCache:
             finally:
                 self._queue.task_done()
 
+    def _validated(self, cid: int, rec: dict, exp: Optional[Dict[int, int]]
+                   ) -> dict:
+        """Gen-checks a freshly loaded / waiter-delivered record.
+
+        Expected gen is a *minimum*: a record at or above it is current (a
+        republish may have advanced the cluster further than the caller
+        knows).  Below it the load raced a republish through a stale mmap —
+        reopen the reader and read once more; a second stale read means the
+        checkpoint on disk genuinely lags the caller and is a loud error,
+        never a silent stale serve.
+        """
+        if exp is None or cid not in exp:
+            return rec
+        want = exp[cid]
+        if int(rec["gen"][0]) >= want:
+            return rec
+        with self._lock:
+            self._entries.pop(cid, None)
+            self.stats.invalidations += 1
+        self.reader.reopen()
+        rec = self._load(cid, prefetched=False)
+        got = int(rec["gen"][0])
+        if got < want:
+            raise storage.GenerationMismatchError(
+                f"cluster {cid}: shard on disk serves gen {got} but gen "
+                f">= {want} was published — checkpoint republish "
+                f"incomplete or rolled back"
+            )
+        return rec
+
     # ---- public ----
-    def get_many(self, cids: Sequence[int]) -> Dict[int, dict]:
-        """Returns {cid: record} for every id, blocking on disk as needed."""
+    def get_many(self, cids: Sequence[int],
+                 gens: Optional[Sequence[int]] = None) -> Dict[int, dict]:
+        """Returns {cid: record} for every id, blocking on disk as needed.
+
+        ``gens`` (parallel to ``cids``) carries the minimum acceptable
+        generation per cluster; cached records below it are dropped
+        (counted in ``stats.invalidations``) and re-read — the mechanism by
+        which a republish invalidates exactly the rewritten clusters.
+        """
+        exp: Optional[Dict[int, int]] = None
+        if gens is not None:
+            exp = {int(c): int(g) for c, g in zip(cids, gens)}
         out: Dict[int, dict] = {}
         to_load: List[int] = []
         waiters: List[Tuple[int, list]] = []
@@ -244,8 +315,17 @@ class ClusterCache:
             for cid in cids:
                 cid = int(cid)
                 if cid in self._entries:
+                    rec = self._entries[cid]
+                    if exp is not None and cid in exp and \
+                            int(rec["gen"][0]) < exp[cid]:
+                        del self._entries[cid]  # stale generation
+                        self.stats.invalidations += 1
+                        self._inflight[cid] = [threading.Event(), None]
+                        to_load.append(cid)
+                        self.stats.misses += 1
+                        continue
                     self._entries.move_to_end(cid)
-                    out[cid] = self._entries[cid]
+                    out[cid] = rec
                     self.stats.hits += 1
                 elif cid in self._inflight:  # prefetch already racing
                     waiters.append((cid, self._inflight[cid]))
@@ -256,7 +336,9 @@ class ClusterCache:
                     self.stats.misses += 1
         for i, cid in enumerate(to_load):
             try:
-                out[cid] = self._load(cid, prefetched=False)
+                out[cid] = self._validated(
+                    cid, self._load(cid, prefetched=False), exp
+                )
             except BaseException as e:
                 # _load resolved cid's own in-flight entry; the rest of this
                 # call's registrations must be resolved too or any other
@@ -284,6 +366,9 @@ class ClusterCache:
                 out[cid] = self._load(cid, prefetched=False)  # retry inline
             else:
                 out[cid] = holder[1]
+            # A prefetch started before a generation flip can deliver the
+            # old record — gen-check waiter results like inline loads.
+            out[cid] = self._validated(cid, out[cid], exp)
         return out
 
     def prefetch(self, cids: Sequence[int]):
@@ -349,7 +434,7 @@ def _resident_overhead(centroids, counts, summaries) -> int:
 
 
 class DiskIVFIndex:
-    """Disk-resident serving view of a layout-v2 index checkpoint.
+    """Disk-resident serving view of a layout-v2/v3 index checkpoint.
 
     Only centroids, counts and offset arithmetic stay in memory; flat lists
     page through :class:`ClusterCache` under ``resident_budget_bytes``.
@@ -357,6 +442,12 @@ class DiskIVFIndex:
     ``search_centroids``, and plugs into the tiled kernel as its
     ``gather_fn`` — so RAM and disk tiers share one search implementation
     and return identical results.
+
+    Live-update surface: ``gens`` holds the per-cluster generation vector
+    the serving plan pins fetches to; ``delta`` (attached by
+    ``make_fused_search_fn(delta_budget_mb=...)``) is the RAM tier of
+    fresh writes; :meth:`refresh` flips both to a republished checkpoint
+    between batches, with no drain.
     """
 
     def __init__(self, directory: str, man: dict, spec: HybridSpec,
@@ -376,6 +467,13 @@ class DiskIVFIndex:
         # consulted by the plan stage so filtered-out clusters never reach
         # the fetch list.  None for pre-v2.1 checkpoints (no pruning).
         self.summaries = summaries
+        # Per-cluster generation vector (layout v3; zeros for v2): the plan
+        # stamps each fetch with the cluster's published gen, so every cache
+        # layer rejects records a republish has superseded.
+        self.gens = storage.load_gens(directory, man)
+        # RAM delta tier (attached by the serving layer when live updates
+        # are enabled); None = frozen checkpoint, zero serving overhead.
+        self.delta = None
         self._overhead = _resident_overhead(centroids, counts, summaries)
         # The fetch layer: this host's reader + cache behind the BlockStore
         # protocol.  The search engine routes its fetch stage through it
@@ -444,6 +542,40 @@ class DiskIVFIndex:
     def resident_bytes(self) -> int:
         """Current bytes held in host memory for this index."""
         return self._overhead + self.cache.resident_bytes()
+
+    def refresh(self) -> bool:
+        """Adopts a republished checkpoint: the serving half of the
+        ``compact_deltas`` → ``refresh`` handshake.
+
+        Re-reads the manifest + generation vector; when the published gens
+        moved, swaps in the new counts/summaries/gens and reopens the shard
+        reader — all host-side bookkeeping, safe between batches with no
+        drain.  Cached cluster records are *not* flushed here: the next
+        fetch carries the new expected gens, so exactly the rewritten
+        clusters invalidate (``cache.stats.invalidations``) while everything
+        else keeps its resident copy.  Finally commits the attached delta
+        tier (folded rows leave RAM; late tombstones carry over).  Returns
+        whether the on-disk generation changed.
+        """
+        man = storage.load_manifest(self.directory)
+        gens = storage.load_gens(self.directory, man)
+        changed = not np.array_equal(gens, self.gens)
+        if changed:
+            storage.check_complete(self.directory, man)
+            self.reader.reopen(man)
+            self.man = man
+            self.counts = jnp.asarray(
+                np.load(os.path.join(self.directory, "counts.npy"))
+            )
+            self.summaries = storage.load_summaries(self.directory, man)
+            self.gens = gens
+            self._overhead = _resident_overhead(
+                np.asarray(self.centroids), np.asarray(self.counts),
+                self.summaries,
+            )
+        if self.delta is not None:
+            self.delta.commit()
+        return changed
 
     # ---- paging (delegates to the BlockStore fetch layer) ----
     @staticmethod

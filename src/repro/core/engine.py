@@ -147,9 +147,15 @@ def plan_fused_tiled(
     summaries), so the disk tier can plan — and hand ``slot_cluster`` to its
     cluster cache as the batch's fetch list — before any flat list is paged
     in.  Returns ``(slot_cluster, slot_tile, slot_of_probe, probe_ok,
-    n_unique, queries_pad, lo_pad, hi_pad, n_pruned)``; queries/bounds come
-    back padded to whole ``q_block`` tiles with edge rows (whose probes
-    dedupe into the last real query's slots, so padding adds no scan work).
+    n_unique, queries_pad, lo_pad, hi_pad, n_pruned, geo_probes,
+    geo_valid)``; queries/bounds come back padded to whole ``q_block`` tiles
+    with edge rows (whose probes dedupe into the last real query's slots, so
+    padding adds no scan work).  ``geo_probes``/``geo_valid`` are each
+    query's *geometric* top-``n_probes`` candidate clusters (pre-widening,
+    pre-pruning): the delta tier masks its RAM rows with exactly this set so
+    a delta row only competes for queries whose probe budget would have
+    reached its cluster — the condition for bit-parity with a from-scratch
+    rebuild at the same logical state.
 
     With ``summaries`` (a :class:`repro.core.summaries.ClusterSummaries`),
     the plan is filter-aware: a branch-free disjointness test between each
@@ -172,8 +178,10 @@ def plan_fused_tiled(
     scores = centroid_scores(centroids, counts, queries, metric=metric)
     q = queries.shape[0]
     if summaries is None:
-        _, probe_ids = jax.lax.top_k(scores, n_probes)
+        cvals, probe_ids = jax.lax.top_k(scores, n_probes)
         probe_ids = probe_ids.astype(jnp.int32)  # [Q, T]
+        geo_ids = probe_ids
+        geo_ok = cvals > topk_lib.NEG_INF / 2
         probe_valid = None
         n_pruned = jnp.zeros((q,), jnp.int32)
     else:
@@ -182,6 +190,11 @@ def plan_fused_tiled(
         cvals, cand = jax.lax.top_k(scores, width)  # [Q, W] geometric order
         cm_c = jnp.take_along_axis(cm, cand, axis=1)  # [Q, W]
         real = cvals > topk_lib.NEG_INF / 2  # exclude empty/padded clusters
+        # geometric top-n_probes, captured before widening re-ranks cand:
+        # the delta tier's membership mask must see the same probe set a
+        # rebuilt index's planner would produce.
+        geo_ids = cand[:, :n_probes].astype(jnp.int32)
+        geo_ok = real[:, :n_probes]
         # accounting: probes a geometry-only planner would have scanned (and
         # the disk tier fetched) that the filter proved empty
         n_pruned = jnp.sum(
@@ -211,6 +224,8 @@ def plan_fused_tiled(
         None if probe_valid is None
         else probes_lib.pad_to_tiles(probe_valid, q_block)
     )
+    geo_pad = probes_lib.pad_to_tiles(geo_ids, q_block)  # [Qpad, T]
+    geo_ok_pad = probes_lib.pad_to_tiles(geo_ok, q_block)
     queries_pad = probes_lib.pad_to_tiles(queries.astype(cast_dtype), q_block)
     lo_pad = probes_lib.pad_to_tiles(lo, q_block)
     hi_pad = probes_lib.pad_to_tiles(hi, q_block)
@@ -219,7 +234,7 @@ def plan_fused_tiled(
                                     probe_valid=valid_pad)
     )
     return (slot_cluster, slot_tile, slot_of_probe, probe_ok, n_unique,
-            queries_pad, lo_pad, hi_pad, n_pruned)
+            queries_pad, lo_pad, hi_pad, n_pruned, geo_pad, geo_ok_pad)
 
 
 @functools.partial(
@@ -429,6 +444,19 @@ class SearchPlan:
     lo_pad: Array
     hi_pad: Array
     n_pruned: Array          # [Q]
+    # Geometric top-n_probes candidate clusters per (padded) query — the
+    # delta tier's probe-membership mask.  None when the plan was built
+    # without a delta tier attached (zero overhead on frozen serving).
+    geo_probes: Optional[Array] = None   # [Qpad, T] int32
+    geo_valid: Optional[Array] = None    # [Qpad, T] bool
+    # Expected per-cluster generation vector at plan time (layout v3 disk
+    # tier) — every fetch of this batch carries it so no cache layer can
+    # silently serve a block from before the last republish.
+    gens: Optional[np.ndarray] = None    # [K] int64
+    # Immutable view of the RAM delta segment captured at plan(): the batch
+    # scans exactly this set of delta rows/tombstones regardless of
+    # concurrent appends (appends land in the next batch's snapshot).
+    delta_snap: Any = None
     # Per-tile work items, built lazily by tile_work() (consumers: the
     # BlockStore fetch stage's per-tile novel-cluster lists, fetch routing
     # diagnostics, multi-host cache sharding).
@@ -491,6 +519,9 @@ class EngineStats:
     # non-closed peer circuit (results stay bit-identical — the fallback
     # serves the same records — but the fleet should know it ran degraded)
     degraded_batches: int = 0
+    # batches whose result folded a non-empty RAM delta segment (live
+    # serving); frozen-checkpoint serving keeps this at 0
+    delta_folds: int = 0
 
     @property
     def overlap_ratio(self) -> float:
@@ -499,6 +530,21 @@ class EngineStats:
         if self.io_total_s <= 0:
             return 0.0
         return max(0.0, 1.0 - self.io_wait_s / self.io_total_s)
+
+
+def _flatten_metrics(out: Dict[str, Any], prefix: str, obj: Any) -> None:
+    """Recursively flattens nested stats into ``prefix.key`` scalar entries
+    (dict values recurse; numbers/bools/strings pass through; anything else
+    is stringified so the scrape never chokes on a stray object)."""
+    if isinstance(obj, dict):
+        for key, val in obj.items():
+            _flatten_metrics(out, f"{prefix}.{key}", val)
+    elif isinstance(obj, (bool, int, float, str)) or obj is None:
+        out[prefix] = obj
+    elif isinstance(obj, (np.integer, np.floating)):
+        out[prefix] = obj.item()
+    else:
+        out[prefix] = str(obj)
 
 
 # Process-wide registry of scan-stage signatures that have been dispatched;
@@ -598,7 +644,8 @@ class SearchEngine:
                  adaptive_u_cap: Optional[bool] = None,
                  u_cap_bucket_set: Optional[Tuple[int, ...]] = None,
                  u_cap_ladder: str = "pow2",
-                 operand_cache: str = "auto"):
+                 operand_cache: str = "auto",
+                 delta=None):
         if pipeline not in ("auto", "on", "off"):
             raise ValueError(f"pipeline must be 'auto'|'on'|'off', got "
                              f"{pipeline!r}")
@@ -667,7 +714,15 @@ class SearchEngine:
         )
         if self.adaptive_u_cap and u_cap is not None:
             raise ValueError("u_cap and adaptive_u_cap are exclusive")
+        # RAM delta tier: explicit wins; otherwise the index's attached tier
+        # (DiskIVFIndex.delta / make_fused_search_fn(delta_budget_mb=...)).
+        self._delta = delta
         self.stats = EngineStats()
+
+    def _delta_tier(self):
+        if self._delta is not None:
+            return self._delta
+        return getattr(self.index, "delta", None)
 
     # ---- plan ----
     def plan(self, queries: Array, fspec: FilterSpec) -> SearchPlan:
@@ -682,13 +737,24 @@ class SearchEngine:
         qb = min(self.q_block, round_up(q, 8))
         kc = index.n_clusters
         summ = resolve_prune(index, self.prune)
+        # Capture an immutable view of the RAM delta segment for this batch,
+        # and plan with tombstone/append-adjusted cluster counts: a rebuilt
+        # index would see those counts, and centroid_scores masks empty
+        # clusters by count — parity requires the live planner to agree.
+        tier = self._delta_tier()
+        snap = tier.snapshot() if tier is not None else None
+        counts = index.counts
+        if snap is not None:
+            adj = tier.count_adjustment(kc)
+            if adj is not None:
+                counts = counts + jnp.asarray(adj)
         t_max = self.t_max
         if t_max == "auto":
             # summary-driven widening: bucketed per batch from the expected
             # passing mass, so a selective batch widens and an unfiltered
             # one plans exactly like t_max=None (bit-identical)
             t_max = resolve_auto_t_max(
-                summ, index.counts, fspec.lo, fspec.hi, self.n_probes, kc
+                summ, counts, fspec.lo, fspec.hi, self.n_probes, kc
             )
         if t_max is not None:
             if t_max < self.n_probes:
@@ -707,8 +773,9 @@ class SearchEngine:
         )
 
         (slot_cluster, slot_tile, slot_of_probe, probe_ok, n_unique,
-         queries_pad, lo_pad, hi_pad, n_pruned) = plan_fused_tiled(
-            index.centroids, index.counts, queries, fspec.lo, fspec.hi,
+         queries_pad, lo_pad, hi_pad, n_pruned, geo_probes,
+         geo_valid) = plan_fused_tiled(
+            index.centroids, counts, queries, fspec.lo, fspec.hi,
             metric=index.spec.metric, n_probes=self.n_probes, q_block=qb,
             u_cap=cap, cast_dtype=cast_dtype, summaries=summ, t_max=t_max,
         )
@@ -731,6 +798,10 @@ class SearchEngine:
             ),
             queries_pad=queries_pad, lo_pad=lo_pad, hi_pad=hi_pad,
             n_pruned=n_pruned,
+            geo_probes=(geo_probes if snap is not None else None),
+            geo_valid=(geo_valid if snap is not None else None),
+            gens=self._plan_gens(),
+            delta_snap=snap,
         )
         if self.adaptive_u_cap:
             self._provision(plan)
@@ -741,6 +812,12 @@ class SearchEngine:
             self.stats.u_cap_hist.get(plan.u_cap, 0) + 1
         )
         return plan
+
+    def _plan_gens(self) -> Optional[np.ndarray]:
+        """Per-cluster expected-generation vector for this batch's fetches
+        (None on pre-v3 / RAM indexes — every gen is implicitly 0)."""
+        g = getattr(self.index, "gens", None)
+        return None if g is None else np.asarray(g)
 
     def _host_tables(self, plan: SearchPlan):
         plan.slot_cluster = np.asarray(plan.slot_cluster)
@@ -795,16 +872,26 @@ class SearchEngine:
     def _use_operand_cache(self) -> bool:
         return self._store is not None and self.operand_cache != "off"
 
-    def _store_gather(self, slot_cluster):
+    def _store_gather(self, slot_cluster, gens: Optional[np.ndarray] = None):
         """Whole-list gather through the BlockStore protocol — the sync
         executor's fetch stage (same record ordering, and therefore cache
-        behavior, as the pre-protocol pager)."""
+        behavior, as the pre-protocol pager).  ``gens`` is the full [K]
+        expected-generation vector; each fetched cluster carries its entry
+        so no cache layer can serve a pre-republish block."""
         flat = np.asarray(slot_cluster).reshape(-1)
         uniq, local = blockstore_lib.first_need_unique(flat)
-        recs = self._store.get(uniq)
+        g = None if gens is None else gens[uniq]
+        recs = self._store.get(uniq, gens=g)
         self.stats.blocks_fetched += len(recs)
         return blockstore_lib.assemble_blocks(flat, uniq, local, recs,
                                               self._bspec)
+
+    def _expected_gens(self, plan: SearchPlan,
+                       cids) -> Optional[np.ndarray]:
+        """Expected generations for a fetch list, from the plan's vector."""
+        if plan.gens is None:
+            return None
+        return plan.gens[np.asarray(cids, np.int64)]
 
     def fetch(self, plan: SearchPlan):
         """Whole-batch fetch stage (sync executor): resident arrays on the
@@ -813,9 +900,11 @@ class SearchEngine:
         if self._gather_fn is None:
             return (plan.slot_cluster, index.vectors, index.attrs, index.ids,
                     index.norms, index.scales)
-        slot_cluster, vectors, attrs, ids, norms, scales = self._gather_fn(
-            plan.slot_cluster
-        )
+        if self._store is not None and self._gather_fn == self._store_gather:
+            out = self._store_gather(plan.slot_cluster, gens=plan.gens)
+        else:
+            out = self._gather_fn(plan.slot_cluster)
+        slot_cluster, vectors, attrs, ids, norms, scales = out
         return (jnp.asarray(slot_cluster), vectors, attrs, ids, norms,
                 scales)
 
@@ -839,9 +928,48 @@ class SearchEngine:
             norms is None, scales is None,
         )
 
+    def _mask_tombstones(self, plan: SearchPlan, ids):
+        """Masks the snapshot's tombstoned ids out of the cold-tier scan.
+
+        Applied to the ids operand (not the merged result) so the scan's
+        masked top-k naturally surfaces the (k+1)-th cold candidate — what a
+        rebuild without the deleted rows would return."""
+        snap = plan.delta_snap
+        if snap is None or snap.tombstones is None:
+            return ids
+        from repro.core import delta as delta_lib
+
+        return delta_lib.mask_tombstones(jnp.asarray(ids), snap.tombstones)
+
+    def _fold_delta(self, plan: SearchPlan, res: SearchResult) -> SearchResult:
+        """Merge stage, tier two: exact scan of the RAM delta segment folded
+        into the cold result through the same top-k monoid (cold wins score
+        ties, matching concat order in a rebuilt index's merge)."""
+        snap = plan.delta_snap
+        if snap is None or snap.n_rows == 0:
+            return res
+        from repro.core import delta as delta_lib
+
+        dvals, dids, dscan, dpass = delta_lib.scan_snapshot(
+            snap, plan.queries, plan.queries_pad, plan.lo_pad, plan.hi_pad,
+            plan.geo_probes, plan.geo_valid,
+            metric=self.index.spec.metric, k=self.k,
+        )
+        q = plan.q
+        vals, out_ids = topk_lib.merge_topk(
+            (res.scores, res.ids), (dvals[:q], dids[:q]), self.k
+        )
+        self.stats.delta_folds += 1
+        return dataclasses.replace(
+            res, scores=vals, ids=out_ids,
+            n_scanned=res.n_scanned + dscan[:q],
+            n_passed=res.n_passed + dpass[:q],
+        )
+
     def scan_merge(self, plan: SearchPlan, operands) -> SearchResult:
         """Whole-batch scan/merge over fetched operands (sync executor)."""
         slot_cluster, vectors, attrs, ids, norms, scales = operands
+        ids = self._mask_tombstones(plan, ids)
         metric = self.index.spec.metric
         self._count_scan(self._scan_key(
             plan, q=plan.q, qpad=plan.n_tiles * plan.q_block,
@@ -863,6 +991,7 @@ class SearchEngine:
         stage as the monolith with ``n_tiles=1`` — per-slot arithmetic is
         identical, so tile results concatenate to the sync result bitwise."""
         slot_cluster, vectors, attrs, ids, norms, scales = operands
+        ids = self._mask_tombstones(plan, ids)
         qb, cap = plan.q_block, plan.u_cap
         metric = self.index.spec.metric
         if plan.queries_orig_pad is None:  # plan was built for a sync run
@@ -891,6 +1020,7 @@ class SearchEngine:
             res = self._execute_pipelined(plan)
         else:
             res = self.scan_merge(plan, self.fetch(plan))
+        res = self._fold_delta(plan, res)
         self._note_degraded()
         return res
 
@@ -934,6 +1064,7 @@ class SearchEngine:
                 res = self.scan_merge(plan, self.fetch(plan))
         else:
             res = self._run_tiles(plan, pending.inflight)
+        res = self._fold_delta(plan, res)
         self._note_degraded()
         return res
 
@@ -979,21 +1110,34 @@ class SearchEngine:
         sc = plan.slot_cluster.reshape(plan.n_tiles, plan.u_cap)[i]
         uniq, local = blockstore_lib.first_need_unique(sc)
         if plan.operands is not None:  # per-batch reuse on
+            # the operand cache keys on (cluster_id, gen) like every other
+            # cache layer — plan.gens is fixed for the batch, so this is a
+            # pure re-keying, but it keeps the invalidation contract uniform
+            gens = plan.gens
+
+            def gkey(c):
+                cid = int(c)
+                return (cid, int(gens[cid]) if gens is not None else 0)
+
             ops = plan.operands
             for c, r in recs.items():
-                ops[int(c)] = r
+                ops[gkey(c)] = r
             # fetch lists and slot tables always agree; tolerate a gap by
             # fetching inline rather than scanning stale rows
-            missing = [int(c) for c in uniq if int(c) not in ops]
+            missing = [int(c) for c in uniq if gkey(c) not in ops]
             if missing:
-                more = self._store.get(np.asarray(missing, np.int64))
+                more = self._store.get(
+                    np.asarray(missing, np.int64),
+                    gens=self._expected_gens(plan, missing),
+                )
                 self.stats.blocks_fetched += len(more)
                 for c, r in more.items():
-                    ops[int(c)] = r
+                    ops[gkey(c)] = r
             self.stats.blocks_reused += max(
                 len(uniq) - len(recs) - len(missing), 0
             )
-            out = blockstore_lib.assemble_blocks(sc, uniq, local, ops,
+            view = {int(c): ops[gkey(c)] for c in uniq}
+            out = blockstore_lib.assemble_blocks(sc, uniq, local, view,
                                                  self._bspec, as_device=True)
             # free records whose last consuming tile is this one: the
             # batch cache's footprint tracks live overlap ranges, not the
@@ -1002,7 +1146,7 @@ class SearchEngine:
             # consumer re-fetches via the `missing` fallback above)
             if plan.tiles is not None:
                 for c in plan.tiles[i].release:
-                    ops.pop(int(c), None)
+                    ops.pop(gkey(c), None)
             return out
         return blockstore_lib.assemble_blocks(sc, uniq, local, recs,
                                               self._bspec, as_device=True)
@@ -1021,7 +1165,9 @@ class SearchEngine:
             else:
                 sc = plan.slot_cluster.reshape(plan.n_tiles, plan.u_cap)[i]
                 fetch_ids, _ = blockstore_lib.first_need_unique(sc)
-            h_store = self._store.submit(fetch_ids)  # IO on the store worker
+            h_store = self._store.submit(
+                fetch_ids, gens=self._expected_gens(plan, fetch_ids)
+            )  # IO on the store worker
             h = self._ensure_pool().submit(self._assemble_tile, plan, i,
                                            h_store)
         elif self._async_src is not None:
@@ -1126,6 +1272,54 @@ class SearchEngine:
     # ---- the whole pipeline ----
     def search(self, queries: Array, fspec: FilterSpec) -> SearchResult:
         return self.execute(self.plan(queries, fspec))
+
+    # ---- live-update handshake ----
+    def refresh(self) -> bool:
+        """Atomically flips the engine to the latest published generation.
+
+        Call strictly *between* batches (SearchServer does this on
+        ``request_refresh``): reopens the fetch stores' readers, reloads the
+        index's resident state (counts / summaries / gens) and commits any
+        pending delta freeze.  Gen-keyed caches need no flush — the next
+        batch's fetches carry the new expected generations, so exactly the
+        rewritten clusters miss and re-page.  Returns True when a new
+        generation was picked up."""
+        if self._store is not None:
+            store_refresh = getattr(self._store, "refresh", None)
+            if store_refresh is not None:
+                store_refresh()
+        idx_refresh = getattr(self.index, "refresh", None)
+        return bool(idx_refresh()) if idx_refresh is not None else False
+
+    # ---- observability ----
+    def metrics(self) -> Dict[str, Any]:
+        """One flat scrape-able dict: engine + store + cache + health +
+        delta-tier counters under stable dotted keys (``engine.batches``,
+        ``store.per_node.0.hits``, ``cache.invalidations``,
+        ``delta.rows``, ...).  Values are scalars (numbers / bools /
+        strings) — ready for a metrics exporter, no nesting to unpack."""
+        out: Dict[str, Any] = {}
+        eng = dataclasses.asdict(self.stats)
+        eng["overlap_ratio"] = self.stats.overlap_ratio
+        eng["pipeline"] = self.pipeline
+        eng["backend"] = self.backend
+        eng["scan_compile_count"] = scan_compile_count()
+        _flatten_metrics(out, "engine", eng)
+        if self._store is not None:
+            store_stats = getattr(self._store, "stats", None)
+            if callable(store_stats):
+                _flatten_metrics(out, "store", store_stats())
+        cache = getattr(self.index, "cache", None)
+        cstats = getattr(cache, "stats", None) if cache is not None else None
+        if cstats is not None:
+            c = dataclasses.asdict(cstats)
+            hit_rate = getattr(cache, "hit_rate", None)
+            c["hit_rate"] = hit_rate() if callable(hit_rate) else hit_rate
+            _flatten_metrics(out, "cache", c)
+        tier = self._delta_tier()
+        if tier is not None:
+            _flatten_metrics(out, "delta", tier.stats())
+        return out
 
     def close(self):
         pool = getattr(self, "_pool", None)

@@ -151,9 +151,11 @@ class FaultyTransport:
             f"injected {rule.kind} on {self.target}: {_FAULT_MSG[rule.kind]}"
         )
 
-    def fetch(self, cluster_ids):
+    def fetch(self, cluster_ids, gens=None):
         self._maybe_fault()
-        return self.inner.fetch(cluster_ids)
+        if gens is None:
+            return self.inner.fetch(cluster_ids)
+        return self.inner.fetch(cluster_ids, gens=gens)
 
     def ping(self):
         self._maybe_fault()
@@ -188,7 +190,7 @@ class FaultyBlockStore:
     def spec(self):
         return self.inner.spec
 
-    def get(self, cluster_ids):
+    def get(self, cluster_ids, gens=None):
         rule = self.schedule.next(self.target)
         if rule is not None:
             if rule.kind == "latency":
@@ -198,10 +200,15 @@ class FaultyBlockStore:
                     f"injected {rule.kind} on {self.target}: "
                     f"{_FAULT_MSG[rule.kind]}"
                 )
-        return self.inner.get(cluster_ids)
+        if gens is None:
+            return self.inner.get(cluster_ids)
+        return self.inner.get(cluster_ids, gens=gens)
 
-    def submit(self, cluster_ids):
-        return self.inner._ensure_pool().submit(self.get, cluster_ids)
+    def submit(self, cluster_ids, gens=None):
+        if gens is None:
+            return self.inner._ensure_pool().submit(self.get, cluster_ids)
+        return self.inner._ensure_pool().submit(self.get, cluster_ids,
+                                                gens=gens)
 
     def wait(self, handle):
         return handle.result()

@@ -51,6 +51,7 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
                          peer_retries: int = 1,
                          breaker_kwargs: Optional[dict] = None,
                          probe_interval_s: Optional[float] = None,
+                         delta_budget_mb: Optional[float] = None,
                          ) -> Callable:
     """The batched server's default search step: the search engine.
 
@@ -100,6 +101,16 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
     per-peer circuit breakers; ``probe_interval_s`` starts the active
     health probe.  ``search_fn.degraded()`` reports whether any peer
     circuit is currently open (the server marks responses accordingly).
+
+    Live updates: ``delta_budget_mb`` attaches a RAM
+    :class:`~repro.core.delta.DeltaTier` to a disk-tier index — new
+    vectors land via ``search_fn.delta.add`` and are searchable in the
+    very next batch; deletes via ``search_fn.delta.tombstone`` mask cold
+    hits immediately.  ``search_fn.refresh()`` adopts a background
+    ``delta.compact_deltas`` republish between batches (commits the
+    folded delta rows out of RAM and flips the generation vector — the
+    gen-keyed caches invalidate exactly the rewritten clusters).
+    Requires a layout-v3 checkpoint (generation-tagged records).
     """
     from repro.core import blockstore as blockstore_lib
     from repro.core.disk import DiskIVFIndex
@@ -110,6 +121,26 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
         index = DiskIVFIndex.open(
             index, resident_budget_bytes=resident_budget_bytes
         )
+    delta = None
+    if delta_budget_mb is not None:
+        from repro.core import delta as delta_lib
+        from repro.core import storage
+
+        if not isinstance(index, DiskIVFIndex):
+            raise ValueError(
+                "delta_budget_mb needs a disk-tier index (a checkpoint "
+                "path or an open DiskIVFIndex) — the RAM tier mutates in "
+                "place via core.update instead"
+            )
+        if index.man["layout"] < 3:
+            raise storage.GenerationMismatchError(
+                f"delta_budget_mb needs a layout-v3 checkpoint "
+                f"(generation-tagged cluster records); this one is layout "
+                f"v{index.man['layout']} — re-save it with "
+                f"storage.save_index(index, dir)"
+            )
+        delta = delta_lib.DeltaTier.for_index(index, delta_budget_mb)
+        index.delta = delta
     store = None
     if cache_shards > 1:
         if not isinstance(index, DiskIVFIndex):
@@ -161,6 +192,9 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
     search_fn.degraded = (
         lambda: bool(getattr(engine.blockstore, "degraded", False))
     )
+    search_fn.delta = delta
+    search_fn.refresh = engine.refresh
+    search_fn.metrics = engine.metrics
     search_fn.close = close
     return search_fn
 
@@ -237,9 +271,10 @@ class SearchServer:
         self.health = ShardHealth(n_shards)
         self._q: "queue.Queue[Request]" = queue.Queue()
         self._stop = threading.Event()
+        self._refresh = threading.Event()
         self._worker: Optional[threading.Thread] = None
         self.stats = dict(batches=0, requests=0, degraded_batches=0,
-                          total_latency_s=0.0)
+                          total_latency_s=0.0, refreshes=0)
 
     # ---- client side ----
     def submit(self, query: np.ndarray, fspec_row: Optional[Tuple] = None
@@ -303,8 +338,29 @@ class SearchServer:
                 break
         return batch
 
+    def request_refresh(self):
+        """Asks the serving loop to adopt a republished checkpoint.
+
+        Safe from any thread (a background ``compact_deltas`` caller, an
+        operator signal): the flag is drained *between* batches, so the
+        generation flip never races a batch mid-flight — the atomic
+        no-drain handshake of the hot/cold tier.  A no-op for search_fns
+        without a ``refresh`` attribute.
+        """
+        self._refresh.set()
+
+    def _maybe_refresh(self):
+        if not self._refresh.is_set():
+            return
+        self._refresh.clear()
+        refresh = getattr(self.search_fn, "refresh", None)
+        if callable(refresh):
+            refresh()
+            self.stats["refreshes"] += 1
+
     def _run(self):
         while not self._stop.is_set():
+            self._maybe_refresh()
             batch = self._drain()
             if not batch:
                 continue

@@ -30,11 +30,21 @@ disk tier fetches them.  The manifest carries ``has_summaries`` /
 ``summary_bins``; checkpoints without them (v2.0, v1) load fine and simply
 disable pruning.
 
-Versioning: ``manifest["layout"]`` is 2 for this format (``layout_minor`` 1
-marks v2.1 writers).  Layout v1 (one
+Layout v3 (the default writer) adds *generation tags* for live-updating
+serving: every cluster record carries a monotonically increasing ``gen``
+(int64, bumped each time a background ``compact_deltas`` republish rewrites
+the cluster) and ``<dir>/gens.npy`` holds the resident per-cluster
+generation vector.  Caches key on ``(cluster_id, gen)``, so a republish
+invalidates exactly the rewritten clusters.  v2/v2.1 checkpoints load with
+``gen == 0`` everywhere and serve unchanged.
+
+Versioning: ``manifest["layout"]`` is 3 for the current format, 2 for the
+pre-generation record format (``layout_minor`` 1 marks v2.1 summary
+writers).  Layout v1 (one
 ``.npz`` of stacked arrays per shard) is still *read* — ``load_index``
-dispatches on the manifest — and can still be written with
-``save_index(..., layout=1)`` for tooling that expects it.  v1 checkpoints
+dispatches on the manifest — and v1/v2 can still be written with
+``save_index(..., layout=1|2)`` for tooling that expects them.  v1
+checkpoints
 written before the SQ8 fix (no ``scales`` key) load as unquantized raw codes
 and are rejected with a clear error rather than silently mis-scored.
 
@@ -65,6 +75,12 @@ from repro.core.ivf import IVFFlatIndex
 from repro.core.summaries import ClusterSummaries, pad_clusters
 
 MANIFEST = "manifest.json"
+GENS_FILE = "gens.npy"  # layout v3: resident per-cluster generation vector
+
+
+class GenerationMismatchError(ValueError):
+    """The checkpoint's generation vector disagrees with its manifest (or a
+    peer served a block older than the generation the fetch demanded)."""
 # Resident per-cluster attribute summaries (layout v2.1): one .npy per
 # field, loaded whole — like centroids/counts, they are consulted at plan
 # time before any flat list is touched.
@@ -99,13 +115,14 @@ def _align(off: int, a: int) -> int:
 
 def record_layout(
     *, vpad: int, dim: int, n_attrs: int, store_dtype: str,
-    has_norms: bool, quantized: bool,
+    has_norms: bool, quantized: bool, with_gen: bool = False,
 ) -> Tuple[List[dict], int]:
-    """The v2 per-cluster record: ordered field table + fixed stride.
+    """The v2/v3 per-cluster record: ordered field table + fixed stride.
 
     Returns ``(fields, stride)`` where each field is
     ``{name, dtype, shape, offset}`` (shape is per-cluster, e.g. ``[Vpad, D]``
-    for vectors) and ``stride`` is the record size in bytes.
+    for vectors) and ``stride`` is the record size in bytes.  ``with_gen``
+    (layout v3) appends the record's generation stamp.
     """
     specs = [("vectors", store_dtype, (vpad, dim)),
              ("attrs", "int16", (vpad, n_attrs)),
@@ -114,6 +131,8 @@ def record_layout(
         specs.append(("norms", "float32", (vpad,)))
     if quantized:
         specs.append(("scales", "float32", (vpad,)))
+    if with_gen:
+        specs.append(("gen", "int64", (1,)))
     fields, off = [], 0
     for name, dt, shape in specs:
         off = _align(off, _FIELD_ALIGN)
@@ -206,22 +225,34 @@ def _base_manifest(index: IVFFlatIndex, *, n_shards: int, version: int
 
 
 def save_index(index: IVFFlatIndex, directory: str, *, n_shards: int = 1,
-               version: int = 0, layout: int = 2) -> None:
+               version: int = 0, layout: int = 3,
+               gens: Optional[np.ndarray] = None) -> None:
     """Writes the index as ``n_shards`` contiguous cluster-range files.
 
-    ``layout=2`` (default) writes the fixed-stride record format above;
-    ``layout=1`` writes the legacy one-npz-per-shard format (both now carry
-    SQ8 ``scales`` and the ``quantized`` manifest flag).
+    ``layout=3`` (default) writes the fixed-stride record format above with
+    per-cluster generation stamps (``gens``, default all-zero) plus the
+    resident ``gens.npy``; ``layout=2`` is the same record format without
+    generations; ``layout=1`` writes the legacy one-npz-per-shard format
+    (all carry SQ8 ``scales`` and the ``quantized`` manifest flag).
     """
     k = index.n_clusters
     if k % n_shards:
         raise ValueError(f"K={k} not divisible by n_shards={n_shards}; pad_k first")
-    if layout not in (1, 2):
+    if layout not in (1, 2, 3):
         raise ValueError(f"unknown layout {layout}")
+    if gens is None:
+        gens = np.zeros(k, np.int64)
+    gens = np.asarray(gens, np.int64)
+    if gens.shape != (k,):
+        raise GenerationMismatchError(
+            f"gens shape {gens.shape} != ({k},) clusters"
+        )
     os.makedirs(directory, exist_ok=True)
     kl = k // n_shards
     manifest = _base_manifest(index, n_shards=n_shards, version=version)
     arrays = _index_arrays(index)
+    if layout == 3:
+        arrays["gen"] = gens[:, None]
 
     def _np_save(p, arr):
         with open(p, "wb") as f:  # file handle: np.save must not append .npy
@@ -260,11 +291,17 @@ def save_index(index: IVFFlatIndex, directory: str, *, n_shards: int = 1,
             vpad=index.vpad, dim=index.spec.dim, n_attrs=index.spec.n_attrs,
             store_dtype=manifest["store_dtype"],
             has_norms=manifest["has_norms"], quantized=index.quantized,
+            with_gen=layout == 3,
         )
         _atomic_save(
             os.path.join(directory, "counts.npy"),
             lambda p: _np_save(p, np.asarray(index.counts, np.int32)),
         )
+        if layout == 3:
+            _atomic_save(
+                os.path.join(directory, GENS_FILE),
+                lambda p: _np_save(p, gens),
+            )
         for s in range(n_shards):
             lo, hi = s * kl, (s + 1) * kl
 
@@ -285,7 +322,7 @@ def save_index(index: IVFFlatIndex, directory: str, *, n_shards: int = 1,
                 os.path.join(directory, f"shard_{s}_of_{n_shards}.bin"),
                 _bin_save,
             )
-        manifest.update(layout=2, layout_minor=1, record_stride=stride,
+        manifest.update(layout=layout, layout_minor=1, record_stride=stride,
                         fields=fields)
 
     _atomic_save(
@@ -315,8 +352,33 @@ def load_summaries(directory: str, man: dict) -> Optional[ClusterSummaries]:
     return ClusterSummaries(**fields)
 
 
+def load_gens(directory: str, man: dict) -> np.ndarray:
+    """Resident per-cluster generation vector ``[K] int64``.
+
+    Pre-v3 checkpoints have no generations: every cluster is ``gen == 0``
+    (and serves unchanged — the back-compat contract).  On v3 the vector
+    must exist and match the manifest's cluster count, else the checkpoint
+    is inconsistent and refuses to load.
+    """
+    k = man["n_clusters"]
+    if man.get("layout", 1) < 3:
+        return np.zeros(k, np.int64)
+    path = os.path.join(directory, GENS_FILE)
+    if not os.path.exists(path):
+        raise GenerationMismatchError(
+            f"layout-3 checkpoint missing {GENS_FILE}: {directory}"
+        )
+    gens = np.asarray(np.load(path), np.int64)
+    if gens.shape != (k,):
+        raise GenerationMismatchError(
+            f"{GENS_FILE} has {gens.shape} entries, manifest says "
+            f"{k} clusters: {directory}"
+        )
+    return gens
+
+
 def shard_paths(directory: str, man: dict) -> List[str]:
-    ext = "bin" if man["layout"] == 2 else "npz"
+    ext = "bin" if man["layout"] >= 2 else "npz"
     n = man["n_shards"]
     return [
         os.path.join(directory, f"shard_{s}_of_{n}.{ext}") for s in range(n)
@@ -330,9 +392,13 @@ def check_complete(directory: str, man: dict) -> List[str]:
         required += [
             os.path.join(directory, f) for f in SUMMARY_FILES.values()
         ]
+    if man.get("layout", 1) >= 3:
+        required.append(os.path.join(directory, GENS_FILE))
     missing = [p for p in required if not os.path.exists(p)]
     if missing:
         raise FileNotFoundError(f"incomplete checkpoint, missing: {missing}")
+    if man.get("layout", 1) >= 3:
+        load_gens(directory, man)  # raises GenerationMismatchError on skew
     return paths
 
 
@@ -429,7 +495,7 @@ def load_index(
     man = load_manifest(directory)
     paths = check_complete(directory, man)
     index = (
-        _load_v2(directory, man, paths) if man["layout"] == 2
+        _load_v2(directory, man, paths) if man["layout"] >= 2
         else _load_v1(directory, man, paths)
     )
     if target_shards and index.n_clusters % target_shards:

@@ -32,7 +32,12 @@ re-exports everything for backwards compatibility.
 
 Wire format (both directions): ``[u64 big-endian length][payload]``.
 Request payload = raw little-endian int64 cluster ids (empty = ping);
-response payload = npz of ``{cid}:{field}`` arrays, never pickled.
+a first value of ``-2`` marks the gen-stamped request variant
+``[-2, cid0, gen0, cid1, gen1, ...]`` — each cluster id travels with the
+minimum generation the caller will accept, so a peer that lags a
+republish reopens its reader instead of answering stale (servers predating
+the sentinel see ids only and are caught by the client-side gen check).
+Response payload = npz of ``{cid}:{field}`` arrays, never pickled.
 """
 
 from __future__ import annotations
@@ -122,8 +127,10 @@ class LoopbackTransport:
     def __init__(self, store):
         self.store = store
 
-    def fetch(self, cluster_ids) -> Dict[int, Record]:
-        return self.store.get(cluster_ids)
+    def fetch(self, cluster_ids, gens=None) -> Dict[int, Record]:
+        if gens is None:
+            return self.store.get(cluster_ids)
+        return self.store.get(cluster_ids, gens=gens)
 
     def ping(self):
         """Active probe: a zero-id fetch (fails iff the store does)."""
@@ -187,8 +194,14 @@ class BlockStoreServer:
             while not self._stopped.is_set():
                 try:
                     req = _recv_frame(conn)
-                    cids = np.frombuffer(req, dtype="<i8")
-                    _send_frame(conn, _encode_records(self.store.get(cids)))
+                    raw = np.frombuffer(req, dtype="<i8")
+                    if raw.size and raw[0] == -2:
+                        # gen-stamped request: [-2, cid0, gen0, ...]
+                        body = raw[1:]
+                        recs = self.store.get(body[0::2], gens=body[1::2])
+                    else:
+                        recs = self.store.get(raw)
+                    _send_frame(conn, _encode_records(recs))
                 except (ConnectionError, OSError):
                     # client went away (or close() yanked the socket from
                     # under a mid-request handler) — just drop the conn
@@ -264,8 +277,10 @@ class SocketTransport:
         self._idle: List[socket.socket] = []
         self._lock = threading.Lock()
         self._closed = False
-        # coalescing: cid -> [Event, record | exception | None]
-        self._pending: Dict[int, list] = {}
+        # coalescing: (cid, min_gen) -> [Event, record | exception | None]
+        # — keyed on the expected generation too, so a follower that needs
+        # a republished block never adopts a pre-republish leader's answer
+        self._pending: Dict[tuple, list] = {}
         self._co_lock = threading.Lock()
         # counters (read under/over _lock; exact totals don't matter)
         self.requests = 0
@@ -365,8 +380,16 @@ class SocketTransport:
         finally:
             self._sem.release()
 
-    def _fetch_retry(self, cids: List[int]) -> Dict[int, Record]:
-        payload_req = np.asarray(cids, "<i8").tobytes()
+    def _fetch_retry(self, cids: List[int],
+                     gens: Optional[List[int]] = None) -> Dict[int, Record]:
+        if gens is None:
+            payload_req = np.asarray(cids, "<i8").tobytes()
+        else:
+            inter = np.empty(1 + 2 * len(cids), "<i8")
+            inter[0] = -2  # gen-stamped request sentinel
+            inter[1::2] = cids
+            inter[2::2] = gens
+            payload_req = inter.tobytes()
         delay = self.backoff_s
         last: Optional[TransportError] = None
         for attempt in range(self.retries + 1):
@@ -383,38 +406,50 @@ class SocketTransport:
         raise last
 
     # ---- public ----
-    def fetch(self, cluster_ids) -> Dict[int, Record]:
-        cids = [int(c) for c in
-                np.asarray(cluster_ids, np.int64).reshape(-1)]
+    def fetch(self, cluster_ids, gens=None) -> Dict[int, Record]:
+        flat = np.asarray(cluster_ids, np.int64).reshape(-1)
+        cids = [int(c) for c in flat]
         if not cids:
             return {}
+        exp: Optional[Dict[int, int]] = None
+        if gens is not None:
+            exp = {int(c): int(g)
+                   for c, g in zip(flat, np.asarray(gens).reshape(-1))}
+
+        def want(cid: int) -> int:
+            return 0 if exp is None else exp.get(cid, 0)
+
+        def sub_gens(sub: List[int]) -> Optional[List[int]]:
+            return None if exp is None else [want(c) for c in sub]
+
         if not self.coalesce:
-            return self._fetch_retry(cids)
+            return self._fetch_retry(cids, sub_gens(cids))
         mine: List[int] = []
         follow: Dict[int, list] = {}
         with self._co_lock:
             for cid in dict.fromkeys(cids):  # unique, first-need order
-                holder = self._pending.get(cid)
+                key = (cid, want(cid))
+                holder = self._pending.get(key)
                 if holder is None:
-                    self._pending[cid] = holder = [threading.Event(), None]
+                    self._pending[key] = holder = [threading.Event(), None]
                     mine.append(cid)
                 else:
                     follow[cid] = holder
         out: Dict[int, Record] = {}
         if mine:
             try:
-                recs = self._fetch_retry(mine)
+                recs = self._fetch_retry(mine, sub_gens(mine))
             except BaseException as e:
                 with self._co_lock:
                     for cid in mine:
-                        holder = self._pending.pop(cid, None)
+                        holder = self._pending.pop((cid, want(cid)), None)
                         if holder is not None:
                             holder[1] = e
                             holder[0].set()
                 raise
             with self._co_lock:
                 for cid in mine:
-                    holder = self._pending.pop(cid, None)
+                    holder = self._pending.pop((cid, want(cid)), None)
                     if holder is not None:
                         holder[1] = recs.get(cid)
                         holder[0].set()
@@ -428,7 +463,7 @@ class SocketTransport:
             if rec is None or isinstance(rec, BaseException):
                 # leader failed (or stalled): fetch this id ourselves so one
                 # bad leader doesn't fail every coalesced follower
-                out.update(self._fetch_retry([cid]))
+                out.update(self._fetch_retry([cid], sub_gens([cid])))
             else:
                 with self._lock:
                     self.coalesced += 1

@@ -109,11 +109,47 @@ def tombstone(index: IVFFlatIndex, cluster: Array, slot: Array) -> IVFFlatIndex:
 
     Cluster summaries are deliberately left stale: an interval/histogram that
     still covers a deleted row over-approximates the live set, which is the
-    sound direction (never prunes a cluster with a live passing row).
-    :func:`compact_cluster` tightens them back to exact.
+    sound direction (never prunes a cluster with a live passing row).  Stale
+    summaries cost prune effectiveness, not correctness — track the debt
+    with :func:`stale_counts` and pay it down with :func:`compact_stale`
+    (or let ``delta.compact_deltas`` fold stale clusters into its next
+    republish); each cluster compaction rebuilds its summary row exactly.
     """
     ids = index.ids.at[cluster, slot].set(-1, mode="drop")
     return dataclasses.replace(index, ids=ids)
+
+
+@jax.jit
+def stale_counts(index: IVFFlatIndex) -> Array:
+    """Per-cluster staleness: tombstoned rows still under the count
+    high-water mark ``[K] int32``.
+
+    These rows burn scan slots and — because :func:`tombstone` leaves
+    summaries covering them — keep summary intervals wider than the live
+    set, degrading probe pruning after heavy deletes.  Derivable from the
+    index itself, so no extra bookkeeping field to persist or desync.
+    """
+    within = jnp.arange(index.vpad)[None, :] < index.counts[:, None]
+    dead = jnp.logical_and(within, index.ids < 0)
+    return jnp.sum(dead.astype(jnp.int32), axis=1)
+
+
+def compact_stale(
+    index: IVFFlatIndex, threshold: int = 1
+) -> Tuple[IVFFlatIndex, int]:
+    """Compacts every cluster holding ``>= threshold`` tombstoned rows.
+
+    Returns ``(index', n_compacted)``.  Each touched cluster's summary row
+    is rebuilt exactly (via :func:`compact_cluster`), so prune
+    effectiveness recovers after heavy deletes instead of decaying forever.
+    """
+    import numpy as np
+
+    stale = np.asarray(stale_counts(index))
+    touched = np.nonzero(stale >= max(threshold, 1))[0]
+    for c in touched:
+        index = compact_cluster(index, int(c))
+    return index, int(touched.size)
 
 
 @jax.jit

@@ -114,6 +114,15 @@ def main():
                     help="sharded cache: active health-probe period for "
                          "open peer circuits (default: passive half-open "
                          "probes only)")
+    ap.add_argument("--delta-budget-mb", type=float, default=None,
+                    help="disk tier, layout-v3 checkpoint: attach a RAM "
+                         "delta tier of this many MiB and run a live "
+                         "add/tombstone/compact demo phase (new vectors "
+                         "searchable the very next batch)")
+    ap.add_argument("--compact-every", type=int, default=0,
+                    help="delta tier: republish (compact_deltas + between-"
+                         "batch refresh) every this many live updates "
+                         "(0 = never republish during the demo)")
     args = ap.parse_args()
     if args.t_max is not None and args.t_max != "auto":
         args.t_max = int(args.t_max)
@@ -172,6 +181,9 @@ def main():
 
     if args.cache_shards > 1 and args.tier != "disk":
         raise SystemExit("--cache-shards needs --tier disk")
+    if args.delta_budget_mb is not None and args.tier != "disk":
+        raise SystemExit("--delta-budget-mb needs --tier disk (the RAM "
+                         "tier mutates in place via core.update)")
     search_fn = make_fused_search_fn(
         serving_index, k=args.k, n_probes=args.probes, q_block=args.batch,
         prune=args.prune, t_max=args.t_max, pipeline=args.pipeline,
@@ -183,6 +195,7 @@ def main():
         peer_timeout_s=args.peer_timeout_s,
         peer_retries=args.peer_retries,
         probe_interval_s=args.probe_interval_s,
+        delta_budget_mb=args.delta_budget_mb,
     )
     if search_fn.blockstore is not None and args.cache_shards > 1:
         bs = search_fn.blockstore
@@ -203,54 +216,52 @@ def main():
     ]
     resps = [f.get(timeout=120) for f in futs]
     wall = time.time() - t0
-    server.stop()
     lat = np.asarray([r.latency_s for r in resps]) * 1e3
     print(f"{args.requests} requests in {wall:.2f}s "
           f"({args.requests/wall:.0f} QPS), p50 {np.percentile(lat,50):.1f}ms "
           f"p99 {np.percentile(lat,99):.1f}ms, "
           f"batches {server.stats['batches']}")
-    eng = search_fn.engine
-    print(f"engine: pipeline={eng.pipeline} "
-          f"(pipelined batches {eng.stats.pipelined_batches}, overlap "
-          f"{eng.stats.overlap_ratio:.2f}), u_cap {eng.stats.last_u_cap}, "
-          f"scan compiles {eng.stats.scan_compilations}, "
-          f"blocks fetched {eng.stats.blocks_fetched} / reused "
-          f"{eng.stats.blocks_reused} (operand cache), "
-          f"degraded batches {eng.stats.degraded_batches}")
+
+    if args.delta_budget_mb is not None:
+        # Live-update phase: each step adds a vector (searchable the very
+        # next batch), every 4th step tombstones a recent add, and every
+        # --compact-every steps the delta folds into the cold tier and the
+        # serving loop flips generation between batches — no drain.
+        from repro.core.delta import compact_deltas
+
+        tier = search_fn.delta
+        rng2 = np.random.default_rng(2)
+        base = 1_000_000_000  # demo id space, clear of checkpoint ids
+        steps = min(args.requests, 64)
+        dim, m = serving_index.spec.dim, serving_index.spec.n_attrs
+        for step in range(steps):
+            v = core[rng2.integers(0, len(core))].astype(np.float32)
+            v = v + 0.01 * rng2.standard_normal(dim).astype(np.float32)
+            a = rng2.integers(0, 8, (1, m)).astype(np.int16)
+            tier.add(v[None], a, np.asarray([base + step]))
+            if step % 4 == 3:
+                tier.tombstone(np.asarray([base + step - 2]))
+            if args.compact_every and (step + 1) % args.compact_every == 0:
+                st = compact_deltas(index_dir, tier)
+                server.request_refresh()
+                print(f"republished: {st.clusters_rewritten} clusters "
+                      f"(gen {st.gen_max}), folded {st.rows_folded} rows, "
+                      f"reclaimed {st.rows_reclaimed}")
+            server.search_blocking(v)  # drains any pending refresh first
+        print(f"live updates: {steps} adds, "
+              f"{tier.stats()['tombstoned']} tombstones, "
+              f"{tier.stats()['commits']} republish commits, "
+              f"{tier.stats()['live_rows']} rows still in RAM delta")
+
+    server.stop()
+    # One flat metrics surface (engine / store / cache / delta under
+    # dotted keys) instead of per-layer ad-hoc reports.
+    for key, val in sorted(search_fn.engine.metrics().items()):
+        print(f"  {key} = {val}")
     if args.tier == "disk":
         on_disk = serving_index.reader.stride * serving_index.n_clusters
-        if args.cache_shards > 1:
-            # the engine fetches through the sharded store's per-node
-            # caches; the index's own cache is the availability floor
-            # (fallback), so report the fleet's caches plus the
-            # degradation counters
-            s = search_fn.blockstore.stats()
-            print(f"sharded cache: l1 hits {s['l1_hits']} / misses "
-                  f"{s['l1_misses']}, remote blocks {s['remote_blocks']}")
-            states = " ".join(f"{n}:{st}"
-                              for n, st in sorted(s["health"].items()))
-            print(f"peer health: {states} | failovers {s['failovers']}, "
-                  f"redirected {s['redirected_blocks']} blocks, fallback "
-                  f"served {s['fallback_blocks']}, transport retries "
-                  f"{s['retries']}, deadline misses {s['deadline_misses']}")
-            node_bytes = 0
-            for node, ns in sorted(s["per_node"].items()):
-                hr = ns.get("hit_rate")
-                node_bytes += ns.get("resident_bytes", 0)
-                print(f"  node {node}: served {ns['blocks_served']} blocks"
-                      + (f", cache hit-rate {hr:.2f}" if hr is not None
-                         else ""))
-            print(f"resident across nodes {node_bytes/2**20:.1f} MiB "
-                  f"+ plan-side {serving_index.resident_bytes()/2**20:.1f} "
-                  f"MiB (index on disk {on_disk/2**20:.1f} MiB)")
-        else:
-            cache = serving_index.cache
-            print(f"resident {serving_index.resident_bytes()/2**20:.1f} MiB "
-                  f"(index on disk {on_disk/2**20:.1f} MiB), "
-                  f"cache hit-rate {cache.hit_rate:.2f}, "
-                  f"evictions {cache.stats.evictions}, "
-                  f"pinned {len(cache.pinned)} hot clusters, "
-                  f"prefetch errors {cache.stats.errors}")
+        print(f"resident {serving_index.resident_bytes()/2**20:.1f} MiB "
+              f"(index on disk {on_disk/2**20:.1f} MiB)")
         search_fn.close()  # engine + sharded store (we opened the index)
         serving_index.close()
 
