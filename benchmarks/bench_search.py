@@ -738,6 +738,214 @@ def bench_operand_cache_ab(index, core, rng, *, q=64, n_batches=10,
     return out
 
 
+def _device_cache_ingest_cell(rng, *, device_cache_mb, smoke=False):
+    """Invalidation under ingest: a device-cache-warm engine rides through
+    republishes.  Gated on the republish actually dropping device entries
+    (``device_invalidations > 0``) AND on bit-identity to a from-scratch
+    rebuild afterwards — a stale device block surviving the generation flip
+    would fail the second gate."""
+    import shutil
+    import tempfile
+
+    from repro.core import DeltaTier, compact_deltas
+    from repro.core import kmeans as kmeans_lib
+
+    n, d, m, kc = (3_000 if smoke else 6_000), 64, 6, 24
+    k, n_probes, q, qb = 10, 6, 16, 8
+    steps = 24 if smoke else 48
+    compact_every = 12
+
+    centers = rng.standard_normal((kc, d)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=-1, keepdims=True)
+    topic = (np.arange(n) * kc) // n
+    core = centers[topic] + 0.05 * rng.standard_normal((n, d)).astype(
+        np.float32
+    )
+    core /= np.linalg.norm(core, axis=-1, keepdims=True)
+    attrs = rng.integers(0, 16, (n, m)).astype(np.int16)
+    spec = HybridSpec(dim=d, n_attrs=m, core_dtype=jnp.float32)
+    vpad = int(np.bincount(topic, minlength=kc).max()) + 256
+    index, _ = build_from_assignments(
+        spec, jnp.asarray(centers), jnp.asarray(core), jnp.asarray(attrs),
+        jnp.asarray(topic), vpad=vpad, ids=jnp.arange(n),
+    )
+
+    all_core, all_attrs = core.copy(), attrs.copy()
+    all_ids = np.arange(n)
+    all_cl = topic.astype(np.int64)
+    alive = np.ones(n, bool)
+    next_id = n
+    queries = jnp.asarray(core[:q] + 0.01)
+    fspec = match_all(q, m)
+
+    def oracle_ids_scores():
+        idx, _ = build_from_assignments(
+            spec, jnp.asarray(centers), jnp.asarray(all_core[alive]),
+            jnp.asarray(all_attrs[alive]), jnp.asarray(all_cl[alive]),
+            ids=jnp.asarray(all_ids[alive]),
+        )
+        eng = SearchEngine(idx, k=k, n_probes=n_probes, q_block=qb)
+        res = eng.search(queries, fspec)
+        eng.close()
+        return np.asarray(res.ids), np.asarray(res.scores)
+
+    tmp = tempfile.mkdtemp(prefix="bench_devcache_ingest_")
+    exact, republishes = True, 0
+    try:
+        storage.save_index(index, tmp, n_shards=2)
+        disk = DiskIVFIndex.open(tmp)
+        tier = DeltaTier.for_index(disk, 16.0)
+        disk.delta = tier
+        eng = SearchEngine(disk, k=k, n_probes=n_probes, q_block=qb,
+                           device_cache=int(device_cache_mb * 2**20))
+        for _ in range(2):  # warm: the hot clusters go device-resident
+            jax.block_until_ready(eng.search(queries, fspec).ids)
+        dc = eng.device_cache
+
+        for step in range(steps):
+            b = 8
+            add = (centers[rng.integers(0, kc, b)]
+                   + 0.05 * rng.standard_normal((b, d))).astype(np.float32)
+            add /= np.linalg.norm(add, axis=-1, keepdims=True)
+            aat = rng.integers(0, 16, (b, m)).astype(np.int16)
+            ids = np.arange(next_id, next_id + b)
+            next_id += b
+            tier.add(add, aat, ids)
+            asg = np.asarray(kmeans_lib.assign(
+                jnp.asarray(add), jnp.asarray(centers)
+            )).astype(np.int64)
+            all_core = np.concatenate([all_core, add])
+            all_attrs = np.concatenate([all_attrs, aat])
+            all_ids = np.concatenate([all_ids, ids])
+            all_cl = np.concatenate([all_cl, asg])
+            alive = np.concatenate([alive, np.ones(b, bool)])
+
+            if step and step % compact_every == 0:
+                compact_deltas(tmp, tier)
+                eng.refresh()
+                republishes += 1
+                res = eng.search(queries, fspec)
+                oi, osc = oracle_ids_scores()
+                ok = (np.array_equal(np.asarray(res.ids), oi)
+                      and np.array_equal(np.asarray(res.scores), osc))
+                exact = exact and ok
+            jax.block_until_ready(eng.search(queries, fspec).ids)
+
+        dstats = dc.stats()
+        eng.close()
+        disk.close()
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    cell = dict(
+        steps=steps, republishes=republishes,
+        device_invalidations=int(dstats["invalidations"]),
+        device_hits=int(dstats["hits"]),
+        hit_rate=round(float(dstats["hit_rate"]), 3),
+        exact_vs_rebuild=bool(exact),
+    )
+    print(f"  invalidation under ingest: {republishes} republishes, "
+          f"{cell['device_invalidations']} device invalidations, "
+          f"exact_vs_rebuild={exact}")
+    return cell
+
+
+def bench_device_cache_ab(index, core, rng, *, q=64, n_batches=10,
+                          device_cache_mb=8.0, cached_clusters=16,
+                          fine_q_block=16, smoke=False):
+    """Cross-batch device cache A/B: identical session-coherent repeat-heavy
+    traffic through two pipelined engines — *on* keeps fully-assembled
+    operand blocks device-resident across batches (heat-aware LRU keyed on
+    ``(cluster_id, gen)``), *off* is the PR-5 path (per-batch operand cache
+    only: every batch re-pays BlockStore fetch + host assembly + H2D for
+    each cluster it probes).  Arms alternate within each pass and the
+    headline is the median of *paired* per-pass wall ratios (drift between
+    passes hits both arms equally).  Both arms run the same deliberately
+    tight resident ClusterCache budget, so the off arm's repeat fetches are
+    honest disk-tier work, not RAM-cache hits.  Every cell gated
+    bit-identical to the reference scan; the invalidation-under-ingest cell
+    gates the generation plane (see :func:`_device_cache_ingest_cell`).
+    """
+    import tempfile
+
+    out = dict(path="device_cache_ab", q=q, iters=n_batches,
+               device_cache_mb=device_cache_mb,
+               workload=f"session-coherent repeats (runs of {fine_q_block})")
+    exact = True
+    ab_rng = np.random.default_rng(11)
+    dc_bytes = int(device_cache_mb * 2**20)
+    configs = [("on", dc_bytes), ("off", None)]
+    with tempfile.TemporaryDirectory(prefix="bench_devcache_") as ckpt:
+        storage.save_index(index, ckpt, n_shards=4)
+        man = storage.load_manifest(ckpt)
+        overhead = (index.centroids.size * 4 + index.n_clusters * 4
+                    + (index.summaries.nbytes()
+                       if index.summaries is not None else 0))
+        budget = overhead + cached_clusters * man["record_stride"] + 4096
+        batches = [session_queries(core, q, ab_rng, fine_q_block)
+                   for _ in range(n_batches)]
+        fspec = match_all(q, M)
+        envs = [
+            (name, dc,
+             DiskIVFIndex.open(ckpt, resident_budget_bytes=budget))
+            for name, dc in configs
+        ]
+        try:
+            engines = {
+                name: SearchEngine(disk, k=K, n_probes=T,
+                                   q_block=fine_q_block, pipeline="on",
+                                   device_cache=dc)
+                for name, dc, disk in envs
+            }
+            walls = {name: [] for name, *_ in envs}
+            lasts, stats = {}, {}
+            for _ in range(7):
+                for name, *_ in envs:
+                    wall, last = _pipelined_stream(engines[name], batches,
+                                                   fspec)
+                    walls[name].append(wall)
+                    lasts[name] = last
+                    stats[name] = engines[name].stats
+            ref = search_reference(index, batches[-1], fspec, k=K,
+                                   n_probes=T)
+            dstats = engines["on"].device_cache.stats()
+            for name, dc, _disk in envs:
+                wall = float(np.median(walls[name]))
+                ok = bool((np.asarray(ref.ids)
+                           == np.asarray(lasts[name].ids)).all())
+                exact = exact and ok
+                out[name] = dict(
+                    device_cache=dc is not None,
+                    qps=round(q * n_batches / wall, 1),
+                    blocks_fetched=stats[name].blocks_fetched,
+                    blocks_reused=stats[name].blocks_reused,
+                    exact=ok,
+                )
+        finally:
+            for *_, disk in envs:
+                disk.close()
+    out["on"].update(
+        device_hits=int(dstats["hits"]),
+        device_misses=int(dstats["misses"]),
+        device_evictions=int(dstats["evictions"]),
+        resident_bytes=int(dstats["resident_bytes"]),
+        hit_rate=round(float(dstats["hit_rate"]), 3),
+    )
+    # paired per-pass ratios: pass i ran on and off back to back
+    out["on_vs_off_qps"] = round(float(np.median(
+        [o / f for o, f in zip(walls["off"], walls["on"])]
+    )), 3)
+    out["exact"] = exact
+    print(f"device cache A/B Q={q}: on {out['on']['qps']:.1f} qps "
+          f"(hit rate {out['on']['hit_rate']}, "
+          f"{out['on']['device_hits']} hits) vs off "
+          f"{out['off']['qps']:.1f} qps → {out['on_vs_off_qps']}x")
+    out["invalidation_under_ingest"] = _device_cache_ingest_cell(
+        rng, device_cache_mb=device_cache_mb, smoke=smoke,
+    )
+    return out
+
+
 def bench_ladder_ab(sindex, core, rng, *, q=64, n_batches=6):
     """u_cap bucket-ladder A/B: pow2 vs ×1.5-midpoint fine ladder.
 
@@ -1092,6 +1300,13 @@ def main():
                          "serving (healthy vs one peer dead vs one peer "
                          "slow), gated on bit-exact results and failover "
                          "actually firing (emits a degraded_mode entry)")
+    ap.add_argument("--device-cache-mb", type=float, default=None,
+                    help="also bench the cross-batch device-resident block "
+                         "cache at this byte budget: an on/off A/B over "
+                         "session-coherent repeat-heavy traffic (emits a "
+                         "device_cache_ab entry gated on bit-exact results "
+                         "and an invalidation-under-ingest cell gated on "
+                         "bit-identity to a from-scratch rebuild)")
     ap.add_argument("--ingest", action="store_true",
                     help="also bench live-updating serving: a sustained "
                          "add/tombstone/search stream over the RAM delta "
@@ -1164,6 +1379,7 @@ def main():
 
     disk_entry, disk_pipe_entry, degraded_entry = None, None, None
     sharded_entry, opcache_entry, ladder_entry = None, None, None
+    devcache_entry = None
     if args.tier in ("disk", "both"):
         disk_entry = bench_disk_tier(index, core, rng)
         results.append(disk_entry)
@@ -1174,6 +1390,12 @@ def main():
                 index, core, rng, n_batches=6 if args.smoke else 10,
             )
             results.append(opcache_entry)
+        if args.device_cache_mb:
+            devcache_entry = bench_device_cache_ab(
+                index, core, rng, n_batches=6 if args.smoke else 10,
+                device_cache_mb=args.device_cache_mb, smoke=args.smoke,
+            )
+            results.append(devcache_entry)
         if args.cache_shards > 1:
             sharded_entry = bench_disk_tier_sharded(
                 index, core, rng, n_nodes=args.cache_shards,
@@ -1212,7 +1434,8 @@ def main():
         results.append(ladder_entry)
 
     exact_all = bool(sweep_exact)
-    for e in (sharded_entry, opcache_entry, ladder_entry, degraded_entry):
+    for e in (sharded_entry, opcache_entry, ladder_entry, degraded_entry,
+              devcache_entry):
         if e is not None:
             exact_all = exact_all and bool(e.get("exact", True))
     out = dict(
@@ -1256,6 +1479,13 @@ def main():
         out["degraded_mode"] = degraded_entry
     if opcache_entry is not None:
         out["operand_cache_ab"] = opcache_entry
+    if devcache_entry is not None:
+        out["device_cache_ab"] = devcache_entry
+        out["device_hits"] = devcache_entry["on"]["device_hits"]
+        out["device_invalidations"] = (
+            devcache_entry["invalidation_under_ingest"]
+            ["device_invalidations"]
+        )
     if ladder_entry is not None:
         out["u_cap_ladder_ab"] = ladder_entry
     with open(args.out, "w") as f:

@@ -29,6 +29,31 @@ pluggable :class:`repro.core.blockstore.BlockStore`::
     scans on device while the store worker pages tile i+1's blocks and the
     engine worker assembles + device-puts them.
 
+Cache hierarchy — five layers, ONE invalidation key, ``(cluster_id,
+gen)``.  Reading top-down is reading the cost of a miss at each layer::
+
+    device operand LRU   composed [S,Vpad,...] blocks, heat-aware,
+      |                  cross-batch: a hit costs a dict lookup — no
+      |                  fetch, no host assembly, no H2D transfer
+      └─► host ClusterCache   decoded records, probe-driven LRU with
+            |                 hot-cluster pinning, under the resident
+            |                 byte budget
+            └─► sharded L1        this pod's recently fetched remote
+                  |               blocks (skips the ring round trip)
+                  └─► peer cache       the ring owner's ClusterCache,
+                        |              loopback or socket transport
+                        └─► local mmap'd checkpoint   every pod's full
+                                       copy: the availability floor
+
+A republish (``compact_deltas``) bumps exactly the rewritten clusters'
+generations; ``refresh()`` hands the new vector to every layer and each
+drops exactly those ``(cid, gen)`` entries — untouched clusters stay
+resident at every level.  Lookups also carry the batch's expected minimum
+generations, so a stale block is refused at lookup time even before the
+refresh lands.  Results stay bit-identical to the no-cache path
+throughout: the caches may only move *where* a block comes from, never
+*what* the scan sees.
+
 Engine knobs, and which side of the latency/throughput trade they sit on:
 
   * ``pipeline`` ("auto"/"on"/"off") — throughput: hides disk IO behind
@@ -43,6 +68,13 @@ Engine knobs, and which side of the latency/throughput trade they sit on:
   * ``operand_cache`` ("auto"/"on"/"off") — throughput on the BlockStore
     path: each cluster block crosses the store (ring hop, cache lock, mmap
     read) once per batch; ``stats.blocks_reused`` counts the savings.
+  * ``device_cache`` (a byte budget; ``make_fused_search_fn
+    device_cache_mb`` / ``serve --device-cache-mb``) — throughput on
+    repeat-heavy traffic: the per-batch operand cache generalized across
+    batches.  Hot clusters' device-put operand blocks (and exact-repeat
+    composed tiles) stay resident under a heat-weighted LRU, so a repeat
+    probe pays neither the store nor the H2D bus; invalidation rides the
+    same ``(cluster_id, gen)`` key as every host layer.
   * ``adaptive_u_cap`` (default on) — both: slot tables sized from the
     observed post-prune unique-cluster counts in bounded buckets, so
     selective filters scan small tables (latency AND throughput) at a
@@ -225,6 +257,27 @@ def main():
                   f"fetched, {engine.stats.blocks_reused} reused across "
                   f"tiles of their batch")
 
+            # --- cross-batch device cache: the top of the hierarchy ---
+            # Repeat traffic (a user re-querying a hot topic) finds its
+            # clusters' fully-assembled operand blocks already ON DEVICE:
+            # the warm pass pays no store fetch, no host assembly and no
+            # H2D copy — and results stay bit-identical.
+            dc_engine = SearchEngine(disk, k=k, n_probes=7, q_block=8,
+                                     pipeline="on",
+                                     device_cache=64 * 2**20)
+            cold = dc_engine.search(queries, fspec)
+            fetched_cold = dc_engine.stats.blocks_fetched
+            warm = dc_engine.search(queries, fspec)
+            assert (np.asarray(ram_ids) == np.asarray(cold.ids)).all()
+            assert (np.asarray(ram_ids) == np.asarray(warm.ids)).all()
+            assert dc_engine.stats.blocks_fetched == fetched_cold
+            dcs = dc_engine.device_cache.stats()
+            print(f"device cache: warm pass fetched 0 blocks "
+                  f"({dcs['hits']} device hits, hit rate "
+                  f"{dcs['hit_rate']:.2f}, "
+                  f"{dcs['resident_bytes']/2**20:.1f} MiB resident), "
+                  f"ids identical ✓")
+
         # --- sharded cluster cache: one FULL index copy per pod, a
         # consistent-hash ring splitting *cache* ownership of the
         # cluster-id space.  The deployment model to hold onto: the ring
@@ -304,7 +357,8 @@ def main():
 
         with DiskIVFIndex.open(ckpt) as disk:
             live_fn = make_fused_search_fn(disk, k=k, n_probes=7,
-                                           q_block=8, delta_budget_mb=4.0)
+                                           q_block=8, delta_budget_mb=4.0,
+                                           device_cache_mb=32.0)
             tier = live_fn.delta
             live = SearchServer(live_fn, batch_size=8, dim=d, n_attrs=m,
                                 n_terms=1, n_shards=8, max_wait_s=0.002)
@@ -338,9 +392,11 @@ def main():
             metrics = live_fn.metrics()
             print(f"republish: {st.clusters_rewritten} clusters rewritten "
                   f"at gen {st.gen_max}, {st.rows_folded} rows folded, "
-                  f"delta empty again; cache invalidations "
-                  f"{metrics['store.invalidations']} (only rewritten "
-                  "blocks), results still rebuild-identical ✓")
+                  f"delta empty again; invalidations — host cache "
+                  f"{metrics['store.invalidations']}, device cache "
+                  f"{metrics['device_cache.invalidations']} (only "
+                  "rewritten blocks at both layers), results still "
+                  "rebuild-identical ✓")
             live.stop()
 
 

@@ -499,6 +499,9 @@ class StoreStats:
     #                             generation (peer lagging a republish) —
     #                             treated as misses and re-served fresh,
     #                             never silently accepted
+    device_hits: int = 0        # blocks the engine's device cache served —
+    #                             fetches this store never saw (avoided
+    #                             peer RPCs / disk reads)
 
 
 class ShardedBlockStore(_AsyncStoreMixin):
@@ -787,6 +790,13 @@ class ShardedBlockStore(_AsyncStoreMixin):
             if r is not None:
                 r()
 
+    def note_device_hits(self, n: int):
+        """Counts blocks a device-resident cache served instead of this
+        ring — every one is a peer RPC (or local fallback read) that never
+        happened (:class:`repro.core.devicecache.DeviceBlockCache`)."""
+        with self._stats_lock:
+            self.store_stats.device_hits += n
+
     # ---- health ----
     @property
     def degraded(self) -> bool:
@@ -837,6 +847,7 @@ class ShardedBlockStore(_AsyncStoreMixin):
                 redirected_blocks=self.store_stats.redirected_blocks,
                 fallback_blocks=self.store_stats.fallback_blocks,
                 stale_answers=self.store_stats.stale_answers,
+                device_hits=self.store_stats.device_hits,
                 retries=retries, deadline_misses=deadline_misses,
                 has_fallback=self.fallback is not None,
             )

@@ -97,6 +97,12 @@ class DeltaSnapshot:
     scales: Optional[np.ndarray]   # [cap] f32 (SQ8 only)
     tombstones: Optional[np.ndarray]  # sorted pow2 int32, −2-padded
     version: int = 0
+    # lazily-built 1-cluster attribute summary over the live rows (see
+    # snapshot_summary) — shared by every batch on this snapshot via the
+    # tier's version-keyed snapshot cache.  None is a valid built value
+    # (no live rows), hence the separate ready flag.
+    summary: object = None
+    summary_ready: bool = False
 
 
 @jax.jit
@@ -181,6 +187,69 @@ def scan_snapshot(
         None if snap.norms is None else jnp.asarray(snap.norms),
         None if snap.scales is None else jnp.asarray(snap.scales),
         jnp.int32(snap.n_rows), metric=metric, k=k,
+    )
+
+
+DELTA_SUMMARY_BINS = 8
+
+
+def snapshot_summary(snap: DeltaSnapshot):
+    """1-cluster interval/histogram summary over the snapshot's live rows.
+
+    The same conservative machinery the cold planner prunes clusters with
+    (:mod:`repro.core.summaries`), applied to the delta segment as a single
+    pseudo-cluster: ``can_match == False`` for every query proves the delta
+    scan's filter mask is identically zero, so the fold can be skipped
+    outright.  Built lazily, cached on the snapshot (snapshots are shared
+    across batches until the tier's version changes), and computed from the
+    snapshot's own ``ids`` copy so a tombstone landing after the snapshot
+    cannot narrow the summary out from under a batch mid-flight.
+
+    Returns None when the snapshot has no live rows (every fold over it is
+    a no-op).
+    """
+    if snap.summary_ready:
+        return snap.summary
+    n = snap.n_rows
+    live = np.zeros(snap.ids.shape[0], bool)
+    live[:n] = snap.ids[:n] >= 0
+    if not live.any():
+        summ = None
+    else:
+        ids_row = np.where(live, snap.ids, -1).astype(np.int32)
+        summ = summaries_lib.build_summaries(
+            jnp.asarray(snap.attrs)[None], jnp.asarray(ids_row)[None],
+            n_bins=DELTA_SUMMARY_BINS,
+        )
+    snap.summary = summ
+    snap.summary_ready = True
+    return summ
+
+
+@jax.jit
+def _delta_reach(geo, geo_ok, clusters, ids, n_rows):
+    """[Qpad] count of delta rows each query's scan would reach (live ∧
+    geometric-member) — ``_delta_scan``'s ``dscanned``, without the scan."""
+    cap = ids.shape[0]
+    live = jnp.logical_and(ids >= 0, jnp.arange(cap) < n_rows)
+    member = jnp.any(
+        jnp.logical_and(
+            geo[:, :, None] == clusters[None, None, :],
+            geo_ok[:, :, None],
+        ),
+        axis=1,
+    )
+    return jnp.sum(
+        jnp.logical_and(member, live[None, :]).astype(jnp.int32), axis=-1
+    )
+
+
+def snapshot_reach(snap: DeltaSnapshot, geo, geo_ok):
+    """Per-query ``n_scanned`` contribution of a skipped delta fold —
+    bit-identical to what the full scan would have reported."""
+    return _delta_reach(
+        geo, geo_ok, jnp.asarray(snap.clusters), jnp.asarray(snap.ids),
+        jnp.int32(snap.n_rows),
     )
 
 
@@ -524,6 +593,43 @@ class RepublishStats:
     rows_reclaimed: int     # dead (tombstoned/stale) slots dropped
     tombstones_applied: int
     gen_max: int
+    # what scheduled this republish: "manual" (explicit call), "every"
+    # (fixed batch counter), "rows" (delta.rows watermark) or "stale"
+    # (tombstone-debt watermark) — see republish_pressure()
+    trigger: str = "manual"
+
+
+def republish_pressure(
+    tier: DeltaTier,
+    *,
+    rows_watermark: Optional[int] = None,
+    stale_frac: Optional[float] = None,
+    n_live: int = 0,
+) -> Optional[str]:
+    """Which watermark (if any) says the tier should republish *now*.
+
+    ``rows_watermark`` trips on the segment's row count (``delta.rows`` —
+    every query's delta fold competes against the whole segment, so this
+    bounds the per-batch fold cost), ``stale_frac`` on tombstone debt
+    relative to the cold corpus (``n_live``) — the ``stale_counts``
+    pressure: dead cold slots the scan still pages and masks.  Returns the
+    :class:`RepublishStats` trigger string (``"rows"`` / ``"stale"``) or
+    None when neither watermark is hit.
+
+    A tier with a republish already frozen (``pending``) never reports
+    pressure — the relief is in flight, waiting for the serving side's
+    between-batch commit; double-triggering would trip the freeze guard.
+    """
+    st = tier.stats()
+    if st["pending"]:
+        return None
+    if rows_watermark is not None and st["rows"] >= rows_watermark > 0:
+        return "rows"
+    if stale_frac is not None and stale_frac > 0:
+        debt = st["tombstones"] / max(int(n_live), 1)
+        if debt >= stale_frac:
+            return "stale"
+    return None
 
 
 def compact_deltas(
@@ -531,6 +637,7 @@ def compact_deltas(
     tier: Optional[DeltaTier] = None,
     *,
     include_stale: bool = True,
+    trigger: str = "manual",
 ) -> RepublishStats:
     """Folds the tier's frozen rows + tombstones into the checkpoint.
 
@@ -600,7 +707,8 @@ def compact_deltas(
     if not touched:
         # nothing to publish; the (empty) freeze is dropped at the next
         # refresh()'s commit
-        return RepublishStats(0, 0, 0, 0, 0, int(gens.max(initial=0)))
+        return RepublishStats(0, 0, 0, 0, 0, int(gens.max(initial=0)),
+                              trigger=trigger)
 
     summ = storage.load_summaries(directory, man)
     field_names = [f["name"] for f in man["fields"] if f["name"] != "gen"]
@@ -699,4 +807,5 @@ def compact_deltas(
         rows_reclaimed=rows_reclaimed,
         tombstones_applied=tombstones_applied,
         gen_max=int(gens.max(initial=0)),
+        trigger=trigger,
     )

@@ -1,0 +1,390 @@
+"""Cross-batch device-resident cluster-block cache (heat-aware LRU).
+
+The disk tier's per-batch operand cache (PR 5) stops paying the BlockStore
+for a cluster more than once *per batch* — but the next batch pays host
+assembly and the host→device copy all over again, even when serving traffic
+probes the same hot clusters for minutes at a time.  Generation-tagged
+cluster blocks (PR 7, storage layout v3) supply the missing piece: a sound
+invalidation key.  This module keeps each hot cluster's *fully-assembled,
+device-put* operand block resident across batches, keyed on
+``(cluster_id, gen)`` exactly like every host cache layer:
+
+  * a **device hit** costs a dict lookup — no disk read, no peer RPC, no
+    host assembly, no H2D transfer.  The scan's ``[S, Vpad, ...]`` blocks
+    are composed on device by stacking the per-cluster entries (a
+    device-to-device copy), padded exactly like
+    :func:`repro.core.blockstore.assemble_blocks`, so results are
+    bit-identical to the uncached path.
+  * a **miss** fetches through the BlockStore as before; the fetched
+    record is device-put once and becomes the cache entry — the same
+    arrays the current batch scans, so caching adds no extra copy.
+  * eviction is **heat-weighted LRU** under a byte budget: among the
+    least-recently-used window, the entry with the lowest observed probe
+    heat goes first.  The heat signal is the ClusterCache's per-cluster
+    probe counter when available (``heat_fn``), falling back to the device
+    cache's own request counts.
+  * invalidation mirrors the host caches' precision contract: a republish
+    bumps the rewritten clusters' generations, and
+    :meth:`DeviceBlockCache.invalidate_below` (called from
+    ``SearchEngine.refresh()``) drops exactly those ``(cid, gen)`` entries
+    — untouched clusters stay resident.  Lookups also carry the batch's
+    expected minimum generations, so a stale device block can never be
+    scanned even before the refresh lands.
+
+The per-batch operand cache is the in-batch special case of this cache:
+when a ``DeviceBlockCache`` is active the engine routes all reuse —
+within a batch and across batches — through it.
+
+Two granularities share the byte budget:
+
+  * **per-cluster entries** (the LRU above) serve partial overlap — any
+    tile reusing *some* of a previous tile's clusters skips their fetch
+    and H2D, paying only the device-side stack;
+  * a **composed-tile memo** serves exact repeats — session traffic that
+    probes the same cluster set again gets the previous ``[S, Vpad, ...]``
+    blocks back verbatim (zero work, not even a stack).  A memoized tile
+    is keyed on its members' ``(cluster_id, gen)`` pairs plus the slot
+    count, so the generation plane invalidates it exactly like the
+    entries it was composed from.  Tiles are derived data: they are
+    admitted only into budget the entries aren't using, and evict
+    (plain LRU) before any entry does.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blockstore import BlockSpec, Record, record_gen
+
+Array = jax.Array
+
+
+def record_nbytes(spec: BlockSpec) -> int:
+    """Device bytes of one cluster's operand entry under ``spec``."""
+    v = spec.vpad
+    n = v * spec.dim * spec.store_dtype.itemsize   # vectors
+    n += v * spec.n_attrs * 2                      # attrs (int16)
+    n += v * 4                                     # ids (int32)
+    if spec.has_norms:
+        n += v * 4
+    if spec.quantized:
+        n += v * 4
+    return n
+
+
+@dataclasses.dataclass
+class DeviceEntry:
+    """One cluster's operand block, resident on device."""
+
+    gen: int
+    vectors: Array                 # [Vpad, D] store dtype
+    attrs: Array                   # [Vpad, M] int16
+    ids: Array                     # [Vpad] int32
+    norms: Optional[Array]         # [Vpad] f32 (l2 only)
+    scales: Optional[Array]        # [Vpad] f32 (SQ8 only)
+
+
+class DeviceBlockCache:
+    """``(cluster_id, gen)``-keyed LRU of device-resident operand blocks.
+
+    Thread-safe: the pipelined executor's fetch worker and the sync path
+    (and ``refresh()`` on the serving thread) share one instance.  Entries
+    handed out by :meth:`get_many` stay valid after a concurrent eviction —
+    eviction only drops the cache's reference, never the arrays a batch in
+    flight is composing from.
+    """
+
+    # eviction scans this many LRU-oldest entries and evicts the coldest —
+    # a recently-probed cluster that merely aged to the LRU tail survives
+    # over a genuinely cold one
+    HEAT_WINDOW = 8
+
+    def __init__(self, spec: BlockSpec, budget_bytes: int,
+                 heat_fn: Optional[Callable[[int], float]] = None):
+        if budget_bytes < 0:
+            raise ValueError(f"budget_bytes must be >= 0, got {budget_bytes}")
+        self.spec = spec
+        self.budget_bytes = int(budget_bytes)
+        self.entry_nbytes = record_nbytes(spec)
+        self.capacity_records = self.budget_bytes // self.entry_nbytes
+        self.heat_fn = heat_fn
+        self._entries: "OrderedDict[int, DeviceEntry]" = OrderedDict()
+        self._requests: Dict[int, int] = {}   # fallback heat: cid → lookups
+        # composed-tile memo: (cids tuple, s) → (gens tuple, blocks tuple)
+        self._tiles: "OrderedDict[Tuple, Tuple]" = OrderedDict()
+        self._tile_bytes = 0
+        self._pad: Optional[DeviceEntry] = None
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.puts = 0
+        self.evictions = 0
+        self.invalidations = 0
+        self.tile_hits = 0
+        self.tile_puts = 0
+
+    # ---- lookup ----
+    def get_many(self, cids: Sequence[int],
+                 gens: Optional[np.ndarray] = None
+                 ) -> Tuple[Dict[int, DeviceEntry], List[int]]:
+        """Resident entries for ``cids`` + the miss list (first-need order
+        preserved).  ``gens`` aligns with ``cids`` and carries the batch's
+        expected *minimum* generations: an entry below its minimum was
+        superseded by a republish — it is dropped (counted as an
+        invalidation) and reported as a miss, never served."""
+        hits: Dict[int, DeviceEntry] = {}
+        missing: List[int] = []
+        with self._lock:
+            for j, c in enumerate(cids):
+                cid = int(c)
+                self._requests[cid] = self._requests.get(cid, 0) + 1
+                e = self._entries.get(cid)
+                if e is not None and gens is not None \
+                        and e.gen < int(gens[j]):
+                    del self._entries[cid]
+                    self.invalidations += 1
+                    e = None
+                if e is None:
+                    self.misses += 1
+                    missing.append(cid)
+                else:
+                    self.hits += 1
+                    self._entries.move_to_end(cid)
+                    hits[cid] = e
+        return hits, missing
+
+    def filter_missing(self, cids: np.ndarray,
+                       gens: Optional[np.ndarray] = None) -> np.ndarray:
+        """The subset of ``cids`` the store must be asked for (pure peek —
+        no stats, no LRU touch; the authoritative lookup happens at
+        assembly time via :meth:`get_many`)."""
+        with self._lock:
+            keep = []
+            for j, c in enumerate(cids):
+                e = self._entries.get(int(c))
+                if e is None or (gens is not None and e.gen < int(gens[j])):
+                    keep.append(j)
+        return np.asarray(cids)[keep]
+
+    # ---- composed-tile memo ----
+    def get_tile(self, cids: Sequence[int], s: int,
+                 gens: Optional[np.ndarray] = None) -> Optional[Tuple]:
+        """The memoized ``[S, Vpad, ...]`` blocks for this exact cluster
+        set, or None.  A memo whose members fell below the batch's expected
+        minimum generations is dropped (counted as an invalidation), never
+        served.  A hit counts every member as a device hit — the same
+        blocks avoided the same fetches."""
+        key = (tuple(int(c) for c in cids), int(s))
+        with self._lock:
+            hit = self._tiles.get(key)
+            if hit is None:
+                return None
+            tile_gens, blocks = hit
+            if gens is not None and any(
+                g < int(gens[j]) for j, g in enumerate(tile_gens)
+            ):
+                self._drop_tile(key)
+                self.invalidations += 1
+                return None
+            self._tiles.move_to_end(key)
+            self.tile_hits += 1
+            self.hits += len(key[0])
+            return blocks
+
+    def put_tile(self, cids: Sequence[int], s: int,
+                 entries: Sequence[DeviceEntry], blocks: Tuple) -> None:
+        """Memoizes a freshly composed tile.  Tiles only occupy budget the
+        per-cluster entries aren't using (they are derived data — droppable
+        without losing the fetch/H2D savings), LRU-evicting older tiles to
+        fit; a tile that still doesn't fit simply isn't memoized."""
+        nbytes = int(s) * self.entry_nbytes
+        key = (tuple(int(c) for c in cids), int(s))
+        with self._lock:
+            room = (self.budget_bytes
+                    - len(self._entries) * self.entry_nbytes)
+            if nbytes > room:
+                return
+            while self._tile_bytes + nbytes > room and self._tiles:
+                self._drop_tile(next(iter(self._tiles)))
+                self.evictions += 1
+            if self._tile_bytes + nbytes > room:
+                return
+            if key in self._tiles:
+                self._drop_tile(key)
+            self._tiles[key] = (tuple(e.gen for e in entries), blocks)
+            self._tile_bytes += nbytes
+            self.tile_puts += 1
+
+    def _drop_tile(self, key) -> None:
+        """Removes one memoized tile (lock held)."""
+        del self._tiles[key]
+        self._tile_bytes -= key[1] * self.entry_nbytes
+
+    def _shrink_tiles_to_room(self) -> None:
+        """Evicts LRU tiles until the memo fits in the budget the entries
+        left over (lock held) — run after every entry admission so tiles
+        always yield to entries."""
+        room = self.budget_bytes - len(self._entries) * self.entry_nbytes
+        while self._tile_bytes > room and self._tiles:
+            self._drop_tile(next(iter(self._tiles)))
+            self.evictions += 1
+
+    # ---- insert ----
+    def put_records(self, recs: Dict[int, Record]
+                    ) -> Dict[int, DeviceEntry]:
+        """Device-puts fetched host records and admits them (evicting the
+        coldest LRU-tail entries while over budget).  Returns the device
+        entries — the caller composes the batch's blocks from these, so a
+        record crosses to device exactly once whether or not it survives
+        eviction."""
+        out: Dict[int, DeviceEntry] = {}
+        for cid, rec in recs.items():
+            cid = int(cid)
+            gen = record_gen(rec)
+            with self._lock:
+                old = self._entries.get(cid)
+            if old is not None and old.gen >= gen:
+                out[cid] = old
+                continue
+            e = self._entry_from_record(gen, rec)
+            out[cid] = e
+            if self.capacity_records == 0:
+                continue  # budget below one entry: compose-only, no admit
+            with self._lock:
+                self._entries[cid] = e
+                self._entries.move_to_end(cid)
+                self.puts += 1
+                while len(self._entries) > self.capacity_records:
+                    self._evict_one()
+                self._shrink_tiles_to_room()
+        return out
+
+    def _entry_from_record(self, gen: int, rec: Record) -> DeviceEntry:
+        return DeviceEntry(
+            gen=gen,
+            vectors=jax.device_put(rec["vectors"]),
+            attrs=jax.device_put(rec["attrs"]),
+            ids=jax.device_put(rec["ids"]),
+            norms=(jax.device_put(rec["norms"])
+                   if self.spec.has_norms else None),
+            scales=(jax.device_put(rec["scales"])
+                    if self.spec.quantized else None),
+        )
+
+    def _evict_one(self):
+        """Drops the coldest of the ``HEAT_WINDOW`` LRU-oldest entries
+        (lock held)."""
+        window = []
+        for cid in self._entries:           # insertion order = LRU order
+            window.append(cid)
+            if len(window) >= self.HEAT_WINDOW:
+                break
+        victim = min(window, key=self._heat)
+        del self._entries[victim]
+        self.evictions += 1
+
+    def _heat(self, cid: int) -> float:
+        if self.heat_fn is not None:
+            try:
+                return float(self.heat_fn(cid))
+            except Exception:
+                pass
+        return float(self._requests.get(cid, 0))
+
+    # ---- invalidation ----
+    def invalidate_below(self, gens: np.ndarray) -> int:
+        """Drops every entry whose generation is below the published vector
+        — exactly the clusters a republish rewrote.  Returns the count."""
+        g = np.asarray(gens)
+        dropped = 0
+        with self._lock:
+            for cid in [c for c, e in self._entries.items()
+                        if c < g.shape[0] and e.gen < int(g[c])]:
+                del self._entries[cid]
+                dropped += 1
+            for key in [k for k, (tgens, _) in self._tiles.items()
+                        if any(c < g.shape[0] and tg < int(g[c])
+                               for c, tg in zip(k[0], tgens))]:
+                self._drop_tile(key)
+                dropped += 1
+            self.invalidations += dropped
+        return dropped
+
+    def clear(self) -> int:
+        with self._lock:
+            n = len(self._entries) + len(self._tiles)
+            self._entries.clear()
+            self._tiles.clear()
+            self._tile_bytes = 0
+        return n
+
+    # ---- composition ----
+    def _pad_entry(self) -> DeviceEntry:
+        """The never-matching pad row — identical values to
+        ``assemble_blocks``'s unfilled slots (zero vectors, ids −1, unit
+        scales), so padded device compositions match the host path bitwise."""
+        if self._pad is None:
+            spec = self.spec
+            self._pad = DeviceEntry(
+                gen=-1,
+                vectors=jnp.zeros((spec.vpad, spec.dim),
+                                  dtype=spec.store_dtype),
+                attrs=jnp.zeros((spec.vpad, spec.n_attrs), jnp.int16),
+                ids=jnp.full((spec.vpad,), -1, jnp.int32),
+                norms=(jnp.zeros((spec.vpad,), jnp.float32)
+                       if spec.has_norms else None),
+                scales=(jnp.ones((spec.vpad,), jnp.float32)
+                        if spec.quantized else None),
+            )
+        return self._pad
+
+    def compose(self, entries: Sequence[DeviceEntry], s: int) -> Tuple:
+        """Stacks per-cluster entries (first-need order) into the scan's
+        ``[S, Vpad, ...]`` blocks — a device-side copy, no host assembly,
+        no H2D.  Pads to ``s`` slots exactly like ``assemble_blocks``."""
+        rows = list(entries)
+        if len(rows) < s:
+            rows.extend([self._pad_entry()] * (s - len(rows)))
+        vectors = jnp.stack([e.vectors for e in rows])
+        attrs = jnp.stack([e.attrs for e in rows])
+        ids = jnp.stack([e.ids for e in rows])
+        norms = (jnp.stack([e.norms for e in rows])
+                 if self.spec.has_norms else None)
+        scales = (jnp.stack([e.scales for e in rows])
+                  if self.spec.quantized else None)
+        return vectors, attrs, ids, norms, scales
+
+    # ---- observability ----
+    @property
+    def resident_bytes(self) -> int:
+        return len(self._entries) * self.entry_nbytes + self._tile_bytes
+
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> Dict[str, object]:
+        with self._lock:
+            return dict(
+                hits=self.hits,
+                misses=self.misses,
+                puts=self.puts,
+                evictions=self.evictions,
+                invalidations=self.invalidations,
+                tile_hits=self.tile_hits,
+                tile_puts=self.tile_puts,
+                entries=len(self._entries),
+                tiles=len(self._tiles),
+                resident_bytes=(len(self._entries) * self.entry_nbytes
+                                + self._tile_bytes),
+                capacity_records=self.capacity_records,
+                budget_bytes=self.budget_bytes,
+                hit_rate=self.hit_rate(),
+            )

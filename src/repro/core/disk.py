@@ -291,6 +291,12 @@ class ClusterCache:
         return rec
 
     # ---- public ----
+    def probe_heat(self, cid: int) -> int:
+        """Observed probe count for one cluster — the heat signal the
+        device-resident block cache weighs its eviction by (the same
+        counter that drives hot-pinning here)."""
+        return int(self._probe_count[int(cid)])
+
     def get_many(self, cids: Sequence[int],
                  gens: Optional[Sequence[int]] = None) -> Dict[int, dict]:
         """Returns {cid: record} for every id, blocking on disk as needed.
@@ -474,6 +480,10 @@ class DiskIVFIndex:
         # RAM delta tier (attached by the serving layer when live updates
         # are enabled); None = frozen checkpoint, zero serving overhead.
         self.delta = None
+        # Cross-batch device-resident block cache (attached by the serving
+        # layer via make_fused_search_fn(device_cache_mb=...)); engines
+        # built over this index pick it up automatically.
+        self.device_cache = None
         self._overhead = _resident_overhead(centroids, counts, summaries)
         # The fetch layer: this host's reader + cache behind the BlockStore
         # protocol.  The search engine routes its fetch stage through it
@@ -683,7 +693,8 @@ class DiskIVFIndex:
                u_cap: Optional[int] = None, backend: Optional[str] = None,
                prune: str = "auto", t_max=None,
                pipeline: str = "off", pipeline_depth: int = 2,
-               blockstore=None, operand_cache: str = "auto"):
+               blockstore=None, operand_cache: str = "auto",
+               device_cache=None):
         """Disk-tier filtered search; same contract (and bit-identical ids)
         as the RAM path's ``search_fused_tiled``.  With summaries resident
         (layout v2.1) and ``prune`` active, clusters the filter excludes are
@@ -697,6 +708,7 @@ class DiskIVFIndex:
             u_cap=u_cap, backend=backend, prune=prune, t_max=t_max,
             pipeline=pipeline, pipeline_depth=pipeline_depth,
             blockstore=blockstore, operand_cache=operand_cache,
+            device_cache=device_cache,
         )
         return eng.search(queries, fspec)
 

@@ -522,6 +522,10 @@ class EngineStats:
     # batches whose result folded a non-empty RAM delta segment (live
     # serving); frozen-checkpoint serving keeps this at 0
     delta_folds: int = 0
+    # batches that skipped the delta scan because the segment's resident
+    # attribute summary proved no live delta row can pass any query's
+    # filter (results identical; only the scan is saved)
+    delta_skips: int = 0
 
     @property
     def overlap_ratio(self) -> float:
@@ -545,6 +549,57 @@ def _flatten_metrics(out: Dict[str, Any], prefix: str, obj: Any) -> None:
         out[prefix] = obj.item()
     else:
         out[prefix] = str(obj)
+
+
+# Metric leaf names that are monotonically increasing counts — rendered as
+# Prometheus counters; every other numeric metric is a gauge.
+_PROM_COUNTERS = frozenset((
+    "batches", "pipelined_batches", "tiles_scanned", "scan_compilations",
+    "blocks_fetched", "blocks_reused", "degraded_batches", "delta_folds",
+    "delta_skips", "hits", "misses", "puts", "evictions", "invalidations",
+    "prefetched", "errors", "stalled_waits", "failovers",
+    "redirected_blocks", "fallback_blocks", "stale_answers", "retries",
+    "deadline_misses", "device_hits", "tile_hits", "tile_puts", "l1_hits",
+    "l1_misses", "l1_invalidations", "remote_blocks", "blocks_served",
+    "adds", "tombstoned", "commits", "scan_compile_count",
+))
+
+
+def _prom_name(key: str) -> str:
+    out = "".join(c if c.isalnum() or c == "_" else "_" for c in key)
+    return out if not out[:1].isdigit() else f"_{out}"
+
+
+def render_prometheus(metrics: Dict[str, Any],
+                      prefix: str = "repro") -> str:
+    """Flat dotted-key metrics → Prometheus text exposition format.
+
+    Dots become underscores (``engine.blocks_fetched`` →
+    ``repro_engine_blocks_fetched``); booleans render as 0/1 gauges;
+    strings become an info-style labeled sample
+    (``repro_engine_backend{value="xla"} 1``); None is skipped.  Leaf
+    names in :data:`_PROM_COUNTERS` are typed ``counter``, the rest
+    ``gauge``.
+    """
+    lines: List[str] = []
+    for key in sorted(metrics):
+        val = metrics[key]
+        if val is None:
+            continue
+        name = _prom_name(f"{prefix}.{key}")
+        leaf = key.rsplit(".", 1)[-1]
+        kind = "counter" if leaf in _PROM_COUNTERS else "gauge"
+        if isinstance(val, bool):
+            lines.append(f"# TYPE {name} gauge")
+            lines.append(f"{name} {int(val)}")
+        elif isinstance(val, (int, float)):
+            lines.append(f"# TYPE {name} {kind}")
+            lines.append(f"{name} {val}")
+        else:
+            label = str(val).replace("\\", "\\\\").replace('"', '\\"')
+            lines.append(f"# TYPE {name} gauge")
+            lines.append(f'{name}{{value="{label}"}} 1')
+    return "\n".join(lines) + "\n"
 
 
 # Process-wide registry of scan-stage signatures that have been dispatched;
@@ -645,7 +700,8 @@ class SearchEngine:
                  u_cap_bucket_set: Optional[Tuple[int, ...]] = None,
                  u_cap_ladder: str = "pow2",
                  operand_cache: str = "auto",
-                 delta=None):
+                 delta=None,
+                 device_cache=None):
         if pipeline not in ("auto", "on", "off"):
             raise ValueError(f"pipeline must be 'auto'|'on'|'off', got "
                              f"{pipeline!r}")
@@ -696,6 +752,23 @@ class SearchEngine:
         if operand_cache == "on" and self._store is None:
             raise ValueError("operand_cache='on' needs a BlockStore fetch "
                              "path (disk tier or explicit blockstore=)")
+        # cross-batch device-resident block cache: explicit instance or byte
+        # budget wins; otherwise the index's attached cache
+        # (make_fused_search_fn(device_cache_mb=...) sets index.device_cache)
+        dc = (device_cache if device_cache is not None
+              else getattr(index, "device_cache", None))
+        if isinstance(dc, (int, float)):
+            from repro.core.devicecache import DeviceBlockCache
+
+            if self._store is None:
+                raise ValueError("device_cache needs a BlockStore fetch "
+                                 "path (disk tier or explicit blockstore=)")
+            heat = getattr(getattr(index, "cache", None), "probe_heat", None)
+            dc = DeviceBlockCache(self._bspec, int(dc), heat_fn=heat)
+        if dc is not None and self._store is None:
+            raise ValueError("device_cache needs a BlockStore fetch path "
+                             "(disk tier or explicit blockstore=)")
+        self._device_cache = dc
         # async pair available iff the source IS the index's legacy pager
         self._async_src = (
             index if (self._store is None
@@ -872,6 +945,20 @@ class SearchEngine:
     def _use_operand_cache(self) -> bool:
         return self._store is not None and self.operand_cache != "off"
 
+    @property
+    def device_cache(self):
+        """The cross-batch device-resident block cache (None when off)."""
+        return self._device_cache
+
+    def _note_device_hits(self, n: int):
+        """Tells a sharded store how many blocks the device cache served —
+        fetches that never happened, i.e. avoided peer RPCs / disk reads."""
+        if n <= 0:
+            return
+        note = getattr(self._store, "note_device_hits", None)
+        if note is not None:
+            note(n)
+
     def _store_gather(self, slot_cluster, gens: Optional[np.ndarray] = None):
         """Whole-list gather through the BlockStore protocol — the sync
         executor's fetch stage (same record ordering, and therefore cache
@@ -881,10 +968,41 @@ class SearchEngine:
         flat = np.asarray(slot_cluster).reshape(-1)
         uniq, local = blockstore_lib.first_need_unique(flat)
         g = None if gens is None else gens[uniq]
+        if self._device_cache is not None:
+            return self._device_gather(flat, uniq, local, gens)
         recs = self._store.get(uniq, gens=g)
         self.stats.blocks_fetched += len(recs)
         return blockstore_lib.assemble_blocks(flat, uniq, local, recs,
                                               self._bspec)
+
+    def _device_gather(self, flat, uniq, local, gens):
+        """Device-cache-aware gather: resident clusters are served straight
+        from the device cache (no store fetch, no host assembly, no H2D);
+        only the misses cross the BlockStore, are device-put once and
+        admitted.  The batch's blocks are composed on device with the host
+        path's exact padding, so results stay bit-identical."""
+        dc = self._device_cache
+        egens = None if gens is None else gens[uniq]
+        s = flat.shape[0]
+        tile = dc.get_tile(uniq, s, egens)
+        if tile is not None:  # exact repeat: the composed blocks, verbatim
+            self._note_device_hits(len(uniq))
+            self.stats.blocks_reused += len(uniq)
+            return (local.astype(np.int32),) + tile
+        hits, missing = dc.get_many(uniq, egens)
+        self._note_device_hits(len(hits))
+        self.stats.blocks_reused += len(hits)
+        if missing:
+            marr = np.asarray(missing, np.int64)
+            recs = self._store.get(
+                marr, gens=None if gens is None else gens[marr]
+            )
+            self.stats.blocks_fetched += len(recs)
+            hits.update(dc.put_records(recs))
+        entries = [hits[int(c)] for c in uniq]
+        blocks = dc.compose(entries, s)
+        dc.put_tile(uniq, s, entries, blocks)
+        return (local.astype(np.int32),) + blocks
 
     def _expected_gens(self, plan: SearchPlan,
                        cids) -> Optional[np.ndarray]:
@@ -949,6 +1067,28 @@ class SearchEngine:
         if snap is None or snap.n_rows == 0:
             return res
         from repro.core import delta as delta_lib
+
+        # Delta-tier scan skip: a tiny resident interval/histogram summary
+        # over the segment's live rows (same machinery as the cluster
+        # summaries, same soundness contract) proves when a batch's filters
+        # can match zero delta rows — then the whole [Qpad, C] scan and its
+        # top-k merge are provably all-masked no-ops.  Only the cheap
+        # reach count survives, so n_scanned stays bit-identical to the
+        # unskipped fold.
+        summ = delta_lib.snapshot_summary(snap)
+        if summ is None or not bool(np.asarray(
+                summaries_lib.can_match(summ, plan.lo_pad, plan.hi_pad)
+        ).any()):
+            self.stats.delta_skips += 1
+            if summ is None:  # no live rows: reach is identically zero
+                return res
+            dscan = delta_lib.snapshot_reach(
+                snap, plan.geo_probes, plan.geo_valid
+            )
+            q = plan.q
+            return dataclasses.replace(
+                res, n_scanned=res.n_scanned + dscan[:q]
+            )
 
         dvals, dids, dscan, dpass = delta_lib.scan_snapshot(
             snap, plan.queries, plan.queries_pad, plan.lo_pad, plan.hi_pad,
@@ -1091,7 +1231,12 @@ class SearchEngine:
         """Prepares a pipelined batch (operand cache + per-tile novel fetch
         lists when the BlockStore path is active) and launches the first
         ``depth`` tile fetches."""
-        if self._use_operand_cache:
+        if self._device_cache is not None:
+            # the device cache subsumes the per-batch operand cache: the
+            # per-tile novel lists still bound what crosses the store, but
+            # in-batch reuse rides the same cross-batch device entries
+            plan.tile_work()
+        elif self._use_operand_cache:
             plan.operands = {}
             plan.tile_work()  # per-tile novel-cluster lists (host tables)
         return {i: self._submit(plan, i) for i in range(depth)}
@@ -1109,6 +1254,9 @@ class SearchEngine:
         self.stats.blocks_fetched += len(recs)
         sc = plan.slot_cluster.reshape(plan.n_tiles, plan.u_cap)[i]
         uniq, local = blockstore_lib.first_need_unique(sc)
+        if self._device_cache is not None:
+            return self._assemble_tile_device(plan, uniq, local, recs,
+                                              sc.shape[0])
         if plan.operands is not None:  # per-batch reuse on
             # the operand cache keys on (cluster_id, gen) like every other
             # cache layer — plan.gens is fixed for the batch, so this is a
@@ -1151,6 +1299,41 @@ class SearchEngine:
         return blockstore_lib.assemble_blocks(sc, uniq, local, recs,
                                               self._bspec, as_device=True)
 
+    def _assemble_tile_device(self, plan: SearchPlan, uniq, local, recs,
+                              s: int):
+        """Device-cache half of :meth:`_assemble_tile`: the tile's blocks
+        are composed from resident device entries (cross-batch hits) plus
+        this tile's store fetches, which are device-put once and admitted
+        — so a cluster several tiles (or batches) share never re-crosses
+        the store, the host assembler, or the H2D bus.  A resident entry
+        evicted between submit and assembly is re-fetched inline (same
+        fallback the operand cache uses), never scanned stale."""
+        dc = self._device_cache
+        egens = self._expected_gens(plan, uniq)
+        tile = dc.get_tile(uniq, s, egens)
+        if tile is not None:  # exact repeat: the composed blocks, verbatim
+            self._note_device_hits(len(uniq))
+            self.stats.blocks_reused += len(uniq)
+            dc.put_records(recs)  # admit this tile's fetches regardless
+            return (local.astype(np.int32),) + tile
+        hits, missing = dc.get_many(uniq, egens)
+        self._note_device_hits(len(hits))
+        self.stats.blocks_reused += len(hits)
+        entries = dict(hits)
+        entries.update(dc.put_records(recs))
+        gap = [c for c in missing if c not in entries]
+        if gap:
+            more = self._store.get(
+                np.asarray(gap, np.int64),
+                gens=self._expected_gens(plan, gap),
+            )
+            self.stats.blocks_fetched += len(more)
+            entries.update(dc.put_records(more))
+        ordered = [entries[int(c)] for c in uniq]
+        blocks = dc.compose(ordered, s)
+        dc.put_tile(uniq, s, ordered, blocks)
+        return (local.astype(np.int32),) + blocks
+
     def _submit(self, plan: SearchPlan, i: int):
         """Starts tile *i*'s fetch; returns (handle, t_submit, done_box).
         The waited handle always yields assembled, device-resident
@@ -1158,7 +1341,16 @@ class SearchEngine:
         t0 = time.monotonic()
         done = [None]  # completion timestamp, set by the done-callback
         if self._store is not None:
-            if self._use_operand_cache:
+            if self._device_cache is not None:
+                # fetch only this tile's novel clusters that are not already
+                # device-resident — on a device hit the store worker never
+                # sees the cluster (no disk read, no peer RPC); an entry
+                # evicted before assembly is re-fetched inline there
+                novel = plan.tile_work()[i].fetch
+                fetch_ids = self._device_cache.filter_missing(
+                    novel, self._expected_gens(plan, novel)
+                )
+            elif self._use_operand_cache:
                 # fetch only clusters no earlier tile of this batch needed;
                 # everything else is already (or will be) in plan.operands
                 fetch_ids = plan.tile_work()[i].fetch
@@ -1289,7 +1481,16 @@ class SearchEngine:
             if store_refresh is not None:
                 store_refresh()
         idx_refresh = getattr(self.index, "refresh", None)
-        return bool(idx_refresh()) if idx_refresh is not None else False
+        changed = bool(idx_refresh()) if idx_refresh is not None else False
+        if self._device_cache is not None:
+            # same precision contract as the host caches: the new generation
+            # vector names exactly the clusters the republish rewrote, and
+            # only their device entries (gen below the new minimum) drop —
+            # untouched hot clusters stay resident through the flip
+            gens = self._plan_gens()
+            if gens is not None:
+                self._device_cache.invalidate_below(gens)
+        return changed
 
     # ---- observability ----
     def metrics(self) -> Dict[str, Any]:
@@ -1316,10 +1517,17 @@ class SearchEngine:
             hit_rate = getattr(cache, "hit_rate", None)
             c["hit_rate"] = hit_rate() if callable(hit_rate) else hit_rate
             _flatten_metrics(out, "cache", c)
+        if self._device_cache is not None:
+            _flatten_metrics(out, "device_cache", self._device_cache.stats())
         tier = self._delta_tier()
         if tier is not None:
             _flatten_metrics(out, "delta", tier.stats())
         return out
+
+    def metrics_text(self) -> str:
+        """:meth:`metrics` rendered in Prometheus text exposition format
+        (``launch/serve.py --metrics-port`` serves this)."""
+        return render_prometheus(self.metrics())
 
     def close(self):
         pool = getattr(self, "_pool", None)

@@ -52,6 +52,7 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
                          breaker_kwargs: Optional[dict] = None,
                          probe_interval_s: Optional[float] = None,
                          delta_budget_mb: Optional[float] = None,
+                         device_cache_mb: Optional[float] = None,
                          ) -> Callable:
     """The batched server's default search step: the search engine.
 
@@ -111,6 +112,16 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
     folded delta rows out of RAM and flips the generation vector — the
     gen-keyed caches invalidate exactly the rewritten clusters).
     Requires a layout-v3 checkpoint (generation-tagged records).
+
+    ``device_cache_mb`` attaches a cross-batch device-resident block cache
+    (:class:`~repro.core.devicecache.DeviceBlockCache`) to a disk-tier
+    index: hot clusters' fully-assembled operand blocks stay on device
+    across batches under the byte budget, keyed ``(cluster_id, gen)`` and
+    evicted by observed probe heat — repeat traffic pays no disk read, no
+    peer RPC, no host assembly and no H2D transfer, and a republish
+    invalidates exactly the rewritten entries via the same ``refresh()``
+    handshake.  Stats under ``metrics()``'s ``device_cache.*`` keys; the
+    cache is exposed as ``search_fn.device_cache``.
     """
     from repro.core import blockstore as blockstore_lib
     from repro.core.disk import DiskIVFIndex
@@ -164,12 +175,28 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
             breaker_kwargs=breaker_kwargs,
             probe_interval_s=probe_interval_s,
         )
+    device_cache = None
+    if device_cache_mb is not None:
+        from repro.core.devicecache import DeviceBlockCache
+
+        if not isinstance(index, DiskIVFIndex):
+            raise ValueError(
+                "device_cache_mb needs a disk-tier index (a checkpoint "
+                "path or an open DiskIVFIndex) — the RAM tier's operands "
+                "are already resident"
+            )
+        device_cache = DeviceBlockCache(
+            blockstore_lib.BlockSpec.from_manifest(index.man),
+            int(device_cache_mb * 2**20),
+            heat_fn=index.cache.probe_heat,
+        )
+        index.device_cache = device_cache
     engine = SearchEngine(
         index, k=k, n_probes=n_probes, q_block=q_block, v_block=v_block,
         backend=backend, prune=prune, t_max=t_max, pipeline=pipeline,
         pipeline_depth=pipeline_depth, adaptive_u_cap=adaptive_u_cap,
         blockstore=store, operand_cache=operand_cache,
-        u_cap_ladder=u_cap_ladder,
+        u_cap_ladder=u_cap_ladder, device_cache=device_cache,
     )
 
     def search_fn(queries, fspec, shard_ok=None):
@@ -193,8 +220,10 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
         lambda: bool(getattr(engine.blockstore, "degraded", False))
     )
     search_fn.delta = delta
+    search_fn.device_cache = device_cache
     search_fn.refresh = engine.refresh
     search_fn.metrics = engine.metrics
+    search_fn.metrics_text = engine.metrics_text
     search_fn.close = close
     return search_fn
 

@@ -123,6 +123,22 @@ def main():
                     help="delta tier: republish (compact_deltas + between-"
                          "batch refresh) every this many live updates "
                          "(0 = never republish during the demo)")
+    ap.add_argument("--compact-rows", type=int, default=0,
+                    help="delta tier: pressure-driven republish when the "
+                         "delta holds at least this many rows (0 = off)")
+    ap.add_argument("--compact-stale-frac", type=float, default=0.0,
+                    help="delta tier: pressure-driven republish when "
+                         "pending tombstones exceed this fraction of the "
+                         "cold tier's live rows (0 = off)")
+    ap.add_argument("--device-cache-mb", type=float, default=None,
+                    help="disk tier: cross-batch device-resident block "
+                         "cache of this many MiB — repeat traffic reuses "
+                         "fully assembled on-device operand blocks (zero "
+                         "host assembly, zero H2D), heat-weighted LRU "
+                         "keyed on (cluster_id, gen)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus text exposition of the flat "
+                         "engine metrics at http://localhost:PORT/metrics")
     args = ap.parse_args()
     if args.t_max is not None and args.t_max != "auto":
         args.t_max = int(args.t_max)
@@ -184,6 +200,9 @@ def main():
     if args.delta_budget_mb is not None and args.tier != "disk":
         raise SystemExit("--delta-budget-mb needs --tier disk (the RAM "
                          "tier mutates in place via core.update)")
+    if args.device_cache_mb is not None and args.tier != "disk":
+        raise SystemExit("--device-cache-mb needs --tier disk (the RAM "
+                         "tier is already device-resident)")
     search_fn = make_fused_search_fn(
         serving_index, k=args.k, n_probes=args.probes, q_block=args.batch,
         prune=args.prune, t_max=args.t_max, pipeline=args.pipeline,
@@ -196,7 +215,38 @@ def main():
         peer_retries=args.peer_retries,
         probe_interval_s=args.probe_interval_s,
         delta_budget_mb=args.delta_budget_mb,
+        device_cache_mb=args.device_cache_mb,
     )
+    metrics_httpd = None
+    if args.metrics_port is not None:
+        import http.server
+        import threading
+
+        metrics_text = search_fn.metrics_text
+
+        class _MetricsHandler(http.server.BaseHTTPRequestHandler):
+            def do_GET(self):  # noqa: N802 (http.server API)
+                if self.path.rstrip("/") not in ("", "/metrics"):
+                    self.send_error(404)
+                    return
+                body = metrics_text().encode()
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4; charset=utf-8")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *a):  # keep the demo output clean
+                pass
+
+        metrics_httpd = http.server.ThreadingHTTPServer(
+            ("127.0.0.1", args.metrics_port), _MetricsHandler)
+        threading.Thread(target=metrics_httpd.serve_forever,
+                         daemon=True).start()
+        print(f"metrics: http://127.0.0.1:{metrics_httpd.server_address[1]}"
+              f"/metrics")
+
     if search_fn.blockstore is not None and args.cache_shards > 1:
         bs = search_fn.blockstore
         print(f"sharded cluster cache: {args.cache_shards} nodes "
@@ -227,7 +277,7 @@ def main():
         # next batch), every 4th step tombstones a recent add, and every
         # --compact-every steps the delta folds into the cold tier and the
         # serving loop flips generation between batches — no drain.
-        from repro.core.delta import compact_deltas
+        from repro.core.delta import compact_deltas, republish_pressure
 
         tier = search_fn.delta
         rng2 = np.random.default_rng(2)
@@ -241,10 +291,21 @@ def main():
             tier.add(v[None], a, np.asarray([base + step]))
             if step % 4 == 3:
                 tier.tombstone(np.asarray([base + step - 2]))
+            trigger = None
             if args.compact_every and (step + 1) % args.compact_every == 0:
-                st = compact_deltas(index_dir, tier)
+                trigger = "manual"
+            if trigger is None:
+                trigger = republish_pressure(
+                    tier,
+                    rows_watermark=args.compact_rows or None,
+                    stale_frac=args.compact_stale_frac or None,
+                    n_live=int(serving_index.man["n_live"]),
+                )
+            if trigger is not None:
+                st = compact_deltas(index_dir, tier, trigger=trigger)
                 server.request_refresh()
-                print(f"republished: {st.clusters_rewritten} clusters "
+                print(f"republished ({st.trigger}): "
+                      f"{st.clusters_rewritten} clusters "
                       f"(gen {st.gen_max}), folded {st.rows_folded} rows, "
                       f"reclaimed {st.rows_reclaimed}")
             server.search_blocking(v)  # drains any pending refresh first
@@ -254,6 +315,8 @@ def main():
               f"{tier.stats()['live_rows']} rows still in RAM delta")
 
     server.stop()
+    if metrics_httpd is not None:
+        metrics_httpd.shutdown()
     # One flat metrics surface (engine / store / cache / delta under
     # dotted keys) instead of per-layer ad-hoc reports.
     for key, val in sorted(search_fn.engine.metrics().items()):

@@ -1,0 +1,569 @@
+"""Cross-batch device-resident block cache: heat-aware, generation-keyed
+operand LRU.
+
+The contract under test: with a ``DeviceBlockCache`` attached, results stay
+BIT-IDENTICAL to the sync no-cache path — across prune × pipeline × store
+(+ SQ8) — while repeat traffic is served from device-resident blocks (zero
+host assembly, zero H2D).  The cache obeys its byte budget, evicts by
+observed probe heat, and honours the generation contract end to end: a
+republish invalidates exactly the rewritten ``(cluster_id, gen)`` entries,
+and a stale device block is never scanned even before the refresh lands.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    DeltaTier,
+    FilterSpec,
+    HybridSpec,
+    compact_deltas,
+    match_all,
+    storage,
+)
+from repro.core import blockstore as bs
+from repro.core import delta as delta_lib
+from repro.core.devicecache import DeviceBlockCache, record_nbytes
+from repro.core.disk import DiskIVFIndex
+from repro.core.engine import SearchEngine, search_fused_tiled
+from repro.core.ivf import build_from_assignments, quantize_index
+
+N, D, M, KC = 1536, 32, 6, 12
+TS_RANGE = 6000
+K, NP, QB = 10, 4, 8
+
+
+def _topic_index(metric="dot", vpad_headroom=0):
+    rng = np.random.default_rng(3)
+    centers = rng.standard_normal((KC, D)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=-1, keepdims=True)
+    topic = (np.arange(N) * KC) // N
+    core = centers[topic] + 0.05 * rng.standard_normal((N, D)).astype(
+        np.float32
+    )
+    core /= np.linalg.norm(core, axis=-1, keepdims=True)
+    band = TS_RANGE // KC
+    attrs = rng.integers(0, 16, (N, M)).astype(np.int16)
+    attrs[:, 0] = (topic * band + rng.integers(0, band, N)).astype(np.int16)
+    spec = HybridSpec(dim=D, n_attrs=M, core_dtype=jnp.float32,
+                      metric=metric)
+    vpad = (int(np.bincount(topic, minlength=KC).max()) + vpad_headroom
+            if vpad_headroom else None)
+    index, _ = build_from_assignments(
+        spec, jnp.asarray(centers), jnp.asarray(core), jnp.asarray(attrs),
+        jnp.asarray(topic), vpad=vpad, ids=jnp.arange(N),
+    )
+    return index, centers, core
+
+
+def _window_fspec(q, width, seed=7):
+    rng = np.random.default_rng(seed)
+    lo = np.full((q, 1, M), -32768, np.int16)
+    hi = np.full((q, 1, M), 32767, np.int16)
+    start = rng.integers(0, max(TS_RANGE - width, 1), q)
+    lo[:, 0, 0] = start.astype(np.int16)
+    hi[:, 0, 0] = (start + width - 1).astype(np.int16)
+    return FilterSpec(lo=jnp.asarray(lo), hi=jnp.asarray(hi))
+
+
+def _assert_identical(a, b, msg=""):
+    np.testing.assert_array_equal(np.asarray(b.ids), np.asarray(a.ids),
+                                  err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(b.scores), np.asarray(a.scores),
+                                  err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(b.n_scanned),
+                                  np.asarray(a.n_scanned), err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(b.n_passed),
+                                  np.asarray(a.n_passed), err_msg=msg)
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    index, centers, core = _topic_index()
+    ckpt = str(tmp_path_factory.mktemp("devcache"))
+    storage.save_index(index, ckpt, n_shards=2)
+    return index, centers, core, ckpt
+
+
+# ---------------------------------------------------------------------------
+# Parity matrix: device cache vs the sync no-cache path, prune × pipeline
+# (+ sharded store, + SQ8), cold AND warm passes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pipeline", ["off", "on"])
+@pytest.mark.parametrize("prune", ["off", "on"])
+def test_device_cache_parity_matrix(built, prune, pipeline):
+    index, centers, core, ckpt = built
+    q = 21  # ragged multi-tile at q_block=8
+    queries = jnp.asarray(core[5:5 + q] + 0.01)
+    kw = dict(k=K, n_probes=NP, q_block=QB, v_block=128, backend="xla",
+              prune=prune)
+    for fspec in (match_all(q, M), _window_fspec(q, TS_RANGE // KC)):
+        with DiskIVFIndex.open(ckpt) as disk:
+            sync = SearchEngine(disk, gather_fn=disk.gather, pipeline="off",
+                                **kw).search(queries, fspec)
+            eng = SearchEngine(disk, pipeline=pipeline,
+                               device_cache=64 * 2**20, **kw)
+            cold = eng.search(queries, fspec)
+            warm = eng.search(queries, fspec)  # repeat pass: device hits
+            tag = f"prune={prune} pipeline={pipeline}"
+            _assert_identical(sync, cold, f"cold {tag}")
+            _assert_identical(sync, warm, f"warm {tag}")
+            st = eng.device_cache.stats()
+            assert st["hits"] > 0, st
+            # the warm pass assembled nothing on the host and fetched
+            # nothing from the store
+            assert st["puts"] == st["misses"]
+
+
+def test_device_cache_sharded_counts_avoided_fetches(built):
+    index, centers, core, ckpt = built
+    q = 21
+    queries = jnp.asarray(core[5:5 + q] + 0.01)
+    fspec = match_all(q, M)
+    kw = dict(k=K, n_probes=NP, q_block=QB, backend="xla")
+    ref = search_fused_tiled(index, queries, fspec, **kw)
+    sharded = bs.open_sharded(ckpt, n_nodes=3)
+    try:
+        with DiskIVFIndex.open(ckpt) as disk:
+            eng = SearchEngine(disk, blockstore=sharded, pipeline="on",
+                               device_cache=64 * 2**20, **kw)
+            _assert_identical(ref, eng.search(queries, fspec), "cold")
+            fetched_cold = eng.stats.blocks_fetched
+            _assert_identical(ref, eng.search(queries, fspec), "warm")
+            # warm pass: every block came from device, none from the ring
+            assert eng.stats.blocks_fetched == fetched_cold
+            assert sharded.stats()["device_hits"] > 0
+    finally:
+        sharded.close()
+
+
+def test_device_cache_sq8_parity(built, tmp_path):
+    index, centers, core, _ = built
+    qindex = quantize_index(index)
+    ckpt = str(tmp_path / "sq8")
+    storage.save_index(qindex, ckpt, n_shards=2)
+    q = 21
+    queries = jnp.asarray(core[:q])
+    kw = dict(k=K, n_probes=NP, q_block=QB, backend="xla")
+    ram = search_fused_tiled(qindex, queries, match_all(q, M), **kw)
+    with DiskIVFIndex.open(ckpt) as disk:
+        eng = SearchEngine(disk, pipeline="on", device_cache=64 * 2**20,
+                           **kw)
+        _assert_identical(ram, eng.search(queries, match_all(q, M)), "cold")
+        _assert_identical(ram, eng.search(queries, match_all(q, M)), "warm")
+        assert eng.device_cache.stats()["hits"] > 0
+
+
+def test_device_cache_requires_store(built):
+    index, *_ = built
+    with pytest.raises(ValueError, match="device_cache"):
+        SearchEngine(index, k=K, n_probes=NP, device_cache=8 * 2**20)
+
+
+# ---------------------------------------------------------------------------
+# Budget enforcement + heat-weighted eviction (unit level)
+# ---------------------------------------------------------------------------
+
+
+def _mini_spec():
+    return bs.BlockSpec(vpad=8, dim=4, n_attrs=2, has_norms=False,
+                        quantized=False, store_dtype=np.dtype(np.float32))
+
+
+def _mini_rec(spec, cid, gen=0):
+    rng = np.random.default_rng(cid)
+    return {
+        "vectors": rng.standard_normal((spec.vpad, spec.dim)).astype(
+            np.float32),
+        "attrs": rng.integers(0, 9, (spec.vpad, spec.n_attrs)).astype(
+            np.int16),
+        "ids": np.arange(spec.vpad, dtype=np.int32) + cid * 100,
+        "gen": np.asarray([gen], np.int32),
+    }
+
+
+def test_budget_enforced_and_eviction_by_heat():
+    spec = _mini_spec()
+    heat = {0: 50.0, 1: 1.0, 2: 40.0, 3: 2.0}
+    cache = DeviceBlockCache(spec, budget_bytes=3 * record_nbytes(spec),
+                             heat_fn=lambda c: heat.get(c, 0.0))
+    assert cache.capacity_records == 3
+    cache.put_records({c: _mini_rec(spec, c) for c in (0, 1, 2)})
+    assert cache.stats()["entries"] == 3
+    assert cache.resident_bytes <= cache.budget_bytes
+    # admitting a 4th entry evicts the COLDEST (cid 1), not the LRU-oldest
+    # (cid 0, heat 50)
+    cache.put_records({3: _mini_rec(spec, 3)})
+    st = cache.stats()
+    assert st["entries"] == 3 and st["evictions"] == 1
+    assert cache.resident_bytes <= cache.budget_bytes
+    hits, missing = cache.get_many([0, 1, 2, 3])
+    assert missing == [1] and set(hits) == {0, 2, 3}
+
+
+def test_budget_below_one_entry_is_compose_only():
+    spec = _mini_spec()
+    cache = DeviceBlockCache(spec, budget_bytes=record_nbytes(spec) - 1)
+    assert cache.capacity_records == 0
+    out = cache.put_records({5: _mini_rec(spec, 5)})
+    assert 5 in out  # the batch still composes from the device-put record
+    assert cache.stats()["entries"] == 0  # but nothing is admitted
+    assert cache.resident_bytes == 0
+
+
+def test_stale_generation_never_served():
+    spec = _mini_spec()
+    cache = DeviceBlockCache(spec, budget_bytes=8 * record_nbytes(spec))
+    cache.put_records({7: _mini_rec(spec, 7, gen=1)})
+    # expected minimum gen 2 → the gen-1 entry is dropped, reported a miss
+    hits, missing = cache.get_many([7], gens=np.asarray([2]))
+    assert hits == {} and missing == [7]
+    assert cache.stats()["invalidations"] == 1
+    # re-admitting the fresh record replaces it; an older record never
+    # downgrades a fresher entry
+    cache.put_records({7: _mini_rec(spec, 7, gen=2)})
+    cache.put_records({7: _mini_rec(spec, 7, gen=1)})
+    hits, _ = cache.get_many([7], gens=np.asarray([2]))
+    assert hits[7].gen == 2
+
+
+def test_invalidate_below_is_precise():
+    spec = _mini_spec()
+    cache = DeviceBlockCache(spec, budget_bytes=8 * record_nbytes(spec))
+    cache.put_records({c: _mini_rec(spec, c, gen=0) for c in (0, 1, 2)})
+    gens = np.zeros(KC, np.int64)
+    gens[1] = 3  # a republish rewrote only cluster 1
+    assert cache.invalidate_below(gens) == 1
+    hits, missing = cache.get_many([0, 1, 2])
+    assert missing == [1] and set(hits) == {0, 2}
+
+
+def test_filter_missing_is_pure_peek():
+    spec = _mini_spec()
+    cache = DeviceBlockCache(spec, budget_bytes=8 * record_nbytes(spec))
+    cache.put_records({0: _mini_rec(spec, 0)})
+    before = cache.stats()
+    out = cache.filter_missing(np.asarray([0, 4, 9]))
+    np.testing.assert_array_equal(out, [4, 9])
+    after = cache.stats()
+    assert (after["hits"], after["misses"]) == (before["hits"],
+                                               before["misses"])
+
+
+def test_tile_memo_exact_repeat_and_budget_yield():
+    spec = _mini_spec()
+    nb = record_nbytes(spec)
+    cache = DeviceBlockCache(spec, budget_bytes=8 * nb)
+    ents = cache.put_records({c: _mini_rec(spec, c, gen=1) for c in (0, 1)})
+    blocks = cache.compose([ents[0], ents[1]], 4)
+    cache.put_tile([0, 1], 4, [ents[0], ents[1]], blocks)
+    assert cache.stats()["tiles"] == 1
+    assert cache.resident_bytes == 2 * nb + 4 * nb
+    # an exact repeat gets the very same composed blocks back
+    assert cache.get_tile([0, 1], 4, np.asarray([1, 1])) is blocks
+    # every member counted as a device hit (same fetches avoided)
+    assert cache.stats()["hits"] == 2 and cache.stats()["tile_hits"] == 1
+    # a different slot count or member order is a different tile
+    assert cache.get_tile([0, 1], 5) is None
+    assert cache.get_tile([1, 0], 4) is None
+    # a republished member makes the whole tile stale — refused + dropped
+    assert cache.get_tile([0, 1], 4, np.asarray([2, 1])) is None
+    st = cache.stats()
+    assert st["tiles"] == 0 and st["invalidations"] == 1
+
+    # tiles only live in budget the entries aren't using
+    tight = DeviceBlockCache(spec, budget_bytes=2 * nb)
+    e2 = tight.put_records({c: _mini_rec(spec, c) for c in (0, 1)})
+    tight.put_tile([0, 1], 2, [e2[0], e2[1]],
+                   tight.compose([e2[0], e2[1]], 2))
+    assert tight.stats()["tiles"] == 0  # entries fill the budget: no memo
+    assert tight.resident_bytes <= tight.budget_bytes
+    # ... and an entry admission evicts tiles to make room, never the
+    # other way around
+    mid = DeviceBlockCache(spec, budget_bytes=4 * nb)
+    e3 = mid.put_records({c: _mini_rec(spec, c) for c in (0, 1)})
+    mid.put_tile([0, 1], 2, [e3[0], e3[1]], mid.compose([e3[0], e3[1]], 2))
+    assert mid.stats()["tiles"] == 1
+    mid.put_records({2: _mini_rec(spec, 2), 3: _mini_rec(spec, 3)})
+    st = mid.stats()
+    assert st["entries"] == 4 and st["tiles"] == 0
+    assert mid.resident_bytes <= mid.budget_bytes
+
+
+# ---------------------------------------------------------------------------
+# Invalidation plane, end to end: a republish drops exactly the rewritten
+# (cid, gen) device entries; stale device blocks are never scanned
+# ---------------------------------------------------------------------------
+
+
+def _open_live(tmp_path, budget_mb=8.0):
+    index, centers, core = _topic_index(vpad_headroom=96)
+    ckpt = str(tmp_path / "ck")
+    storage.save_index(index, ckpt, n_shards=2)
+    disk = DiskIVFIndex.open(ckpt)
+    tier = DeltaTier.for_index(disk, budget_mb)
+    disk.delta = tier
+    return disk, tier, centers, core, ckpt
+
+
+def test_republish_invalidates_exactly_rewritten(tmp_path):
+    disk, tier, centers, core, ckpt = _open_live(tmp_path)
+    kw = dict(k=K, n_probes=NP, q_block=QB, backend="xla")
+    eng = SearchEngine(disk, pipeline="on", device_cache=64 * 2**20, **kw)
+    plain = SearchEngine(disk, **kw)
+    q = 21
+    queries = jnp.asarray(core[5:5 + q] + 0.01)
+    fspec = match_all(q, M)
+    eng.search(queries, fspec)  # warm: every probed cluster goes resident
+    resident_before = set(eng.device_cache._entries)
+    assert len(resident_before) >= 4
+
+    # delta adds land in clusters 0 and 1 only → the republish rewrites
+    # exactly those
+    rng = np.random.default_rng(9)
+    add = (centers[rng.integers(0, 2, 24)]
+           + 0.01 * rng.standard_normal((24, D))).astype(np.float32)
+    add /= np.linalg.norm(add, axis=-1, keepdims=True)
+    tier.add(add, rng.integers(0, 16, (24, M)).astype(np.int16),
+             np.arange(N, N + 24))
+    st = compact_deltas(ckpt, tier, trigger="rows")
+    assert st.trigger == "rows"
+    rewritten = set(range(KC)) - {
+        c for c in range(KC) if int(disk.gens[c]) == 0
+    } if hasattr(disk, "gens") else None
+
+    tiles_before = list(eng.device_cache._tiles)
+    inval_pre = eng.device_cache.stats()["invalidations"]
+    assert eng.refresh()
+    plain.refresh()
+    dropped = eng.device_cache.stats()["invalidations"] - inval_pre
+    gens_now = np.asarray(disk.gens)
+    expect_dropped = {c for c in resident_before if int(gens_now[c]) > 0}
+    stale_tiles = [key for key in tiles_before
+                   if any(int(gens_now[c]) > 0 for c in key[0])]
+    assert dropped == len(expect_dropped) + len(stale_tiles)
+    assert expect_dropped
+    # untouched entries (and tiles with no rewritten member) stayed resident
+    assert set(eng.device_cache._entries) == resident_before - expect_dropped
+    assert (set(eng.device_cache._tiles)
+            == set(tiles_before) - set(stale_tiles))
+
+    # post-republish results: bit-identical to a cache-free engine reading
+    # the fresh blocks (a stale device block would break this)
+    _assert_identical(plain.search(queries, fspec),
+                      eng.search(queries, fspec), "post-republish")
+    assert eng.device_cache.stats()["hits"] > 0  # survivors still serve
+    eng.close()
+    plain.close()
+    disk.close()
+
+
+def test_stale_device_block_never_scanned_before_refresh(tmp_path):
+    """Between the republish and the engine's refresh, the plan still
+    carries the old expected gens — the cache serves its (still-matching)
+    entries.  After refresh the plan demands the new minimums and every
+    rewritten entry is re-fetched, never served stale."""
+    disk, tier, centers, core, ckpt = _open_live(tmp_path)
+    kw = dict(k=K, n_probes=NP, q_block=QB, backend="xla")
+    eng = SearchEngine(disk, pipeline="on", device_cache=64 * 2**20, **kw)
+    q = 21
+    queries = jnp.asarray(core[5:5 + q] + 0.01)
+    fspec = match_all(q, M)
+    eng.search(queries, fspec)
+
+    rng = np.random.default_rng(9)
+    add = (centers[rng.integers(0, 2, 16)]
+           + 0.01 * rng.standard_normal((16, D))).astype(np.float32)
+    add /= np.linalg.norm(add, axis=-1, keepdims=True)
+    tier.add(add, rng.integers(0, 16, (16, M)).astype(np.int16),
+             np.arange(N, N + 16))
+    compact_deltas(ckpt, tier)
+    assert eng.refresh()
+    eng.device_cache.put_records  # noqa: B018 — keep reference explicit
+
+    # simulate a straggler entry that refresh missed: re-insert a gen-0
+    # record for a rewritten cluster, then search — the lookup-time gen
+    # check must refuse it
+    gens_now = np.asarray(disk.gens)
+    rewritten = [c for c in range(KC) if int(gens_now[c]) > 0]
+    assert rewritten
+    cid = rewritten[0]
+    stale_rec = dict(disk.reader.read(cid))
+    stale_rec["gen"] = np.asarray([0], np.int32)
+    eng.device_cache._entries.pop(cid, None)
+    eng.device_cache.put_records({cid: stale_rec})
+    inval_pre = eng.device_cache.stats()["invalidations"]
+    plain = SearchEngine(disk, **kw)
+    _assert_identical(plain.search(queries, fspec),
+                      eng.search(queries, fspec), "stale entry refused")
+    assert eng.device_cache.stats()["invalidations"] > inval_pre
+    eng.close()
+    plain.close()
+    disk.close()
+
+
+# ---------------------------------------------------------------------------
+# Delta-tier scan skip: provably-zero-match batches skip the fold
+# ---------------------------------------------------------------------------
+
+
+def test_delta_skip_when_filters_cannot_match(tmp_path):
+    disk, tier, centers, core, ckpt = _open_live(tmp_path)
+    kw = dict(k=K, n_probes=NP, q_block=QB, backend="xla")
+    eng = SearchEngine(disk, device_cache=64 * 2**20, **kw)
+    plain = SearchEngine(disk, **kw)
+
+    # delta rows live in attr0 band [20000, 20010) — far above any
+    # checkpoint timestamp
+    rng = np.random.default_rng(9)
+    add = (centers[rng.integers(0, KC, 30)]
+           + 0.05 * rng.standard_normal((30, D))).astype(np.float32)
+    add /= np.linalg.norm(add, axis=-1, keepdims=True)
+    attrs = rng.integers(0, 16, (30, M)).astype(np.int16)
+    attrs[:, 0] = 20000 + rng.integers(0, 10, 30).astype(np.int16)
+    tier.add(add, attrs, np.arange(N, N + 30))
+
+    q = 21
+    queries = jnp.asarray(core[5:5 + q] + 0.01)
+    lo = np.full((q, 1, M), -32768, np.int16)
+    hi = np.full((q, 1, M), 32767, np.int16)
+    lo[:, 0, 0], hi[:, 0, 0] = 100, 900  # below the delta band everywhere
+    no_match = FilterSpec(lo=jnp.asarray(lo), hi=jnp.asarray(hi))
+
+    # the skip is invisible in results — n_scanned/n_passed included
+    _assert_identical(plain.search(queries, no_match),
+                      eng.search(queries, no_match), "delta skip")
+    assert eng.stats.delta_skips == 1 and eng.stats.delta_folds == 0
+    assert plain.stats.delta_skips == 1
+
+    # a filter that reaches the delta band folds as before
+    _assert_identical(plain.search(queries, match_all(q, M)),
+                      eng.search(queries, match_all(q, M)), "delta fold")
+    assert eng.stats.delta_folds == 1 and eng.stats.delta_skips == 1
+    eng.close()
+    plain.close()
+    disk.close()
+
+
+def test_delta_skip_empty_delta_counts_skip(tmp_path):
+    disk, tier, centers, core, ckpt = _open_live(tmp_path)
+    eng = SearchEngine(disk, k=K, n_probes=NP, q_block=QB)
+    tier.add(np.zeros((1, D), np.float32), np.zeros((1, M), np.int16),
+             np.asarray([N]))
+    tier.tombstone(np.asarray([N]))  # delta now holds zero LIVE rows
+    q = 8
+    res = eng.search(jnp.asarray(core[:q]), match_all(q, M))
+    assert res.ids.shape == (q, K)
+    assert eng.stats.delta_skips == 1 and eng.stats.delta_folds == 0
+    eng.close()
+    disk.close()
+
+
+# ---------------------------------------------------------------------------
+# Pressure-driven republish
+# ---------------------------------------------------------------------------
+
+
+def test_republish_pressure_watermarks(tmp_path):
+    disk, tier, centers, core, ckpt = _open_live(tmp_path)
+    assert delta_lib.republish_pressure(tier, rows_watermark=10,
+                                        n_live=N) is None
+    rng = np.random.default_rng(9)
+    add = (centers[rng.integers(0, KC, 12)]
+           + 0.05 * rng.standard_normal((12, D))).astype(np.float32)
+    tier.add(add.astype(np.float32),
+             rng.integers(0, 16, (12, M)).astype(np.int16),
+             np.arange(N, N + 12))
+    assert delta_lib.republish_pressure(tier, rows_watermark=10,
+                                        n_live=N) == "rows"
+    assert delta_lib.republish_pressure(tier, rows_watermark=100,
+                                        n_live=N) is None
+    # stale pressure: tombstones against the cold tier
+    dead = np.arange(0, 160)
+    tier.tombstone(dead, clusters=np.zeros(160, np.int64))
+    assert delta_lib.republish_pressure(tier, stale_frac=0.05,
+                                        n_live=N) == "stale"
+    assert delta_lib.republish_pressure(tier, stale_frac=0.5,
+                                        n_live=N) is None
+    # rows wins when both fire (checked first — cheapest signal)
+    assert delta_lib.republish_pressure(tier, rows_watermark=10,
+                                        stale_frac=0.05, n_live=N) == "rows"
+    st = compact_deltas(ckpt, tier, trigger="stale")
+    assert st.trigger == "stale"
+    # a frozen-but-uncommitted republish suppresses pressure (the relief
+    # is already in flight) ...
+    assert tier.stats()["pending"]
+    assert delta_lib.republish_pressure(tier, rows_watermark=10,
+                                        stale_frac=0.05, n_live=N) is None
+    # ... and once the serving side commits, the watermarks are clear
+    assert tier.commit()
+    assert delta_lib.republish_pressure(tier, rows_watermark=10,
+                                        stale_frac=0.05, n_live=N) is None
+    disk.close()
+
+
+# ---------------------------------------------------------------------------
+# Observability: Prometheus text exposition
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_text_exposition(built):
+    index, centers, core, ckpt = built
+    q = 8
+    with DiskIVFIndex.open(ckpt) as disk:
+        eng = SearchEngine(disk, k=K, n_probes=NP, q_block=QB,
+                           device_cache=8 * 2**20)
+        eng.search(jnp.asarray(core[:q]), match_all(q, M))
+        eng.search(jnp.asarray(core[:q]), match_all(q, M))
+        text = eng.metrics_text()
+    assert text.endswith("\n")
+    lines = text.splitlines()
+    assert "# TYPE repro_engine_batches counter" in lines
+    assert "repro_engine_batches 2" in lines
+    assert "# TYPE repro_device_cache_hits counter" in lines
+    assert "# TYPE repro_device_cache_resident_bytes gauge" in lines
+    for counter in ("repro_device_cache_hits", "repro_device_cache_misses",
+                    "repro_device_cache_evictions",
+                    "repro_device_cache_invalidations"):
+        assert any(ln.startswith(counter + " ") for ln in lines), counter
+    # string-valued metrics become labelled info gauges
+    assert any(ln.startswith("repro_store_kind{value=") for ln in lines)
+    # every sample line is "name[{labels}] value"
+    for ln in lines:
+        if not ln.startswith("#"):
+            assert len(ln.rsplit(" ", 1)) == 2, ln
+
+
+def test_serving_fn_device_cache(built):
+    from repro.core.serving import make_fused_search_fn
+
+    index, centers, core, ckpt = built
+    q = 8
+    queries = jnp.asarray(core[:q])
+    fspec = match_all(q, M)
+    ram_fn = make_fused_search_fn(index, k=5, n_probes=NP, q_block=QB)
+    fn = make_fused_search_fn(ckpt, k=5, n_probes=NP, q_block=QB,
+                              device_cache_mb=8)
+    try:
+        ram_scores, ram_ids = ram_fn(queries, fspec, None)
+        for _ in range(2):
+            scores, ids = fn(queries, fspec, None)
+            np.testing.assert_array_equal(np.asarray(ram_ids),
+                                          np.asarray(ids))
+            np.testing.assert_array_equal(np.asarray(ram_scores),
+                                          np.asarray(scores))
+        assert fn.device_cache.stats()["hits"] > 0
+        assert "repro_device_cache_hits" in fn.metrics_text()
+    finally:
+        fn.close()
+
+
+def test_serving_fn_device_cache_needs_disk(built):
+    from repro.core.serving import make_fused_search_fn
+
+    index, *_ = built
+    with pytest.raises(ValueError, match="device_cache_mb"):
+        make_fused_search_fn(index, k=5, n_probes=NP, device_cache_mb=8)
