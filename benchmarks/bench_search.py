@@ -1269,6 +1269,174 @@ def bench_selectivity_sweep(index, core, attrs, rng, *, q=64, n_batches=8,
     return entries, summary, exact
 
 
+# termination bench: topic count = summary histogram bins, so each topic
+# owns exactly one attr0 time band *and* one attr1 category bin — the
+# expected-passing estimate for a cross-topic probe then sees only the
+# planted outlier rows instead of aliased neighbor mass
+KT = 16
+N_HOT_TERM = 3  # hot topics per batch — their slots all fit in segment 0
+
+
+def build_term():
+    """Twin-pair topic index for the termination bench.
+
+    Topics come in twin pairs: each topic's centroid has one near-duplicate
+    (centroid score ≈ 0.97 — a probe the provable bound can never clear)
+    while cross-pair centroids are near-orthogonal (score ≈ 0, provably
+    below the running kth once the own cluster fills the top-k).  A query's
+    probe set is therefore {own, twin, 2 far fillers}: the exact tier
+    terminates the fillers on the proof, and only the ε tier can drop the
+    twin.  Timestamps (attr0) fill per-topic bands shuffled against the
+    pairing, attr1 is the topic id (one histogram bin per topic), and a
+    small fixed count of outlier rows per cluster keeps every cross-topic
+    probe alive through pruning (nonzero histogram mass in both attrs)
+    while its expected *joint* passing mass stays ≪ 1 — exactly what the
+    ε model drops, at essentially zero recall cost.
+    """
+    rng = np.random.default_rng(5)
+    base = rng.standard_normal((KT // 2, D)).astype(np.float32)
+    base /= np.linalg.norm(base, axis=-1, keepdims=True)
+    step = rng.standard_normal((KT // 2, D)).astype(np.float32)
+    step /= np.linalg.norm(step, axis=-1, keepdims=True)
+    centers = np.empty((KT, D), np.float32)
+    centers[0::2] = base
+    twin = base + 0.25 * step
+    centers[1::2] = twin / np.linalg.norm(twin, axis=-1, keepdims=True)
+    topic = (np.arange(N) * KT) // N
+    core = centers[topic] + 0.05 * rng.standard_normal((N, D)).astype(
+        np.float32
+    )
+    band_of = rng.permutation(KT)
+    band = TS_RANGE // KT
+    ts = band_of[topic] * band + rng.integers(0, band, N)
+    cat = topic.copy()
+    # planted outliers, exact counts per cluster: one ts row per histogram
+    # bin (the endpoints pin the summary interval to the full range) and
+    # two rows per category — every cross-topic probe survives pruning
+    # with the minimum possible expected mass, and the two populations are
+    # disjoint so no planted row ever passes a joint filter
+    bin_ts = (np.arange(KT) * (TS_RANGE - 1)) // (KT - 1)
+    for t in range(KT):
+        rows = np.flatnonzero(topic == t)
+        ts[rows[:KT]] = bin_ts
+        cat[rows[KT:3 * KT]] = np.repeat(np.arange(KT), 2)
+    attrs = rng.integers(0, 16, (N, M)).astype(np.int16)
+    attrs[:, 0] = ts.astype(np.int16)
+    attrs[:, 1] = cat.astype(np.int16)
+    spec = HybridSpec(dim=D, n_attrs=M, core_dtype=jnp.float32)
+    index, stats = build_from_assignments(
+        spec, jnp.asarray(centers), jnp.asarray(core), jnp.asarray(attrs),
+        jnp.asarray(topic),
+    )
+    return index, stats, core, attrs, centers, band_of
+
+
+def term_stream(centers, band_of, q, rng, selectivity):
+    """Hot-topic queries, each filtering its own topic's time window + id."""
+    w = max(int(selectivity * TS_RANGE), 1)
+    band = TS_RANGE // KT
+    # hot topics from distinct twin pairs (a hot twin would change nothing
+    # — its queries just see the pairing from the other side)
+    pairs = rng.permutation(KT // 2)[:N_HOT_TERM]
+    hot = 2 * pairs + rng.integers(0, 2, N_HOT_TERM)
+    topics = hot[rng.integers(0, N_HOT_TERM, q)]
+    qs = centers[topics] + 0.01 * rng.standard_normal((q, D)).astype(
+        np.float32
+    )
+    lo = np.full((q, 1, M), -32768, np.int16)
+    hi = np.full((q, 1, M), 32767, np.int16)
+    start = band_of[topics] * band + rng.integers(0, max(band - w, 1), q)
+    lo[:, 0, 0] = start.astype(np.int16)
+    hi[:, 0, 0] = (start + w - 1).astype(np.int16)
+    lo[:, 0, 1] = topics.astype(np.int16)
+    hi[:, 0, 1] = topics.astype(np.int16)
+    return jnp.asarray(qs), FilterSpec(lo=jnp.asarray(lo), hi=jnp.asarray(hi))
+
+
+def bench_bounded_termination(index, centers, band_of, rng, *, q=64,
+                              n_batches=8, selectivity=0.005,
+                              epsilons=(0.0, 0.01, 0.05)):
+    """QPS + recall@k per termination arm on the selective stream.
+
+    Arms: the PR-8 path (``termination=None``), the provable tier
+    (``"exact"``), and ``"bounded"`` at each ε.  Recall is measured against
+    the baseline arm's results; the exact and ε=0 arms are additionally
+    gated bit-identical to the baseline *and* to ``search_reference``.
+    """
+    qb = min(64, round_up(q, 8))
+    batches = [term_stream(centers, band_of, q, rng, selectivity)
+               for _ in range(n_batches)]
+    arms = [("baseline", None, 0.0), ("exact", "exact", 0.0)]
+    arms += [(f"eps{e:g}", "bounded", float(e)) for e in sorted(epsilons)]
+    cells = {}
+    base_results = None
+    exact_ok = True
+    for name, term, eps in arms:
+        eng = SearchEngine(index, k=K, n_probes=T, q_block=qb, prune="on",
+                           termination=term, epsilon=eps)
+
+        def run(qs, fs):
+            return eng.search(qs, fs)
+
+        jax.block_until_ready(run(*batches[0]).ids)  # compile
+        walls = []
+        for _ in range(5):  # median-of-passes: shared-machine noise
+            t0 = time.perf_counter()
+            last = None
+            for qs, fs in batches:
+                last = run(qs, fs)
+            jax.block_until_ready(last.ids)
+            walls.append(time.perf_counter() - t0)
+        wall = float(np.median(walls))
+        eng.stats = EngineStats()  # the gated pass's counters only
+        results = [run(qs, fs) for qs, fs in batches]
+        cell = dict(
+            termination=term, epsilon=eps,
+            qps=round(q * n_batches / wall, 1),
+            probes_terminated=int(eng.stats.probes_terminated),
+            segments_skipped=int(eng.stats.term_segments_skipped),
+        )
+        if base_results is None:
+            base_results = results
+        else:
+            cell["recall_at_k"] = round(float(np.mean([
+                recall_at_k(got, ref)
+                for got, ref in zip(results, base_results)
+            ])), 4)
+        if name in ("exact", "eps0"):
+            bit = all(
+                (np.asarray(a.ids) == np.asarray(b.ids)).all()
+                and (np.asarray(a.scores) == np.asarray(b.scores)).all()
+                for a, b in zip(results, base_results)
+            )
+            ref = search_reference(index, batches[0][0], batches[0][1],
+                                   k=K, n_probes=T)
+            bit = bit and bool(
+                (np.asarray(ref.ids) == np.asarray(results[0].ids)).all()
+            )
+            cell["exact_vs_reference"] = bit
+            exact_ok = exact_ok and bit
+        cells[name] = cell
+        extra = (f"  recall@{K} {cell['recall_at_k']:.4f}"
+                 if "recall_at_k" in cell else "")
+        print(f"termination {name:8s} {cell['qps']:8.1f} qps  "
+              f"terminated {cell['probes_terminated']:6d}  "
+              f"seg-skips {cell['segments_skipped']:5d}{extra}")
+    out = dict(
+        path="bounded_termination", selectivity=selectivity, q=q,
+        n_batches=n_batches, arms=cells,
+        workload="correlated-centroid hot topics, per-query own-band "
+                 "time-window + topic-id filters "
+                 f"(~{selectivity:.3%} selectivity)",
+        eps001_vs_exact_qps=round(
+            cells["eps0.01"]["qps"] / cells["exact"]["qps"], 2
+        ),
+        probes_terminated=cells["exact"]["probes_terminated"],
+        exact=exact_ok,
+    )
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-old-fused", action="store_true")
@@ -1314,6 +1482,18 @@ def main():
                          "(emits a delta_tier entry gated on bit-identity "
                          "to a from-scratch rebuild and on the republish "
                          "invalidating cached blocks)")
+    ap.add_argument("--termination", choices=("exact", "bounded"),
+                    default=None,
+                    help="also bench bound-driven early termination on a "
+                         "selective correlated-centroid stream: baseline "
+                         "vs exact vs bounded(eps) arms (emits a "
+                         "bounded_termination entry; the exact and eps=0 "
+                         "cells are gated bit-identical to the untermi"
+                         "nated engine and to search_reference)")
+    ap.add_argument("--epsilon", type=float, default=0.01,
+                    help="bounded-termination bench: the eps cell whose "
+                         "recall@k is promoted to the JSON top level "
+                         "(always swept alongside {0, 0.01, 0.05})")
     ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_search.json"))
     args = ap.parse_args()
     if args.smoke:
@@ -1412,6 +1592,18 @@ def main():
                 n_batches=6 if args.smoke else 10,
             )
 
+    term_entry = None
+    if args.termination is not None:
+        print("bounded-termination workload (best-bound-first early exit) "
+              "...")
+        tindex, _, _, _, t_centers, t_bands = build_term()
+        term_entry = bench_bounded_termination(
+            tindex, t_centers, t_bands, rng,
+            n_batches=4 if args.smoke else 8,
+            epsilons=sorted({0.0, 0.01, 0.05, args.epsilon}),
+        )
+        results.append(term_entry)
+
     ingest_entry = None
     if args.ingest:
         print("ingest workload (live delta tier + republish) ...")
@@ -1435,7 +1627,7 @@ def main():
 
     exact_all = bool(sweep_exact)
     for e in (sharded_entry, opcache_entry, ladder_entry, degraded_entry,
-              devcache_entry):
+              devcache_entry, term_entry):
         if e is not None:
             exact_all = exact_all and bool(e.get("exact", True))
     out = dict(
@@ -1488,6 +1680,15 @@ def main():
         )
     if ladder_entry is not None:
         out["u_cap_ladder_ab"] = ladder_entry
+    if term_entry is not None:
+        out["bounded_termination"] = term_entry
+        cell = term_entry["arms"].get(f"eps{args.epsilon:g}")
+        out["recall_at_k"] = (cell or {}).get("recall_at_k", 1.0)
+        out["probes_terminated"] = term_entry["probes_terminated"]
+        ratio = term_entry["eps001_vs_exact_qps"]
+        print(f"bounded eps=0.01 vs exact: {ratio:.2f}x qps "
+              f"(recall@{K} {out['recall_at_k']:.4f}, "
+              f"{out['probes_terminated']} probes terminated)")
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"→ {args.out}")

@@ -278,6 +278,114 @@ def main():
                   f"{dcs['resident_bytes']/2**20:.1f} MiB resident), "
                   f"ids identical ✓")
 
+        # --- bound-driven early termination: the speed/recall knob ---
+        # termination="exact" reorders each tile's probes best-bound-first
+        # and, after every scanned segment, drops (query, probe) pairs
+        # whose score upper bound provably cannot reach that query's
+        # running top-k — results stay bit-identical, the scan just stops
+        # paying for losing probes.  termination="bounded" additionally
+        # drops pairs whose top-k hit PROBABILITY (score bounds × the
+        # summaries' expected passing mass) is ≤ ε: a recall-bounded speed
+        # tier per query batch.  Bounds bite when topics are separable, so
+        # this demo uses a tighter corpus (0.05 intra-topic noise at D=128;
+        # the main corpus above is too diffuse for any bound to prove
+        # anything) with near-duplicate topic pairs, topic-owned time bands
+        # and a few hot topics per batch — the geometry
+        # benchmarks/bench_search.py --termination bounded measures at scale.
+        tk, tn, td, tq_n = 16, 20_000, 128, 64
+        trng = np.random.default_rng(12)
+        tbase = trng.standard_normal((tk // 2, td)).astype(np.float32)
+        tbase /= np.linalg.norm(tbase, axis=-1, keepdims=True)
+        tstep = trng.standard_normal((tk // 2, td)).astype(np.float32)
+        tstep /= np.linalg.norm(tstep, axis=-1, keepdims=True)
+        tcent = np.empty((tk, td), np.float32)
+        tcent[0::2] = tbase
+        twin = tbase + 0.25 * tstep
+        tcent[1::2] = twin / np.linalg.norm(twin, axis=-1, keepdims=True)
+        ttopic = (np.arange(tn) * tk) // tn
+        tcore = tcent[ttopic] + 0.05 * trng.standard_normal(
+            (tn, td)).astype(np.float32)
+        tcore /= np.linalg.norm(tcore, axis=-1, keepdims=True)
+        ts_range = 10_000
+        tband = ts_range // tk
+        tattrs = trng.integers(0, 16, (tn, m)).astype(np.int16)
+        tattrs[:, 0] = (ttopic * tband
+                        + trng.integers(0, tband, tn)).astype(np.int16)
+        tattrs[:, 1] = ttopic.astype(np.int16)
+        # planted attr outliers pin every cluster's summary interval to the
+        # full range (so cross-topic probes survive interval pruning and
+        # the TERMINATION tiers, not the planner, get to drop them); the
+        # two populations are disjoint, so none passes a joint filter
+        bin_ts = (np.arange(tk) * (ts_range - 1)) // (tk - 1)
+        for t in range(tk):
+            rows = np.where(ttopic == t)[0]
+            tattrs[rows[:tk], 0] = bin_ts.astype(np.int16)
+            tattrs[rows[tk:3 * tk], 1] = np.repeat(
+                np.arange(tk), 2).astype(np.int16)
+        tindex, _ = build_from_assignments(
+            HybridSpec(dim=td, n_attrs=m, core_dtype=jnp.float32),
+            jnp.asarray(tcent), jnp.asarray(tcore), jnp.asarray(tattrs),
+            jnp.asarray(ttopic),
+        )
+        # selective stream: THREE hot topics (one member of three twin
+        # pairs — a query's own slots then fit the first bound-ordered
+        # segment, so losing segments can die for the whole batch), a thin
+        # window in the topic's own time band AND the topic's category
+        tpairs = trng.permutation(tk // 2)[:3]
+        hot3 = 2 * tpairs + trng.integers(0, 2, 3)
+        hot = hot3[trng.integers(0, 3, tq_n)]
+        tq = jnp.asarray(tcent[hot] + 0.01 * trng.standard_normal(
+            (tq_n, td)).astype(np.float32))
+        tlo = np.full((tq_n, 1, m), ATTR_MIN, np.int16)
+        thi = np.full((tq_n, 1, m), ATTR_MAX, np.int16)
+        w = 50
+        start = hot * tband + trng.integers(0, tband - w, tq_n)
+        tlo[:, 0, 0] = start.astype(np.int16)
+        thi[:, 0, 0] = (start + w - 1).astype(np.int16)
+        tlo[:, 0, 1] = thi[:, 0, 1] = hot.astype(np.int16)
+        tsel = FilterSpec(lo=jnp.asarray(tlo), hi=jnp.asarray(thi))
+
+        base_eng = SearchEngine(tindex, k=k, n_probes=4, q_block=tq_n,
+                                prune="on")
+        base = base_eng.search(tq, tsel)
+        base_ids = [set(int(v) for v in row if v >= 0)
+                    for row in np.asarray(base.ids)]
+        sweep = []
+        for label, term, eps in (("off", None, 0.0),
+                                 ("exact", "exact", 0.0),
+                                 ("eps=0.01", "bounded", 0.01),
+                                 ("eps=0.05", "bounded", 0.05)):
+            teng = SearchEngine(tindex, k=k, n_probes=4, q_block=tq_n,
+                                prune="on", termination=term, epsilon=eps)
+            res = teng.search(tq, tsel)  # warm the jit cache
+            walls = []
+            for _ in range(5):
+                t0 = time.perf_counter()
+                res = teng.search(tq, tsel)
+                walls.append(time.perf_counter() - t0)
+            ms = float(np.median(walls)) * 1e3
+            got = [set(int(v) for v in row if v >= 0)
+                   for row in np.asarray(res.ids)]
+            recall = float(np.mean([
+                len(b & g) / max(len(b), 1)
+                for b, g in zip(base_ids, got)
+            ]))
+            if term == "exact":  # the contract, not a measurement
+                assert (np.asarray(res.ids) == np.asarray(base.ids)).all()
+            sweep.append((label, ms, recall,
+                          teng.stats.probes_terminated,
+                          teng.stats.term_segments_skipped))
+            teng.close()
+        base_eng.close()
+        print("termination sweep (separable-topic corpus, thin band+"
+              "category filter):")
+        print("  mode      batch-ms  recall@10  probes-dropped  seg-skips")
+        for label, ms, recall, dropped, skips in sweep:
+            print(f"  {label:9s} {ms:8.2f} {recall:10.3f} {dropped:13d} "
+                  f"{skips:9d}")
+        print("  (exact is bit-identical by construction; ε trades "
+              "bounded recall for latency)")
+
         # --- sharded cluster cache: one FULL index copy per pod, a
         # consistent-hash ring splitting *cache* ownership of the
         # cluster-id space.  The deployment model to hold onto: the ring

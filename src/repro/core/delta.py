@@ -303,16 +303,31 @@ class DeltaTier:
     immutable for the batch that captured it.
     """
 
-    def __init__(self, index, capacity: int):
+    def __init__(self, index, capacity: int, quantize: str = "auto"):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if quantize not in ("auto", "on"):
+            raise ValueError(f"quantize must be 'auto'|'on', got "
+                             f"{quantize!r}")
         bspec = blockstore_lib.BlockSpec.from_index(index)
         self.spec = index.spec
         self.metric = index.spec.metric
-        self.quantized = bool(bspec.quantized)
+        # quantize="on" stores SQ8 rows (same codes/scales path as
+        # add_vectors) even over a float cold tier — ~4× the rows per byte
+        # budget.  Over a float cold index this is a *semantic* knob: the
+        # delta scan scores the quantized representation (≈1e-2 relative),
+        # and a republish dequantizes codes·scales back to the cold store
+        # dtype — so folded rows match the delta scan's scores approximately
+        # rather than bitwise.  quantize="auto" follows the index exactly
+        # (the bit-parity default).
+        self.quantized = bool(bspec.quantized) or quantize == "on"
+        self.quantize = quantize
         self.capacity = int(capacity)
         self._centroids = jnp.asarray(index.centroids)
-        self._store_dtype = np.dtype(index.store_dtype)
+        self._store_dtype = (
+            np.dtype(np.int8) if self.quantized
+            else np.dtype(index.store_dtype)
+        )
         d, m = bspec.dim, bspec.n_attrs
         self._vectors = np.zeros((capacity, d), self._store_dtype)
         self._attrs = np.zeros((capacity, m), np.int16)
@@ -339,18 +354,23 @@ class DeltaTier:
         self._adj_cache: Optional[Tuple[int, Optional[np.ndarray]]] = None
 
     @classmethod
-    def for_index(cls, index, budget_mb: float) -> "DeltaTier":
-        """Sizes the segment from a byte budget (`--delta-budget-mb`)."""
+    def for_index(cls, index, budget_mb: float,
+                  quantize: str = "auto") -> "DeltaTier":
+        """Sizes the segment from a byte budget (`--delta-budget-mb`).
+        ``quantize="on"`` sizes rows at 1 byte/dim + 4-byte scale — ~4× the
+        capacity of a float32 cold tier's budget."""
         bspec = blockstore_lib.BlockSpec.from_index(index)
+        quantized = bool(bspec.quantized) or quantize == "on"
         row = (
-            bspec.dim * np.dtype(index.store_dtype).itemsize
+            bspec.dim * (1 if quantized
+                         else np.dtype(index.store_dtype).itemsize)
             + bspec.n_attrs * 2   # attrs int16
             + 4 + 4               # ids + cluster assignment
             + (4 if bspec.has_norms else 0)
-            + (4 if bspec.quantized else 0)
+            + (4 if quantized else 0)
         )
         cap = max(int(budget_mb * 2 ** 20) // row, 8)
-        return cls(index, capacity=cap)
+        return cls(index, capacity=cap, quantize=quantize)
 
     # ---- mutation ----
     def add(self, core, attrs, ids) -> int:
@@ -711,10 +731,24 @@ def compact_deltas(
                               trigger=trigger)
 
     summ = storage.load_summaries(directory, man)
+    bounds = storage.load_bounds(directory, man)
+    centroids = (
+        np.load(os.path.join(directory, "centroids.npy"))
+        if bounds is not None else None
+    )
     field_names = [f["name"] for f in man["fields"] if f["name"] != "gen"]
+    f_vectors = None if frozen is None else frozen.vectors
+    if (frozen is not None and tier is not None and tier.quantized
+            and not man.get("quantized", False)):
+        # forced-SQ8 tier over a float cold checkpoint: republish
+        # dequantizes codes·scales back to the cold store dtype (the
+        # manifest has no scales field, so only the rows change shape)
+        f_vectors = (
+            frozen.vectors.astype(np.float32) * frozen.scales[:, None]
+        ).astype(storage.np_dtype(man["store_dtype"]))
     frozen_fields = (
         {} if frozen is None else dict(
-            vectors=frozen.vectors, attrs=frozen.attrs, ids=frozen.ids,
+            vectors=f_vectors, attrs=frozen.attrs, ids=frozen.ids,
             norms=frozen.norms, scales=frozen.scales,
         )
     )
@@ -756,6 +790,17 @@ def compact_deltas(
                 summ, jnp.asarray(part["attrs"][lc]),
                 jnp.asarray(part["ids"][lc]), c,
             )
+        if bounds is not None:
+            bounds = summaries_lib.rebuild_cluster_bounds(
+                bounds, jnp.asarray(centroids[c]),
+                jnp.asarray(part["vectors"][lc]),
+                jnp.asarray(part["ids"][lc]),
+                (jnp.asarray(part["norms"][lc])
+                 if "norms" in part else None),
+                (jnp.asarray(part["scales"][lc])
+                 if man.get("quantized", False) else None),
+                c,
+            )
 
     # rewrite only the shards that hold touched clusters, then the resident
     # vectors, summaries and manifest — each atomically, manifest last
@@ -794,6 +839,14 @@ def compact_deltas(
             storage._atomic_save(
                 os.path.join(directory, fname),
                 lambda p, f=field: _np_save(p, np.asarray(getattr(summ, f))),
+            )
+    if bounds is not None:
+        for field, fname in storage.BOUNDS_FILES.items():
+            storage._atomic_save(
+                os.path.join(directory, fname),
+                lambda p, f=field: _np_save(
+                    p, np.asarray(getattr(bounds, f))
+                ),
             )
     man["n_live"] = int(counts.sum())
     storage._atomic_save(

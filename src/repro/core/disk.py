@@ -430,13 +430,13 @@ class ClusterCache:
         return self.stats.hits / tot if tot else 0.0
 
 
-def _resident_overhead(centroids, counts, summaries) -> int:
+def _resident_overhead(centroids, counts, summaries, bounds=None) -> int:
     """Bytes of the always-resident set (everything except the cluster
     cache) — the single formula both the budget check in ``open`` and
     ``resident_bytes()`` accounting rely on."""
     return centroids.nbytes + counts.nbytes + (
         summaries.nbytes() if summaries is not None else 0
-    )
+    ) + (bounds.nbytes() if bounds is not None else 0)
 
 
 class DiskIVFIndex:
@@ -460,7 +460,7 @@ class DiskIVFIndex:
                  centroids: np.ndarray, counts: np.ndarray,
                  reader: ShardReader, cache: ClusterCache,
                  resident_budget_bytes: Optional[int],
-                 summaries=None):
+                 summaries=None, bounds=None):
         self.directory = directory
         self.man = man
         self.spec = spec
@@ -473,6 +473,11 @@ class DiskIVFIndex:
         # consulted by the plan stage so filtered-out clusters never reach
         # the fetch list.  None for pre-v2.1 checkpoints (no pruning).
         self.summaries = summaries
+        # Per-cluster score-bound statistics (radius/slack): resident like
+        # the summaries, consumed by the engine's bound-driven termination.
+        # None for checkpoints saved before bounds existed — termination
+        # then raises with a re-save hint.
+        self.bounds = bounds
         # Per-cluster generation vector (layout v3; zeros for v2): the plan
         # stamps each fetch with the cluster's published gen, so every cache
         # layer rejects records a republish has superseded.
@@ -484,7 +489,8 @@ class DiskIVFIndex:
         # layer via make_fused_search_fn(device_cache_mb=...)); engines
         # built over this index pick it up automatically.
         self.device_cache = None
-        self._overhead = _resident_overhead(centroids, counts, summaries)
+        self._overhead = _resident_overhead(centroids, counts, summaries,
+                                            bounds)
         # The fetch layer: this host's reader + cache behind the BlockStore
         # protocol.  The search engine routes its fetch stage through it
         # (or through a ShardedBlockStore composed over several of them);
@@ -511,7 +517,8 @@ class DiskIVFIndex:
         centroids = np.load(os.path.join(directory, "centroids.npy"))
         counts = np.load(os.path.join(directory, "counts.npy"))
         summaries = storage.load_summaries(directory, man)
-        overhead = _resident_overhead(centroids, counts, summaries)
+        bounds = storage.load_bounds(directory, man)
+        overhead = _resident_overhead(centroids, counts, summaries, bounds)
         if resident_budget_bytes is None:
             cap = man["n_clusters"]
         else:
@@ -530,7 +537,7 @@ class DiskIVFIndex:
         )
         return cls(directory, man, storage.spec_from_manifest(man),
                    centroids, counts, reader, cache, resident_budget_bytes,
-                   summaries=summaries)
+                   summaries=summaries, bounds=bounds)
 
     # ---- IVFFlatIndex-compatible surface (what search paths touch) ----
     @property
@@ -578,10 +585,11 @@ class DiskIVFIndex:
                 np.load(os.path.join(self.directory, "counts.npy"))
             )
             self.summaries = storage.load_summaries(self.directory, man)
+            self.bounds = storage.load_bounds(self.directory, man)
             self.gens = gens
             self._overhead = _resident_overhead(
                 np.asarray(self.centroids), np.asarray(self.counts),
-                self.summaries,
+                self.summaries, self.bounds,
             )
         if self.delta is not None:
             self.delta.commit()
@@ -694,7 +702,8 @@ class DiskIVFIndex:
                prune: str = "auto", t_max=None,
                pipeline: str = "off", pipeline_depth: int = 2,
                blockstore=None, operand_cache: str = "auto",
-               device_cache=None):
+               device_cache=None,
+               termination: Optional[str] = None, epsilon: float = 0.0):
         """Disk-tier filtered search; same contract (and bit-identical ids)
         as the RAM path's ``search_fused_tiled``.  With summaries resident
         (layout v2.1) and ``prune`` active, clusters the filter excludes are
@@ -709,6 +718,7 @@ class DiskIVFIndex:
             pipeline=pipeline, pipeline_depth=pipeline_depth,
             blockstore=blockstore, operand_cache=operand_cache,
             device_cache=device_cache,
+            termination=termination, epsilon=epsilon,
         )
         return eng.search(queries, fspec)
 

@@ -325,6 +325,110 @@ def _scan_merge_tiled(
     return SearchResult(vals, out_ids, n_scanned, n_passed)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("metric", "k", "q_block", "v_block", "backend"),
+)
+def _scan_slots(
+    slot_cluster: Array,   # [S] rows into the operand arrays (one segment)
+    queries_pad: Array,    # [QB, D] one tile's cast queries
+    lo_pad: Array,
+    hi_pad: Array,
+    vectors: Array,
+    attrs: Array,
+    ids: Array,
+    norms: Optional[Array],
+    scales: Optional[Array],
+    *,
+    metric: str,
+    k: int,
+    q_block: int,
+    v_block: int,
+    backend: str,
+):
+    """Scan stage alone: one slot segment's ``[S, QB, k]`` fragments.
+
+    Exactly :func:`_scan_merge_tiled`'s scan half over a slice of a tile's
+    slot table (``slot_tile ≡ 0`` — one query tile).  Per-slot arithmetic is
+    independent of which other slots share the call, so fragments from
+    segmented scans are bitwise the fragments one whole-table scan produces
+    — the bound-driven executor's exactness rides on that.
+    """
+    from repro.kernels.filtered_scan.filtered_scan import filtered_scan_tiled
+
+    slot_tile = jnp.zeros((slot_cluster.shape[0],), jnp.int32)
+    if backend in ("pallas", "pallas_interpret"):
+        return filtered_scan_tiled(
+            slot_cluster, slot_tile, queries_pad, lo_pad, hi_pad,
+            vectors, attrs, ids, norms, scales,
+            metric=metric, k=k, q_block=q_block, v_block=v_block,
+            interpret=backend == "pallas_interpret",
+        )
+    elif backend == "xla":
+        return tiled_scan_xla(
+            slot_cluster, slot_tile, queries_pad, lo_pad, hi_pad,
+            vectors, attrs, ids, norms, scales,
+            metric=metric, k=k, q_block=q_block,
+        )
+    raise ValueError(backend)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "k", "q"))
+def _merge_tile_fragments(
+    svals: Array,          # [S_pad, QB, k] per-slot fragments (filler where
+    sids: Array,           #   a segment was never scanned)
+    snpass: Array,         # [S_pad, QB]
+    slot_of_probe: Array,  # [QB, W] tile-local slot pointers
+    pair_ok: Array,        # [QB, W] — probe contributes candidates
+    scan_ok: Array,        # [QB, W] — probe's slot was actually scanned
+    queries: Array,        # [QB, D] original dtype (l2 ‖q‖² constant)
+    slot_cluster: Array,   # [S_pad] operand row per slot
+    ids: Array,            # [K or S, Vpad] ids operand (tombstone-masked)
+    *,
+    metric: str,
+    k: int,
+    q: int,
+) -> SearchResult:
+    """Merge stage for a bound-terminated tile.
+
+    :func:`_scan_merge_tiled`'s merge half with two masks instead of one:
+    ``pair_ok`` additionally excludes ε-dropped (query, slot) pairs — their
+    fragments may exist (another query kept the segment alive) but the
+    bounded-mode contract is that the result equals an exact top-k over the
+    surviving probe universe, so they must not leak in.  Provably-dropped
+    pairs whose segment was scanned anyway stay *included*: every candidate
+    they hold is strictly below the query's final kth, so including them is
+    what keeps ``termination="exact"`` bitwise identical to the untruncated
+    merge.  ``scan_ok`` keeps ``n_scanned`` honest (terminated slots did no
+    scan work).
+    """
+    row = jnp.arange(svals.shape[1], dtype=jnp.int32)  # [QB]
+    vals_qt = svals[slot_of_probe, row[:, None]]  # [QB, W, k]
+    ids_qt = sids[slot_of_probe, row[:, None]]
+    npass_qt = snpass[slot_of_probe, row[:, None]]  # [QB, W]
+    vals_qt = jnp.where(pair_ok[..., None], vals_qt, topk_lib.NEG_INF)
+    ids_qt = jnp.where(pair_ok[..., None], ids_qt, -1)
+    npass_qt = jnp.where(pair_ok, npass_qt, 0)
+    vals, out_ids = topk_lib.merge_topk_many(vals_qt, ids_qt, k, axis=1)
+    vals, out_ids = vals[:q], out_ids[:q]
+
+    if metric == "l2":
+        q2 = jnp.sum(queries.astype(jnp.float32) ** 2, -1)
+        vals = jnp.where(
+            vals > topk_lib.NEG_INF / 2, vals - q2[:q, None], vals
+        )
+
+    n_passed = jnp.sum(npass_qt[:q], axis=-1)
+    live_per_row = jnp.sum((ids >= 0).astype(jnp.int32), axis=-1)
+    live_per_slot = jnp.take(live_per_row, slot_cluster)
+    n_scanned = jnp.sum(
+        jnp.take(live_per_slot, slot_of_probe[:q])
+        * scan_ok[:q].astype(jnp.int32),
+        axis=-1,
+    )
+    return SearchResult(vals, out_ids, n_scanned, n_passed)
+
+
 def resolve_prune(index, prune: str):
     """Resolves the ``prune`` knob against an index's summaries.
 
@@ -418,6 +522,29 @@ class TileWork:
 
 
 @dataclasses.dataclass
+class TermState:
+    """Per-batch bound-driven termination state (host-side numpy).
+
+    Built by :meth:`SearchEngine._prepare_termination` *after* the slot
+    tables have been permuted best-bound-first, so every array here indexes
+    ``(tile, query-row, slot-position)`` in the order the segmented executor
+    scans.  ``ub`` already carries the dtype-aware rounding margin — the
+    executor compares it raw against the running kth.
+    """
+
+    epsilon: float        # ε-drop threshold (0 in termination="exact")
+    seg: int              # slot positions per segment (multiple of 4)
+    n_seg: int            # segments per tile
+    cap: int              # true table width (cap_pad = seg · n_seg ≥ cap)
+    ub: np.ndarray        # [n_tiles, QB, cap_pad] f64 — score upper bound
+    lb: np.ndarray        # [n_tiles, QB, cap_pad] f64 — rough lower bound
+                          #   (only scales the ε probability model)
+    mass: np.ndarray      # [n_tiles, QB, cap_pad] f64 — expected passing
+                          #   rows of the pair's cluster (ε model's m)
+    valid: np.ndarray     # [n_tiles, QB, cap_pad] bool — real (q, slot) pair
+
+
+@dataclasses.dataclass
 class SearchPlan:
     """Everything the fetch/scan/merge stages need, produced by plan().
 
@@ -466,6 +593,15 @@ class SearchPlan:
     # share the cluster assemble from these records instead of re-crossing
     # the store.  Dropped with the plan.
     operands: Optional[Dict[int, dict]] = None
+    # Bound-driven termination state (None when the knob is off); built by
+    # _prepare_termination before any fetch list exists, so the permuted
+    # best-bound-first slot order propagates to fetch/prefetch for free.
+    term: Optional[TermState] = None
+    # Per-batch (cid, gen) fetch-accounting set: blocks_fetched counts each
+    # distinct block once per batch even when an eviction/invalidation race
+    # makes a later tile re-pull a block an earlier tile already fetched
+    # (the device-cache gap-refetch double-count fix).
+    fetched_keys: Optional[set] = None
 
     def tile_work(self) -> List[TileWork]:
         """Materializes (and caches) the per-tile work items with their
@@ -526,6 +662,12 @@ class EngineStats:
     # attribute summary proved no live delta row can pass any query's
     # filter (results identical; only the scan is saved)
     delta_skips: int = 0
+    # bound-driven termination: (query, slot) pairs dropped before their
+    # segment was scanned — provably (upper bound below the running kth) or
+    # probabilistically (ε mode) — and whole slot segments skipped because
+    # every surviving pair in them was already terminated
+    probes_terminated: int = 0
+    term_segments_skipped: int = 0
 
     @property
     def overlap_ratio(self) -> float:
@@ -562,6 +704,7 @@ _PROM_COUNTERS = frozenset((
     "deadline_misses", "device_hits", "tile_hits", "tile_puts", "l1_hits",
     "l1_misses", "l1_invalidations", "remote_blocks", "blocks_served",
     "adds", "tombstoned", "commits", "scan_compile_count",
+    "probes_terminated", "term_segments_skipped",
 ))
 
 
@@ -599,6 +742,62 @@ def render_prometheus(metrics: Dict[str, Any],
             label = str(val).replace("\\", "\\\\").replace('"', '\\"')
             lines.append(f"# TYPE {name} gauge")
             lines.append(f'{name}{{value="{label}"}} 1')
+    return "\n".join(lines) + "\n"
+
+
+# Fixed latency bucket upper bounds (seconds) for the per-stage histograms.
+# Chosen to straddle the measured stage costs from sub-ms RAM-resident plans
+# up to multi-second cold disk fetches; fixed so scrapes from different
+# processes aggregate.
+_LAT_BUCKETS = (0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
+                0.25, 0.5, 1.0, 2.5)
+
+
+class StageHistogram:
+    """Fixed-bucket latency histogram, Prometheus-renderable.
+
+    Buckets are cumulative at render time (classic ``le`` semantics, with
+    the implicit ``+Inf`` bucket equal to the total count); observation is
+    O(#buckets) with no allocation, cheap enough for per-tile scan timing.
+    """
+
+    __slots__ = ("counts", "total", "sum")
+
+    def __init__(self):
+        self.counts = [0] * len(_LAT_BUCKETS)
+        self.total = 0
+        self.sum = 0.0
+
+    def observe(self, seconds: float):
+        self.total += 1
+        self.sum += seconds
+        for i, edge in enumerate(_LAT_BUCKETS):
+            if seconds <= edge:
+                self.counts[i] += 1
+                break
+
+    def render(self, name: str, labels: str) -> List[str]:
+        lines = []
+        cum = 0
+        for edge, n in zip(_LAT_BUCKETS, self.counts):
+            cum += n
+            lines.append(f'{name}_bucket{{{labels},le="{edge}"}} {cum}')
+        lines.append(f'{name}_bucket{{{labels},le="+Inf"}} {self.total}')
+        lines.append(f"{name}_sum{{{labels}}} {self.sum}")
+        lines.append(f"{name}_count{{{labels}}} {self.total}")
+        return lines
+
+
+def render_stage_histograms(hists: Dict[str, StageHistogram],
+                            prefix: str = "repro") -> str:
+    """``{stage: histogram}`` → Prometheus exposition text (one metric
+    family, ``stage`` label per pipeline stage)."""
+    if not hists:
+        return ""
+    name = f"{prefix}_stage_latency_seconds"
+    lines = [f"# TYPE {name} histogram"]
+    for stage in sorted(hists):
+        lines.extend(hists[stage].render(name, f'stage="{stage}"'))
     return "\n".join(lines) + "\n"
 
 
@@ -679,6 +878,15 @@ class SearchEngine:
         bucket edge at ~2× the bounded compile count.
       * ``t_max`` — static widening cap, or ``"auto"`` to pick the per-batch
         cap from the summaries' expected passing mass (bucketed ×2/×4/×8).
+      * ``termination`` — bound-driven early termination. ``"exact"``: scan
+        each tile's probes best-bound-first in segments and drop remaining
+        probes whose score upper bound is provably below the running kth —
+        bit-identical results, fewer slot scans. ``"bounded"`` with
+        ``epsilon``: additionally drop probes whose probability of
+        contributing a top-k row (bound + summary-mass model) is ≤ ε — a
+        recall-bounded speed tier (recall@k ≥ 1 − ε per dropped-probe
+        model; gated empirically in BENCH_search.json). ``None`` (default)
+        keeps the unterminated executors byte-for-byte.
 
     ``index`` needs the resident surface (``spec / centroids / counts /
     n_clusters / store_dtype / quantized / summaries``) plus one fetch
@@ -701,7 +909,16 @@ class SearchEngine:
                  u_cap_ladder: str = "pow2",
                  operand_cache: str = "auto",
                  delta=None,
-                 device_cache=None):
+                 device_cache=None,
+                 termination: Optional[str] = None,
+                 epsilon: float = 0.0):
+        if termination not in (None, "exact", "bounded"):
+            raise ValueError(f"termination must be None|'exact'|'bounded', "
+                             f"got {termination!r}")
+        if not (0.0 <= float(epsilon) < 1.0):
+            raise ValueError(f"epsilon must be in [0, 1), got {epsilon!r}")
+        if epsilon > 0.0 and termination != "bounded":
+            raise ValueError("epsilon > 0 requires termination='bounded'")
         if pipeline not in ("auto", "on", "off"):
             raise ValueError(f"pipeline must be 'auto'|'on'|'off', got "
                              f"{pipeline!r}")
@@ -790,7 +1007,22 @@ class SearchEngine:
         # RAM delta tier: explicit wins; otherwise the index's attached tier
         # (DiskIVFIndex.delta / make_fused_search_fn(delta_budget_mb=...)).
         self._delta = delta
+        # Bound-driven early termination: "exact" drops only provably-losing
+        # probes (bitwise-identical results); "bounded" additionally drops
+        # probes whose win probability under the bound model is ≤ epsilon.
+        self.termination = termination
+        self.epsilon = float(epsilon)
+        self._bounds_cache = None  # (key, ClusterBounds) lazy-build memo
+        # per-stage fixed-bucket latency histograms (plan/fetch/scan/merge/
+        # delta_fold), appended to metrics_text() for the Prometheus scrape
+        self._stage_hist: Dict[str, StageHistogram] = {}
         self.stats = EngineStats()
+
+    def _observe_stage(self, stage: str, seconds: float):
+        hist = self._stage_hist.get(stage)
+        if hist is None:
+            hist = self._stage_hist[stage] = StageHistogram()
+        hist.observe(seconds)
 
     def _delta_tier(self):
         if self._delta is not None:
@@ -805,6 +1037,7 @@ class SearchEngine:
         ``adaptive_u_cap`` the tables are then shrunk to the smallest
         power-of-two bucket covering the observed per-tile unique counts.
         """
+        t0 = time.perf_counter()
         index = self.index
         q = queries.shape[0]
         qb = min(self.q_block, round_up(q, 8))
@@ -859,7 +1092,8 @@ class SearchEngine:
         # pipelined / disk paths (per-tile slices, fetch lists) do.  The
         # adaptive provisioner alone only needs the tiny [n_tiles] unique
         # counts — the full tables come to host iff a shrink happens.
-        need_host = (self.pipeline == "on" or self._gather_fn is not None)
+        need_host = (self.pipeline == "on" or self._gather_fn is not None
+                     or self.termination is not None)
         plan = SearchPlan(
             q=q, q_block=qb, n_tiles=n_tiles, u_cap=cap, width=width,
             slot_cluster=slot_cluster, slot_tile=slot_tile,
@@ -880,10 +1114,16 @@ class SearchEngine:
             self._provision(plan)
         if need_host:
             self._host_tables(plan)
+        if self.termination is not None:
+            # reorders the slot tables best-bound-first and attaches the
+            # TermState; must run before any fetch list / TileWork exists so
+            # fetch order and prefetch follow the scan order
+            self._prepare_termination(plan, summ, counts)
         self.stats.last_u_cap = plan.u_cap
         self.stats.u_cap_hist[plan.u_cap] = (
             self.stats.u_cap_hist.get(plan.u_cap, 0) + 1
         )
+        self._observe_stage("plan", time.perf_counter() - t0)
         return plan
 
     def _plan_gens(self) -> Optional[np.ndarray]:
@@ -934,6 +1174,149 @@ class SearchEngine:
         ).astype(np.int32)
         plan.u_cap = bucket
 
+    # ---- bound-driven termination (plan-side) ----
+    def _resolve_bounds(self):
+        """The per-cluster :class:`~repro.core.summaries.ClusterBounds`:
+        the index's precomputed row (disk tier; ``storage.load_bounds``),
+        else lazily built from the resident flat lists and memoized until
+        the arrays are swapped (refresh)."""
+        index = self.index
+        b = getattr(index, "bounds", None)
+        if b is not None:
+            return b
+        vectors = getattr(index, "vectors", None)
+        if vectors is None:
+            raise ValueError(
+                "termination needs per-cluster score bounds, but the index "
+                "has neither a precomputed `bounds` attribute nor resident "
+                "vectors to build one from. Re-save the index with this "
+                "version (save_index now writes bounds_radius.npy / "
+                "bounds_slack.npy) or attach storage.load_bounds() output."
+            )
+        key = (id(vectors), id(getattr(index, "scales", None)))
+        cached = self._bounds_cache
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        b = summaries_lib.build_bounds(
+            index.centroids, vectors, index.ids,
+            getattr(index, "norms", None), getattr(index, "scales", None),
+        )
+        self._bounds_cache = (key, b)
+        return b
+
+    def _prepare_termination(self, plan: SearchPlan, summ, counts):
+        """Builds the batch's :class:`TermState` and reorders the slot
+        tables best-bound-first.
+
+        Per (query, slot) pair an upper bound on any row's kernel-space
+        score is derived from resident state only: the centroid inner
+        product plus a Cauchy–Schwarz ``‖q‖·radius`` term (dot), or the
+        ``‖q‖² − max(d − radius, 0)²`` ball bound shifted by the cluster's
+        norm slack (l2, pre-fixup space).  The bound is over the *stored*
+        rows (SQ8 measured dequantized), widened by a dtype-aware rounding
+        margin so float-accumulation noise can never flip a provable drop.
+        Runs after adaptive provisioning (tables at their final width) and
+        before any fetch list exists (fetch order follows the permutation).
+        """
+        index = self.index
+        qb, cap, n_tiles = plan.q_block, plan.u_cap, plan.n_tiles
+        qpad = qb * n_tiles
+        bounds = self._resolve_bounds()
+        sc = np.asarray(plan.slot_cluster).reshape(n_tiles, cap)
+
+        # which (tile, query-row, slot) pairs are real probes
+        sop = np.asarray(plan.slot_of_probe)
+        pok = np.asarray(plan.probe_ok)
+        tt, ss = np.divmod(sop, cap)
+        qi = np.broadcast_to(
+            (np.arange(qpad, dtype=np.int32) % qb)[:, None], sop.shape
+        )
+        valid = np.zeros((n_tiles, qb, cap), bool)
+        valid[tt[pok], qi[pok], ss[pok]] = True
+
+        # per-pair score bounds from the CAST queries (the kernel casts to
+        # the store dtype before the matmul — bounding the cast query keeps
+        # the bound sound for exactly what the kernel scores)
+        qt = np.asarray(plan.queries_pad).astype(np.float32)
+        qt = qt.reshape(n_tiles, qb, -1)
+        C = np.asarray(index.centroids, dtype=np.float32)
+        csel = C[sc]                                   # [n_tiles, cap, D]
+        rsel = np.asarray(bounds.radius, np.float32)[sc][:, None, :]
+        metric = index.spec.metric
+        if metric == "dot":
+            cs = np.einsum("tqd,tsd->tqs", qt, csel)
+            qn = np.linalg.norm(qt, axis=-1)[:, :, None]
+            ub = cs + qn * rsel
+            lb = cs - qn * rsel
+        else:  # l2 — kernel space 2q·x̂ − norms_row (‖q‖² not yet folded)
+            qt64 = qt.astype(np.float64)
+            c64 = csel.astype(np.float64)
+            # ‖q − c‖ in float64: the expanded form cancels catastrophically
+            # in f32 when q ≈ c, and an under-estimated d inflates nothing
+            # but an OVER-estimated one would break the upper bound
+            cs64 = np.einsum("tqd,tsd->tqs", qt64, c64)
+            q2 = np.sum(qt64 * qt64, axis=-1)[:, :, None]
+            c2 = np.sum(c64 * c64, axis=-1)[:, None, :]
+            d = np.sqrt(np.maximum(q2 - 2.0 * cs64 + c2, 0.0))
+            near = np.maximum(d - rsel, 0.0)
+            ssel = np.asarray(bounds.slack, np.float32)[sc][:, None, :]
+            ub = q2 - near * near + ssel
+            lb = q2 - (d + rsel) ** 2
+        # rounding margin: the kernel accumulates in f32 (operands possibly
+        # 16-bit) — widen so accumulation noise can't beat the bound
+        itemsize = np.dtype(index.store_dtype).itemsize
+        tol = 1e-2 if (not index.quantized and itemsize == 2) else 1e-4
+        # f64 state: the ε model subtracts the running kth (NEG_INF when a
+        # query's top-k isn't full yet), which overflows in f32
+        ub = ub.astype(np.float64) + (1e-3 + tol * np.abs(ub))
+        lb = lb.astype(np.float64)
+
+        # ε model's mass: expected passing rows of the pair's cluster under
+        # the query's filter (live counts when summaries are off)
+        if summ is not None:
+            ep = np.asarray(summaries_lib.expected_passing(
+                summ, plan.lo_pad, plan.hi_pad, counts
+            ))
+            mass = np.take_along_axis(
+                ep.reshape(n_tiles, qb, -1), sc[:, None, :], axis=2
+            )
+        else:
+            cnt = np.asarray(counts, np.float32)[sc][:, None, :]
+            mass = np.broadcast_to(cnt, (n_tiles, qb, cap)).copy()
+
+        # best-bound-first: permute each tile's live slots by descending
+        # max-over-queries upper bound, remap probe pointers, co-permute
+        slot_bound = np.where(valid, ub, -np.inf).max(axis=1)
+        sc_flat, sop_new, perm = probes_lib.bound_order(
+            plan.slot_cluster, plan.n_unique, plan.slot_of_probe,
+            slot_bound, cap,
+        )
+        plan.slot_cluster = sc_flat
+        plan.slot_of_probe = sop_new
+        pq = perm[:, None, :]
+        ub = np.take_along_axis(ub, pq, axis=2)
+        lb = np.take_along_axis(lb, pq, axis=2)
+        mass = np.take_along_axis(mass, pq, axis=2)
+        valid = np.take_along_axis(valid, pq, axis=2)
+
+        # segment the slot axis: ~4 segments per tile, widths a multiple of
+        # 4 so every (bucket, seg) scan shape comes from a bounded set
+        seg = max(4, ((-(-cap // 4) + 3) // 4) * 4)
+        n_seg = -(-cap // seg)
+        cap_pad = n_seg * seg
+        if cap_pad > cap:
+            padw = ((0, 0), (0, 0), (0, cap_pad - cap))
+            ub = np.pad(ub, padw, constant_values=-np.inf)
+            lb = np.pad(lb, padw, constant_values=-np.inf)
+            mass = np.pad(mass, padw, constant_values=0.0)
+            valid = np.pad(valid, padw, constant_values=False)
+        plan.term = TermState(
+            epsilon=(self.epsilon if self.termination == "bounded"
+                     else 0.0),
+            seg=seg, n_seg=n_seg, cap=cap,
+            ub=ub, lb=lb, mass=mass, valid=valid,
+        )
+
     # ---- fetch ----
     @property
     def blockstore(self):
@@ -959,7 +1342,29 @@ class SearchEngine:
         if note is not None:
             note(n)
 
-    def _store_gather(self, slot_cluster, gens: Optional[np.ndarray] = None):
+    def _count_fetched(self, plan: Optional[SearchPlan], cids):
+        """``blocks_fetched`` accounting on fetch paths with a reuse layer
+        (operand / device cache): deduped per batch by ``(cluster, gen)``.
+        An eviction or partial invalidation between a tile's submit and its
+        assembly makes the gap/missing fallbacks re-pull a block an earlier
+        tile of the same batch already fetched — the counter reports
+        distinct blocks, so a composed-tile memo hit after a partial
+        invalidation no longer double-counts."""
+        if plan is None:
+            self.stats.blocks_fetched += len(cids)
+            return
+        if plan.fetched_keys is None:
+            plan.fetched_keys = set()
+        gens = plan.gens
+        for c in cids:
+            cid = int(c)
+            key = (cid, int(gens[cid]) if gens is not None else 0)
+            if key not in plan.fetched_keys:
+                plan.fetched_keys.add(key)
+                self.stats.blocks_fetched += 1
+
+    def _store_gather(self, slot_cluster, gens: Optional[np.ndarray] = None,
+                      plan: Optional[SearchPlan] = None):
         """Whole-list gather through the BlockStore protocol — the sync
         executor's fetch stage (same record ordering, and therefore cache
         behavior, as the pre-protocol pager).  ``gens`` is the full [K]
@@ -969,13 +1374,14 @@ class SearchEngine:
         uniq, local = blockstore_lib.first_need_unique(flat)
         g = None if gens is None else gens[uniq]
         if self._device_cache is not None:
-            return self._device_gather(flat, uniq, local, gens)
+            return self._device_gather(flat, uniq, local, gens, plan=plan)
         recs = self._store.get(uniq, gens=g)
         self.stats.blocks_fetched += len(recs)
         return blockstore_lib.assemble_blocks(flat, uniq, local, recs,
                                               self._bspec)
 
-    def _device_gather(self, flat, uniq, local, gens):
+    def _device_gather(self, flat, uniq, local, gens,
+                       plan: Optional[SearchPlan] = None):
         """Device-cache-aware gather: resident clusters are served straight
         from the device cache (no store fetch, no host assembly, no H2D);
         only the misses cross the BlockStore, are device-put once and
@@ -997,7 +1403,7 @@ class SearchEngine:
             recs = self._store.get(
                 marr, gens=None if gens is None else gens[marr]
             )
-            self.stats.blocks_fetched += len(recs)
+            self._count_fetched(plan, recs)
             hits.update(dc.put_records(recs))
         entries = [hits[int(c)] for c in uniq]
         blocks = dc.compose(entries, s)
@@ -1018,11 +1424,14 @@ class SearchEngine:
         if self._gather_fn is None:
             return (plan.slot_cluster, index.vectors, index.attrs, index.ids,
                     index.norms, index.scales)
+        t0 = time.perf_counter()
         if self._store is not None and self._gather_fn == self._store_gather:
-            out = self._store_gather(plan.slot_cluster, gens=plan.gens)
+            out = self._store_gather(plan.slot_cluster, gens=plan.gens,
+                                     plan=plan)
         else:
             out = self._gather_fn(plan.slot_cluster)
         slot_cluster, vectors, attrs, ids, norms, scales = out
+        self._observe_stage("fetch", time.perf_counter() - t0)
         return (jnp.asarray(slot_cluster), vectors, attrs, ids, norms,
                 scales)
 
@@ -1066,6 +1475,7 @@ class SearchEngine:
         snap = plan.delta_snap
         if snap is None or snap.n_rows == 0:
             return res
+        t0 = time.perf_counter()
         from repro.core import delta as delta_lib
 
         # Delta-tier scan skip: a tiny resident interval/histogram summary
@@ -1081,11 +1491,14 @@ class SearchEngine:
         ).any()):
             self.stats.delta_skips += 1
             if summ is None:  # no live rows: reach is identically zero
+                self._observe_stage("delta_fold",
+                                    time.perf_counter() - t0)
                 return res
             dscan = delta_lib.snapshot_reach(
                 snap, plan.geo_probes, plan.geo_valid
             )
             q = plan.q
+            self._observe_stage("delta_fold", time.perf_counter() - t0)
             return dataclasses.replace(
                 res, n_scanned=res.n_scanned + dscan[:q]
             )
@@ -1100,6 +1513,7 @@ class SearchEngine:
             (res.scores, res.ids), (dvals[:q], dids[:q]), self.k
         )
         self.stats.delta_folds += 1
+        self._observe_stage("delta_fold", time.perf_counter() - t0)
         return dataclasses.replace(
             res, scores=vals, ids=out_ids,
             n_scanned=res.n_scanned + dscan[:q],
@@ -1108,6 +1522,7 @@ class SearchEngine:
 
     def scan_merge(self, plan: SearchPlan, operands) -> SearchResult:
         """Whole-batch scan/merge over fetched operands (sync executor)."""
+        t0 = time.perf_counter()
         slot_cluster, vectors, attrs, ids, norms, scales = operands
         ids = self._mask_tombstones(plan, ids)
         metric = self.index.spec.metric
@@ -1124,12 +1539,14 @@ class SearchEngine:
             metric=metric, k=self.k, q=plan.q, q_block=plan.q_block,
             v_block=self.v_block, backend=self.backend,
         )
+        self._observe_stage("scan", time.perf_counter() - t0)
         return dataclasses.replace(res, n_pruned=plan.n_pruned)
 
     def _scan_tile(self, plan: SearchPlan, i: int, operands) -> SearchResult:
         """Scan/merge one query tile (pipelined executor).  Same jitted
         stage as the monolith with ``n_tiles=1`` — per-slot arithmetic is
         identical, so tile results concatenate to the sync result bitwise."""
+        t0 = time.perf_counter()
         slot_cluster, vectors, attrs, ids, norms, scales = operands
         ids = self._mask_tombstones(plan, ids)
         qb, cap = plan.q_block, plan.u_cap
@@ -1142,7 +1559,7 @@ class SearchEngine:
             plan, q=qb, qpad=qb, s=cap, q_block=qb,
             vectors=vectors, norms=norms, scales=scales,
         ))
-        return _scan_merge_tiled(
+        res = _scan_merge_tiled(
             jnp.asarray(slot_cluster),
             jnp.zeros((cap,), jnp.int32),
             jnp.asarray(sop), jnp.asarray(plan.probe_ok[rows]),
@@ -1152,12 +1569,169 @@ class SearchEngine:
             metric=metric, k=self.k, q=qb, q_block=qb,
             v_block=self.v_block, backend=self.backend,
         )
+        self._observe_stage("scan", time.perf_counter() - t0)
+        return res
+
+    def _scan_tile_terminated(self, plan: SearchPlan, i: int,
+                              operands) -> SearchResult:
+        """Bound-driven scan of one query tile: best-bound-first segments,
+        running top-k folded after each, remaining (query, slot) pairs
+        dropped when their score upper bound provably (or, in ε mode,
+        probably) cannot reach the query's top-k.
+
+        Exactness: a pair dropped under the provable rule scores strictly
+        below the query's *running* kth, which only rises — so it is
+        strictly below the final kth and its fragments could never surface
+        in the merged top-k.  Pairs whose segment WAS scanned (for another
+        query) keep their fragments in the merge, so ``termination="exact"``
+        reproduces the unterminated scan bitwise.  ε-dropped pairs are
+        always masked — the result is the exact top-k over the surviving
+        probe set, which shrinks monotonically with ε.
+        """
+        from repro.kernels.filtered_scan.filtered_scan import (
+            fold_running_topk,
+        )
+
+        t_start = time.perf_counter()
+        slot_cluster, vectors, attrs, ids, norms, scales = operands
+        ids = self._mask_tombstones(plan, ids)
+        term = plan.term
+        qb, cap, k = plan.q_block, plan.u_cap, self.k
+        seg, n_seg = term.seg, term.n_seg
+        cap_pad = n_seg * seg
+        metric = self.index.spec.metric
+        if plan.queries_orig_pad is None:
+            plan.queries_orig_pad = probes_lib.pad_to_tiles(plan.queries, qb)
+        rows = slice(i * qb, (i + 1) * qb)
+        sop = np.asarray(plan.slot_of_probe[rows]) - i * cap
+        pok = np.asarray(plan.probe_ok[rows])
+        q_pad = plan.queries_pad[rows]
+        lo_pad = plan.lo_pad[rows]
+        hi_pad = plan.hi_pad[rows]
+        # pad the tile's slot list to the segmented width with the standard
+        # repeat-last-slot convention (scanned only if its segment is)
+        sc = np.asarray(slot_cluster).reshape(-1)
+        if cap_pad > cap:
+            sc = np.concatenate([sc, np.repeat(sc[-1:], cap_pad - cap)])
+        sc_dev = jnp.asarray(sc, jnp.int32)
+
+        alive = term.valid[i].copy()              # [qb, cap_pad]
+        eps_dropped = np.zeros((qb, cap_pad), bool)
+        scanned = np.zeros((n_seg,), bool)
+        run_vals = jnp.full((qb, k), topk_lib.NEG_INF, jnp.float32)
+        run_ids = jnp.full((qb, k), -1, jnp.int32)
+        frags: List[Optional[Tuple]] = []
+        for si in range(n_seg):
+            p0, p1 = si * seg, (si + 1) * seg
+            alive_seg = alive[:, p0:p1]
+            if not alive_seg.any():
+                self.stats.term_segments_skipped += 1
+                frags.append(None)
+            else:
+                scanned[si] = True
+                self._count_scan((
+                    "term", self.backend, metric, k, qb, self.v_block, seg,
+                    np.shape(vectors), str(vectors.dtype),
+                    str(q_pad.dtype), tuple(lo_pad.shape[1:]),
+                    norms is None, scales is None,
+                ))
+                svals, sids, snpass = _scan_slots(
+                    sc_dev[p0:p1], q_pad, lo_pad, hi_pad,
+                    vectors, attrs, ids, norms, scales,
+                    metric=metric, k=k, q_block=qb, v_block=self.v_block,
+                    backend=self.backend,
+                )
+                frags.append((svals, sids, snpass))
+                run_vals, run_ids = fold_running_topk(
+                    run_vals, run_ids, svals, sids, jnp.asarray(alive_seg),
+                    k=k,
+                )
+            if si + 1 >= n_seg:
+                break
+            # boundary: compare remaining pairs' upper bounds against the
+            # running kth (one host sync per boundary, n_seg − 1 per tile)
+            kth = np.asarray(run_vals)[:, k - 1]
+            kth_real = kth > topk_lib.NEG_INF / 2
+            rest = np.s_[:, p1:]
+            drop = (alive[rest] & kth_real[:, None]
+                    & (term.ub[i][rest] < kth[:, None]))
+            if si == 0 and term.epsilon > 0.0:
+                # the ε decision is made exactly once, at the first
+                # boundary, from an ε-independent kth — so higher ε drops a
+                # superset of lower ε's pairs and recall is monotone in ε
+                ub_r, lb_r = term.ub[i][rest], term.lb[i][rest]
+                m_r = term.mass[i][rest]
+                p_hit = np.clip(
+                    (ub_r - kth[:, None])
+                    / np.maximum(ub_r - lb_r, 1e-12),
+                    0.0, 1.0,
+                )
+                p_hit = np.where(kth_real[:, None], p_hit, 1.0)
+                p_any = 1.0 - np.power(
+                    1.0 - np.minimum(p_hit, 1.0 - 1e-12), m_r
+                )
+                edrop = alive[rest] & (p_any <= term.epsilon)
+                eps_dropped[rest] |= edrop
+                drop = drop | edrop
+            self.stats.probes_terminated += int(drop.sum())
+            alive[rest] &= ~drop
+        # never-scanned segments contribute all-masked filler fragments so
+        # the merge sees one fixed [cap_pad, QB, k] shape per bucket
+        filler = None
+        for si in range(n_seg):
+            if frags[si] is None:
+                if filler is None:
+                    filler = (
+                        jnp.full((seg, qb, k), topk_lib.NEG_INF,
+                                 jnp.float32),
+                        jnp.full((seg, qb, k), -1, jnp.int32),
+                        jnp.zeros((seg, qb), jnp.int32),
+                    )
+                frags[si] = filler
+        svals_all = jnp.concatenate([f[0] for f in frags], axis=0)
+        sids_all = jnp.concatenate([f[1] for f in frags], axis=0)
+        snpass_all = jnp.concatenate([f[2] for f in frags], axis=0)
+        # a probe's fragments enter the merge iff its segment was scanned
+        # and it was not ε-dropped; provably-dropped pairs of a scanned
+        # segment stay in (their rows are strictly below the final kth —
+        # keeping them preserves bitwise identity with the full scan)
+        scanned_pos = np.repeat(scanned, seg)
+        qi = np.broadcast_to(np.arange(qb)[:, None], sop.shape)
+        scan_ok = pok & scanned_pos[sop]
+        pair_ok = scan_ok & ~eps_dropped[qi, sop]
+        res = _merge_tile_fragments(
+            svals_all, sids_all, snpass_all, jnp.asarray(sop),
+            jnp.asarray(pair_ok), jnp.asarray(scan_ok),
+            plan.queries_orig_pad[rows], sc_dev, ids,
+            metric=metric, k=k, q=qb,
+        )
+        self._observe_stage("scan", time.perf_counter() - t_start)
+        return res
+
+    def _execute_terminated_sync(self, plan: SearchPlan) -> SearchResult:
+        """Sync executor, termination active: one whole-batch fetch, then
+        per-tile segmented scans (the early-termination decisions need the
+        per-tile running kth, so the monolithic all-tiles scan is replaced
+        by a loop over the same compiled per-segment stage)."""
+        operands = self.fetch(plan)
+        slot_cluster = np.asarray(operands[0]).reshape(
+            plan.n_tiles, plan.u_cap
+        )
+        parts: List[SearchResult] = []
+        for i in range(plan.n_tiles):
+            parts.append(self._scan_tile_terminated(
+                plan, i, (slot_cluster[i],) + tuple(operands[1:])
+            ))
+            self.stats.tiles_scanned += 1
+        return self._merge_parts(plan, parts)
 
     # ---- executors ----
     def execute(self, plan: SearchPlan) -> SearchResult:
         self.stats.batches += 1
         if self.pipeline == "on":
             res = self._execute_pipelined(plan)
+        elif plan.term is not None:
+            res = self._execute_terminated_sync(plan)
         else:
             res = self.scan_merge(plan, self.fetch(plan))
         res = self._fold_delta(plan, res)
@@ -1200,6 +1774,8 @@ class SearchEngine:
         if pending.inflight is None:
             if self.pipeline == "on":
                 res = self._execute_pipelined(plan)
+            elif plan.term is not None:
+                res = self._execute_terminated_sync(plan)
             else:
                 res = self.scan_merge(plan, self.fetch(plan))
         else:
@@ -1251,7 +1827,10 @@ class SearchEngine:
         fetched through the store once per batch; later tiles assemble it
         straight from the batch-local records (``blocks_reused``)."""
         recs = self._store.wait(h_store)
-        self.stats.blocks_fetched += len(recs)
+        if self._device_cache is not None or plan.operands is not None:
+            self._count_fetched(plan, recs)
+        else:
+            self.stats.blocks_fetched += len(recs)
         sc = plan.slot_cluster.reshape(plan.n_tiles, plan.u_cap)[i]
         uniq, local = blockstore_lib.first_need_unique(sc)
         if self._device_cache is not None:
@@ -1278,7 +1857,7 @@ class SearchEngine:
                     np.asarray(missing, np.int64),
                     gens=self._expected_gens(plan, missing),
                 )
-                self.stats.blocks_fetched += len(more)
+                self._count_fetched(plan, more)
                 for c, r in more.items():
                     ops[gkey(c)] = r
             self.stats.blocks_reused += max(
@@ -1327,7 +1906,7 @@ class SearchEngine:
                 np.asarray(gap, np.int64),
                 gens=self._expected_gens(plan, gap),
             )
-            self.stats.blocks_fetched += len(more)
+            self._count_fetched(plan, more)
             entries.update(dc.put_records(more))
         ordered = [entries[int(c)] for c in uniq]
         blocks = dc.compose(ordered, s)
@@ -1382,6 +1961,7 @@ class SearchEngine:
             out = handle.result()
         t1 = time.monotonic()
         self.stats.io_wait_s += t1 - t0
+        self._observe_stage("fetch", t1 - t0)
         # submit→completion span; a gather that finished long before this
         # wait counts its true (short) duration, not the time it sat done —
         # the callback timestamp may lag result() by a beat, so fall back
@@ -1405,13 +1985,17 @@ class SearchEngine:
         when the result is drained.
         """
         if plan.n_tiles < 2 and self._gather_fn is not None:
+            if plan.term is not None:
+                return self._execute_terminated_sync(plan)
             return self.scan_merge(plan, self.fetch(plan))
+        scan = (self._scan_tile_terminated if plan.term is not None
+                else self._scan_tile)
         if self._gather_fn is None:
             self.stats.pipelined_batches += 1
             parts: List[SearchResult] = []
             for i in range(plan.n_tiles):
                 parts.append(
-                    self._scan_tile(plan, i, self._tile_operands(plan, i))
+                    scan(plan, i, self._tile_operands(plan, i))
                 )
                 self.stats.tiles_scanned += 1
             return self._merge_parts(plan, parts)
@@ -1428,13 +2012,15 @@ class SearchEngine:
         self.stats.pipelined_batches += 1
         n = plan.n_tiles
         depth = max(len(inflight), 1)
+        scan = (self._scan_tile_terminated if plan.term is not None
+                else self._scan_tile)
         parts: List[SearchResult] = []
         try:
             for i in range(n):
                 operands = self._wait(inflight.pop(i))
                 if i + depth < n:
                     inflight[i + depth] = self._submit(plan, i + depth)
-                parts.append(self._scan_tile(plan, i, operands))
+                parts.append(scan(plan, i, operands))
                 self.stats.tiles_scanned += 1
         except BaseException:
             for handle_rec in inflight.values():
@@ -1447,6 +2033,7 @@ class SearchEngine:
 
     def _merge_parts(self, plan: SearchPlan,
                      parts: List[SearchResult]) -> SearchResult:
+        t0 = time.perf_counter()
         if len(parts) == 1:
             res = parts[0]
             res = SearchResult(res.scores[: plan.q], res.ids[: plan.q],
@@ -1459,6 +2046,7 @@ class SearchEngine:
                 jnp.concatenate([p.n_scanned for p in parts])[: plan.q],
                 jnp.concatenate([p.n_passed for p in parts])[: plan.q],
             )
+        self._observe_stage("merge", time.perf_counter() - t0)
         return dataclasses.replace(res, n_pruned=plan.n_pruned)
 
     # ---- the whole pipeline ----
@@ -1525,9 +2113,11 @@ class SearchEngine:
         return out
 
     def metrics_text(self) -> str:
-        """:meth:`metrics` rendered in Prometheus text exposition format
+        """:meth:`metrics` rendered in Prometheus text exposition format,
+        plus the per-stage fixed-bucket latency histograms
         (``launch/serve.py --metrics-port`` serves this)."""
-        return render_prometheus(self.metrics())
+        return (render_prometheus(self.metrics())
+                + render_stage_histograms(self._stage_hist))
 
     def close(self):
         pool = getattr(self, "_pool", None)
@@ -1556,6 +2146,8 @@ def search_fused_tiled(
     adaptive_u_cap: bool = False,
     u_cap_ladder: str = "pow2",
     operand_cache: str = "auto",
+    termination: Optional[str] = None,
+    epsilon: float = 0.0,
 ) -> SearchResult:
     """Query-tiled, probe-deduplicated fused search with streaming top-k.
 
@@ -1591,6 +2183,7 @@ def search_fused_tiled(
         blockstore=blockstore, prune=prune, t_max=t_max, pipeline=pipeline,
         pipeline_depth=pipeline_depth, adaptive_u_cap=adaptive_u_cap,
         u_cap_ladder=u_cap_ladder, operand_cache=operand_cache,
+        termination=termination, epsilon=epsilon,
     )
     try:
         return eng.search(queries, fspec)

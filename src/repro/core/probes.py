@@ -236,6 +236,60 @@ def tile_release_lists(slot_cluster, n_unique, u_cap: int):
     return [uniq[last_tile == t] for t in range(n_tiles)]
 
 
+def bound_order(slot_cluster, n_unique, slot_of_probe, slot_bound,
+                u_cap: int):
+    """Permutes each tile's live slots best-bound-first (host-side).
+
+    The dedup tables come out in ascending-cluster-id order (a sort
+    artifact); the bound-driven executor instead wants to scan the slots
+    most likely to hold top-k candidates first, so the running kth score
+    rises as fast as possible and later slots can be dropped on a bound.
+    This reorders each tile's live region ``[0, u)`` by descending
+    ``slot_bound`` and rewrites the pad region to repeat the *new* last
+    live slot (preserving the consecutive-pad revisiting fast path), then
+    remaps every probe pointer through the permutation.  Must run before
+    any fetch list is built from the tables — fetch/prefetch then follow
+    the new order for free.
+
+    Args:
+      slot_cluster:  [n_tiles·u_cap] int32 (``plan_probe_tiles`` output).
+      n_unique:      [n_tiles] live-slot counts.
+      slot_of_probe: [Qpad, T] int32 flat slot pointers.
+      slot_bound:    [n_tiles, u_cap] f32 per-slot priority (e.g. the max
+                     score upper bound over the tile's queries).
+      u_cap:         static per-tile slot capacity.
+
+    Returns ``(slot_cluster', slot_of_probe', perm)`` as host numpy arrays,
+    where ``perm [n_tiles, u_cap]`` maps new slot position → old position
+    (identity on pads), so callers can co-permute per-slot state with
+    ``np.take_along_axis(x, perm, ...)``.
+    """
+    import numpy as np
+
+    sc = np.array(np.asarray(slot_cluster).reshape(-1, u_cap), np.int32)
+    nu = np.asarray(n_unique)
+    bound = np.asarray(slot_bound)
+    n_tiles = sc.shape[0]
+    perm = np.broadcast_to(
+        np.arange(u_cap, dtype=np.int32), (n_tiles, u_cap)
+    ).copy()
+    inv = perm.copy()
+    for t in range(n_tiles):
+        u = min(int(nu[t]), u_cap)
+        if u <= 1:
+            continue
+        order = np.argsort(-bound[t, :u], kind="stable").astype(np.int32)
+        perm[t, :u] = order
+        sc[t, :u] = sc[t, order]
+        sc[t, u:] = sc[t, u - 1]  # pads repeat the new last live slot
+        inv_t = np.empty(u, np.int32)
+        inv_t[order] = np.arange(u, dtype=np.int32)
+        inv[t, :u] = inv_t  # positions ≥ u keep identity (clipped pads)
+    t_idx, s = np.divmod(np.asarray(slot_of_probe, np.int32), u_cap)
+    sop = (t_idx * u_cap + inv[t_idx, s]).astype(np.int32)
+    return sc.reshape(-1), sop, perm
+
+
 def split_fetch_by_owner(fetch, owner_of):
     """Splits a first-need fetch list per owning node (host-side).
 

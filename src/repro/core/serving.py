@@ -52,7 +52,10 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
                          breaker_kwargs: Optional[dict] = None,
                          probe_interval_s: Optional[float] = None,
                          delta_budget_mb: Optional[float] = None,
+                         delta_quantize: str = "auto",
                          device_cache_mb: Optional[float] = None,
+                         termination: Optional[str] = None,
+                         epsilon: float = 0.0,
                          ) -> Callable:
     """The batched server's default search step: the search engine.
 
@@ -122,6 +125,17 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
     invalidates exactly the rewritten entries via the same ``refresh()``
     handshake.  Stats under ``metrics()``'s ``device_cache.*`` keys; the
     cache is exposed as ``search_fn.device_cache``.
+
+    ``termination`` selects the engine's recall-bounded execution mode:
+    ``"exact"`` reorders each tile's probes best-bound-first and drops
+    probes that provably cannot enter the top-k (bit-identical results,
+    fewer segments scanned on selective streams); ``"bounded"`` with
+    ``epsilon`` > 0 additionally drops probes whose probability of
+    contributing a top-k hit is ≤ ε (recall ≥ 1−ε in expectation).
+    ``delta_quantize="on"`` stores delta-tier rows SQ8-quantized even over
+    a float cold tier (~4× capacity per MB; scores agree to quantization
+    tolerance, and the next republish dequantizes the rows back into the
+    cold tier's dtype).
     """
     from repro.core import blockstore as blockstore_lib
     from repro.core.disk import DiskIVFIndex
@@ -150,7 +164,9 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
                 f"v{index.man['layout']} — re-save it with "
                 f"storage.save_index(index, dir)"
             )
-        delta = delta_lib.DeltaTier.for_index(index, delta_budget_mb)
+        delta = delta_lib.DeltaTier.for_index(
+            index, delta_budget_mb, quantize=delta_quantize
+        )
         index.delta = delta
     store = None
     if cache_shards > 1:
@@ -197,6 +213,7 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
         pipeline_depth=pipeline_depth, adaptive_u_cap=adaptive_u_cap,
         blockstore=store, operand_cache=operand_cache,
         u_cap_ladder=u_cap_ladder, device_cache=device_cache,
+        termination=termination, epsilon=epsilon,
     )
 
     def search_fn(queries, fspec, shard_ok=None):

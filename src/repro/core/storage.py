@@ -72,7 +72,12 @@ import numpy as np
 
 from repro.core.hybrid import HybridSpec
 from repro.core.ivf import IVFFlatIndex
-from repro.core.summaries import ClusterSummaries, pad_clusters
+from repro.core.summaries import (
+    ClusterBounds,
+    ClusterSummaries,
+    build_bounds,
+    pad_clusters,
+)
 
 MANIFEST = "manifest.json"
 GENS_FILE = "gens.npy"  # layout v3: resident per-cluster generation vector
@@ -90,6 +95,15 @@ SUMMARY_FILES = dict(
     hist="summaries_hist.npy",
     edges_lo="summaries_edges_lo.npy",
     edges_hi="summaries_edges_hi.npy",
+)
+# Resident per-cluster geometric score bounds (bound-driven early
+# termination): like the summaries, tiny always-resident .npy files next to
+# centroids.npy.  The manifest's ``has_bounds`` flag gates them; checkpoints
+# without them load fine and simply can't serve termination= from disk until
+# re-saved.
+BOUNDS_FILES = dict(
+    radius="bounds_radius.npy",
+    slack="bounds_slack.npy",
 )
 _FIELD_ALIGN = 64     # per-field offset alignment inside a record
 _RECORD_ALIGN = 512   # record stride alignment (mmap-friendly)
@@ -270,6 +284,18 @@ def save_index(index: IVFFlatIndex, directory: str, *, n_shards: int = 1,
                     p, np.asarray(getattr(index.summaries, f))
                 ),
             )
+    # Resident score bounds: recomputed from the flat lists at save time (the
+    # writer holds them all anyway) so every fresh checkpoint can serve
+    # termination= from disk without touching a shard.
+    bounds = build_bounds(
+        index.centroids, index.vectors, index.ids, index.norms, index.scales
+    )
+    for field, fname in BOUNDS_FILES.items():
+        _atomic_save(
+            os.path.join(directory, fname),
+            lambda p, f=field: _np_save(p, np.asarray(getattr(bounds, f))),
+        )
+    manifest["has_bounds"] = True
 
     if layout == 1:
         for s in range(n_shards):
@@ -337,6 +363,7 @@ def load_manifest(directory: str) -> dict:
     man.setdefault("layout", 1)        # pre-v2 checkpoints
     man.setdefault("quantized", False)  # pre-SQ8-fix checkpoints
     man.setdefault("has_summaries", False)  # pre-v2.1: no pruning, sound
+    man.setdefault("has_bounds", False)  # pre-PR-9: no disk-tier termination
     return man
 
 
@@ -350,6 +377,19 @@ def load_summaries(directory: str, man: dict) -> Optional[ClusterSummaries]:
         for f, fname in SUMMARY_FILES.items()
     }
     return ClusterSummaries(**fields)
+
+
+def load_bounds(directory: str, man: dict) -> Optional[ClusterBounds]:
+    """Loads the resident per-cluster score bounds, or None for checkpoints
+    written before they existed (bound-driven termination then needs a
+    re-save; exact search is unaffected)."""
+    if not man.get("has_bounds"):
+        return None
+    fields = {
+        f: jnp.asarray(np.load(os.path.join(directory, fname)))
+        for f, fname in BOUNDS_FILES.items()
+    }
+    return ClusterBounds(**fields)
 
 
 def load_gens(directory: str, man: dict) -> np.ndarray:
@@ -391,6 +431,10 @@ def check_complete(directory: str, man: dict) -> List[str]:
     if man.get("has_summaries"):
         required += [
             os.path.join(directory, f) for f in SUMMARY_FILES.values()
+        ]
+    if man.get("has_bounds"):
+        required += [
+            os.path.join(directory, f) for f in BOUNDS_FILES.values()
         ]
     if man.get("layout", 1) >= 3:
         required.append(os.path.join(directory, GENS_FILE))

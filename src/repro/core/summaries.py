@@ -249,6 +249,109 @@ def pad_clusters(summaries: ClusterSummaries, k_new: int) -> ClusterSummaries:
     )
 
 
+# ---------------------------------------------------------------------------
+# Per-cluster geometric score bounds (bound-driven early termination)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ClusterBounds:
+    """Resident per-cluster geometric statistics for per-probe score bounds.
+
+    ``radius[c]`` is the max distance from cluster ``c``'s centroid to any
+    live *stored* row (SQ8 rows measured after dequantization — the scan
+    scores the stored representation, so the bound must cover it, not the
+    original floats).  ``slack[c]`` is the max of ``‖x̂‖² − norms_row`` over
+    live rows: the l2 kernel scores ``2q·x̂ − norms_row``, and the geometric
+    bound on ``2q·x̂ − ‖x̂‖²`` converts to the kernel's score space by adding
+    this slack.  Both are conservative the same way the attribute summaries
+    are: tombstones leave them stale-wide (a sound over-estimate), a
+    compaction rebuilds the row exactly, and an empty cluster carries
+    ``radius == slack == 0`` (vacuous — the probe is unprobeable anyway).
+
+    Tiny (``8·K`` bytes) and always resident, like the summaries: the
+    terminated executor consults them per batch before any flat list is
+    scanned.
+    """
+
+    radius: Array  # [K] f32 — max ‖x̂ − c‖ over live stored rows
+    slack: Array   # [K] f32 — max (‖x̂‖² − norms_row) over live rows (l2)
+
+    @property
+    def n_clusters(self) -> int:
+        return self.radius.shape[0]
+
+    def nbytes(self) -> int:
+        return sum(
+            a.size * a.dtype.itemsize for a in (self.radius, self.slack)
+        )
+
+
+@jax.jit
+def _bounds_rows(x32: Array, live: Array, centroids: Array,
+                 norms: Optional[Array]) -> Tuple[Array, Array]:
+    """(radius, slack) over the live rows of ``x32 [K, Vpad, D]`` f32."""
+    diff = x32 - centroids.astype(jnp.float32)[:, None, :]
+    d2 = jnp.sum(diff * diff, axis=-1)  # [K, Vpad]
+    # d2 >= 0, so masking dead rows to 0 keeps the max sound and gives an
+    # empty cluster radius 0 without a separate any-live branch
+    radius = jnp.sqrt(jnp.max(jnp.where(live, d2, 0.0), axis=1))
+    if norms is None:
+        slack = jnp.zeros_like(radius)
+    else:
+        sl = jnp.sum(x32 * x32, axis=-1) - norms.astype(jnp.float32)
+        any_live = jnp.any(live, axis=1)
+        slack = jnp.where(
+            any_live, jnp.max(jnp.where(live, sl, -jnp.inf), axis=1), 0.0
+        )
+    return radius, slack
+
+
+def _stored_f32(vectors: Array, scales: Optional[Array]) -> Array:
+    """The rows as the kernel scores them: dequantized SQ8 / f32-cast."""
+    x32 = jnp.asarray(vectors).astype(jnp.float32)
+    if scales is not None:
+        x32 = x32 * jnp.asarray(scales, jnp.float32)[..., None]
+    return x32
+
+
+def build_bounds(centroids: Array, vectors: Array, ids: Array,
+                 norms: Optional[Array] = None,
+                 scales: Optional[Array] = None) -> ClusterBounds:
+    """Builds the per-cluster score-bound statistics from the flat lists.
+
+    Args mirror the index's resident arrays: ``vectors [K, Vpad, D]`` (store
+    dtype; int8 codes with ``scales`` under SQ8), ``ids [K, Vpad]`` (rows
+    with ``ids < 0`` excluded), ``norms [K, Vpad]`` for l2.
+    """
+    live = jnp.asarray(ids) >= 0
+    radius, slack = _bounds_rows(
+        _stored_f32(vectors, scales), live, jnp.asarray(centroids),
+        None if norms is None else jnp.asarray(norms),
+    )
+    return ClusterBounds(radius=radius, slack=slack)
+
+
+def rebuild_cluster_bounds(bounds: ClusterBounds, centroid_row: Array,
+                           vectors_row: Array, ids_row: Array,
+                           norms_row: Optional[Array],
+                           scales_row: Optional[Array],
+                           cluster) -> ClusterBounds:
+    """Recomputes one cluster's bound row exactly (compaction, rebuilds)."""
+    radius, slack = _bounds_rows(
+        _stored_f32(vectors_row, scales_row)[None],
+        (jnp.asarray(ids_row) >= 0)[None],
+        jnp.asarray(centroid_row)[None],
+        None if norms_row is None else jnp.asarray(norms_row)[None],
+    )
+    return dataclasses.replace(
+        bounds,
+        radius=bounds.radius.at[cluster].set(radius[0]),
+        slack=bounds.slack.at[cluster].set(slack[0]),
+    )
+
+
 def can_match(summaries: ClusterSummaries, lo: Array, hi: Array) -> Array:
     """[Q, K] bool — can any live row of cluster k pass query q's filter?
 

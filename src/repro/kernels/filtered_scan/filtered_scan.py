@@ -487,3 +487,37 @@ def filtered_scan_tiled(
         interpret=interpret,
     )(slot_cluster.astype(jnp.int32), slot_tile.astype(jnp.int32), *operands)
     return vals, out_ids, npass
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def fold_running_topk(
+    run_vals: jax.Array,   # [QB, k] f32 running per-query top-k values
+    run_ids: jax.Array,    # [QB, k] int32 running ids
+    svals: jax.Array,      # [S, QB, k] f32 per-slot fragments (a segment)
+    sids: jax.Array,       # [S, QB, k] int32
+    alive: jax.Array,      # [QB, S] bool — (query, slot) pairs scheduled
+    *,
+    k: int,
+):
+    """Folds one scanned slot segment into the per-query running top-k.
+
+    The bound-driven executor scans a tile's slot table in segments and
+    compares the running kth score against the remaining slots' upper
+    bounds; this is the device-side fold that keeps that running state —
+    only the ``[QB, k]`` result crosses to host at segment boundaries, never
+    the per-slot fragments (no host sync per tile/slot).  ``alive`` masks
+    pairs that were dropped (or never scheduled), so the running kth can
+    only reflect the surviving probe universe — folding a dropped pair's
+    candidates could raise the kth above what that universe's full scan
+    would produce and make a later drop unsound.
+    """
+    qb = svals.shape[1]
+    live = alive.T[:, :, None]  # [S, QB, 1]
+    vals = jnp.where(live, svals, NEG_INF)
+    ids = jnp.where(live, sids, -1)
+    vals = jnp.moveaxis(vals, 0, 1).reshape(qb, -1)  # [QB, S·k]
+    ids = jnp.moveaxis(ids, 0, 1).reshape(qb, -1)
+    vals = jnp.concatenate([run_vals, vals], axis=1)
+    ids = jnp.concatenate([run_ids, ids], axis=1)
+    new_vals, idx = jax.lax.top_k(vals, k)
+    return new_vals, jnp.take_along_axis(ids, idx, axis=1)

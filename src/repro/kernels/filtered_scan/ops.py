@@ -38,7 +38,10 @@ from repro.core.engine import (  # noqa: F401  (back-compat re-exports)
 from repro.core.filters import FilterSpec
 from repro.core.ivf import IVFFlatIndex
 from repro.core.search import SearchResult, search_centroids
-from repro.kernels.filtered_scan.filtered_scan import filtered_scan
+from repro.kernels.filtered_scan.filtered_scan import (  # noqa: F401
+    filtered_scan,
+    fold_running_topk,
+)
 
 Array = jax.Array
 

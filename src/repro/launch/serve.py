@@ -136,6 +136,22 @@ def main():
                          "fully assembled on-device operand blocks (zero "
                          "host assembly, zero H2D), heat-weighted LRU "
                          "keyed on (cluster_id, gen)")
+    ap.add_argument("--delta-quantize", choices=("auto", "on"),
+                    default="auto",
+                    help="delta tier: store delta rows SQ8-quantized even "
+                         "over a float cold tier (~4x rows per MiB; scores "
+                         "agree to quantization tolerance, republish "
+                         "dequantizes); auto = match the cold tier")
+    ap.add_argument("--termination", choices=("exact", "bounded"),
+                    default=None,
+                    help="bound-driven early termination: reorder probes "
+                         "best-bound-first and drop probes that provably "
+                         "(exact, bit-identical) or probably (bounded, "
+                         "recall >= 1-epsilon) cannot enter the top-k")
+    ap.add_argument("--epsilon", type=float, default=0.0,
+                    help="bounded termination: per-query probability "
+                         "budget for dropping a probe that might hold a "
+                         "top-k hit (needs --termination bounded)")
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="serve Prometheus text exposition of the flat "
                          "engine metrics at http://localhost:PORT/metrics")
@@ -215,7 +231,9 @@ def main():
         peer_retries=args.peer_retries,
         probe_interval_s=args.probe_interval_s,
         delta_budget_mb=args.delta_budget_mb,
+        delta_quantize=args.delta_quantize,
         device_cache_mb=args.device_cache_mb,
+        termination=args.termination, epsilon=args.epsilon,
     )
     metrics_httpd = None
     if args.metrics_port is not None:

@@ -676,3 +676,148 @@ def test_engine_metrics_flat(built_dot, tmp_path):
     assert m["delta.rows"] == 2
     eng.close()
     disk.close()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: SQ8 delta rows (quantize="on") — ~4× capacity per budget,
+# near-float parity live, and a dequantizing republish over a float cold
+# tier
+# ---------------------------------------------------------------------------
+
+
+def test_delta_quantize_capacity_ratio(built_dot, tmp_path):
+    """`for_index(quantize="on")` sizes rows at 1 byte/dim + 4-byte scale
+    — the exact row-formula ratio over the float32 sizing (~3.5× at D=32,
+    →4× as D grows)."""
+    index, *_ = built_dot
+    disk, _ = _open_live(index, str(tmp_path / "ck"))
+    t_f = DeltaTier.for_index(disk, 8.0)
+    t_q = DeltaTier.for_index(disk, 8.0, quantize="on")
+    row_f = D * 4 + M * 2 + 8
+    row_q = D * 1 + M * 2 + 8 + 4
+    assert t_f.capacity == (8 * 2 ** 20) // row_f
+    assert t_q.capacity == (8 * 2 ** 20) // row_q
+    assert t_q.capacity * row_f >= t_f.capacity * row_q  # strictly denser
+    assert t_q.quantized and not t_f.quantized
+    disk.close()
+
+
+def test_delta_quantize_on_near_float_parity(built_dot, tmp_path):
+    """Quantized delta rows over a FLOAT cold tier: ids match a float
+    delta tier's results almost everywhere and scores agree to SQ8
+    precision (≈1e-2 relative)."""
+    index, centers, core, attrs, topic = built_dot
+    rng = np.random.default_rng(23)
+    add = (centers[rng.integers(0, KC, 64)]
+           + 0.05 * rng.standard_normal((64, D))).astype(np.float32)
+    add /= np.linalg.norm(add, axis=-1, keepdims=True)
+    add_attrs = rng.integers(0, TS_RANGE, (64, M)).astype(np.int16)
+    new_ids = np.arange(N, N + 64)
+
+    results = {}
+    for mode in ("auto", "on"):
+        ck = str(tmp_path / f"ck_{mode}")
+        storage.save_index(index, ck, n_shards=2)
+        disk = DiskIVFIndex.open(ck)
+        tier = DeltaTier.for_index(disk, 8.0, quantize=mode)
+        disk.delta = tier
+        tier.add(add, add_attrs, new_ids)
+        tier.tombstone(new_ids[:5])
+        eng = SearchEngine(disk, k=K, n_probes=NP, q_block=QB)
+        q = jnp.asarray(add[5:21] + 0.001)
+        results[mode] = eng.search(q, match_all(16, M))
+        eng.close()
+        disk.close()
+
+    ids_f = np.asarray(results["auto"].ids)
+    ids_q = np.asarray(results["on"].ids)
+    agree = np.mean(ids_f == ids_q)
+    assert agree >= 0.9, f"id agreement {agree}"
+    np.testing.assert_allclose(np.asarray(results["on"].scores),
+                               np.asarray(results["auto"].scores),
+                               rtol=2e-2, atol=2e-2)
+    # none of the tombstoned delta rows surfaced
+    assert not np.isin(ids_q, new_ids[:5]).any()
+
+
+def test_delta_quantize_republish_dequantizes(built_dot, tmp_path):
+    """compact_deltas over a float cold tier folds quantized delta rows by
+    DEQUANTIZING codes·scales — the checkpoint stays float (no manifest
+    flip) and post-republish results match the live pre-republish view."""
+    index, centers, core, attrs, topic = built_dot
+    ck = str(tmp_path / "ck")
+    disk, tier = _open_live(index, ck)
+    tier2 = DeltaTier.for_index(disk, 8.0, quantize="on")
+    disk.delta = tier2
+
+    rng = np.random.default_rng(29)
+    add = (centers[rng.integers(0, KC, 48)]
+           + 0.05 * rng.standard_normal((48, D))).astype(np.float32)
+    add /= np.linalg.norm(add, axis=-1, keepdims=True)
+    add_attrs = rng.integers(0, TS_RANGE, (48, M)).astype(np.int16)
+    new_ids = np.arange(N, N + 48)
+    tier2.add(add, add_attrs, new_ids)
+
+    eng = SearchEngine(disk, k=K, n_probes=NP, q_block=QB)
+    q = jnp.asarray(add[:16] + 0.001)
+    fs = match_all(16, M)
+    before = eng.search(q, fs)
+
+    st = compact_deltas(ck, tier2)
+    assert st.rows_folded == 48
+    assert eng.refresh()
+    assert tier2.stats()["rows"] == 0
+    man = storage.load_manifest(ck)
+    assert not man.get("quantized", False)  # cold tier still float
+
+    after = eng.search(q, fs)
+    np.testing.assert_array_equal(np.asarray(after.ids),
+                                  np.asarray(before.ids))
+    np.testing.assert_allclose(np.asarray(after.scores),
+                               np.asarray(before.scores),
+                               rtol=1e-4, atol=1e-4)
+    eng.close()
+    disk.close()
+
+
+def test_metrics_text_stage_latency_histograms(built_dot, tmp_path):
+    """Satellite: fixed-bucket Prometheus latency histograms per pipeline
+    stage — plan/fetch/scan/merge/delta_fold — with classic cumulative
+    ``le`` semantics and matching ``_count``/``_sum`` rows."""
+    index, centers, core, attrs, topic = built_dot
+    disk, tier = _open_live(index, str(tmp_path / "ck"))
+    tier.add(core[:4], attrs[:4].astype(np.int16),
+             np.arange(8000, 8004))
+    # pipelined executor: the per-tile fetch/scan overlap plus a distinct
+    # merge stage, so all five stage histograms populate
+    eng = SearchEngine(disk, k=K, n_probes=NP, q_block=QB, pipeline="on")
+    for _ in range(3):  # q=21 → 3 tiles: the merge stage actually runs
+        eng.search(jnp.asarray(core[:21]), match_all(21, M))
+    text = eng.metrics_text()
+    assert "# TYPE repro_stage_latency_seconds histogram" in text
+    for stage in ("plan", "fetch", "scan", "merge", "delta_fold"):
+        bucket_counts = []
+        for line in text.splitlines():
+            if (line.startswith("repro_stage_latency_seconds_bucket")
+                    and f'stage="{stage}"' in line):
+                bucket_counts.append(int(line.rsplit(" ", 1)[1]))
+        assert bucket_counts, f"no buckets for stage {stage}"
+        # fixed bucket set, cumulative and non-decreasing
+        assert bucket_counts == sorted(bucket_counts), (stage, bucket_counts)
+        count_line = next(
+            line for line in text.splitlines()
+            if line.startswith("repro_stage_latency_seconds_count")
+            and f'stage="{stage}"' in line
+        )
+        total = int(count_line.rsplit(" ", 1)[1])
+        assert total >= 3 and bucket_counts[-1] <= total
+        sum_line = next(
+            line for line in text.splitlines()
+            if line.startswith("repro_stage_latency_seconds_sum")
+            and f'stage="{stage}"' in line
+        )
+        assert float(sum_line.rsplit(" ", 1)[1]) >= 0.0
+    # the fixed edges render with le labels (first + implicit ordering)
+    assert 'le="0.0005"' in text and 'le="2.5"' in text
+    eng.close()
+    disk.close()

@@ -1,0 +1,349 @@
+"""Bound-driven early termination: ε=0 bit-identity vs the untruncated
+engine across the metric × SQ8 × prune × pipeline × store × delta matrix,
+bound soundness, monotone recall-vs-ε, and the compile-count bound for the
+segmented bound-ordered scans.
+
+The parity bar mirrors the engine refactor's: ``termination="exact"`` may
+only reorder and provably skip work — ids and scores must stay BITWISE
+identical to ``termination=None`` while ``stats.probes_terminated`` shows
+the provable exits actually fire on a selective stream.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from conftest import needs_hypothesis, given, settings, st
+
+from repro.core import FilterSpec, HybridSpec, storage
+from repro.core.delta import DeltaTier
+from repro.core.disk import DiskIVFIndex
+from repro.core.engine import SearchEngine, scan_compile_count
+from repro.core.ivf import build_from_assignments, quantize_index
+from repro.core.serving import make_fused_search_fn
+
+N, D, M = 1536, 32, 6
+KC = 16            # one topic per histogram bin: categories never alias
+TS_RANGE = 6000
+K, NP, QB = 10, 4, 8
+
+
+def _twin_index(metric="dot"):
+    """Twin-pair topic index on which provable drops actually fire.
+
+    Clusters come in near-duplicate pairs (twin cosine ≈ 0.97) while
+    cross-pair centers are near-orthogonal, so a query aimed at one pair
+    sees the other probed clusters' upper bounds fall strictly below its
+    running kth score.  attr0 is a topic-owned time band and attr1 the
+    topic id itself; one planted uniform-ts row per histogram bin and two
+    rows per category (disjoint populations, so no planted row passes a
+    joint filter) pin every cluster's summary to full range — surviving
+    probes then carry small *expected-passing* mass, which is what the
+    ε tier drops.
+    """
+    rng = np.random.default_rng(5)
+    base = rng.standard_normal((KC // 2, D)).astype(np.float32)
+    base /= np.linalg.norm(base, axis=-1, keepdims=True)
+    step = rng.standard_normal((KC // 2, D)).astype(np.float32)
+    step /= np.linalg.norm(step, axis=-1, keepdims=True)
+    centers = np.empty((KC, D), np.float32)
+    centers[0::2] = base
+    twin = base + 0.25 * step
+    centers[1::2] = twin / np.linalg.norm(twin, axis=-1, keepdims=True)
+
+    topic = (np.arange(N) * KC) // N
+    core = centers[topic] + 0.05 * rng.standard_normal((N, D)).astype(
+        np.float32
+    )
+    core /= np.linalg.norm(core, axis=-1, keepdims=True)
+
+    band_of = rng.permutation(KC)
+    band = TS_RANGE // KC
+    ts = band_of[topic] * band + rng.integers(0, band, N)
+    cat = topic.copy()
+    bin_ts = (np.arange(KC) * (TS_RANGE - 1)) // (KC - 1)
+    for t in range(KC):
+        rows = np.where(topic == t)[0]
+        ts[rows[:KC]] = bin_ts
+        cat[rows[KC:3 * KC]] = np.repeat(np.arange(KC), 2)
+
+    attrs = rng.integers(0, 16, (N, M)).astype(np.int16)
+    attrs[:, 0] = ts.astype(np.int16)
+    attrs[:, 1] = cat.astype(np.int16)
+    spec = HybridSpec(dim=D, n_attrs=M, core_dtype=jnp.float32,
+                      metric=metric)
+    index, _ = build_from_assignments(
+        spec, jnp.asarray(centers), jnp.asarray(core), jnp.asarray(attrs),
+        jnp.asarray(topic),
+    )
+    return index, core, centers, band_of
+
+
+def _twin_stream(centers, band_of, q, seed=17, selectivity=0.03):
+    """Selective stream: tight queries on a few hot topics (distinct
+    pairs), a thin attr0 window inside the topic's band AND attr1 == topic.
+
+    Default selectivity leaves ~2k of each hot cluster's rows passing —
+    enough to fill top-k (kth > −inf is what arms the provable drops) while
+    staying far below the match-all stream."""
+    rng = np.random.default_rng(seed)
+    band = TS_RANGE // KC
+    w = max(int(selectivity * TS_RANGE), 1)
+    pairs = rng.permutation(KC // 2)[:3]
+    hot = 2 * pairs + rng.integers(0, 2, 3)
+    topics = hot[rng.integers(0, 3, q)]
+    qs = centers[topics] + 0.01 * rng.standard_normal((q, D)).astype(
+        np.float32
+    )
+    lo = np.full((q, 1, M), -32768, np.int16)
+    hi = np.full((q, 1, M), 32767, np.int16)
+    start = band_of[topics] * band + rng.integers(0, max(band - w, 1), q)
+    lo[:, 0, 0] = start.astype(np.int16)
+    hi[:, 0, 0] = (start + w - 1).astype(np.int16)
+    lo[:, 0, 1] = topics.astype(np.int16)
+    hi[:, 0, 1] = topics.astype(np.int16)
+    return jnp.asarray(qs), FilterSpec(lo=jnp.asarray(lo),
+                                       hi=jnp.asarray(hi))
+
+
+@pytest.fixture(scope="module", params=["dot", "l2"])
+def built(request, tmp_path_factory):
+    index, core, centers, band_of = _twin_index(request.param)
+    ckpt = str(tmp_path_factory.mktemp(f"term_{request.param}"))
+    storage.save_index(index, ckpt, n_shards=2)
+    disk = DiskIVFIndex.open(ckpt)
+    yield index, disk, core, centers, band_of, ckpt
+    disk.close()
+
+
+def _assert_bitwise(base, term, msg=""):
+    """ids + scores bitwise; n_scanned/n_passed legitimately differ
+    (terminated probes never reach the scan)."""
+    np.testing.assert_array_equal(np.asarray(term.ids),
+                                  np.asarray(base.ids), err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(term.scores),
+                                  np.asarray(base.scores), err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# ε=0 bit-identity matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("quantized", [False, True], ids=["f32", "sq8"])
+@pytest.mark.parametrize("prune", ["off", "on"])
+@pytest.mark.parametrize("pipeline", ["off", "on"])
+def test_exact_identity_ram(built, quantized, prune, pipeline):
+    index, _, _, centers, band_of, _ = built
+    target = quantize_index(index) if quantized else index
+    queries, fspec = _twin_stream(centers, band_of, 21)
+    kw = dict(k=K, n_probes=NP, q_block=QB, prune=prune, pipeline=pipeline)
+    base = SearchEngine(target, **kw)
+    term = SearchEngine(target, termination="exact", **kw)
+    r0 = base.search(queries, fspec)
+    r1 = term.search(queries, fspec)
+    _assert_bitwise(r0, r1,
+                    msg=f"sq8={quantized} prune={prune} pipe={pipeline}")
+    assert term.stats.probes_terminated > 0, "provable exits never fired"
+    base.close()
+    term.close()
+
+
+@pytest.mark.parametrize("prune", ["off", "on"])
+def test_exact_identity_disk(built, prune):
+    _, disk, _, centers, band_of, _ = built
+    queries, fspec = _twin_stream(centers, band_of, 21)
+    kw = dict(k=K, n_probes=NP, q_block=QB, prune=prune)
+    base = SearchEngine(disk, **kw)
+    term = SearchEngine(disk, termination="exact", **kw)
+    r0 = base.search(queries, fspec)
+    r1 = term.search(queries, fspec)
+    _assert_bitwise(r0, r1, msg=f"disk prune={prune}")
+    assert term.stats.probes_terminated > 0
+    base.close()
+    term.close()
+
+
+def test_exact_identity_sharded(built):
+    *_, centers, band_of, ckpt = built
+    queries, fspec = _twin_stream(centers, band_of, 21)
+    kw = dict(k=K, n_probes=NP, q_block=QB, cache_shards=2)
+    base_fn = make_fused_search_fn(ckpt, **kw)
+    term_fn = make_fused_search_fn(ckpt, termination="exact", **kw)
+    s0, i0 = base_fn(queries, fspec, True)
+    s1, i1 = term_fn(queries, fspec, True)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i0))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s0))
+    assert term_fn.engine.stats.probes_terminated > 0
+    base_fn.index.close()
+    term_fn.index.close()
+
+
+def test_exact_identity_delta_live(built, tmp_path):
+    """Delta tier live (adds + cold/delta tombstones): the RAM delta fold
+    runs after the terminated scan and must not disturb bit-identity."""
+    index, _, core, centers, band_of, _ = built
+    ckpt = str(tmp_path / "ck")
+    storage.save_index(index, ckpt, n_shards=2)
+    disk = DiskIVFIndex.open(ckpt)
+    tier = DeltaTier.for_index(disk, 8.0)
+    disk.delta = tier
+
+    rng = np.random.default_rng(11)
+    add = (centers[rng.integers(0, KC, 48)]
+           + 0.05 * rng.standard_normal((48, D))).astype(np.float32)
+    add /= np.linalg.norm(add, axis=-1, keepdims=True)
+    add_attrs = rng.integers(0, TS_RANGE, (48, M)).astype(np.int16)
+    tier.add(add, add_attrs, np.arange(N, N + 48, dtype=np.int64))
+    cold_dead = rng.choice(N, 32, replace=False)
+    tier.tombstone(cold_dead, clusters=(np.arange(N) * KC // N)[cold_dead])
+    tier.tombstone(np.arange(N, N + 5, dtype=np.int64))
+
+    queries, fspec = _twin_stream(centers, band_of, 21)
+    kw = dict(k=K, n_probes=NP, q_block=QB, prune="on")
+    base = SearchEngine(disk, **kw)
+    term = SearchEngine(disk, termination="exact", **kw)
+    r0 = base.search(queries, fspec)
+    r1 = term.search(queries, fspec)
+    _assert_bitwise(r0, r1, msg="delta live")
+    assert term.stats.probes_terminated > 0
+    base.close()
+    term.close()
+    disk.close()
+
+
+# ---------------------------------------------------------------------------
+# Bound soundness
+# ---------------------------------------------------------------------------
+
+
+def test_bounds_sound_vs_bruteforce(built):
+    """The per-(query, cluster) upper bound dominates the true max stored
+    score — the invariant that makes a provable drop lossless."""
+    index, _, _, centers, band_of, _ = built
+    eng = SearchEngine(index, k=K, n_probes=NP, q_block=QB,
+                       termination="exact")
+    bounds = eng._resolve_bounds()
+    radius = np.asarray(bounds.radius, np.float64)
+    slack = np.asarray(bounds.slack, np.float64)
+    vec = np.asarray(index.vectors, np.float64)       # [KC, Vpad, D]
+    ids = np.asarray(index.ids)
+    C = np.asarray(index.centroids, np.float64)
+    live = ids >= 0
+
+    queries, _ = _twin_stream(centers, band_of, 8)
+    qs = np.asarray(queries, np.float64)
+    metric = index.spec.metric
+    for qi in range(qs.shape[0]):
+        q = qs[qi]
+        for c in range(KC):
+            rows = vec[c][live[c]]
+            if not rows.size:
+                continue
+            if metric == "dot":
+                true_max = float(np.max(rows @ q))
+                ub = float(q @ C[c]) + float(np.linalg.norm(q)) * radius[c]
+            else:
+                # kernel space pre-fixup: 2q·x̂ − ‖x̂‖², bounded via the
+                # ‖q‖² − max(d − r, 0)² ball bound plus the norm slack
+                true_max = float(np.max(
+                    2.0 * rows @ q - np.sum(rows * rows, axis=-1)
+                ))
+                d = float(np.linalg.norm(q - C[c]))
+                near = max(d - radius[c], 0.0)
+                ub = float(q @ q) - near * near + slack[c]
+            assert true_max <= ub + 1e-3 + 1e-4 * abs(ub), (
+                f"bound violated q={qi} c={c}: max {true_max} > ub {ub}"
+            )
+    eng.close()
+
+
+def test_dropped_probe_never_held_topk(built):
+    """ε=0 soundness restated on results: across many random selective
+    streams the terminated engine (drops firing every batch) returns the
+    untruncated engine's exact ids."""
+    index, _, _, centers, band_of, _ = built
+    kw = dict(k=K, n_probes=NP, q_block=QB, prune="on")
+    base = SearchEngine(index, **kw)
+    term = SearchEngine(index, termination="exact", **kw)
+    total = 0
+    for seed in range(5):
+        queries, fspec = _twin_stream(centers, band_of, 16, seed=100 + seed)
+        r0 = base.search(queries, fspec)
+        r1 = term.search(queries, fspec)
+        _assert_bitwise(r0, r1, msg=f"seed={seed}")
+        total = term.stats.probes_terminated
+    assert total > 0
+    base.close()
+    term.close()
+
+
+# ---------------------------------------------------------------------------
+# Monotone recall vs ε
+# ---------------------------------------------------------------------------
+
+
+def _recall_vs(base_ids, ids):
+    hit = 0
+    for row_b, row in zip(np.asarray(base_ids), np.asarray(ids)):
+        hit += len(set(row_b.tolist()) & set(row.tolist()))
+    return hit / base_ids.size
+
+
+@needs_hypothesis
+@settings(max_examples=6, deadline=None)
+@given(e1=st.floats(0.0, 0.4), e2=st.floats(0.0, 0.4),
+       seed=st.integers(0, 2**16))
+def test_recall_monotone_in_epsilon(built_dot_cached, e1, e2):
+    """Same stream, growing ε ⇒ the kept candidate pool only shrinks, so
+    recall vs the untruncated baseline is non-increasing (pointwise — the
+    ε decision fires once, at the first segment boundary, where state is
+    identical across ε)."""
+    index, centers, band_of = built_dot_cached
+    lo, hi = sorted((e1, e2))
+    queries, fspec = _twin_stream(centers, band_of, 16, seed=seed)
+    kw = dict(k=K, n_probes=NP, q_block=QB, prune="on")
+    base = SearchEngine(index, **kw)
+    r0 = base.search(queries, fspec)
+    recalls = []
+    for eps in (lo, hi):
+        eng = SearchEngine(index, termination="bounded", epsilon=eps, **kw)
+        recalls.append(_recall_vs(r0.ids, eng.search(queries, fspec).ids))
+        eng.close()
+    base.close()
+    assert recalls[1] <= recalls[0] + 1e-12, (
+        f"recall rose with ε: ε={lo}->{recalls[0]}, ε={hi}->{recalls[1]}"
+    )
+
+
+@pytest.fixture(scope="module")
+def built_dot_cached():
+    index, _, centers, band_of = _twin_index("dot")
+    return index, centers, band_of
+
+
+# ---------------------------------------------------------------------------
+# Compile-count bound
+# ---------------------------------------------------------------------------
+
+
+def test_terminated_scan_compile_count_bounded(built_dot_cached):
+    """Varied filters and streams must reuse the segmented scan's compiled
+    cells: batch shapes are bucketed, so after the first batch no new
+    specializations appear."""
+    index, centers, band_of = built_dot_cached
+    eng = SearchEngine(index, k=K, n_probes=NP, q_block=QB, prune="on",
+                       termination="bounded", epsilon=0.01)
+    queries, fspec = _twin_stream(centers, band_of, 16, seed=900)
+    eng.search(queries, fspec)
+    warm = scan_compile_count()
+    for seed in range(901, 907):
+        queries, fspec = _twin_stream(
+            centers, band_of, 16, seed=seed,
+            selectivity=(0.03 if seed % 2 else 0.08),
+        )
+        eng.search(queries, fspec)
+    assert scan_compile_count() == warm, (
+        "terminated scan recompiled on a same-shape batch"
+    )
+    eng.close()
