@@ -1269,6 +1269,182 @@ def bench_selectivity_sweep(index, core, attrs, rng, *, q=64, n_batches=8,
     return entries, summary, exact
 
 
+KC_PART = 16  # partitioned-index bench: few, large clusters
+
+
+def build_part():
+    """Topic mixture with timestamps *uncorrelated* with the clustering.
+
+    ``build_sweep`` correlates attr0 with the topic so a cluster's summary
+    interval covers a thin time band — the workload where plan-time interval
+    pruning already excludes non-matching clusters and a physical layout
+    change has nothing left to win.  Here attr0 is uniform over
+    ``[0, TS_RANGE)`` independent of topic: every cluster's interval covers
+    the whole range, histogram bins are all occupied, and summary pruning
+    cannot exclude anything — the flat path must scan every probed cluster
+    end to end.  That is the gap the attribute-aware sub-partition layout
+    closes: the routed plan scans only each cluster's in-window rows.
+    """
+    rng = np.random.default_rng(7)
+    centers = rng.standard_normal((KC_PART, D)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=-1, keepdims=True)
+    topic = (np.arange(N) * KC_PART) // N
+    core = centers[topic] + 0.05 * rng.standard_normal((N, D)).astype(
+        np.float32
+    )
+    core /= np.linalg.norm(core, axis=-1, keepdims=True)
+    attrs = rng.integers(0, 16, (N, M)).astype(np.int16)
+    attrs[:, 0] = rng.integers(0, TS_RANGE, N).astype(np.int16)
+    spec = HybridSpec(dim=D, n_attrs=M, core_dtype=jnp.float32)
+    index, _ = build_from_assignments(
+        spec, jnp.asarray(centers), jnp.asarray(core), jnp.asarray(attrs),
+        jnp.asarray(topic),
+    )
+    return index, core
+
+
+def shared_window_fspec(q, rng, selectivity):
+    """One random time window of width selectivity·TS_RANGE shared by the
+    whole batch — session-coherent filter traffic ('last week' style), the
+    regime partition routing targets: every query in the tile routes to the
+    same catalog entry, so probe dedup sees one sub per base cluster."""
+    w = max(int(selectivity * TS_RANGE), 1)
+    lo = np.full((q, 1, M), -32768, np.int16)
+    hi = np.full((q, 1, M), 32767, np.int16)
+    start = int(rng.integers(0, TS_RANGE - w + 1))
+    lo[:, 0, 0] = start
+    hi[:, 0, 0] = start + w - 1
+    return FilterSpec(lo=jnp.asarray(lo), hi=jnp.asarray(hi))
+
+
+def bench_partitioned_index(rng, *, q=64, n_batches=8):
+    """Filter-specialized sub-partitions vs the flat path, same checkpoint.
+
+    Builds the uncorrelated-timestamp index (see :func:`build_part` — the
+    workload summary pruning cannot help), builds sub-partitions on the
+    timestamp attribute (ladder depth 5, so both the 5% and 0.5% windows
+    are subsumed by a catalog entry), persists one layout-v4 checkpoint,
+    and serves identical batch-shared time-window traffic through a
+    store-backed :class:`SearchEngine` twice per selectivity: partition
+    routing on (``partitions='auto'``) vs the flat path
+    (``partitions='off'``).  The store-backed tier is where the layout pays
+    — routed fetches pull the short sub-partition records, so the assembled
+    scan batch height shrinks with them; the RAM tier's whole-array fast
+    path would hide that.
+
+    Every cell is gated bit-exact against ``search_reference`` on the base
+    index, the routed cells must actually route (``partition_hits > 0``),
+    and a wide-window *fallback* cell (no catalog entry subsumes a
+    50%-selectivity window) checks the unroutable-predicate path stays
+    bit-exact with zero hits.  Emits QPS, rows scanned, and the
+    routed-vs-flat speedup per selectivity.
+    """
+    import tempfile
+
+    from repro.core import partitions as partitions_lib
+
+    index, core = build_part()
+    build_p = partitions_lib.build_partitions(
+        index, attrs=[0], max_depth=5, max_subs=8192,
+    )
+    print(f"partitioned index: {build_p.n_subs} sub-partitions, "
+          f"{build_p.catalog.n_entries} catalog entries")
+
+    qb = min(64, round_up(q, 8))
+    sels = (0.05, 0.005)
+    queries = {s: [hot_queries(core, q, rng) for _ in range(n_batches)]
+               for s in sels}
+    fspecs = {s: [shared_window_fspec(q, rng, s) for _ in range(n_batches)]
+              for s in sels}
+    cells = []
+    exact = True
+
+    with tempfile.TemporaryDirectory(prefix="bench_part_") as ckpt:
+        storage.save_index(index, ckpt, n_shards=4, layout=4,
+                           partitions=build_p)
+
+        def run_cell(sel, mode, fs_list, qs_list):
+            disk = DiskIVFIndex.open(ckpt)
+            eng = SearchEngine(
+                disk, k=K, n_probes=T, q_block=qb, prune="on",
+                partitions="off" if mode == "flat" else "auto",
+            )
+            jax.block_until_ready(eng.search(qs_list[0], fs_list[0]).ids)
+            walls = []
+            for _ in range(5):  # median-of-passes: shared-machine noise
+                t0 = time.perf_counter()
+                last = None
+                for qs, fs in zip(qs_list, fs_list):
+                    last = eng.search(qs, fs)
+                jax.block_until_ready(last.ids)
+                walls.append(time.perf_counter() - t0)
+            wall = float(np.median(walls))
+            got = eng.search(qs_list[0], fs_list[0])
+            ref = search_reference(index, qs_list[0], fs_list[0], k=K,
+                                   n_probes=T)
+            ok = bool((np.asarray(ref.ids) == np.asarray(got.ids)).all())
+            cell = dict(
+                path="partitioned_index_cell", selectivity=sel, mode=mode,
+                q=q, qps=round(q * n_batches / wall, 1),
+                rows_scanned=int(np.asarray(got.n_scanned).sum()),
+                partition_hits=eng.stats.partition_hits,
+                partition_fallbacks=eng.stats.partition_fallbacks,
+                exact=ok,
+            )
+            disk.close()
+            return cell
+
+        for sel in sels:
+            for mode in ("flat", "partitioned"):
+                c = run_cell(sel, mode, fspecs[sel], queries[sel])
+                exact = exact and c["exact"]
+                if mode == "partitioned":
+                    assert c["partition_hits"] > 0, (
+                        f"no partition routed at selectivity {sel}"
+                    )
+                cells.append(c)
+                print(f"partitioned sel={sel:<6} {mode:11s} "
+                      f"{c['qps']:8.1f} qps  rows {c['rows_scanned']:8d}  "
+                      f"hits {c['partition_hits']}")
+
+        # fallback cell: a 50%-selectivity window is wider than any ladder
+        # entry, so the router must decline and the flat plan must serve it
+        # (routing stays enabled — this exercises the decline path itself)
+        fb_qs = [hot_queries(core, q, rng) for _ in range(n_batches)]
+        fb_fs = [shared_window_fspec(q, rng, 0.5) for _ in range(n_batches)]
+        fb = run_cell(0.5, "fallback", fb_fs, fb_qs)
+        assert fb["partition_hits"] == 0, "wide window unexpectedly routed"
+        assert fb["partition_fallbacks"] > 0, "fallback path never taken"
+        exact = exact and fb["exact"]
+        print(f"partitioned sel=0.5    fallback    {fb['qps']:8.1f} qps  "
+              f"exact={fb['exact']}")
+
+    by = {(c["selectivity"], c["mode"]): c for c in cells}
+    speedups = {}
+    rows_ratio = {}
+    for sel in sels:
+        part, flat = by[(sel, "partitioned")], by[(sel, "flat")]
+        speedups[sel] = round(part["qps"] / flat["qps"], 2)
+        rows_ratio[sel] = round(
+            flat["rows_scanned"] / max(part["rows_scanned"], 1), 2
+        )
+        print(f"partitioned vs flat @ sel={sel}: {speedups[sel]:.2f}x qps, "
+              f"{rows_ratio[sel]:.2f}x fewer rows scanned")
+    return dict(
+        path="partitioned_index", q=q,
+        n_subs=build_p.n_subs, n_entries=build_p.catalog.n_entries,
+        cells=cells, fallback=fb,
+        speedup_at_0p5pct=speedups[0.005],
+        speedup_at_5pct=speedups[0.05],
+        rows_flat_over_partitioned_at_0p5pct=rows_ratio[0.005],
+        partition_hits=sum(
+            c["partition_hits"] for c in cells if c["mode"] == "partitioned"
+        ),
+        fallback_exact=fb["exact"],
+        exact=exact,
+    )
+
+
 # termination bench: topic count = summary histogram bins, so each topic
 # owns exactly one attr0 time band *and* one attr1 category bin — the
 # expected-passing estimate for a cross-topic probe then sees only the
@@ -1490,6 +1666,15 @@ def main():
                          "bounded_termination entry; the exact and eps=0 "
                          "cells are gated bit-identical to the untermi"
                          "nated engine and to search_reference)")
+    ap.add_argument("--partitions", action="store_true",
+                    help="also bench filter-specialized sub-partitions: the "
+                         "topic-correlated-timestamp index rebuilt with an "
+                         "attribute-aware sub-partition plane (layout v4), "
+                         "served store-backed with planner routing on vs "
+                         "off at 5%% and 0.5%% time-window selectivity plus "
+                         "an unroutable-predicate fallback cell (emits a "
+                         "partitioned_index entry; every cell is gated "
+                         "bit-exact against search_reference)")
     ap.add_argument("--epsilon", type=float, default=0.01,
                     help="bounded-termination bench: the eps cell whose "
                          "recall@k is promoted to the JSON top level "
@@ -1610,6 +1795,15 @@ def main():
         ingest_entry = bench_ingest(rng, smoke=args.smoke)
         results.append(ingest_entry)
 
+    part_entry = None
+    if args.partitions:
+        print("partitioned-index workload (attribute-aware sub-partitions) "
+              "...")
+        part_entry = bench_partitioned_index(
+            rng, n_batches=4 if args.smoke else 8,
+        )
+        results.append(part_entry)
+
     sweep_summary, sweep_exact = None, True
     if not args.skip_sweep:
         print("building sweep index (topic-correlated timestamps) ...")
@@ -1627,7 +1821,7 @@ def main():
 
     exact_all = bool(sweep_exact)
     for e in (sharded_entry, opcache_entry, ladder_entry, degraded_entry,
-              devcache_entry, term_entry):
+              devcache_entry, term_entry, part_entry):
         if e is not None:
             exact_all = exact_all and bool(e.get("exact", True))
     out = dict(
@@ -1680,6 +1874,11 @@ def main():
         )
     if ladder_entry is not None:
         out["u_cap_ladder_ab"] = ladder_entry
+    if part_entry is not None:
+        out["partitioned_index"] = part_entry
+        print(f"partitioned vs flat @ 0.5% selectivity: "
+              f"{part_entry['speedup_at_0p5pct']:.2f}x qps "
+              f"({part_entry['partition_hits']} partition-routed plans)")
     if term_entry is not None:
         out["bounded_termination"] = term_entry
         cell = term_entry["arms"].get(f"eps{args.epsilon:g}")

@@ -82,6 +82,16 @@ Engine knobs, and which side of the latency/throughput trade they sit on:
   * ``prune`` / ``t_max`` — latency under filters: drop provably-empty
     probes at plan time / re-widen to recover recall (``t_max="auto"``
     picks the widening per batch from the summaries' passing mass).
+  * ``partitions`` ("auto"/"on"/"off") — latency AND throughput under
+    hot-attribute filters summaries cannot prune (attributes
+    uncorrelated with content — timestamps are the canonical case):
+    the planner routes each filtered batch to the NARROWEST
+    attribute-specialized sub-partition catalog entry whose predicate
+    box subsumes the filter (``build_partitions`` at build/compact
+    time, persisted as first-class gen-tagged cluster records in
+    storage layout v4), so FETCH and SCAN touch a slice of each probed
+    cluster instead of the whole record; a filter no entry subsumes
+    falls back to the flat plan bit-identically.
 
 Deployment shape (sharded-pod): every pod holds ONE full index copy on
 disk; the consistent-hash ring splits *cache* ownership of the cluster id
@@ -239,6 +249,9 @@ def main():
             # Selective filter: the summaries prove most probed clusters
             # hold no passing row, so the plan prunes them — and the
             # adaptive provisioner shrinks the slot table to match.
+            # (Pruning wins exactly when the filter attribute correlates
+            # with content, as attr0 does here by construction; the
+            # sub-partition section below handles the opposite case.)
             lo = np.full((batch_size, 1, m), ATTR_MIN, np.int16)
             hi = np.full((batch_size, 1, m), ATTR_MAX, np.int16)
             lo[:, 0, 0] = hi[:, 0, 0] = 3  # WHERE attr0 == 3
@@ -506,6 +519,90 @@ def main():
                   "rewritten blocks at both layers), results still "
                   "rebuild-identical ✓")
             live.stop()
+
+    # --- filter-specialized sub-partitions: route, don't scan ---
+    # Summary pruning (above) wins when the filter attribute correlates
+    # with content: whole clusters provably hold no passing row and drop
+    # from the plan.  When a high-traffic attribute is UNCORRELATED with
+    # the embedding space — timestamps are the canonical case: every
+    # topic keeps publishing, so every cluster's time interval spans the
+    # full range — pruning is blind and a "last week" filter pays to
+    # fetch and scan every row of every probed cluster.  Sub-partitions
+    # fix this at BUILD time instead of plan time: build_partitions()
+    # re-cuts each cluster along the attribute into a ladder of
+    # overlapping windows, persisted as first-class gen-tagged cluster
+    # records (storage layout v4) plus a KiB-resident catalog of
+    # (predicate box → member sub-partition) entries.  At plan time the
+    # router picks, per batch, the NARROWEST entry whose box subsumes
+    # the query filter and swaps each probed parent cluster for its
+    # member sub-partition — fewer rows fetched AND scanned, identical
+    # ids.  Republish keeps the catalog live (a rewritten parent's subs
+    # are re-cut under the same generation bump), and a filter no entry
+    # subsumes falls back to the flat plan bit-identically.
+    from repro.core import build_partitions
+
+    pn, pts_range, pwin = 24_000, 6_000, 150
+    prng = np.random.default_rng(5)
+    pcore = synthetic_embeddings(3, pn, d)
+    pattrs = synthetic_attributes(3, pn, m, cardinalities=[8])
+    pattrs[:, 0] = prng.integers(0, pts_range, pn).astype(np.int16)
+    pstate = minibatch_kmeans(jax.random.key(3), jnp.asarray(pcore),
+                              n_clusters=16, n_steps=30, batch_size=4096)
+    passign = assign(jnp.asarray(pcore), pstate.centroids)
+    pindex, _ = build_from_assignments(
+        HybridSpec(dim=d, n_attrs=m, core_dtype=jnp.float32),
+        pstate.centroids, jnp.asarray(pcore), jnp.asarray(pattrs),
+        passign,
+    )
+    pbuild = build_partitions(pindex, attrs=[0])
+    with tempfile.TemporaryDirectory() as pdir:
+        storage.save_index(pindex, pdir, n_shards=2, layout=4,
+                           partitions=pbuild)
+        with DiskIVFIndex.open(pdir) as pdisk:
+            cat = pdisk.partitions
+            routed = SearchEngine(pdisk, k=k, n_probes=4, q_block=8,
+                                  partitions="auto")
+            flat = SearchEngine(pdisk, k=k, n_probes=4, q_block=8,
+                                partitions="off")
+            pq = jnp.asarray(pcore[prng.integers(0, pn, 32)])
+            # session-coherent traffic: the whole micro-batch shares one
+            # thin time window ("results from this week"), so the batch
+            # routes to one catalog entry and probe dedup still bites
+            lo = np.full((32, 1, m), ATTR_MIN, np.int16)
+            hi = np.full((32, 1, m), ATTR_MAX, np.int16)
+            start = int(prng.integers(0, pts_range - pwin))
+            lo[:, 0, 0], hi[:, 0, 0] = start, start + pwin - 1
+            thin = FilterSpec(lo=jnp.asarray(lo), hi=jnp.asarray(hi))
+            r = routed.search(pq, thin)
+            f = flat.search(pq, thin)
+            assert (np.asarray(r.ids) == np.asarray(f.ids)).all()
+            assert routed.stats.partition_hits > 0
+            hits = routed.stats.partition_hits
+            rows_r = int(np.asarray(r.n_scanned).sum())
+            rows_f = int(np.asarray(f.n_scanned).sum())
+            print(f"sub-partitions: catalog {cat.n_entries} entries / "
+                  f"{cat.n_subs} subs over {cat.n_base} clusters "
+                  f"({cat.nbytes()/2**10:.1f} KiB resident)")
+            print(f"  thin window (width {pwin} of {pts_range}): routed "
+                  f"scans {rows_r} rows vs flat {rows_f} "
+                  f"({rows_f/max(rows_r, 1):.1f}× fewer), "
+                  f"{hits} routed queries, ids identical ✓")
+            # a predicate wider than any catalog entry declines the
+            # route and runs the flat plan verbatim — same ids, and the
+            # fallback is counted, not silent
+            lo[:, 0, 0], hi[:, 0, 0] = 0, pts_range // 2
+            wide = FilterSpec(lo=jnp.asarray(lo), hi=jnp.asarray(hi))
+            r2 = routed.search(pq, wide)
+            f2 = flat.search(pq, wide)
+            assert (np.asarray(r2.ids) == np.asarray(f2.ids)).all()
+            assert routed.stats.partition_hits == hits
+            assert routed.stats.partition_fallbacks > 0
+            print(f"  wide window (width {pts_range // 2}): no entry "
+                  f"subsumes it → flat fallback "
+                  f"({routed.stats.partition_fallbacks} queries), "
+                  "ids identical ✓")
+            routed.close()
+            flat.close()
 
 
 if __name__ == "__main__":

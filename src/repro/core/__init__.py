@@ -9,6 +9,8 @@ Public API surface (see DESIGN.md §3):
   search_reference, brute_force, recall_at_k        — search paths + oracle
   add_vectors, tombstone                            — online updates
   DeltaTier, compact_deltas                         — live hot/cold serving
+  PartitionCatalog, build_partitions                — filter-specialized
+                                                      sub-partition layouts
 """
 
 from repro.core.hybrid import (
@@ -89,10 +91,18 @@ from repro.core.topk import (
     merge_topk_many,
     topk_tree_merge,
 )
+from repro.core.partitions import (
+    FilterTrafficRecorder,
+    PartitionBuild,
+    PartitionCatalog,
+    build_partitions,
+    choose_attrs,
+)
 from repro.core.update import (
     add_vectors,
     compact_cluster,
     compact_stale,
+    resync_partitions,
     stale_counts,
     tombstone,
 )

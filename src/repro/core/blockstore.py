@@ -153,9 +153,19 @@ def assemble_blocks(flat: np.ndarray, uniq: np.ndarray, local: np.ndarray,
     records a :class:`BlockStore` returned.  ``as_device`` additionally moves
     the blocks onto the default device — on an async fetch worker that hides
     the host→device copy behind the previous tile's scan.
+
+    The batch's row height is the *tallest record in this batch*, not
+    ``spec.vpad``: sub-partition records (layout v4) are a fraction of their
+    parent's height, so a batch of routed probes scans a proportionally
+    smaller ``[S, vpad_batch, D]`` block — this is where partition routing's
+    scan shrink materializes.  Short records occupy a ``[:rows]`` prefix;
+    the tail keeps the dead-row fill (ids −1, scales 1) the kernels mask.
     """
     s = flat.shape[0]
-    vpad, d, m = spec.vpad, spec.dim, spec.n_attrs
+    d, m = spec.dim, spec.n_attrs
+    vpad = spec.vpad
+    if len(uniq):
+        vpad = max(int(recs[int(c)]["ids"].shape[0]) for c in uniq)
     vectors = np.zeros((s, vpad, d), spec.store_dtype)
     attrs = np.zeros((s, vpad, m), np.int16)
     ids = np.full((s, vpad), -1, np.int32)
@@ -163,13 +173,14 @@ def assemble_blocks(flat: np.ndarray, uniq: np.ndarray, local: np.ndarray,
     scales = np.ones((s, vpad), np.float32) if spec.quantized else None
     for i, cid in enumerate(uniq):
         rec = recs[int(cid)]
-        vectors[i] = rec["vectors"]
-        attrs[i] = rec["attrs"]
-        ids[i] = rec["ids"]
+        rows = int(rec["ids"].shape[0])
+        vectors[i, :rows] = rec["vectors"]
+        attrs[i, :rows] = rec["attrs"]
+        ids[i, :rows] = rec["ids"]
         if norms is not None:
-            norms[i] = rec["norms"]
+            norms[i, :rows] = rec["norms"]
         if scales is not None:
-            scales[i] = rec["scales"]
+            scales[i, :rows] = rec["scales"]
     out = (local.astype(np.int32), vectors, attrs, ids, norms, scales)
     if as_device:
         import jax
@@ -177,6 +188,27 @@ def assemble_blocks(flat: np.ndarray, uniq: np.ndarray, local: np.ndarray,
         out = tuple(None if a is None else jax.device_put(a) for a in out)
         jax.block_until_ready([a for a in out if a is not None])
     return out
+
+
+def dead_record(spec: BlockSpec) -> Record:
+    """A minimal all-dead cluster record (every id −1, neutral fills).
+
+    Stand-in for a cluster the fetch path proved it never needs to read
+    (every (query, probe) pair dead at a segment boundary): the assembler
+    packs it like any record, the kernels mask every row, and its single
+    row never inflates the batch's dynamic height.
+    """
+    rec: Record = {
+        "vectors": np.zeros((1, spec.dim), spec.store_dtype),
+        "attrs": np.zeros((1, spec.n_attrs), np.int16),
+        "ids": np.full(1, -1, np.int32),
+        "gen": np.zeros(1, np.int64),
+    }
+    if spec.has_norms:
+        rec["norms"] = np.zeros(1, np.float32)
+    if spec.quantized:
+        rec["scales"] = np.ones(1, np.float32)
+    return rec
 
 
 # ---------------------------------------------------------------------------
@@ -343,19 +375,35 @@ class ResidentBlockStore(_AsyncStoreMixin):
         cids = np.asarray(cluster_ids, np.int64).reshape(-1)
         self._gets += 1
         self._blocks += len(cids)
+        # attached sub-partitions live in the resident arrays at the parent's
+        # full Vpad; trim their records to the sub's own padded height so the
+        # assembler's dynamic batch height (and the scan) shrinks with them
+        cat = getattr(self.index, "partitions", None)
         out: Dict[int, Record] = {}
         for cid in cids:
             cid = int(cid)
+            rows = None
+            if cat is not None and cid >= cat.n_base:
+                n = max(int(cat.sub_counts[cid - cat.n_base]), 1)
+                rows = max(-(-n // 128) * 128, 128)
+
+            def cut(a):
+                return a if rows is None or rows >= a.shape[0] else a[:rows]
+
             rec: Record = {
-                "vectors": np.asarray(self.index.vectors[cid]),
-                "attrs": np.asarray(self.index.attrs[cid]),
-                "ids": np.asarray(self.index.ids[cid]),
+                "vectors": np.asarray(cut(self.index.vectors[cid])),
+                "attrs": np.asarray(cut(self.index.attrs[cid])),
+                "ids": np.asarray(cut(self.index.ids[cid])),
                 "gen": np.zeros(1, np.int64),
             }
             if self.spec.has_norms:
-                rec["norms"] = np.asarray(self.index.norms[cid], np.float32)
+                rec["norms"] = np.asarray(
+                    cut(self.index.norms[cid]), np.float32
+                )
             if self.spec.quantized:
-                rec["scales"] = np.asarray(self.index.scales[cid], np.float32)
+                rec["scales"] = np.asarray(
+                    cut(self.index.scales[cid]), np.float32
+                )
             out[cid] = rec
         return out
 
@@ -399,11 +447,17 @@ class LocalBlockStore(_AsyncStoreMixin):
         man = storage.load_manifest(directory)
         storage.check_complete(directory, man)
         reader = ShardReader(directory, man)
-        cap = (man["n_clusters"] if capacity_records is None
-               else min(int(capacity_records), man["n_clusters"]))
+        # layout v4: sub-partitions are addressable cluster records past the
+        # base id space, so the cache's id range (and default capacity)
+        # covers base + subs
+        n_total = man["n_clusters"]
+        if man.get("has_partitions"):
+            n_total += int(man["partitions"]["n_subs"])
+        cap = (n_total if capacity_records is None
+               else min(int(capacity_records), n_total))
         cache = ClusterCache(
             reader, capacity_records=max(cap, 1),
-            n_clusters=man["n_clusters"], pin_fraction=pin_fraction,
+            n_clusters=n_total, pin_fraction=pin_fraction,
             pin_refresh=pin_refresh,
         )
         return cls(reader, cache, BlockSpec.from_manifest(man), name=name)
@@ -502,6 +556,10 @@ class StoreStats:
     device_hits: int = 0        # blocks the engine's device cache served —
     #                             fetches this store never saw (avoided
     #                             peer RPCs / disk reads)
+    fetches_skipped: int = 0    # clusters dropped from the fetch list
+    #                             because every (query, probe) pair on them
+    #                             was already dead at a segment boundary —
+    #                             remote RPCs never dispatched
 
 
 class ShardedBlockStore(_AsyncStoreMixin):
@@ -652,12 +710,26 @@ class ShardedBlockStore(_AsyncStoreMixin):
             while len(self._l1) > self.l1_records:
                 self._l1.popitem(last=False)
 
-    def get(self, cluster_ids, gens=None) -> Dict[int, Record]:
+    def get(self, cluster_ids, gens=None, alive=None) -> Dict[int, Record]:
         from repro.core import probes as probes_lib
 
         cids = np.asarray(cluster_ids, np.int64).reshape(-1)
         if len(cids) == 0:
             return {}
+        if alive is not None:
+            # segment-boundary shrink: a cluster whose every (query, probe)
+            # pair is already dead never leaves the host — drop it before
+            # the per-owner split so no peer RPC is dispatched for it
+            keep = np.asarray(alive, bool).reshape(-1)
+            n_skip = int((~keep).sum())
+            if n_skip:
+                with self._stats_lock:
+                    self.store_stats.fetches_skipped += n_skip
+                cids = cids[keep]
+                if gens is not None:
+                    gens = np.asarray(gens).reshape(-1)[keep]
+                if len(cids) == 0:
+                    return {}
         exp: Optional[Dict[int, int]] = None
         if gens is not None:
             exp = {int(c): int(g)
@@ -848,6 +920,7 @@ class ShardedBlockStore(_AsyncStoreMixin):
                 fallback_blocks=self.store_stats.fallback_blocks,
                 stale_answers=self.store_stats.stale_answers,
                 device_hits=self.store_stats.device_hits,
+                fetches_skipped=self.store_stats.fetches_skipped,
                 retries=retries, deadline_misses=deadline_misses,
                 has_fallback=self.fallback is not None,
             )

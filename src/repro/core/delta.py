@@ -103,6 +103,13 @@ class DeltaSnapshot:
     # (no live rows), hence the separate ready flag.
     summary: object = None
     summary_ready: bool = False
+    # per-attribute [M] envelope over the segment's rows, refreshed on every
+    # append (grows monotonically; commit() recomputes it from the surviving
+    # rows).  A filter disjoint from it on ANY attribute proves the fold's
+    # mask is identically zero — the engine skips the fold without building
+    # the histogram summary.
+    attr_lo: Optional[np.ndarray] = None   # [M] int16
+    attr_hi: Optional[np.ndarray] = None   # [M] int16
 
 
 @jax.jit
@@ -323,7 +330,14 @@ class DeltaTier:
         self.quantized = bool(bspec.quantized) or quantize == "on"
         self.quantize = quantize
         self.capacity = int(capacity)
-        self._centroids = jnp.asarray(index.centroids)
+        # a partitioned RAM index carries duplicated sub centroids past the
+        # base id space; delta rows must assign to BASE clusters (the
+        # membership mask and republish fold both key on base ids)
+        cents = index.centroids
+        cat = getattr(index, "partitions", None)
+        if cat is not None:
+            cents = np.asarray(cents)[: cat.n_base]
+        self._centroids = jnp.asarray(cents)
         self._store_dtype = (
             np.dtype(np.int8) if self.quantized
             else np.dtype(index.store_dtype)
@@ -339,6 +353,9 @@ class DeltaTier:
         self._scales = (
             np.zeros((capacity,), np.float32) if self.quantized else None
         )
+        # per-attribute envelope over appended rows (empty = void: lo > hi)
+        self._attr_lo = np.full((m,), summaries_lib.ATTR_MAX, np.int16)
+        self._attr_hi = np.full((m,), summaries_lib.ATTR_MIN, np.int16)
         self._n = 0
         self._id2row: Dict[int, int] = {}
         self._tombs: set = set()
@@ -421,6 +438,11 @@ class DeltaTier:
             # n_rows anyway, but dead-until-assigned keeps this append
             # invisible even to a torn read
             self._ids[lo:lo + b] = ids_np
+            if b:
+                np.minimum(self._attr_lo, a_np.min(axis=0),
+                           out=self._attr_lo)
+                np.maximum(self._attr_hi, a_np.max(axis=0),
+                           out=self._attr_hi)
             for j in range(b):
                 self._id2row[int(ids_np[j])] = lo + j
             self._n += b
@@ -492,6 +514,8 @@ class DeltaTier:
                     scales=self._scales,
                     tombstones=_pack_tombstones(self._tombs),
                     version=self._version,
+                    attr_lo=self._attr_lo.copy(),
+                    attr_hi=self._attr_hi.copy(),
                 )
             self._snap_cache = (self._version, snap)
             return snap
@@ -563,6 +587,16 @@ class DeltaTier:
             self._ids[:keep] = self._ids[n0:n]
             self._ids[keep:n] = -1
             self._n = keep
+            # the envelope only ever widened; recompute it from the rows
+            # that survive the republish so pruning recovers its bite
+            m = self._attrs.shape[1]
+            self._attr_lo = np.full((m,), summaries_lib.ATTR_MAX, np.int16)
+            self._attr_hi = np.full((m,), summaries_lib.ATTR_MIN, np.int16)
+            live = self._ids[:keep] >= 0
+            if live.any():
+                rows = self._attrs[:keep][live]
+                self._attr_lo = rows.min(axis=0).astype(np.int16)
+                self._attr_hi = rows.max(axis=0).astype(np.int16)
             self._id2row = {
                 int(i): r for r, i in enumerate(self._ids[:keep]) if i >= 0
             }
@@ -802,6 +836,79 @@ def compact_deltas(
                 c,
             )
 
+    # layout v4: a touched base cluster's sub-partitions are stale — rebuild
+    # each one from the folded record with the same row-selection rule the
+    # build used (select_sub_rows), bump its generation past the base id
+    # space, and rewrite the whole partition plane.  Sub vpads only grow
+    # (records are rewritten whole, so growth is just a bigger pad).
+    part_build = None
+    if man.get("has_partitions"):
+        from repro.core import partitions as partitions_lib
+
+        cat = storage.load_partitions(directory, man)
+        records = storage.load_partition_records(directory, man)
+        vpads = np.asarray(storage.load_partition_vpads(directory),
+                           np.int64).copy()
+        parent = np.asarray(cat.parent, np.int64)
+        sub_counts = np.asarray(cat.sub_counts, np.int32).copy()
+        sub_amin = np.asarray(cat.sub_amin, np.int16).copy()
+        sub_amax = np.asarray(cat.sub_amax, np.int16).copy()
+        resubbed = np.nonzero(np.isin(parent, np.fromiter(
+            touched, np.int64, len(touched))))[0]
+        for p_ in resubbed:
+            p_ = int(p_)
+            c = int(parent[p_])
+            s, lc = divmod(c, kl)
+            part = parts[s]
+            rows = partitions_lib.select_sub_rows(
+                part["attrs"][lc], part["ids"][lc], int(counts[c]),
+                np.asarray(cat.sub_lo[p_]), np.asarray(cat.sub_hi[p_]),
+            )
+            n = int(rows.size)
+            vp = max(
+                int(vpads[p_]),
+                min(
+                    partitions_lib._round_up(
+                        max(n, 1), partitions_lib.SUB_ALIGN
+                    ),
+                    vpad,
+                ),
+                n,
+            )
+            vpads[p_] = vp
+            rec: Dict[str, np.ndarray] = {}
+            for name in field_names:
+                src = part[name][lc]
+                new = np.zeros((vp,) + src.shape[1:], src.dtype)
+                if name == "ids":
+                    new[:] = -1
+                if n:
+                    new[:n] = src[rows]
+                rec[name] = new
+            records[p_] = rec
+            sub_counts[p_] = n
+            if n:
+                sub_amin[p_] = rec["attrs"][:n].min(axis=0)
+                sub_amax[p_] = rec["attrs"][:n].max(axis=0)
+            else:
+                sub_amin[p_] = summaries_lib.ATTR_MAX
+                sub_amax[p_] = summaries_lib.ATTR_MIN
+            gens[k + p_] += 1
+        mem = np.asarray(cat.members, np.int64)          # [E, K]
+        entry_rows = np.where(
+            mem >= 0,
+            sub_counts[np.clip(mem - k, 0, None)].astype(np.int64),
+            counts[:k].astype(np.int64)[None, :],
+        ).sum(axis=1)
+        new_cat = dataclasses.replace(
+            cat, entry_rows=entry_rows, sub_counts=sub_counts,
+            sub_amin=sub_amin, sub_amax=sub_amax,
+        )
+        part_build = partitions_lib.PartitionBuild(
+            catalog=new_cat, records=records,
+            vpads=vpads.astype(np.int32),
+        )
+
     # rewrite only the shards that hold touched clusters, then the resident
     # vectors, summaries and manifest — each atomically, manifest last
     stride = man["record_stride"]
@@ -848,6 +955,10 @@ def compact_deltas(
                     p, np.asarray(getattr(bounds, f))
                 ),
             )
+    if part_build is not None:
+        storage.write_partition_region(
+            directory, man, part_build, gens[k:]
+        )
     man["n_live"] = int(counts.sum())
     storage._atomic_save(
         os.path.join(directory, storage.MANIFEST),

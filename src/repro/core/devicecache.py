@@ -267,6 +267,33 @@ class DeviceBlockCache:
         return out
 
     def _entry_from_record(self, gen: int, rec: Record) -> DeviceEntry:
+        # sub-partition records (layout v4) arrive shorter than spec.vpad;
+        # compose() stacks fixed-height entries, so pad here with the same
+        # fill assemble_blocks uses (zeros, ids −1, unit scales) — padded
+        # compositions stay bit-identical to the host path
+        rows = int(rec["ids"].shape[0])
+        vpad = self.spec.vpad
+        if rows < vpad:
+            rec = dict(rec)
+            pad = vpad - rows
+            rec["vectors"] = np.concatenate(
+                [rec["vectors"],
+                 np.zeros((pad,) + rec["vectors"].shape[1:],
+                          rec["vectors"].dtype)], axis=0)
+            rec["attrs"] = np.concatenate(
+                [rec["attrs"],
+                 np.zeros((pad, rec["attrs"].shape[1]),
+                          rec["attrs"].dtype)], axis=0)
+            rec["ids"] = np.concatenate(
+                [rec["ids"], np.full(pad, -1, rec["ids"].dtype)], axis=0)
+            if self.spec.has_norms:
+                rec["norms"] = np.concatenate(
+                    [rec["norms"], np.zeros(pad, rec["norms"].dtype)],
+                    axis=0)
+            if self.spec.quantized:
+                rec["scales"] = np.concatenate(
+                    [rec["scales"], np.ones(pad, rec["scales"].dtype)],
+                    axis=0)
         return DeviceEntry(
             gen=gen,
             vectors=jax.device_put(rec["vectors"]),

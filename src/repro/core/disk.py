@@ -61,11 +61,11 @@ class ShardReader:
     """
 
     def __init__(self, directory: str, man: dict):
-        if man["layout"] not in (2, 3):
+        if man["layout"] not in (2, 3, 4):
             raise ValueError(
-                "DiskIVFIndex requires a layout-v2/v3 checkpoint; re-save "
-                "it with storage.save_index(index, dir) — v1 .npz shards "
-                "are not cluster-addressable"
+                "DiskIVFIndex requires a layout-v2/v3/v4 checkpoint; "
+                "re-save it with storage.save_index(index, dir) — v1 .npz "
+                "shards are not cluster-addressable"
             )
         self.directory = directory
         self._lock = threading.Lock()
@@ -74,6 +74,7 @@ class ShardReader:
     def _apply_manifest(self, man: dict):
         self.man = man
         self.paths = storage.shard_paths(self.directory, man)
+        self.n_base = man["n_clusters"]
         self.kl = man["n_clusters"] // man["n_shards"]
         self.stride: int = man["record_stride"]
         self.fields = [
@@ -87,6 +88,32 @@ class ShardReader:
         self._mm: List[Optional[np.memmap]] = [
             np.memmap(p, dtype=np.uint8, mode="r") for p in self.paths
         ]
+        # layout v4: the sub-partition record region — variable-stride
+        # records addressed by the resident byte-offset table; ids
+        # ``>= n_base`` read from here instead of the shard files
+        self._part_mm: Optional[np.memmap] = None
+        self._part_offsets: Optional[np.ndarray] = None
+        self._part_layouts: List[Tuple] = []
+        if man.get("has_partitions"):
+            self._part_offsets = np.asarray(
+                np.load(os.path.join(
+                    self.directory, storage.PARTITION_OFFSETS
+                )), np.int64,
+            )
+            vpads = storage.load_partition_vpads(self.directory)
+            for vp in vpads:
+                fields, stride = storage.partition_record_layout(
+                    man, int(vp)
+                )
+                self._part_layouts.append((
+                    [(f["name"], storage.np_dtype(f["dtype"]),
+                      tuple(f["shape"]), f["offset"]) for f in fields],
+                    stride,
+                ))
+            self._part_mm = np.memmap(
+                os.path.join(self.directory, storage.PARTITION_DATA),
+                dtype=np.uint8, mode="r",
+            )
 
     def reopen(self, man: Optional[dict] = None):
         """Re-reads the manifest and drops the shard mmaps — the local half
@@ -114,8 +141,13 @@ class ShardReader:
 
     def read(self, cid: int) -> Dict[str, np.ndarray]:
         """Reads cluster ``cid``'s record into one pinned host buffer and
-        returns zero-copy per-field views into it."""
-        s, r = divmod(int(cid), self.kl)
+        returns zero-copy per-field views into it.  Ids ``>= n_base`` are
+        sub-partitions (layout v4): their variable-stride records come from
+        the partition region through the offset table."""
+        cid = int(cid)
+        if cid >= self.n_base:
+            return self._read_partition(cid - self.n_base)
+        s, r = divmod(cid, self.kl)
         mm = self._mmap(s)
         off = r * self.stride
         buf = np.array(mm[off:off + self.stride])  # the one copy
@@ -125,6 +157,21 @@ class ShardReader:
             rec[name] = buf[o:o + nb].view(dt).reshape(shape)
         if "gen" not in rec:  # layout v2: pre-generation records are gen 0
             rec["gen"] = np.zeros(1, np.int64)
+        return rec
+
+    def _read_partition(self, p: int) -> Dict[str, np.ndarray]:
+        if self._part_mm is None or p >= len(self._part_layouts):
+            raise ValueError(
+                f"sub-partition {p} out of range for this checkpoint "
+                f"({len(self._part_layouts)} subs)"
+            )
+        fields, stride = self._part_layouts[p]
+        off = int(self._part_offsets[p])
+        buf = np.array(self._part_mm[off:off + stride])
+        rec = {}
+        for name, dt, shape, o in fields:
+            nb = int(np.prod(shape)) * dt.itemsize
+            rec[name] = buf[o:o + nb].view(dt).reshape(shape)
         return rec
 
 
@@ -430,13 +477,16 @@ class ClusterCache:
         return self.stats.hits / tot if tot else 0.0
 
 
-def _resident_overhead(centroids, counts, summaries, bounds=None) -> int:
+def _resident_overhead(centroids, counts, summaries, bounds=None,
+                       partitions=None) -> int:
     """Bytes of the always-resident set (everything except the cluster
     cache) — the single formula both the budget check in ``open`` and
     ``resident_bytes()`` accounting rely on."""
     return centroids.nbytes + counts.nbytes + (
         summaries.nbytes() if summaries is not None else 0
-    ) + (bounds.nbytes() if bounds is not None else 0)
+    ) + (bounds.nbytes() if bounds is not None else 0) + (
+        partitions.nbytes() if partitions is not None else 0
+    )
 
 
 class DiskIVFIndex:
@@ -460,7 +510,7 @@ class DiskIVFIndex:
                  centroids: np.ndarray, counts: np.ndarray,
                  reader: ShardReader, cache: ClusterCache,
                  resident_budget_bytes: Optional[int],
-                 summaries=None, bounds=None):
+                 summaries=None, bounds=None, partitions=None):
         self.directory = directory
         self.man = man
         self.spec = spec
@@ -469,6 +519,9 @@ class DiskIVFIndex:
         self.reader = reader
         self.cache = cache
         self.resident_budget_bytes = resident_budget_bytes
+        # Partition catalog (layout v4): resident predicate → sub-cluster
+        # routing table.  None for pre-v4 checkpoints (flat routing only).
+        self.partitions = partitions
         # Cluster attribute summaries (layout v2.1): resident like centroids,
         # consulted by the plan stage so filtered-out clusters never reach
         # the fetch list.  None for pre-v2.1 checkpoints (no pruning).
@@ -490,7 +543,7 @@ class DiskIVFIndex:
         # built over this index pick it up automatically.
         self.device_cache = None
         self._overhead = _resident_overhead(centroids, counts, summaries,
-                                            bounds)
+                                            bounds, partitions)
         # The fetch layer: this host's reader + cache behind the BlockStore
         # protocol.  The search engine routes its fetch stage through it
         # (or through a ShardedBlockStore composed over several of them);
@@ -518,9 +571,14 @@ class DiskIVFIndex:
         counts = np.load(os.path.join(directory, "counts.npy"))
         summaries = storage.load_summaries(directory, man)
         bounds = storage.load_bounds(directory, man)
-        overhead = _resident_overhead(centroids, counts, summaries, bounds)
+        partitions = storage.load_partitions(directory, man)
+        overhead = _resident_overhead(centroids, counts, summaries, bounds,
+                                      partitions)
+        n_total = man["n_clusters"] + (
+            partitions.n_subs if partitions is not None else 0
+        )
         if resident_budget_bytes is None:
-            cap = man["n_clusters"]
+            cap = n_total
         else:
             budget = int(resident_budget_bytes) - overhead
             cap = budget // reader.stride
@@ -530,14 +588,14 @@ class DiskIVFIndex:
                     f"hold the resident set ({overhead} B, incl. attribute "
                     f"summaries) plus one cluster record ({reader.stride} B)"
                 )
-            cap = min(cap, man["n_clusters"])
+            cap = min(cap, n_total)
         cache = ClusterCache(
-            reader, capacity_records=cap, n_clusters=man["n_clusters"],
+            reader, capacity_records=cap, n_clusters=n_total,
             pin_fraction=pin_fraction, pin_refresh=pin_refresh,
         )
         return cls(directory, man, storage.spec_from_manifest(man),
                    centroids, counts, reader, cache, resident_budget_bytes,
-                   summaries=summaries, bounds=bounds)
+                   summaries=summaries, bounds=bounds, partitions=partitions)
 
     # ---- IVFFlatIndex-compatible surface (what search paths touch) ----
     @property
@@ -586,10 +644,11 @@ class DiskIVFIndex:
             )
             self.summaries = storage.load_summaries(self.directory, man)
             self.bounds = storage.load_bounds(self.directory, man)
+            self.partitions = storage.load_partitions(self.directory, man)
             self.gens = gens
             self._overhead = _resident_overhead(
                 np.asarray(self.centroids), np.asarray(self.counts),
-                self.summaries, self.bounds,
+                self.summaries, self.bounds, self.partitions,
             )
         if self.delta is not None:
             self.delta.commit()

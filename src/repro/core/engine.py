@@ -140,6 +140,8 @@ def plan_fused_tiled(
     cast_dtype,
     summaries=None,
     t_max: Optional[int] = None,
+    route_entry=None,
+    members=None,
 ):
     """Plan stage: centroid probe + per-tile dedup over resident state.
 
@@ -174,6 +176,16 @@ def plan_fused_tiled(
     nothing, refill nothing, and plan exactly as before.  Within the refill
     ranking, the summaries' histogram-mass estimate of each cluster's
     expected passing count breaks exact centroid-score ties.
+
+    ``route_entry`` ([Q] int32, −1 = flat) + ``members`` ([E, K_base] int32,
+    −1 = scan parent) remap routed queries' probes from base cluster ids to
+    the chosen catalog entry's sub-partition ids *after* the centroid top-k
+    (probing geometry stays base-only — sub centroids are never scored) and
+    *before* the per-tile dedup, so sub ids flow into the slot tables, fetch
+    lists and every (cluster_id, gen)-keyed cache below.  ``geo_probes``
+    stays base-id (the delta tier's membership mask is defined over base
+    assignments).  Subsumption (checked host-side by the catalog's router)
+    guarantees the remapped scan is bit-identical to the flat one.
     """
     scores = centroid_scores(centroids, counts, queries, metric=metric)
     q = queries.shape[0]
@@ -219,6 +231,15 @@ def plan_fused_tiled(
             rank = jnp.cumsum(ok.astype(jnp.int32), axis=1) - 1
             probe_ids = cand.astype(jnp.int32)
             probe_valid = jnp.logical_and(ok, rank < n_probes)
+    if members is not None:
+        # partition remap: routed queries swap each probed base cluster for
+        # the entry's sub-partition of it (-1 member = keep the parent)
+        ent = jnp.maximum(route_entry, 0)
+        sub = members[ent[:, None], probe_ids]  # [Q, W]
+        probe_ids = jnp.where(
+            jnp.logical_and(route_entry[:, None] >= 0, sub >= 0),
+            sub, probe_ids,
+        )
     probe_pad = probes_lib.pad_to_tiles(probe_ids, q_block)  # [Qpad, W]
     valid_pad = (
         None if probe_valid is None
@@ -382,8 +403,7 @@ def _merge_tile_fragments(
     pair_ok: Array,        # [QB, W] — probe contributes candidates
     scan_ok: Array,        # [QB, W] — probe's slot was actually scanned
     queries: Array,        # [QB, D] original dtype (l2 ‖q‖² constant)
-    slot_cluster: Array,   # [S_pad] operand row per slot
-    ids: Array,            # [K or S, Vpad] ids operand (tombstone-masked)
+    live_per_slot: Array,  # [S_pad] live rows of each slot's cluster
     *,
     metric: str,
     k: int,
@@ -419,8 +439,6 @@ def _merge_tile_fragments(
         )
 
     n_passed = jnp.sum(npass_qt[:q], axis=-1)
-    live_per_row = jnp.sum((ids >= 0).astype(jnp.int32), axis=-1)
-    live_per_slot = jnp.take(live_per_row, slot_cluster)
     n_scanned = jnp.sum(
         jnp.take(live_per_slot, slot_of_probe[:q])
         * scan_ok[:q].astype(jnp.int32),
@@ -584,6 +602,10 @@ class SearchPlan:
     # scans exactly this set of delta rows/tombstones regardless of
     # concurrent appends (appends land in the next batch's snapshot).
     delta_snap: Any = None
+    # Per-query chosen partition-catalog entry (−1 = flat path); None when
+    # the index has no catalog or partitions are off.  Drives the planner's
+    # probe remap and the partition/flat scanned-row accounting.
+    route: Optional[np.ndarray] = None  # [Q] int32
     # Per-tile work items, built lazily by tile_work() (consumers: the
     # BlockStore fetch stage's per-tile novel-cluster lists, fetch routing
     # diagnostics, multi-host cache sharding).
@@ -668,6 +690,16 @@ class EngineStats:
     # every surviving pair in them was already terminated
     probes_terminated: int = 0
     term_segments_skipped: int = 0
+    # partition plane: queries routed to a catalog entry / constrained
+    # queries that fell back to the flat layout, and cold-scan row counts
+    # split by which path the query took
+    partition_hits: int = 0
+    partition_fallbacks: int = 0
+    partition_rows_scanned: int = 0
+    flat_rows_scanned: int = 0
+    # delta folds skipped by the per-attribute running interval envelope
+    # (satellite of the summary-based delta_skips; also counted there)
+    delta_interval_skips: int = 0
 
     @property
     def overlap_ratio(self) -> float:
@@ -705,6 +737,8 @@ _PROM_COUNTERS = frozenset((
     "l1_misses", "l1_invalidations", "remote_blocks", "blocks_served",
     "adds", "tombstoned", "commits", "scan_compile_count",
     "probes_terminated", "term_segments_skipped",
+    "partition_hits", "partition_fallbacks", "partition_rows_scanned",
+    "flat_rows_scanned", "delta_interval_skips", "fetches_skipped",
 ))
 
 
@@ -911,7 +945,8 @@ class SearchEngine:
                  delta=None,
                  device_cache=None,
                  termination: Optional[str] = None,
-                 epsilon: float = 0.0):
+                 epsilon: float = 0.0,
+                 partitions: str = "auto"):
         if termination not in (None, "exact", "bounded"):
             raise ValueError(f"termination must be None|'exact'|'bounded', "
                              f"got {termination!r}")
@@ -930,6 +965,16 @@ class SearchEngine:
         if isinstance(t_max, str) and t_max != "auto":
             raise ValueError(f"t_max must be an int, 'auto' or None, got "
                              f"{t_max!r}")
+        if partitions not in ("auto", "on", "off"):
+            raise ValueError(f"partitions must be 'auto'|'on'|'off', got "
+                             f"{partitions!r}")
+        self.partitions = partitions
+        # filter-traffic recorder (partition-attribute choice input) and the
+        # planner's base-width array views / device members table, built
+        # lazily on the first planned batch
+        self._traffic = None
+        self._base_memo = None
+        self._members_memo = None
         self.index = index
         self.k = k
         self.n_probes = n_probes
@@ -1029,6 +1074,103 @@ class SearchEngine:
             return self._delta
         return getattr(self.index, "delta", None)
 
+    # ---- partition routing (plan-side) ----
+    def _resolve_partitions(self):
+        """Resolves the ``partitions`` knob against the index's catalog.
+
+        Returns the :class:`~repro.core.partitions.PartitionCatalog` to
+        route with, or None for the flat-only planner.  ``"auto"`` routes
+        iff the index carries a catalog; ``"on"`` demands one; ``"off"``
+        never routes (bit-identical to the pre-partition planner)."""
+        cat = getattr(self.index, "partitions", None)
+        if self.partitions == "off":
+            return None
+        if self.partitions == "on" and cat is None:
+            raise ValueError(
+                "partitions='on' but the index has no partition catalog — "
+                "save the checkpoint with layout v4 "
+                "(save_index(partitions=build_partitions(...))) or use "
+                "partitions='auto'"
+            )
+        return cat
+
+    def _base_views(self, cat, summ):
+        """Base-width planner views of centroids/counts/summaries.
+
+        The disk tier's resident arrays are already base-width; a RAM index
+        with attached partitions carries the sub rows inline (scan targets),
+        and planning over them would probe duplicated sub centroids — so the
+        planner slices to ``[:n_base]``, memoized until the arrays swap."""
+        index = self.index
+        cents = index.centroids
+        nb = cat.n_base
+        if int(np.shape(cents)[0]) == nb:
+            return cents, index.counts, summ
+        memo = self._base_memo
+        if memo is not None and memo[0] == id(cents):
+            return memo[1], memo[2], (memo[3] if summ is not None else None)
+        c = cents[:nb]
+        cnt = index.counts[:nb]
+        s = None
+        if summ is not None:
+            s = dataclasses.replace(
+                summ, amin=summ.amin[:nb], amax=summ.amax[:nb],
+                hist=summ.hist[:nb],
+            )
+        self._base_memo = (id(cents), c, cnt, s)
+        return c, cnt, s
+
+    def _members_device(self, cat):
+        """The catalog's [E, K_base] member table as a device array (the
+        plan-stage remap operand), memoized per catalog object."""
+        memo = self._members_memo
+        if memo is not None and memo[0] == id(cat):
+            return memo[1]
+        m = jnp.asarray(cat.members, jnp.int32)
+        self._members_memo = (id(cat), m)
+        return m
+
+    def _route_partitions(self, cat, fspec: FilterSpec):
+        """Host-side narrowest-subsuming-entry routing + traffic recording.
+
+        Returns ``(route, route_entry, members)`` — the [Q] entry choice
+        (−1 = flat) and the remap operands for :func:`plan_fused_tiled` —
+        or ``(None, None, None)`` when no catalog is active."""
+        lo_np = np.asarray(fspec.lo)
+        hi_np = np.asarray(fspec.hi)
+        if self.partitions != "off":
+            if self._traffic is None:
+                from repro.core.partitions import FilterTrafficRecorder
+
+                self._traffic = FilterTrafficRecorder(int(lo_np.shape[-1]))
+            self._traffic.observe(lo_np, hi_np)
+        if cat is None:
+            return None, None, None
+        route = cat.route(lo_np, hi_np)  # [Q] int32
+        hits = int(np.sum(route >= 0))
+        self.stats.partition_hits += hits
+        # fallbacks: queries that DO constrain some attribute but no catalog
+        # entry subsumes them (unfiltered queries are not "fallbacks" — the
+        # flat path is simply their layout)
+        nonvoid = np.all(lo_np <= hi_np, axis=-1)  # [Q, T]
+        narrowed = np.any(
+            (lo_np > summaries_lib.ATTR_MIN)
+            | (hi_np < summaries_lib.ATTR_MAX), axis=-1,
+        )
+        constrained = np.any(nonvoid & narrowed, axis=-1)  # [Q]
+        self.stats.partition_fallbacks += int(
+            np.sum(constrained & (route < 0))
+        )
+        if hits == 0:
+            return route, None, None  # keep the flat plan signature
+        return route, jnp.asarray(route), self._members_device(cat)
+
+    @property
+    def traffic(self):
+        """The engine's filter-traffic recorder (partition-attribute choice
+        input for rebuilds); None until a batch has been planned."""
+        return self._traffic
+
     # ---- plan ----
     def plan(self, queries: Array, fspec: FilterSpec) -> SearchPlan:
         """Plan stage: jitted resident-state plan + host-side provisioning.
@@ -1041,15 +1183,30 @@ class SearchEngine:
         index = self.index
         q = queries.shape[0]
         qb = min(self.q_block, round_up(q, 8))
-        kc = index.n_clusters
         summ = resolve_prune(index, self.prune)
+        # Partition routing: probing geometry (centroid top-k, summaries,
+        # widening, bounds) always runs over the BASE clusters — sub ids
+        # only enter via the plan-stage probe remap below, so an index with
+        # a catalog plans exactly like the flat index for unrouted queries.
+        cat = self._resolve_partitions()
+        # a RAM index with attached sub-partitions carries them inline in
+        # the per-cluster arrays — the planner slices to base width even
+        # with routing off, else the centroid top-k would probe the subs'
+        # duplicated centroids (not the flat plan)
+        cat_any = getattr(index, "partitions", None)
+        centroids = index.centroids
+        counts = index.counts
+        kc = index.n_clusters
+        if cat_any is not None:
+            kc = cat_any.n_base
+            centroids, counts, summ = self._base_views(cat_any, summ)
+        route, route_entry, members = self._route_partitions(cat, fspec)
         # Capture an immutable view of the RAM delta segment for this batch,
         # and plan with tombstone/append-adjusted cluster counts: a rebuilt
         # index would see those counts, and centroid_scores masks empty
         # clusters by count — parity requires the live planner to agree.
         tier = self._delta_tier()
         snap = tier.snapshot() if tier is not None else None
-        counts = index.counts
         if snap is not None:
             adj = tier.count_adjustment(kc)
             if adj is not None:
@@ -1071,7 +1228,11 @@ class SearchEngine:
             if summ is None or t_max == self.n_probes:
                 t_max = None  # widening is only meaningful with pruning
         width = self.n_probes if t_max is None else t_max
-        full_cap = min(qb * width, kc)
+        # remapped probes draw from base ∪ sub ids, so the per-tile unique
+        # count can exceed the base cluster count — provision for the full
+        # id space or the dedup's overflow drop would break parity
+        k_total = kc + (cat.n_subs if cat is not None else 0)
+        full_cap = min(qb * width, k_total)
         cap = full_cap if self.u_cap is None else self.u_cap
         cast_dtype = (
             np.dtype(np.float32) if index.quantized
@@ -1081,9 +1242,10 @@ class SearchEngine:
         (slot_cluster, slot_tile, slot_of_probe, probe_ok, n_unique,
          queries_pad, lo_pad, hi_pad, n_pruned, geo_probes,
          geo_valid) = plan_fused_tiled(
-            index.centroids, counts, queries, fspec.lo, fspec.hi,
+            centroids, counts, queries, fspec.lo, fspec.hi,
             metric=index.spec.metric, n_probes=self.n_probes, q_block=qb,
             u_cap=cap, cast_dtype=cast_dtype, summaries=summ, t_max=t_max,
+            route_entry=route_entry, members=members,
         )
         qpad = queries_pad.shape[0]
         n_tiles = qpad // qb
@@ -1109,6 +1271,7 @@ class SearchEngine:
             geo_valid=(geo_valid if snap is not None else None),
             gens=self._plan_gens(),
             delta_snap=snap,
+            route=route,
         )
         if self.adaptive_u_cap:
             self._provision(plan)
@@ -1223,6 +1386,12 @@ class SearchEngine:
         qpad = qb * n_tiles
         bounds = self._resolve_bounds()
         sc = np.asarray(plan.slot_cluster).reshape(n_tiles, cap)
+        cat = self._resolve_partitions()
+        if cat is not None:
+            # routed slots hold sub-partition ids; centroids / bounds /
+            # summary mass are indexed base-width, and a parent's bound
+            # soundly covers every sub (subset of its rows, same centroid)
+            sc = cat.to_base(sc)
 
         # which (tile, query-row, slot) pairs are real probes
         sop = np.asarray(plan.slot_of_probe)
@@ -1478,6 +1647,34 @@ class SearchEngine:
         t0 = time.perf_counter()
         from repro.core import delta as delta_lib
 
+        # Per-attribute interval pre-test: the delta tier keeps a running
+        # [M] lo/hi envelope over its live rows, refreshed on append — a
+        # batch whose every non-void term is disjoint from the envelope on
+        # ANY attribute provably matches zero delta rows, skipping even the
+        # summary build.  n_scanned keeps the reach count (identical to the
+        # unskipped fold's accounting).
+        alo = getattr(snap, "attr_lo", None)
+        ahi = getattr(snap, "attr_hi", None)
+        if alo is not None and ahi is not None:
+            lo = np.asarray(plan.lo_pad)
+            hi = np.asarray(plan.hi_pad)
+            nonvoid = np.all(lo <= hi, axis=-1)  # [Qpad, F]
+            overlap = np.all(
+                (lo <= ahi[None, None, :]) & (hi >= alo[None, None, :]),
+                axis=-1,
+            )
+            if not bool(np.any(nonvoid & overlap)):
+                self.stats.delta_skips += 1
+                self.stats.delta_interval_skips += 1
+                dscan = delta_lib.snapshot_reach(
+                    snap, plan.geo_probes, plan.geo_valid
+                )
+                q = plan.q
+                self._observe_stage("delta_fold", time.perf_counter() - t0)
+                return dataclasses.replace(
+                    res, n_scanned=res.n_scanned + dscan[:q]
+                )
+
         # Delta-tier scan skip: a tiny resident interval/histogram summary
         # over the segment's live rows (same machinery as the cluster
         # summaries, same soundness contract) proves when a batch's filters
@@ -1572,8 +1769,59 @@ class SearchEngine:
         self._observe_stage("scan", time.perf_counter() - t0)
         return res
 
+    def _fetch_segment(self, plan: SearchPlan, seg_sc: np.ndarray,
+                       alive_seg: np.ndarray, ops: Dict[int, dict]):
+        """Per-segment lazy fetch for the sharded terminated executor.
+
+        Clusters first needed by this segment whose every (query, probe)
+        pair is already dead at the boundary are dropped from the per-owner
+        fetch list before dispatch (the store counts ``fetches_skipped``)
+        and scanned as all-masked zero blocks — every candidate they might
+        have held is provably below the final kth, so results stay exact
+        while the ring never sees the fetch.  Live records are kept in the
+        batch-scoped ``ops`` cache; skipped clusters are NOT cached, so a
+        later tile where they are alive fetches them for real."""
+        spec = self._bspec
+        uniq, local = blockstore_lib.first_need_unique(seg_sc)
+        slot_alive = alive_seg.any(axis=0)  # [seg]
+        cid_alive = np.zeros(len(uniq), bool)
+        np.logical_or.at(cid_alive, local, slot_alive)
+        need = np.asarray(
+            [j for j, c in enumerate(uniq) if int(c) not in ops], np.int64
+        )
+        if need.size:
+            need_ids = uniq[need]
+            recs = self._store.get(
+                need_ids,
+                gens=(plan.gens[need_ids] if plan.gens is not None
+                      else None),
+                alive=cid_alive[need],
+            )
+            self._count_fetched(plan, recs)
+            for c, r in recs.items():
+                ops[int(c)] = r
+        dead = None
+        view = {}
+        for c in uniq:
+            r = ops.get(int(c))
+            if r is None:  # skipped this segment: all-masked zero block
+                if dead is None:
+                    dead = blockstore_lib.dead_record(spec)
+                r = dead
+            view[int(c)] = r
+        # pad the unique list to the fixed segment width so segment scans
+        # share one operand shape per (bucket, record vpad)
+        seg_w = int(seg_sc.shape[0])
+        if len(uniq) < seg_w:
+            uniq = np.concatenate(
+                [uniq, np.repeat(uniq[-1:], seg_w - len(uniq))]
+            )
+        return blockstore_lib.assemble_blocks(seg_sc, uniq, local, view,
+                                              spec, as_device=True)
+
     def _scan_tile_terminated(self, plan: SearchPlan, i: int,
-                              operands) -> SearchResult:
+                              operands, ops: Optional[Dict[int, dict]] = None
+                              ) -> SearchResult:
         """Bound-driven scan of one query tile: best-bound-first segments,
         running top-k folded after each, remaining (query, slot) pairs
         dropped when their score upper bound provably (or, in ε mode,
@@ -1587,14 +1835,17 @@ class SearchEngine:
         reproduces the unterminated scan bitwise.  ε-dropped pairs are
         always masked — the result is the exact top-k over the surviving
         probe set, which shrinks monotonically with ε.
+
+        ``operands=None`` runs the *segmented-fetch* mode (sharded ring):
+        each segment's clusters are fetched right before its scan through
+        :meth:`_fetch_segment`, so boundary drops shrink the remote fetch
+        lists; ``ops`` is the batch-scoped record cache.
         """
         from repro.kernels.filtered_scan.filtered_scan import (
             fold_running_topk,
         )
 
         t_start = time.perf_counter()
-        slot_cluster, vectors, attrs, ids, norms, scales = operands
-        ids = self._mask_tombstones(plan, ids)
         term = plan.term
         qb, cap, k = plan.q_block, plan.u_cap, self.k
         seg, n_seg = term.seg, term.n_seg
@@ -1608,12 +1859,29 @@ class SearchEngine:
         q_pad = plan.queries_pad[rows]
         lo_pad = plan.lo_pad[rows]
         hi_pad = plan.hi_pad[rows]
+        segmented = operands is None
+        if segmented:
+            sc = np.asarray(plan.slot_cluster).reshape(
+                plan.n_tiles, cap
+            )[i].astype(np.int64)
+            vectors = attrs = ids = norms = scales = None
+            live_np = None  # filled per scanned segment
+        else:
+            slot_cluster, vectors, attrs, ids, norms, scales = operands
+            ids = self._mask_tombstones(plan, ids)
+            sc = np.asarray(slot_cluster).reshape(-1)
         # pad the tile's slot list to the segmented width with the standard
         # repeat-last-slot convention (scanned only if its segment is)
-        sc = np.asarray(slot_cluster).reshape(-1)
         if cap_pad > cap:
             sc = np.concatenate([sc, np.repeat(sc[-1:], cap_pad - cap)])
-        sc_dev = jnp.asarray(sc, jnp.int32)
+        if segmented:
+            live_np = np.zeros((cap_pad,), np.int32)
+            live_per_slot = None
+            sc_dev = None
+        else:
+            sc_dev = jnp.asarray(sc, jnp.int32)
+            live_per_row = jnp.sum((ids >= 0).astype(jnp.int32), axis=-1)
+            live_per_slot = jnp.take(live_per_row, sc_dev)
 
         alive = term.valid[i].copy()              # [qb, cap_pad]
         eps_dropped = np.zeros((qb, cap_pad), bool)
@@ -1629,6 +1897,22 @@ class SearchEngine:
                 frags.append(None)
             else:
                 scanned[si] = True
+                if segmented:
+                    t_f = time.perf_counter()
+                    (seg_local, vectors, attrs, ids, norms,
+                     scales) = self._fetch_segment(
+                        plan, sc[p0:p1], alive_seg, ops
+                    )
+                    self._observe_stage("fetch", time.perf_counter() - t_f)
+                    ids = self._mask_tombstones(plan, ids)
+                    live_row = np.asarray(
+                        jnp.sum((ids >= 0).astype(jnp.int32), axis=-1)
+                    )
+                    seg_local = np.asarray(seg_local)
+                    live_np[p0:p1] = live_row[seg_local]
+                    scan_sc = jnp.asarray(seg_local, jnp.int32)
+                else:
+                    scan_sc = sc_dev[p0:p1]
                 self._count_scan((
                     "term", self.backend, metric, k, qb, self.v_block, seg,
                     np.shape(vectors), str(vectors.dtype),
@@ -1636,7 +1920,7 @@ class SearchEngine:
                     norms is None, scales is None,
                 ))
                 svals, sids, snpass = _scan_slots(
-                    sc_dev[p0:p1], q_pad, lo_pad, hi_pad,
+                    scan_sc, q_pad, lo_pad, hi_pad,
                     vectors, attrs, ids, norms, scales,
                     metric=metric, k=k, q_block=qb, v_block=self.v_block,
                     backend=self.backend,
@@ -1699,10 +1983,12 @@ class SearchEngine:
         qi = np.broadcast_to(np.arange(qb)[:, None], sop.shape)
         scan_ok = pok & scanned_pos[sop]
         pair_ok = scan_ok & ~eps_dropped[qi, sop]
+        if segmented:
+            live_per_slot = jnp.asarray(live_np)
         res = _merge_tile_fragments(
             svals_all, sids_all, snpass_all, jnp.asarray(sop),
             jnp.asarray(pair_ok), jnp.asarray(scan_ok),
-            plan.queries_orig_pad[rows], sc_dev, ids,
+            plan.queries_orig_pad[rows], live_per_slot,
             metric=metric, k=k, q=qb,
         )
         self._observe_stage("scan", time.perf_counter() - t_start)
@@ -1713,6 +1999,10 @@ class SearchEngine:
         per-tile segmented scans (the early-termination decisions need the
         per-tile running kth, so the monolithic all-tiles scan is replaced
         by a loop over the same compiled per-segment stage)."""
+        if (self._store is not None and self._device_cache is None
+                and isinstance(self._store,
+                               blockstore_lib.ShardedBlockStore)):
+            return self._execute_terminated_segmented(plan)
         operands = self.fetch(plan)
         slot_cluster = np.asarray(operands[0]).reshape(
             plan.n_tiles, plan.u_cap
@@ -1725,6 +2015,33 @@ class SearchEngine:
             self.stats.tiles_scanned += 1
         return self._merge_parts(plan, parts)
 
+    def _execute_terminated_segmented(self, plan: SearchPlan
+                                      ) -> SearchResult:
+        """Terminated executor over a sharded ring: per-segment lazy fetch
+        instead of one whole-batch gather, so a cluster every query has
+        already dropped at a segment boundary is never dispatched to its
+        owning peer (the sharded-ring fetch shrink;
+        ``StoreStats.fetches_skipped``).  Scores/ids stay exact — a skipped
+        cluster's candidates are all provably below the final kth —
+        while ``n_scanned`` counts only actually-fetched rows."""
+        ops: Dict[int, dict] = {}
+        parts: List[SearchResult] = []
+        for i in range(plan.n_tiles):
+            parts.append(self._scan_tile_terminated(plan, i, None, ops=ops))
+            self.stats.tiles_scanned += 1
+        return self._merge_parts(plan, parts)
+
+    def _note_partition_rows(self, plan: SearchPlan, res: SearchResult):
+        """Splits the batch's cold-scan row accounting by routing outcome
+        (partition vs flat path) — the partition plane's effectiveness
+        gauge.  No-op (and no host sync) without an active catalog."""
+        if plan.route is None:
+            return
+        ns = np.asarray(res.n_scanned)
+        hit = plan.route >= 0
+        self.stats.partition_rows_scanned += int(ns[hit].sum())
+        self.stats.flat_rows_scanned += int(ns[~hit].sum())
+
     # ---- executors ----
     def execute(self, plan: SearchPlan) -> SearchResult:
         self.stats.batches += 1
@@ -1734,6 +2051,7 @@ class SearchEngine:
             res = self._execute_terminated_sync(plan)
         else:
             res = self.scan_merge(plan, self.fetch(plan))
+        self._note_partition_rows(plan, res)
         res = self._fold_delta(plan, res)
         self._note_degraded()
         return res
@@ -1780,6 +2098,7 @@ class SearchEngine:
                 res = self.scan_merge(plan, self.fetch(plan))
         else:
             res = self._run_tiles(plan, pending.inflight)
+        self._note_partition_rows(plan, res)
         res = self._fold_delta(plan, res)
         self._note_degraded()
         return res
@@ -2110,6 +2429,14 @@ class SearchEngine:
         tier = self._delta_tier()
         if tier is not None:
             _flatten_metrics(out, "delta", tier.stats())
+        cat = getattr(self.index, "partitions", None)
+        if cat is not None:
+            _flatten_metrics(out, "partitions", dict(
+                entries=cat.n_entries, subs=cat.n_subs,
+                catalog_bytes=cat.nbytes(),
+            ))
+        if self._traffic is not None:
+            _flatten_metrics(out, "filter_traffic", self._traffic.stats())
         return out
 
     def metrics_text(self) -> str:
@@ -2148,6 +2475,7 @@ def search_fused_tiled(
     operand_cache: str = "auto",
     termination: Optional[str] = None,
     epsilon: float = 0.0,
+    partitions: str = "auto",
 ) -> SearchResult:
     """Query-tiled, probe-deduplicated fused search with streaming top-k.
 
@@ -2183,7 +2511,7 @@ def search_fused_tiled(
         blockstore=blockstore, prune=prune, t_max=t_max, pipeline=pipeline,
         pipeline_depth=pipeline_depth, adaptive_u_cap=adaptive_u_cap,
         u_cap_ladder=u_cap_ladder, operand_cache=operand_cache,
-        termination=termination, epsilon=epsilon,
+        termination=termination, epsilon=epsilon, partitions=partitions,
     )
     try:
         return eng.search(queries, fspec)

@@ -1,0 +1,457 @@
+"""Filter-specialized sub-partitions: attribute-aware cluster layouts.
+
+The summaries plane (PR 3) prunes clusters a filter provably cannot match,
+but a 0.5%-selectivity query still scans *full* clusters where 99.5% of the
+rows fail the filter.  Following SIEVE's "collection of indexes keyed by
+popular predicates", this module materializes **sub-partitions**: physical
+re-slices of selected clusters along high-traffic attributes, each persisted
+as its own generation-tagged cluster record (storage layout v4).  A resident
+**partition catalog** maps predicate boxes to sub-cluster ids; the planner
+picks, per query, the *narrowest* catalog entry whose predicate subsumes the
+query's filter and remaps that query's probes from base cluster ids to sub
+ids.  Every layer below the planner — disk reads, BlockStore ring, device
+cache, delta fold — already keys on ``(cluster_id, gen)``, so sub-partitions
+are just more cluster ids with smaller records.
+
+Exactness contract (the whole design hangs on it):
+
+  * an entry's predicate box **subsumes** a query filter iff every non-void
+    DNF term's interval box is per-attribute contained in the entry box.
+    Subsumption guarantees no filter-passing row lives outside the entry's
+    row set, so scanning the entry's sub-partitions (or the parent cluster
+    where no sub was materialized) sees the exact same filter-passing
+    candidate multiset as the flat scan;
+  * each sub-partition copies its parent's live rows **in parent slot
+    order**, so per-probe top-k fragments — which break score ties by slot
+    index — come out bit-identical to the flat path;
+  * ``members[e, c] = -1`` means "scan the parent cluster" (always exact: a
+    superset of the window's rows, the filter masks the rest), so an entry
+    can never be *invalid*, only less effective.
+
+Entry shapes:
+
+  * **sliding-window ladder** per ordered attribute: level ℓ covers the
+    attribute's observed range with ``base_windows · 2^ℓ`` windows of width
+    ``2·range/n_ℓ`` at stride ``range/n_ℓ`` — any query interval of width
+    ≤ ``range/n_ℓ`` is contained in some window, so narrower filters route
+    to geometrically narrower partitions;
+  * **per-value entries** for low-cardinality attributes (≤ ``max_values``
+    distinct values): exact-match and IN-set filters route to the value's
+    partition directly.
+
+Attribute choice combines the engine's observed filter traffic (the
+:class:`FilterTrafficRecorder` counts which attributes queries actually
+constrain) with the summary plane's global value spread.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.hybrid import ATTR_MAX, ATTR_MIN
+
+# Sub-partition rows are padded to the TPU lane width, like every flat list.
+SUB_ALIGN = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass
+class PartitionCatalog:
+    """Resident predicate → sub-cluster routing table (host-side).
+
+    Entries (E of them) are predicate boxes; subs (P of them) are the
+    materialized sub-partition records.  Sub-cluster ids live in
+    ``[n_base, n_base + P)`` — the id space every (cluster_id, gen)-keyed
+    layer already understands.
+    """
+
+    pred_lo: np.ndarray    # [E, M] int16 — entry predicate box (lo)
+    pred_hi: np.ndarray    # [E, M] int16 — entry predicate box (hi)
+    members: np.ndarray    # [E, K_base] int32 — sub cid, or -1 = scan parent
+    entry_rows: np.ndarray  # [E] int64 — rows reachable via the entry
+    parent: np.ndarray     # [P] int32 — base cluster each sub re-slices
+    sub_lo: np.ndarray     # [P, M] int16 — selection box that built the sub
+    sub_hi: np.ndarray     # [P, M] int16
+    sub_counts: np.ndarray  # [P] int32 — live rows per sub
+    sub_amin: np.ndarray   # [P, M] int16 — per-sub attribute intervals
+    sub_amax: np.ndarray   # [P, M] int16
+    n_base: int
+
+    @property
+    def n_entries(self) -> int:
+        return int(self.pred_lo.shape[0])
+
+    @property
+    def n_subs(self) -> int:
+        return int(self.parent.shape[0])
+
+    @property
+    def n_attrs(self) -> int:
+        return int(self.pred_lo.shape[1])
+
+    def nbytes(self) -> int:
+        return sum(
+            a.size * a.dtype.itemsize
+            for a in (self.pred_lo, self.pred_hi, self.members,
+                      self.entry_rows, self.parent, self.sub_lo, self.sub_hi,
+                      self.sub_counts, self.sub_amin, self.sub_amax)
+        )
+
+    def route(self, lo, hi) -> np.ndarray:
+        """Narrowest subsuming entry per query, or -1 (flat fallback).
+
+        ``lo, hi``: [Q, n_terms, M] int16 filter boxes (void terms have
+        lo > hi on some attribute).  An entry subsumes a query iff every
+        non-void term's box is per-attribute contained in the entry box and
+        the query has at least one non-void term; among subsuming entries
+        the one reaching the fewest rows wins.
+        """
+        lo = np.asarray(lo, np.int16)
+        hi = np.asarray(hi, np.int16)
+        if lo.ndim == 2:  # single query convenience
+            lo, hi = lo[None], hi[None]
+        nonvoid = np.all(lo <= hi, axis=-1)  # [Q, T]
+        # [Q, T, E]: term box contained in entry box on every attribute
+        cont = np.all(
+            (self.pred_lo[None, None, :, :] <= lo[:, :, None, :])
+            & (hi[:, :, None, :] <= self.pred_hi[None, None, :, :]),
+            axis=-1,
+        )
+        ok = np.all(cont | ~nonvoid[:, :, None], axis=1)  # [Q, E]
+        ok &= nonvoid.any(axis=1)[:, None]
+        rows = np.where(ok, self.entry_rows[None, :], np.iinfo(np.int64).max)
+        best = np.argmin(rows, axis=1).astype(np.int32)
+        return np.where(ok.any(axis=1), best, np.int32(-1))
+
+    def to_base(self, cids: np.ndarray) -> np.ndarray:
+        """Maps sub-cluster ids back to their parent base ids (identity on
+        base ids) — the planner's bridge to base-width arrays (centroids,
+        bounds, summaries) that never grew sub rows."""
+        cids = np.asarray(cids)
+        out = cids.copy()
+        is_sub = cids >= self.n_base
+        if is_sub.any():
+            out[is_sub] = self.parent[cids[is_sub] - self.n_base]
+        return out
+
+
+@dataclasses.dataclass
+class PartitionBuild:
+    """A catalog plus the host-side sub-partition records to persist."""
+
+    catalog: PartitionCatalog
+    records: List[Dict[str, np.ndarray]]  # per sub: vectors/attrs/ids/...
+    vpads: np.ndarray  # [P] int32 — per-sub padded capacity
+
+    @property
+    def n_subs(self) -> int:
+        return len(self.records)
+
+
+class FilterTrafficRecorder:
+    """Counts which attributes live filter traffic actually constrains.
+
+    The engine calls :meth:`observe` per planned batch (cheap host numpy);
+    :meth:`top_attrs` feeds the partition builder the attributes worth
+    specializing the physical layout for.  Thread-safe (the serving loop and
+    an offline rebuild may race).
+    """
+
+    def __init__(self, n_attrs: int):
+        self.n_attrs = int(n_attrs)
+        self.constrained = np.zeros(self.n_attrs, np.int64)
+        self.queries = 0
+        self._lock = threading.Lock()
+
+    def observe(self, lo, hi) -> None:
+        lo = np.asarray(lo)
+        hi = np.asarray(hi)
+        nonvoid = np.all(lo <= hi, axis=-1, keepdims=True)  # [Q, T, 1]
+        narrowed = (lo > ATTR_MIN) | (hi < ATTR_MAX)        # [Q, T, M]
+        per_query = np.any(narrowed & nonvoid, axis=1)      # [Q, M]
+        with self._lock:
+            self.constrained += per_query.sum(axis=0).astype(np.int64)
+            self.queries += int(lo.shape[0])
+
+    def top_attrs(self, n: int = 2) -> List[int]:
+        with self._lock:
+            counts = self.constrained.copy()
+        order = np.argsort(-counts, kind="stable")
+        return [int(a) for a in order[:n] if counts[a] > 0]
+
+    def stats(self) -> Dict[str, object]:
+        with self._lock:
+            return dict(
+                queries=int(self.queries),
+                constrained=self.constrained.tolist(),
+            )
+
+
+def choose_attrs(
+    summaries,
+    traffic: Optional[FilterTrafficRecorder] = None,
+    n: int = 2,
+) -> List[int]:
+    """Partition-attribute choice: observed filter traffic first, global
+    value spread (from the summary plane's histogram edges) as tie-break /
+    cold-start fallback."""
+    if traffic is not None:
+        top = traffic.top_attrs(n)
+        if top:
+            return top
+    if summaries is None:
+        return []
+    lo = np.asarray(summaries.edges_lo, np.int32)
+    hi = np.asarray(summaries.edges_hi, np.int32)
+    spread = hi - lo
+    order = np.argsort(-spread, kind="stable")
+    return [int(a) for a in order[:n] if spread[a] > 0]
+
+
+def _ladder_windows(glo: int, ghi: int, *, base_windows: int,
+                    max_depth: int) -> List[Tuple[int, int]]:
+    """Sliding-window ladder over [glo, ghi]: level ℓ has n = base·2^ℓ
+    windows of width 2·range/n at stride range/n, so any query interval of
+    width ≤ range/n is contained in some level-ℓ window."""
+    windows: List[Tuple[int, int]] = []
+    span = max(int(ghi) - int(glo), 1)
+    for level in range(max_depth):
+        n = base_windows * (2 ** level)
+        if n >= 2 * span:  # windows narrower than 1 value: stop subdividing
+            break
+        stride = span / n
+        width = 2 * stride
+        for i in range(n):
+            wlo = int(np.floor(glo + i * stride))
+            whi = int(np.ceil(glo + i * stride + width))
+            wlo = int(np.clip(wlo, ATTR_MIN, ATTR_MAX))
+            whi = int(np.clip(whi, ATTR_MIN, ATTR_MAX))
+            windows.append((wlo, whi))
+    return windows
+
+
+def build_partitions(
+    index,
+    *,
+    attrs: Optional[Sequence[int]] = None,
+    max_depth: int = 3,
+    base_windows: int = 8,
+    max_values: int = 32,
+    max_subs: int = 4096,
+    traffic: Optional[FilterTrafficRecorder] = None,
+) -> PartitionBuild:
+    """Builds the partition catalog + sub-partition records for an index.
+
+    Runs at save/compact time with the full index host-accessible.  For each
+    chosen attribute, low-cardinality values get per-value entries and
+    ordered ranges get the sliding-window ladder (``max_depth`` levels of
+    ``base_windows·2^ℓ`` windows).  Per (entry, cluster), a sub is
+    materialized only when the window's live-row subset is a *strict* subset
+    of the parent's live rows (otherwise the parent is scanned — same rows,
+    no duplicate storage); identical row subsets are deduplicated across
+    entries, and the total sub count is capped at ``max_subs`` (further
+    entries fall back to parent scans — sound, just less effective).
+    """
+    A = np.asarray(index.attrs)          # [K, Vpad, M]
+    ids = np.asarray(index.ids)          # [K, Vpad]
+    counts = np.asarray(index.counts)    # [K]
+    vectors = np.asarray(index.vectors)
+    norms = None if index.norms is None else np.asarray(index.norms)
+    scales = None if index.scales is None else np.asarray(index.scales)
+    k, vpad, m = A.shape
+
+    if attrs is None:
+        attrs = choose_attrs(index.summaries, traffic)
+    attrs = [int(a) for a in attrs]
+    for a in attrs:
+        if not 0 <= a < m:
+            raise ValueError(f"partition attr {a} out of range [0, {m})")
+
+    slot = np.arange(vpad)[None, :]
+    live = (slot < counts[:, None]) & (ids >= 0)  # [K, Vpad]
+    live_counts = live.sum(axis=1).astype(np.int64)  # [K]
+
+    # entry predicate boxes: full-range except the partition attribute
+    entry_boxes: List[Tuple[int, int, int]] = []  # (attr, wlo, whi)
+    for a in attrs:
+        vals = A[:, :, a][live]
+        if vals.size == 0:
+            continue
+        distinct = np.unique(vals)
+        if distinct.size <= max_values:
+            freq_order = distinct  # small sets: every value gets an entry
+            for v in freq_order:
+                entry_boxes.append((a, int(v), int(v)))
+        else:
+            glo, ghi = int(vals.min()), int(vals.max())
+            for wlo, whi in _ladder_windows(
+                glo, ghi, base_windows=base_windows, max_depth=max_depth
+            ):
+                entry_boxes.append((a, wlo, whi))
+
+    # materialize subs, deduplicating identical row subsets per cluster
+    sub_key: Dict[Tuple[int, bytes], int] = {}
+    sub_rows: List[np.ndarray] = []      # selected slot indices, slot order
+    sub_parent: List[int] = []
+    sub_box: List[Tuple[int, int, int]] = []
+    members = np.full((len(entry_boxes), k), -1, np.int32)
+    entry_rows = np.zeros(len(entry_boxes), np.int64)
+
+    for e, (a, wlo, whi) in enumerate(entry_boxes):
+        col = A[:, :, a]
+        sel = live & (col >= wlo) & (col <= whi)  # [K, Vpad]
+        nsel = sel.sum(axis=1).astype(np.int64)
+        for c in range(k):
+            if nsel[c] == live_counts[c]:
+                entry_rows[e] += live_counts[c]  # window covers the cluster
+                continue
+            rows = np.nonzero(sel[c])[0].astype(np.int32)
+            key = (c, rows.tobytes())
+            p = sub_key.get(key)
+            if p is None:
+                if len(sub_rows) >= max_subs:
+                    entry_rows[e] += live_counts[c]  # cap hit: parent scan
+                    continue
+                p = len(sub_rows)
+                sub_key[key] = p
+                sub_rows.append(rows)
+                sub_parent.append(c)
+                sub_box.append((a, wlo, whi))
+            members[e, c] = k + p
+            entry_rows[e] += int(nsel[c])
+
+    n_subs = len(sub_rows)
+    records: List[Dict[str, np.ndarray]] = []
+    vpads = np.zeros(n_subs, np.int32)
+    sub_counts = np.zeros(n_subs, np.int32)
+    sub_amin = np.full((n_subs, m), ATTR_MAX, np.int16)
+    sub_amax = np.full((n_subs, m), ATTR_MIN, np.int16)
+    sub_lo = np.full((n_subs, m), ATTR_MIN, np.int16)
+    sub_hi = np.full((n_subs, m), ATTR_MAX, np.int16)
+
+    parent_vpad = int(vectors.shape[1])
+    for p, rows in enumerate(sub_rows):
+        c = sub_parent[p]
+        n = int(rows.size)
+        # pad to the alignment the scan kernels like, but never past the
+        # parent's own height (small test indexes have Vpad < SUB_ALIGN;
+        # a sub taller than its parent would break RAM attach / device
+        # compose, and could never hold more rows anyway)
+        vp = min(max(_round_up(n, SUB_ALIGN), SUB_ALIGN), parent_vpad)
+        vp = max(vp, n, 1)
+        rec: Dict[str, np.ndarray] = {}
+        vec = np.zeros((vp,) + vectors.shape[2:], vectors.dtype)
+        att = np.zeros((vp, m), A.dtype)
+        rid = np.full((vp,), -1, np.int32)
+        if n:
+            vec[:n] = vectors[c, rows]
+            att[:n] = A[c, rows]
+            rid[:n] = ids[c, rows]
+            sub_amin[p] = att[:n].min(axis=0)
+            sub_amax[p] = att[:n].max(axis=0)
+        rec["vectors"], rec["attrs"], rec["ids"] = vec, att, rid
+        if norms is not None:
+            nr = np.zeros((vp,), norms.dtype)
+            if n:
+                nr[:n] = norms[c, rows]
+            rec["norms"] = nr
+        if scales is not None:
+            sc = np.zeros((vp,), scales.dtype)
+            if n:
+                sc[:n] = scales[c, rows]
+            rec["scales"] = sc
+        records.append(rec)
+        vpads[p] = vp
+        sub_counts[p] = n
+        a, wlo, whi = sub_box[p]
+        sub_lo[p, a] = np.int16(np.clip(wlo, ATTR_MIN, ATTR_MAX))
+        sub_hi[p, a] = np.int16(np.clip(whi, ATTR_MIN, ATTR_MAX))
+
+    pred_lo = np.full((len(entry_boxes), m), ATTR_MIN, np.int16)
+    pred_hi = np.full((len(entry_boxes), m), ATTR_MAX, np.int16)
+    for e, (a, wlo, whi) in enumerate(entry_boxes):
+        pred_lo[e, a] = np.int16(np.clip(wlo, ATTR_MIN, ATTR_MAX))
+        pred_hi[e, a] = np.int16(np.clip(whi, ATTR_MIN, ATTR_MAX))
+
+    catalog = PartitionCatalog(
+        pred_lo=pred_lo, pred_hi=pred_hi, members=members,
+        entry_rows=entry_rows, parent=np.asarray(sub_parent, np.int32),
+        sub_lo=sub_lo, sub_hi=sub_hi, sub_counts=sub_counts,
+        sub_amin=sub_amin, sub_amax=sub_amax, n_base=k,
+    )
+    return PartitionBuild(catalog=catalog, records=records, vpads=vpads)
+
+
+def select_sub_rows(attrs_row: np.ndarray, ids_row: np.ndarray, count: int,
+                    box_lo: np.ndarray, box_hi: np.ndarray) -> np.ndarray:
+    """Slot indices of a cluster's live rows inside a sub's selection box,
+    in slot order — the single definition build and compact share, so a
+    rebuilt sub reproduces the build's row choice exactly."""
+    slot = np.arange(ids_row.shape[0])
+    live = (slot < int(count)) & (ids_row >= 0)
+    inside = np.all(
+        (attrs_row >= box_lo[None, :]) & (attrs_row <= box_hi[None, :]),
+        axis=1,
+    )
+    return np.nonzero(live & inside)[0].astype(np.int32)
+
+
+def attach(index, build: PartitionBuild):
+    """RAM-tier attach: extends the in-memory index with the sub-partition
+    lists (padded to the parent Vpad) and hangs the catalog off the result.
+
+    The planner only consults rows ``[:n_base]`` of the per-cluster arrays;
+    sub rows exist purely as scan targets, so their summary rows are void
+    and their centroids copy the parent's (never probed directly).
+    """
+    import dataclasses as _dc
+
+    import jax.numpy as jnp
+
+    from repro.core import summaries as summaries_lib
+
+    cat = build.catalog
+    k, vpad = np.asarray(index.ids).shape
+    p = build.n_subs
+    if p == 0:
+        index.partitions = cat
+        return index
+
+    def _extend(base, per_sub_key, fill):
+        base = np.asarray(base)
+        ext = np.full((p,) + base.shape[1:], fill, base.dtype)
+        for j, rec in enumerate(build.records):
+            rows = rec[per_sub_key].shape[0]
+            ext[j, :rows] = rec[per_sub_key]
+        return jnp.asarray(np.concatenate([base, ext], axis=0))
+
+    vectors = _extend(index.vectors, "vectors", 0)
+    attrs = _extend(index.attrs, "attrs", 0)
+    ids = _extend(index.ids, "ids", -1)
+    norms = (None if index.norms is None
+             else _extend(index.norms, "norms", 0))
+    scales = (None if index.scales is None
+              else _extend(index.scales, "scales", 0))
+    centroids = jnp.concatenate(
+        [index.centroids,
+         jnp.asarray(np.asarray(index.centroids)[cat.parent])], axis=0
+    )
+    counts = jnp.concatenate(
+        [index.counts, jnp.asarray(cat.sub_counts, np.int32)], axis=0
+    )
+    summ = index.summaries
+    if summ is not None:
+        summ = summaries_lib.pad_clusters(summ, k + p)
+    out = _dc.replace(
+        index, centroids=centroids, vectors=vectors, attrs=attrs, ids=ids,
+        counts=counts, norms=norms, scales=scales, summaries=summ,
+    )
+    out.partitions = cat
+    return out

@@ -290,7 +290,7 @@ def bound_order(slot_cluster, n_unique, slot_of_probe, slot_bound,
     return sc.reshape(-1), sop, perm
 
 
-def split_fetch_by_owner(fetch, owner_of):
+def split_fetch_by_owner(fetch, owner_of, alive=None):
     """Splits a first-need fetch list per owning node (host-side).
 
     ``fetch`` is any fetch-list unit — a whole-plan :func:`fetch_order`, or
@@ -301,11 +301,17 @@ def split_fetch_by_owner(fetch, owner_of):
     exactly the order the scan will consume it; the sublists partition the
     input (concatenating them in any order recovers the same set).
 
+    ``alive`` (parallel bool mask) drops entries whose every (query, probe)
+    pair is already dead before the split, so no peer sees a fetch for a
+    cluster the scan provably won't read.
+
     Returns ``{node_id: 1-D int64 array}`` for the owners that appear.
     """
     import numpy as np
 
     fetch = np.asarray(fetch, dtype=np.int64).reshape(-1)
+    if alive is not None:
+        fetch = fetch[np.asarray(alive, dtype=bool).reshape(-1)]
     if fetch.size == 0:
         return {}
     owners = np.asarray(owner_of(fetch))

@@ -56,6 +56,7 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
                          device_cache_mb: Optional[float] = None,
                          termination: Optional[str] = None,
                          epsilon: float = 0.0,
+                         partitions: str = "auto",
                          ) -> Callable:
     """The batched server's default search step: the search engine.
 
@@ -136,6 +137,13 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
     a float cold tier (~4× capacity per MB; scores agree to quantization
     tolerance, and the next republish dequantizes the rows back into the
     cold tier's dtype).
+
+    ``partitions`` controls filter-specialized sub-partition routing on a
+    layout-v4 index (``"auto"`` = route when the index carries a partition
+    catalog, ``"off"`` = always scan the flat layout, ``"on"`` = require a
+    catalog): routed queries scan the narrowest sub-partition whose
+    predicate subsumes their filter — bit-identical results, a fraction of
+    the rows.
     """
     from repro.core import blockstore as blockstore_lib
     from repro.core.disk import DiskIVFIndex
@@ -214,6 +222,7 @@ def make_fused_search_fn(index, *, k: int, n_probes: int, q_block: int = 64,
         blockstore=store, operand_cache=operand_cache,
         u_cap_ladder=u_cap_ladder, device_cache=device_cache,
         termination=termination, epsilon=epsilon,
+        partitions=partitions,
     )
 
     def search_fn(queries, fspec, shard_ok=None):

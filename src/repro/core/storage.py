@@ -38,9 +38,22 @@ generation vector.  Caches key on ``(cluster_id, gen)``, so a republish
 invalidates exactly the rewritten clusters.  v2/v2.1 checkpoints load with
 ``gen == 0`` everywhere and serve unchanged.
 
-Versioning: ``manifest["layout"]`` is 3 for the current format, 2 for the
-pre-generation record format (``layout_minor`` 1 marks v2.1 summary
-writers).  Layout v1 (one
+Layout v4 adds *filter-specialized sub-partitions* (``core/partitions.py``):
+selected clusters are re-sliced along high-traffic attributes and each
+sub-partition persists as its own generation-tagged cluster record in
+``<dir>/partitions.bin`` — variable-stride records (each padded to its own
+row capacity, a multiple of 128) addressed through the resident
+``partition_offsets.npy`` byte-offset table.  The resident **partition
+catalog** (predicate boxes, entry→sub-cluster membership, per-sub selection
+boxes / intervals / counts) lives in small always-resident ``.npy`` files
+like the summaries.  ``manifest["n_clusters"]`` stays the *base* cluster
+count — sub-partitions occupy ids ``[K, K + n_subs)`` and ``gens.npy`` grows
+to cover them, so every (cluster_id, gen)-keyed layer serves them unchanged.
+v3 checkpoints load fine and simply have no catalog (flat routing only).
+
+Versioning: ``manifest["layout"]`` is 4 for the current format (3 without
+sub-partitions), 2 for the pre-generation record format (``layout_minor`` 1
+marks v2.1 summary writers).  Layout v1 (one
 ``.npz`` of stacked arrays per shard) is still *read* — ``load_index``
 dispatches on the manifest — and v1/v2 can still be written with
 ``save_index(..., layout=1|2)`` for tooling that expects them.  v1
@@ -105,6 +118,24 @@ BOUNDS_FILES = dict(
     radius="bounds_radius.npy",
     slack="bounds_slack.npy",
 )
+# Filter-specialized sub-partitions (layout v4): resident catalog arrays
+# (one .npy per PartitionCatalog field) plus the variable-stride record
+# region ``partitions.bin`` addressed by ``partition_offsets.npy``.
+PARTITION_FILES = dict(
+    pred_lo="partition_pred_lo.npy",
+    pred_hi="partition_pred_hi.npy",
+    members="partition_members.npy",
+    entry_rows="partition_entry_rows.npy",
+    parent="partition_parent.npy",
+    sub_lo="partition_sub_lo.npy",
+    sub_hi="partition_sub_hi.npy",
+    sub_counts="partition_sub_counts.npy",
+    sub_amin="partition_sub_amin.npy",
+    sub_amax="partition_sub_amax.npy",
+)
+PARTITION_VPADS = "partition_vpads.npy"    # [P] int32 per-sub row capacity
+PARTITION_OFFSETS = "partition_offsets.npy"  # [P+1] int64 byte offsets
+PARTITION_DATA = "partitions.bin"
 _FIELD_ALIGN = 64     # per-field offset alignment inside a record
 _RECORD_ALIGN = 512   # record stride alignment (mmap-friendly)
 
@@ -238,9 +269,72 @@ def _base_manifest(index: IVFFlatIndex, *, n_shards: int, version: int
     )
 
 
+def partition_record_layout(man: dict, vpad: int) -> Tuple[List[dict], int]:
+    """The field table + stride of one sub-partition record (layout v4):
+    same field order as the base records, at the sub's own row capacity."""
+    return record_layout(
+        vpad=int(vpad), dim=man["dim"], n_attrs=man["n_attrs"],
+        store_dtype=man["store_dtype"], has_norms=man["has_norms"],
+        quantized=man["quantized"], with_gen=True,
+    )
+
+
+def write_partition_region(directory: str, man: dict, build,
+                           sub_gens: np.ndarray) -> None:
+    """Writes the v4 partition plane: the variable-stride record region
+    (``partitions.bin`` + byte offsets) and the resident catalog ``.npy``
+    files.  Shared by ``save_index`` and ``compact_deltas`` so a republish
+    rewrites sub-partitions in exactly the build's format."""
+    cat = build.catalog
+    p = build.n_subs
+    sub_gens = np.asarray(sub_gens, np.int64)
+    offsets = np.zeros(p + 1, np.int64)
+
+    def _np_save(path, arr):
+        with open(path, "wb") as f:
+            np.save(f, arr, allow_pickle=False)
+
+    def _bin_save(path):
+        with open(path, "wb") as f:
+            off = 0
+            for j, rec in enumerate(build.records):
+                fields, stride = partition_record_layout(
+                    man, int(build.vpads[j])
+                )
+                buf = np.zeros(stride, np.uint8)
+                payload = dict(rec)
+                payload["gen"] = np.asarray([sub_gens[j]], np.int64)
+                for fld in fields:
+                    raw = np.ascontiguousarray(
+                        payload[fld["name"]]
+                    ).tobytes()
+                    o = fld["offset"]
+                    buf[o:o + len(raw)] = np.frombuffer(raw, np.uint8)
+                f.write(buf.tobytes())
+                offsets[j] = off
+                off += stride
+            offsets[p] = off
+
+    _atomic_save(os.path.join(directory, PARTITION_DATA), _bin_save)
+    _atomic_save(
+        os.path.join(directory, PARTITION_OFFSETS),
+        lambda path: _np_save(path, offsets),
+    )
+    _atomic_save(
+        os.path.join(directory, PARTITION_VPADS),
+        lambda path: _np_save(path, np.asarray(build.vpads, np.int32)),
+    )
+    for field, fname in PARTITION_FILES.items():
+        _atomic_save(
+            os.path.join(directory, fname),
+            lambda path, f=field: _np_save(path, np.asarray(getattr(cat, f))),
+        )
+
+
 def save_index(index: IVFFlatIndex, directory: str, *, n_shards: int = 1,
                version: int = 0, layout: int = 3,
-               gens: Optional[np.ndarray] = None) -> None:
+               gens: Optional[np.ndarray] = None,
+               partitions=None) -> None:
     """Writes the index as ``n_shards`` contiguous cluster-range files.
 
     ``layout=3`` (default) writes the fixed-stride record format above with
@@ -248,25 +342,41 @@ def save_index(index: IVFFlatIndex, directory: str, *, n_shards: int = 1,
     resident ``gens.npy``; ``layout=2`` is the same record format without
     generations; ``layout=1`` writes the legacy one-npz-per-shard format
     (all carry SQ8 ``scales`` and the ``quantized`` manifest flag).
+
+    ``layout=4`` additionally persists filter-specialized sub-partitions:
+    ``partitions`` must be a :class:`repro.core.partitions.PartitionBuild`
+    (from ``partitions.build_partitions``).  ``gens`` may cover the base
+    clusters only (``[K]`` — sub generations inherit their parent's) or the
+    full extended id space (``[K + n_subs]``).
     """
     k = index.n_clusters
     if k % n_shards:
         raise ValueError(f"K={k} not divisible by n_shards={n_shards}; pad_k first")
-    if layout not in (1, 2, 3):
+    if layout not in (1, 2, 3, 4):
         raise ValueError(f"unknown layout {layout}")
+    if layout == 4 and partitions is None:
+        raise ValueError("layout=4 needs partitions= (a PartitionBuild)")
+    if layout != 4 and partitions is not None:
+        raise ValueError("partitions= needs layout=4")
+    n_subs = partitions.n_subs if partitions is not None else 0
     if gens is None:
-        gens = np.zeros(k, np.int64)
+        gens = np.zeros(k + n_subs, np.int64)
     gens = np.asarray(gens, np.int64)
-    if gens.shape != (k,):
+    if layout == 4 and gens.shape == (k,):
+        # base-only vector: sub-partitions inherit their parent's generation
+        sub = gens[np.asarray(partitions.catalog.parent, np.int64)]
+        gens = np.concatenate([gens, sub])
+    expect = (k + n_subs,) if layout == 4 else (k,)
+    if gens.shape != expect:
         raise GenerationMismatchError(
-            f"gens shape {gens.shape} != ({k},) clusters"
+            f"gens shape {gens.shape} != {expect} clusters"
         )
     os.makedirs(directory, exist_ok=True)
     kl = k // n_shards
     manifest = _base_manifest(index, n_shards=n_shards, version=version)
     arrays = _index_arrays(index)
-    if layout == 3:
-        arrays["gen"] = gens[:, None]
+    if layout >= 3:
+        arrays["gen"] = gens[:k, None]
 
     def _np_save(p, arr):
         with open(p, "wb") as f:  # file handle: np.save must not append .npy
@@ -317,13 +427,13 @@ def save_index(index: IVFFlatIndex, directory: str, *, n_shards: int = 1,
             vpad=index.vpad, dim=index.spec.dim, n_attrs=index.spec.n_attrs,
             store_dtype=manifest["store_dtype"],
             has_norms=manifest["has_norms"], quantized=index.quantized,
-            with_gen=layout == 3,
+            with_gen=layout >= 3,
         )
         _atomic_save(
             os.path.join(directory, "counts.npy"),
             lambda p: _np_save(p, np.asarray(index.counts, np.int32)),
         )
-        if layout == 3:
+        if layout >= 3:
             _atomic_save(
                 os.path.join(directory, GENS_FILE),
                 lambda p: _np_save(p, gens),
@@ -350,6 +460,14 @@ def save_index(index: IVFFlatIndex, directory: str, *, n_shards: int = 1,
             )
         manifest.update(layout=layout, layout_minor=1, record_stride=stride,
                         fields=fields)
+        if layout == 4:
+            write_partition_region(directory, manifest, partitions,
+                                   gens[k:])
+            manifest["has_partitions"] = True
+            manifest["partitions"] = dict(
+                n_subs=n_subs,
+                n_entries=partitions.catalog.n_entries,
+            )
 
     _atomic_save(
         os.path.join(directory, MANIFEST),
@@ -364,6 +482,7 @@ def load_manifest(directory: str) -> dict:
     man.setdefault("quantized", False)  # pre-SQ8-fix checkpoints
     man.setdefault("has_summaries", False)  # pre-v2.1: no pruning, sound
     man.setdefault("has_bounds", False)  # pre-PR-9: no disk-tier termination
+    man.setdefault("has_partitions", False)  # pre-v4: flat routing only
     return man
 
 
@@ -393,14 +512,17 @@ def load_bounds(directory: str, man: dict) -> Optional[ClusterBounds]:
 
 
 def load_gens(directory: str, man: dict) -> np.ndarray:
-    """Resident per-cluster generation vector ``[K] int64``.
+    """Resident per-cluster generation vector ``[K] int64`` (layout v4:
+    ``[K + n_subs]`` — sub-partition generations extend the base vector).
 
     Pre-v3 checkpoints have no generations: every cluster is ``gen == 0``
-    (and serves unchanged — the back-compat contract).  On v3 the vector
+    (and serves unchanged — the back-compat contract).  On v3+ the vector
     must exist and match the manifest's cluster count, else the checkpoint
     is inconsistent and refuses to load.
     """
     k = man["n_clusters"]
+    if man.get("layout", 1) >= 4:
+        k += int(man.get("partitions", {}).get("n_subs", 0))
     if man.get("layout", 1) < 3:
         return np.zeros(k, np.int64)
     path = os.path.join(directory, GENS_FILE)
@@ -415,6 +537,51 @@ def load_gens(directory: str, man: dict) -> np.ndarray:
             f"{k} clusters: {directory}"
         )
     return gens
+
+
+def load_partitions(directory: str, man: dict):
+    """Loads the resident partition catalog, or None for pre-v4 checkpoints
+    (no catalog simply means every query takes the flat path)."""
+    if not man.get("has_partitions"):
+        return None
+    from repro.core.partitions import PartitionCatalog
+
+    fields = {
+        f: np.load(os.path.join(directory, fname))
+        for f, fname in PARTITION_FILES.items()
+    }
+    return PartitionCatalog(n_base=man["n_clusters"], **fields)
+
+
+def load_partition_vpads(directory: str) -> np.ndarray:
+    return np.asarray(np.load(os.path.join(directory, PARTITION_VPADS)),
+                      np.int32)
+
+
+def load_partition_records(directory: str, man: dict
+                           ) -> List[Dict[str, np.ndarray]]:
+    """Reads every sub-partition record from the variable-stride region
+    (offline use: RAM-tier load, compaction rewrite — the serving path pages
+    single records through ``ShardReader.read`` instead)."""
+    vpads = load_partition_vpads(directory)
+    offsets = np.asarray(
+        np.load(os.path.join(directory, PARTITION_OFFSETS)), np.int64
+    )
+    raw = np.fromfile(os.path.join(directory, PARTITION_DATA), np.uint8)
+    out = []
+    for j, vp in enumerate(vpads):
+        fields, stride = partition_record_layout(man, int(vp))
+        chunk = raw[offsets[j]:offsets[j] + stride]
+        rec = {}
+        for fld in fields:
+            dt = np_dtype(fld["dtype"])
+            nb = int(np.prod(fld["shape"])) * dt.itemsize
+            o = fld["offset"]
+            rec[fld["name"]] = np.ascontiguousarray(
+                chunk[o:o + nb]
+            ).view(dt).reshape(tuple(fld["shape"]))
+        out.append(rec)
+    return out
 
 
 def shard_paths(directory: str, man: dict) -> List[str]:
@@ -438,6 +605,14 @@ def check_complete(directory: str, man: dict) -> List[str]:
         ]
     if man.get("layout", 1) >= 3:
         required.append(os.path.join(directory, GENS_FILE))
+    if man.get("has_partitions"):
+        required += [
+            os.path.join(directory, f) for f in PARTITION_FILES.values()
+        ]
+        required += [
+            os.path.join(directory, f)
+            for f in (PARTITION_VPADS, PARTITION_OFFSETS, PARTITION_DATA)
+        ]
     missing = [p for p in required if not os.path.exists(p)]
     if missing:
         raise FileNotFoundError(f"incomplete checkpoint, missing: {missing}")
@@ -542,6 +717,29 @@ def load_index(
         _load_v2(directory, man, paths) if man["layout"] >= 2
         else _load_v1(directory, man, paths)
     )
+    if man.get("has_partitions"):
+        # v4: extend the RAM index with the sub-partition lists and hang
+        # the catalog off it, so the RAM-tier engine routes like the disk
+        # tier does.  Re-sharding pads would break the catalog's base-id
+        # space, so it applies to the base index before attach.
+        from repro.core import partitions as partitions_lib
+
+        catalog = load_partitions(directory, man)
+        records = load_partition_records(directory, man)
+        build = partitions_lib.PartitionBuild(
+            catalog=catalog,
+            records=[
+                {k: v for k, v in rec.items() if k != "gen"}
+                for rec in records
+            ],
+            vpads=load_partition_vpads(directory),
+        )
+        if target_shards and index.n_clusters % target_shards:
+            raise ValueError(
+                "target_shards re-padding is unsupported for a partitioned "
+                "(layout v4) checkpoint — re-save the base index first"
+            )
+        return partitions_lib.attach(index, build)
     if target_shards and index.n_clusters % target_shards:
         k_new = ((index.n_clusters + target_shards - 1) // target_shards
                  ) * target_shards

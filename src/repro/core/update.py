@@ -152,6 +152,88 @@ def compact_stale(
     return index, int(touched.size)
 
 
+def resync_partitions(index) -> IVFFlatIndex:
+    """Rebuilds an attached RAM index's sub-partition rows from their parents.
+
+    ``add_vectors`` / ``tombstone`` / ``compact_cluster`` mutate BASE cluster
+    rows only (the planner's id space); the attached sub-partition copies go
+    stale until this maintenance pass re-selects each sub's rows with the
+    same rule the build used (``partitions.select_sub_rows``), refreshes the
+    catalog's per-sub counts/interval summaries, and recomputes the
+    entry-row estimates the router ranks by.  Host-side and O(subs · Vpad) —
+    the same cost class as ``compact_stale``.  Returns the resynced index
+    (no-op for an unpartitioned one).
+    """
+    import numpy as np
+
+    cat = getattr(index, "partitions", None)
+    if cat is None or cat.n_subs == 0:
+        return index
+    from repro.core import partitions as partitions_lib
+
+    k = cat.n_base
+    vectors = np.asarray(index.vectors).copy()
+    attrs = np.asarray(index.attrs).copy()
+    ids = np.asarray(index.ids).copy()
+    counts = np.asarray(index.counts).copy()
+    norms = None if index.norms is None else np.asarray(index.norms).copy()
+    scales = (None if index.scales is None
+              else np.asarray(index.scales).copy())
+    sub_counts = np.asarray(cat.sub_counts, np.int32).copy()
+    sub_amin = np.asarray(cat.sub_amin, np.int16).copy()
+    sub_amax = np.asarray(cat.sub_amax, np.int16).copy()
+    for p in range(cat.n_subs):
+        c = int(cat.parent[p])
+        rows = partitions_lib.select_sub_rows(
+            attrs[c], ids[c], int(counts[c]),
+            np.asarray(cat.sub_lo[p]), np.asarray(cat.sub_hi[p]),
+        )
+        n = int(rows.size)
+        g = k + p
+        vectors[g] = 0
+        attrs[g] = 0
+        ids[g] = -1
+        if n:
+            vectors[g, :n] = vectors[c, rows]
+            attrs[g, :n] = attrs[c, rows]
+            ids[g, :n] = ids[c, rows]
+        if norms is not None:
+            norms[g] = 0
+            if n:
+                norms[g, :n] = norms[c, rows]
+        if scales is not None:
+            scales[g] = 0
+            if n:
+                scales[g, :n] = scales[c, rows]
+        counts[g] = n
+        sub_counts[p] = n
+        if n:
+            sub_amin[p] = attrs[g, :n].min(axis=0)
+            sub_amax[p] = attrs[g, :n].max(axis=0)
+        else:
+            sub_amin[p] = summaries_lib.ATTR_MAX
+            sub_amax[p] = summaries_lib.ATTR_MIN
+    mem = np.asarray(cat.members, np.int64)
+    entry_rows = np.where(
+        mem >= 0,
+        sub_counts[np.clip(mem - k, 0, None)].astype(np.int64),
+        counts[:k].astype(np.int64)[None, :],
+    ).sum(axis=1)
+    new_cat = dataclasses.replace(
+        cat, entry_rows=entry_rows, sub_counts=sub_counts,
+        sub_amin=sub_amin, sub_amax=sub_amax,
+    )
+    out = dataclasses.replace(
+        index,
+        vectors=jnp.asarray(vectors), attrs=jnp.asarray(attrs),
+        ids=jnp.asarray(ids), counts=jnp.asarray(counts),
+        norms=None if norms is None else jnp.asarray(norms),
+        scales=None if scales is None else jnp.asarray(scales),
+    )
+    out.partitions = new_cat
+    return out
+
+
 @jax.jit
 def compact_cluster(index: IVFFlatIndex, cluster: int) -> IVFFlatIndex:
     """Reclaims tombstoned slots of one cluster by stable-compacting live rows."""

@@ -152,6 +152,24 @@ def main():
                     help="bounded termination: per-query probability "
                          "budget for dropping a probe that might hold a "
                          "top-k hit (needs --termination bounded)")
+    ap.add_argument("--partition-attrs", default=None,
+                    help="build filter-specialized sub-partitions along "
+                         "these attribute indices (comma-separated, or "
+                         "'auto' to choose from the summary histograms) "
+                         "and persist them as a layout-v4 checkpoint on "
+                         "--save / the disk-tier auto-checkpoint")
+    ap.add_argument("--partition-max-depth", type=int, default=3,
+                    help="sliding-window ladder depth for ordered "
+                         "partition attributes: level l has 8*2^l windows "
+                         "(deeper = narrower windows, so narrower filters "
+                         "still route to a sub-partition)")
+    ap.add_argument("--partitions", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="planner-side partition routing: per query, scan "
+                         "the narrowest catalog entry whose predicate "
+                         "subsumes the filter (auto = route when the index "
+                         "carries a catalog; results are bit-identical "
+                         "either way)")
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="serve Prometheus text exposition of the flat "
                          "engine metrics at http://localhost:PORT/metrics")
@@ -163,6 +181,24 @@ def main():
     from repro.core.disk import DiskIVFIndex
     from repro.core.serving import SearchServer, make_fused_search_fn
     from repro.data import synthetic_attributes, synthetic_embeddings
+
+    def _save_checkpoint(idx, directory, n_shards=4):
+        """Persists the index; with --partition-attrs, additionally builds
+        the filter-specialized sub-partition plane (storage layout v4)."""
+        if args.partition_attrs is None:
+            storage.save_index(idx, directory, n_shards=n_shards)
+            return
+        from repro.core import partitions as partitions_lib
+
+        p_attrs = (None if args.partition_attrs == "auto"
+                   else [int(a) for a in args.partition_attrs.split(",")])
+        build = partitions_lib.build_partitions(
+            idx, attrs=p_attrs, max_depth=args.partition_max_depth
+        )
+        storage.save_index(idx, directory, n_shards=n_shards, layout=4,
+                           partitions=build)
+        print(f"partitioned checkpoint: {build.n_subs} sub-partitions, "
+              f"{build.catalog.n_entries} catalog entries")
 
     index_dir = args.load
     index = None
@@ -189,14 +225,14 @@ def main():
         print(f"built index: K={index.n_clusters}, "
               f"mean list {stats.mean_list_len:.0f}")
         if args.save:
-            storage.save_index(index, args.save, n_shards=4)
+            _save_checkpoint(index, args.save)
             print(f"persisted to {args.save}")
             index_dir = args.save
 
     if args.tier == "disk":
         if index_dir is None:  # disk tier needs a checkpoint to page from
             index_dir = tempfile.mkdtemp(prefix="ivf_disk_")
-            storage.save_index(index, index_dir, n_shards=4)
+            _save_checkpoint(index, index_dir)
             print(f"wrote disk-tier checkpoint to {index_dir}")
         budget = (args.resident_budget_mb * 1024 * 1024
                   if args.resident_budget_mb else None)
@@ -234,6 +270,7 @@ def main():
         delta_quantize=args.delta_quantize,
         device_cache_mb=args.device_cache_mb,
         termination=args.termination, epsilon=args.epsilon,
+        partitions=args.partitions,
     )
     metrics_httpd = None
     if args.metrics_port is not None:

@@ -1,0 +1,502 @@
+"""Filter-specialized sub-partitions: routing soundness + bit-identity.
+
+Two contracts, end to end:
+
+1. **Routing is sound.**  The planner may route a query to a catalog entry
+   only when the entry's predicate *subsumes* the query's filter (every
+   non-void term per-attribute contained in the entry box); among subsuming
+   entries the fewest-rows one wins; anything else falls back flat.
+   Property-tested over randomized catalogs and filters against an
+   independent oracle.
+
+2. **Routing is unobservable in results.**  A partition-routed search
+   returns BIT-IDENTICAL ids/scores to the flat path over the same logical
+   state — across metrics × SQ8, sync and pipelined executors, all three
+   stores (Resident / Local / Sharded), the segmented terminated executor,
+   and add/tombstone/compact_deltas interleavings.  ``n_scanned`` is
+   excluded by design: scanning fewer rows is the whole point.
+
+The workload has attr0 *uncorrelated* with the clustering (uniform
+timestamps), so summary pruning cannot shrink the scan and only the
+physical sub-partition layout distinguishes the routed plan.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    DeltaTier,
+    FilterSpec,
+    HybridSpec,
+    compact_deltas,
+    storage,
+)
+from repro.core import blockstore as bs
+from repro.core import partitions as partitions_lib
+from repro.core import probes as probes_lib
+from repro.core import summaries as summaries_lib
+from repro.core import update as update_lib
+from repro.core.disk import DiskIVFIndex
+from repro.core.engine import SearchEngine
+from repro.core.ivf import build_from_assignments, quantize_index
+from repro.core.search import search_reference
+
+N, D, M, KC = 1536, 32, 6, 12
+TS_RANGE = 6000
+K, NP, QB = 10, 4, 8
+W = 150  # query window width: under the finest ladder stride, always routed
+
+
+def _uniform_ts_index(metric="dot", quantized=False):
+    """Topic mixture whose attr0 timestamp is uniform and independent of the
+    topic: every cluster's summary interval covers the full range, so
+    interval pruning is blind to the time filter and the flat path scans
+    every probed cluster — the regime sub-partitions exist for."""
+    rng = np.random.default_rng(3)
+    centers = rng.standard_normal((KC, D)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=-1, keepdims=True)
+    topic = (np.arange(N) * KC) // N
+    core = centers[topic] + 0.05 * rng.standard_normal((N, D)).astype(
+        np.float32
+    )
+    core /= np.linalg.norm(core, axis=-1, keepdims=True)
+    attrs = rng.integers(0, 16, (N, M)).astype(np.int16)
+    attrs[:, 0] = rng.integers(0, TS_RANGE, N).astype(np.int16)
+    spec = HybridSpec(dim=D, n_attrs=M, core_dtype=jnp.float32,
+                      metric=metric)
+    # vpad headroom so republished clusters can absorb folded delta rows
+    vpad = int(np.bincount(topic, minlength=KC).max()) + 96
+    index, _ = build_from_assignments(
+        spec, jnp.asarray(centers), jnp.asarray(core), jnp.asarray(attrs),
+        jnp.asarray(topic), vpad=vpad, ids=jnp.arange(N),
+    )
+    if quantized:
+        index = quantize_index(index)
+    return index, core, centers
+
+
+def _window_fspec(q, width, seed=7):
+    rng = np.random.default_rng(seed)
+    lo = np.full((q, 1, M), -32768, np.int16)
+    hi = np.full((q, 1, M), 32767, np.int16)
+    start = rng.integers(0, max(TS_RANGE - width, 1), q)
+    lo[:, 0, 0] = start.astype(np.int16)
+    hi[:, 0, 0] = (start + width - 1).astype(np.int16)
+    return FilterSpec(lo=jnp.asarray(lo), hi=jnp.asarray(hi))
+
+
+def _queries(core, q, seed=11):
+    rng = np.random.default_rng(seed)
+    qs = core[rng.integers(0, N, q)] + 0.01 * rng.standard_normal(
+        (q, D)
+    ).astype(np.float32)
+    return jnp.asarray(qs)
+
+
+def _assert_bitwise(a, b, msg=""):
+    """ids + scores bitwise; n_scanned/n_passed legitimately differ (the
+    routed plan scans only each cluster's in-window rows)."""
+    np.testing.assert_array_equal(np.asarray(b.ids), np.asarray(a.ids),
+                                  err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(b.scores),
+                                  np.asarray(a.scores), err_msg=msg)
+
+
+@pytest.fixture(scope="module", params=[
+    ("dot", False), ("l2", False), ("dot", True),
+], ids=["dot-f32", "l2-f32", "dot-sq8"])
+def built(request, tmp_path_factory):
+    metric, quantized = request.param
+    index, core, centers = _uniform_ts_index(metric, quantized)
+    build_p = partitions_lib.build_partitions(index, attrs=[0])
+    assert build_p.n_subs > 0 and build_p.catalog.n_entries > 0
+    attached = partitions_lib.attach(index, build_p)
+    ckpt = str(tmp_path_factory.mktemp(f"part_{request.param[0]}"))
+    storage.save_index(index, ckpt, n_shards=2, layout=4,
+                       partitions=build_p)
+    return index, attached, build_p, core, centers, ckpt
+
+
+@pytest.fixture(scope="module")
+def built_dot(tmp_path_factory):
+    index, core, centers = _uniform_ts_index("dot", False)
+    build_p = partitions_lib.build_partitions(index, attrs=[0])
+    ckpt = str(tmp_path_factory.mktemp("part_dot_live"))
+    storage.save_index(index, ckpt, n_shards=2, layout=4,
+                       partitions=build_p)
+    return index, build_p, core, centers, ckpt
+
+
+# ---------------------------------------------------------------------------
+# 1. Routing soundness: randomized catalogs × randomized filters vs oracle
+# ---------------------------------------------------------------------------
+
+
+def _rand_catalog(rng, n_entries, m):
+    lo = rng.integers(-60, 40, (n_entries, m)).astype(np.int16)
+    hi = (lo + rng.integers(0, 80, (n_entries, m))).astype(np.int16)
+    full = rng.random((n_entries, m)) < 0.6  # most attrs unconstrained
+    lo[full], hi[full] = summaries_lib.ATTR_MIN, summaries_lib.ATTR_MAX
+    # build invariant: every entry constrains its partition attribute —
+    # an all-full-range entry would (soundly but uselessly) subsume even
+    # unfiltered queries, and the builder never emits one
+    allfull = np.nonzero(full.all(axis=1))[0]
+    keep = rng.integers(0, m, allfull.size)
+    lo[allfull, keep] = rng.integers(-60, 40, allfull.size).astype(np.int16)
+    hi[allfull, keep] = (
+        lo[allfull, keep] + rng.integers(0, 80, allfull.size)
+    ).astype(np.int16)
+    return partitions_lib.PartitionCatalog(
+        pred_lo=lo, pred_hi=hi,
+        members=np.full((n_entries, 1), -1, np.int32),
+        entry_rows=rng.integers(1, 500, n_entries).astype(np.int64),
+        parent=np.zeros(0, np.int32),
+        sub_lo=np.zeros((0, m), np.int16), sub_hi=np.zeros((0, m), np.int16),
+        sub_counts=np.zeros(0, np.int32),
+        sub_amin=np.zeros((0, m), np.int16),
+        sub_amax=np.zeros((0, m), np.int16),
+        n_base=1,
+    )
+
+
+def _rand_filters(rng, q, n_terms, m):
+    lo = rng.integers(-60, 40, (q, n_terms, m)).astype(np.int16)
+    hi = (lo + rng.integers(-10, 40, (q, n_terms, m))).astype(np.int16)
+    full = rng.random((q, n_terms, m)) < 0.7
+    lo[full], hi[full] = summaries_lib.ATTR_MIN, summaries_lib.ATTR_MAX
+    return lo, hi
+
+
+def _route_oracle(cat, lo, hi):
+    """Independent reimplementation of the routing contract, by loops."""
+    q, n_terms, _ = lo.shape
+    out = np.full(q, -1, np.int32)
+    for qi in range(q):
+        nonvoid = [t for t in range(n_terms)
+                   if np.all(lo[qi, t] <= hi[qi, t])]
+        if not nonvoid:
+            continue
+        subsuming = [
+            e for e in range(cat.n_entries)
+            if all(np.all(cat.pred_lo[e] <= lo[qi, t])
+                   and np.all(hi[qi, t] <= cat.pred_hi[e])
+                   for t in nonvoid)
+        ]
+        if subsuming:
+            rows = np.asarray([cat.entry_rows[e] for e in subsuming])
+            out[qi] = subsuming[int(np.argmin(rows))]
+    return out
+
+
+def test_route_subsumption_property():
+    rng = np.random.default_rng(0)
+    for trial in range(60):
+        m = int(rng.integers(1, 5))
+        cat = _rand_catalog(rng, int(rng.integers(1, 24)), m)
+        lo, hi = _rand_filters(rng, int(rng.integers(1, 16)),
+                               int(rng.integers(1, 3)), m)
+        route = cat.route(lo, hi)
+        oracle = _route_oracle(cat, lo, hi)
+        for qi in range(lo.shape[0]):
+            r = int(route[qi])
+            if r < 0:
+                assert oracle[qi] < 0, (
+                    f"trial {trial} q{qi}: router declined but entry "
+                    f"{oracle[qi]} subsumes"
+                )
+                continue
+            # chosen entry must subsume every non-void term
+            for t in range(lo.shape[1]):
+                if np.all(lo[qi, t] <= hi[qi, t]):
+                    assert np.all(cat.pred_lo[r] <= lo[qi, t]), (trial, qi)
+                    assert np.all(hi[qi, t] <= cat.pred_hi[r]), (trial, qi)
+            # and be the narrowest such entry
+            assert oracle[qi] >= 0
+            assert cat.entry_rows[r] == cat.entry_rows[oracle[qi]], (
+                f"trial {trial} q{qi}: routed entry reaches "
+                f"{cat.entry_rows[r]} rows, narrowest is "
+                f"{cat.entry_rows[oracle[qi]]}"
+            )
+
+
+def test_route_unfiltered_and_void_fall_back():
+    rng = np.random.default_rng(1)
+    cat = _rand_catalog(rng, 8, 3)
+    q = 5
+    lo = np.full((q, 1, 3), summaries_lib.ATTR_MIN, np.int16)
+    hi = np.full((q, 1, 3), summaries_lib.ATTR_MAX, np.int16)
+    assert np.all(cat.route(lo, hi) == -1), "match-all must not route"
+    lo[:, 0, 0], hi[:, 0, 0] = 5, 4  # void term
+    assert np.all(cat.route(lo, hi) == -1), "all-void must not route"
+
+
+# ---------------------------------------------------------------------------
+# 2. Bit-identity: routed vs flat, stores × executors (× metric × SQ8 via
+#    the fixture params)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pipeline", ["off", "on"])
+def test_routed_matches_flat_all_stores(built, pipeline):
+    index, attached, build_p, core, _, ckpt = built
+    q = 21  # ragged multi-tile at q_block=8
+    queries = _queries(core, q)
+    fspec = _window_fspec(q, W)
+    kw = dict(k=K, n_probes=NP, q_block=QB, prune="on", pipeline=pipeline)
+
+    ref = search_reference(index, queries, fspec, k=K, n_probes=NP)
+
+    # RAM tier: attached arrays behind a ResidentBlockStore
+    for store_tag, mk in (
+        ("resident", lambda: bs.ResidentBlockStore(attached)),
+        ("sharded-resident", lambda: bs.ShardedBlockStore(
+            {i: bs.LoopbackTransport(bs.ResidentBlockStore(attached))
+             for i in range(3)}
+        )),
+    ):
+        store = mk()
+        try:
+            flat = SearchEngine(attached, blockstore=store,
+                                partitions="off", **kw)
+            routed = SearchEngine(attached, blockstore=store,
+                                  partitions="auto", **kw)
+            r0 = flat.search(queries, fspec)
+            r1 = routed.search(queries, fspec)
+            _assert_bitwise(r0, r1, f"{store_tag} pipeline={pipeline}")
+            _assert_bitwise(ref, r1, f"{store_tag} vs reference")
+            assert routed.stats.partition_hits > 0, store_tag
+            assert flat.stats.partition_hits == 0, store_tag
+        finally:
+            store.close()
+
+    # disk tier: LocalBlockStore behind DiskIVFIndex over the v4 checkpoint
+    with DiskIVFIndex.open(ckpt) as disk:
+        flat = SearchEngine(disk, partitions="off", **kw)
+        routed = SearchEngine(disk, partitions="auto", **kw)
+        r0 = flat.search(queries, fspec)
+        r1 = routed.search(queries, fspec)
+        _assert_bitwise(r0, r1, f"local pipeline={pipeline}")
+        _assert_bitwise(ref, r1, "local vs reference")
+        assert routed.stats.partition_hits > 0
+
+
+def test_routed_matches_flat_sharded_terminated(built):
+    """The segmented terminated executor routes fetches at sub-partition
+    granularity through the ring; results must stay bit-identical."""
+    index, _, _, core, _, ckpt = built
+    q = 16
+    queries = _queries(core, q)
+    fspec = _window_fspec(q, W)
+    kw = dict(k=K, n_probes=NP, q_block=QB, prune="on")
+    ref = search_reference(index, queries, fspec, k=K, n_probes=NP)
+    sharded = bs.open_sharded(ckpt, n_nodes=3)
+    try:
+        with DiskIVFIndex.open(ckpt) as disk:
+            routed = SearchEngine(disk, blockstore=sharded,
+                                  termination="exact", partitions="auto",
+                                  **kw)
+            r1 = routed.search(queries, fspec)
+            _assert_bitwise(ref, r1, "sharded terminated routed")
+            assert routed.stats.partition_hits > 0
+    finally:
+        sharded.close()
+
+
+def test_unroutable_predicate_is_flat_bit_identical(built):
+    """A window wider than every catalog entry must decline — and the
+    fallback plan is the flat plan verbatim, n_scanned included."""
+    _, attached, _, core, _, _ = built
+    q = 16
+    queries = _queries(core, q)
+    wide = _window_fspec(q, TS_RANGE // 2)
+    kw = dict(k=K, n_probes=NP, q_block=QB, prune="on")
+    flat = SearchEngine(attached, partitions="off", **kw)
+    routed = SearchEngine(attached, partitions="auto", **kw)
+    r0 = flat.search(queries, wide)
+    r1 = routed.search(queries, wide)
+    _assert_bitwise(r0, r1, "fallback")
+    np.testing.assert_array_equal(np.asarray(r1.n_scanned),
+                                  np.asarray(r0.n_scanned))
+    assert routed.stats.partition_hits == 0
+    assert routed.stats.partition_fallbacks > 0
+
+
+# ---------------------------------------------------------------------------
+# 3. Interleaving parity: add / tombstone / compact_deltas / post-republish
+# ---------------------------------------------------------------------------
+
+
+def test_interleaving_parity_routed_vs_flat(built_dot, tmp_path):
+    index, build_p, core, centers, _ = built_dot
+    ckpt = str(tmp_path / "ck")
+    storage.save_index(index, ckpt, n_shards=2, layout=4,
+                       partitions=build_p)
+    disk = DiskIVFIndex.open(ckpt)
+    tier = DeltaTier.for_index(disk, 8.0)
+    disk.delta = tier
+    kw = dict(k=K, n_probes=NP, q_block=QB, prune="on")
+    flat = SearchEngine(disk, partitions="off", **kw)
+    routed = SearchEngine(disk, partitions="auto", **kw)
+    rng = np.random.default_rng(5)
+    q = 16
+    queries = _queries(core, q)
+    fspec = _window_fspec(q, W)
+
+    def check(stage):
+        _assert_bitwise(flat.search(queries, fspec),
+                        routed.search(queries, fspec), stage)
+
+    # adds land in the delta tier (assigned to BASE clusters)
+    add = (centers[rng.integers(0, KC, 64)]
+           + 0.05 * rng.standard_normal((64, D))).astype(np.float32)
+    add /= np.linalg.norm(add, axis=-1, keepdims=True)
+    add_attrs = rng.integers(0, 16, (64, M)).astype(np.int16)
+    add_attrs[:, 0] = rng.integers(0, TS_RANGE, 64).astype(np.int16)
+    tier.add(add, add_attrs, np.arange(N, N + 64, dtype=np.int64))
+    check("after adds")
+
+    # tombstones: cold rows (inside sub-partition copies too) + fresh rows
+    cold_dead = rng.choice(N, 48, replace=False)
+    tier.tombstone(cold_dead, clusters=(np.arange(N) * KC // N)[cold_dead])
+    tier.tombstone(np.arange(N, N + 8, dtype=np.int64))
+    check("after tombstones")
+
+    # republish: folds deltas, reclaims tombstones, REBUILDS the touched
+    # parents' sub-partitions (new gens) and rewrites the catalog
+    st = compact_deltas(ckpt, tier)
+    assert st.clusters_rewritten > 0
+    assert flat.refresh()
+    routed.refresh()  # shared index already flipped: engine-side no-op
+    check("after compact_deltas")
+    assert routed.stats.partition_hits > 0
+
+    # keep serving on the republished generation
+    add2 = (centers[rng.integers(0, KC, 32)]
+            + 0.05 * rng.standard_normal((32, D))).astype(np.float32)
+    add2 /= np.linalg.norm(add2, axis=-1, keepdims=True)
+    add2_attrs = rng.integers(0, 16, (32, M)).astype(np.int16)
+    add2_attrs[:, 0] = rng.integers(0, TS_RANGE, 32).astype(np.int16)
+    tier.add(add2, add2_attrs, np.arange(N + 64, N + 96, dtype=np.int64))
+    check("post-republish adds")
+    flat.close()
+    routed.close()
+    disk.close()
+
+
+def test_resync_partitions_after_ram_updates(built_dot):
+    """RAM-tier maintenance: tombstone base rows, resync the attached sub
+    copies, and the routed plan must agree with the flat plan again."""
+    index, build_p, core, _, _ = built_dot
+    attached = partitions_lib.attach(index, build_p)
+    cat = attached.partitions
+    # tombstone a batch of live rows in a parent that actually has subs
+    parent = int(cat.parent[0])
+    slots = jnp.arange(8)
+    out = update_lib.tombstone(attached, jnp.full(8, parent), slots)
+    out.partitions = cat  # plain attribute: dataclasses.replace drops it
+    out = update_lib.resync_partitions(out)
+    new_cat = out.partitions
+    assert new_cat.sub_counts.sum() < cat.sub_counts.sum(), (
+        "resync did not drop the tombstoned rows from any sub copy"
+    )
+    q = 16
+    queries = _queries(core, q)
+    fspec = _window_fspec(q, W)
+    kw = dict(k=K, n_probes=NP, q_block=QB, prune="on")
+    flat = SearchEngine(out, partitions="off", **kw)
+    routed = SearchEngine(out, partitions="auto", **kw)
+    _assert_bitwise(flat.search(queries, fspec),
+                    routed.search(queries, fspec), "post-resync")
+    assert routed.stats.partition_hits > 0
+
+
+# ---------------------------------------------------------------------------
+# 4. Dead-cluster fetch shrink: per-owner lists + the store skip counter
+# ---------------------------------------------------------------------------
+
+
+def test_split_fetch_by_owner_drops_dead():
+    fetch = np.asarray([4, 9, 2, 7, 11], np.int64)
+    alive = np.asarray([True, False, True, True, False])
+    got = probes_lib.split_fetch_by_owner(fetch, lambda c: c % 2,
+                                          alive=alive)
+    np.testing.assert_array_equal(got[0], [4, 2])
+    np.testing.assert_array_equal(got[1], [7])
+    assert 9 not in np.concatenate(list(got.values()))
+    assert probes_lib.split_fetch_by_owner(
+        fetch, lambda c: c % 2, alive=np.zeros(5, bool)
+    ) == {}
+
+
+def test_sharded_store_skips_dead_fetches(built_dot):
+    index, *_ = built_dot
+    peers = {i: bs.LoopbackTransport(bs.ResidentBlockStore(index))
+             for i in range(3)}
+    store = bs.ShardedBlockStore(peers)
+    try:
+        recs = store.get([0, 1, 2, 3], alive=[True, False, True, False])
+        assert sorted(recs) == [0, 2]
+        assert store.stats()["fetches_skipped"] == 2
+        # skipped ids are fetched for real when later alive
+        recs = store.get([1, 3], alive=[True, True])
+        assert sorted(recs) == [1, 3]
+        assert store.stats()["fetches_skipped"] == 2
+    finally:
+        store.close()
+
+
+# ---------------------------------------------------------------------------
+# 5. Storage round-trip + delta interval pruning rides along
+# ---------------------------------------------------------------------------
+
+
+def test_v4_catalog_roundtrip(built):
+    _, _, build_p, _, _, ckpt = built
+    man = storage.load_manifest(ckpt)
+    assert man["has_partitions"]
+    assert man["partitions"]["n_subs"] == build_p.n_subs
+    loaded = storage.load_partitions(ckpt, man)
+    cat = build_p.catalog
+    for field in ("pred_lo", "pred_hi", "members", "entry_rows", "parent",
+                  "sub_lo", "sub_hi", "sub_counts", "sub_amin", "sub_amax"):
+        np.testing.assert_array_equal(
+            getattr(loaded, field), getattr(cat, field), err_msg=field
+        )
+    assert loaded.n_base == cat.n_base
+
+
+def test_delta_attr_interval_skips_disjoint_fold(built_dot, tmp_path):
+    """The delta fold is skipped outright when the filter is disjoint with
+    the tier's per-attribute envelope on ANY attribute — and the envelope
+    tightens again on commit."""
+    index, build_p, core, centers, _ = built_dot
+    ckpt = str(tmp_path / "ck")
+    storage.save_index(index, ckpt, n_shards=2, layout=4,
+                       partitions=build_p)
+    disk = DiskIVFIndex.open(ckpt)
+    tier = DeltaTier.for_index(disk, 8.0)
+    disk.delta = tier
+    rng = np.random.default_rng(9)
+    add = (centers[rng.integers(0, KC, 16)]
+           + 0.05 * rng.standard_normal((16, D))).astype(np.float32)
+    add /= np.linalg.norm(add, axis=-1, keepdims=True)
+    add_attrs = rng.integers(0, 16, (16, M)).astype(np.int16)
+    add_attrs[:, 0] = rng.integers(100, 200, 16).astype(np.int16)
+    tier.add(add, add_attrs, np.arange(N, N + 16, dtype=np.int64))
+
+    eng = SearchEngine(disk, k=K, n_probes=NP, q_block=QB, prune="on")
+    q = 8
+    queries = _queries(core, q)
+    lo = np.full((q, 1, M), -32768, np.int16)
+    hi = np.full((q, 1, M), 32767, np.int16)
+    lo[:, 0, 0], hi[:, 0, 0] = 4000, 4200  # disjoint with [100, 200]
+    eng.search(queries, FilterSpec(lo=jnp.asarray(lo), hi=jnp.asarray(hi)))
+    assert eng.stats.delta_interval_skips > 0
+    # overlapping window folds the delta
+    skips = eng.stats.delta_interval_skips
+    lo[:, 0, 0], hi[:, 0, 0] = 100, 250
+    eng.search(queries, FilterSpec(lo=jnp.asarray(lo), hi=jnp.asarray(hi)))
+    assert eng.stats.delta_interval_skips == skips
+    eng.close()
+    disk.close()
